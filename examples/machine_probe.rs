@@ -1,0 +1,65 @@
+//! `likwid_auto_bench.py` substitute: probe the host topology, run the
+//! STREAM-style microbenchmark suite per memory level, and emit a machine
+//! description file skeleton for this host.
+//!
+//! ```sh
+//! cargo run --release --example machine_probe > machines/host.yml
+//! ```
+
+use kerncraft::machine::topology::Topology;
+use kerncraft::microbench;
+
+fn main() {
+    let topo = Topology::probe();
+    eprintln!(
+        "probed: {} — {} cores, {} sockets, {} caches",
+        topo.model_name,
+        topo.cores,
+        topo.sockets,
+        topo.caches.len()
+    );
+
+    // machine-file skeleton (ports/latencies need manual attention, as the
+    // paper notes for its own auto-bench script)
+    let mut yml = topo.to_machine_yaml();
+
+    // measured benchmark section
+    let mut sizes: Vec<(String, u64)> = topo
+        .caches
+        .iter()
+        .map(|c| (format!("L{}", c.level), c.size_bytes))
+        .collect();
+    sizes.sort_by_key(|(_, s)| *s);
+    sizes.dedup_by(|a, b| a.0 == b.0);
+    // memory level: 8x the largest cache
+    let mem_size = sizes.last().map(|(_, s)| s * 8).unwrap_or(256 << 20);
+    sizes.push(("MEM".to_string(), mem_size));
+
+    eprintln!("running microbenchmarks (this takes a few seconds)...");
+    yml.push_str("\nbenchmarks:\n  kernels:\n");
+    yml.push_str("    load:   {read streams: 1, read+write streams: 0, write streams: 0, FLOPs per iteration: 0}\n");
+    yml.push_str("    copy:   {read streams: 1, read+write streams: 0, write streams: 1, FLOPs per iteration: 0}\n");
+    yml.push_str("    update: {read streams: 0, read+write streams: 1, write streams: 0, FLOPs per iteration: 0}\n");
+    yml.push_str("    daxpy:  {read streams: 1, read+write streams: 1, write streams: 0, FLOPs per iteration: 2}\n");
+    yml.push_str("    triad:  {read streams: 3, read+write streams: 0, write streams: 1, FLOPs per iteration: 2}\n");
+    yml.push_str("  measurements:\n");
+    for (level, samples) in microbench::sweep_levels(&sizes) {
+        for s in samples {
+            yml.push_str(&format!(
+                "    - {{level: {}, kernel: {}, bandwidth GB/s: [{:.1}]}}\n",
+                level,
+                s.kernel.name(),
+                s.bandwidth_bs / 1e9
+            ));
+            eprintln!(
+                "  {} {}: {:.1} GB/s (working set {} kB)",
+                level,
+                s.kernel.name(),
+                s.bandwidth_bs / 1e9,
+                s.working_set / 1024
+            );
+        }
+    }
+    println!("{yml}");
+    eprintln!("wrote machine file skeleton to stdout");
+}

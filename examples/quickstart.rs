@@ -1,0 +1,26 @@
+//! Quickstart: the paper's Listing 5 session — analyze the 2D 5-point
+//! Jacobi kernel on Sandy Bridge with the ECM and Roofline models.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use kerncraft::cli;
+
+fn main() -> anyhow::Result<()> {
+    let argv = |s: &str| s.split_whitespace().map(str::to_string).collect::<Vec<_>>();
+
+    println!("$ kerncraft -p ECM --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000\n");
+    print!("{}", cli::run(&argv("-p ECM --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000 -v"))?);
+
+    println!("\n$ kerncraft -p RooflinePort --unit cy/CL --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000\n");
+    print!(
+        "{}",
+        cli::run(&argv(
+            "-p RooflinePort --unit cy/CL --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000"
+        ))?
+    );
+
+    println!("\npaper reference: ECM {{9.5 ‖ 8 | 10 | 6 | 12.7}} = 36.7 cy/CL, Roofline 29.8 cy/CL");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Figure 3-style sweep driver for ANY of the shipped kernels: ECM
+//! contributions and layer conditions as the problem size grows.
+//!
+//! ```sh
+//! cargo run --release --example stencil_sweep -- [kernel-tag] [machine]
+//! # e.g.: cargo run --release --example stencil_sweep -- 2D-5pt HSW
+//! ```
+
+use kerncraft::cache::CachePredictor;
+use kerncraft::incore::{CodegenPolicy, PortModel};
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::MachineModel;
+use kerncraft::models::{reference, EcmModel};
+use std::collections::HashMap;
+
+fn main() -> anyhow::Result<()> {
+    let tag = std::env::args().nth(1).unwrap_or_else(|| "long-range".to_string());
+    let arch = std::env::args().nth(2).unwrap_or_else(|| "SNB".to_string());
+    let machine = MachineModel::builtin(&arch)
+        .ok_or_else(|| anyhow::anyhow!("unknown machine {arch}"))?;
+    let src = reference::kernel_source(&tag)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel {tag} (use a Table 5 tag)"))?;
+    let program = parse(src)?;
+    let policy = CodegenPolicy::for_machine(&machine);
+
+    println!("ECM sweep for {tag} on {arch}");
+    println!(
+        "{:>7} | {:>7} {:>7} | {:>8} {:>8} {:>8} | {:>9} | sat.cores",
+        "N", "T_OL", "T_nOL", "L1L2", "L2L3", "L3Mem", "ECM_Mem"
+    );
+    for exp in 4..13 {
+        let n: i64 = 1 << exp;
+        let mut consts: HashMap<String, i64> = HashMap::new();
+        consts.insert("N".to_string(), n);
+        consts.insert("M".to_string(), n.min(600)); // keep 3D cases tractable
+        let Ok(analysis) = KernelAnalysis::from_program(&program, &consts) else {
+            continue;
+        };
+        if analysis.loops.iter().any(|l| l.trip() <= 0) {
+            continue;
+        }
+        let pm = PortModel::analyze(&analysis, &machine, &policy)?;
+        let traffic = CachePredictor::new(&machine).predict(&analysis)?;
+        let ecm = EcmModel::build(&pm, &traffic, &machine)?;
+        println!(
+            "{:>7} | {:>7.1} {:>7.1} | {:>8.1} {:>8.1} {:>8.1} | {:>9.1} | {}",
+            n,
+            ecm.t_ol,
+            ecm.t_nol,
+            ecm.contributions[0].cycles,
+            ecm.contributions[1].cycles,
+            ecm.contributions[2].cycles,
+            ecm.t_mem(),
+            ecm.saturation_cores()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! End-to-end validation driver — the full pipeline on all five paper
+//! kernels, proving every layer composes:
+//!
+//! 1. **Analytic models** (L3 Rust): parse the C kernel → port model +
+//!    cache prediction → ECM & Roofline predictions for SNB;
+//! 2. **Virtual testbed** (L3 Rust): trace-driven "measurement" on the
+//!    simulated SNB — the paper's Benchmark column;
+//! 3. **Native host run** (L3 Rust): the same loop timed on this CPU;
+//! 4. **PJRT run** (L1/L2 → AOT → L3): the JAX/Pallas implementation of
+//!    the kernel, lowered at build time to HLO text, loaded and executed
+//!    through the PJRT C API — Python is NOT running here.
+//!
+//! The headline metric (paper Table 5): model-vs-measurement agreement in
+//! cy/CL on the virtual testbed, plus host-side sanity from the real
+//! runs. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example validate
+//! ```
+
+use kerncraft::bench_mode;
+use kerncraft::cache::CachePredictor;
+use kerncraft::incore::{CodegenPolicy, PortModel};
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::MachineModel;
+use kerncraft::models::{reference, EcmModel, RooflineModel};
+use kerncraft::sim::VirtualTestbed;
+use std::collections::HashMap;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let machine = MachineModel::snb();
+    let policy = CodegenPolicy::for_machine(&machine);
+    let artifacts = Path::new("artifacts");
+    let have_artifacts = artifacts.join("manifest.tsv").exists();
+    if !have_artifacts {
+        eprintln!("note: artifacts/ missing — run `make artifacts` for the PJRT column");
+    }
+
+    println!("=== end-to-end validation: model vs virtual testbed vs host runs (SNB models) ===");
+    println!(
+        "{:<11} | {:>9} {:>9} | {:>11} {:>6} | {:>12} | {:>12}",
+        "kernel", "ECM cy/CL", "Roofline", "virt. cy/CL", "Δ%", "native It/s", "PJRT It/s"
+    );
+
+    let pjrt_names = [
+        ("2D-5pt", "jacobi2d"),
+        ("UXX", "uxx"),
+        ("long-range", "long_range"),
+        ("Kahan-dot", "kahan_ddot"),
+        ("triad", "triad"),
+    ];
+
+    let mut worst = 0.0f64;
+    for tag in reference::kernel_tags() {
+        let row = reference::TABLE5
+            .iter()
+            .find(|r| r.kernel == tag && r.arch == "SNB")
+            .unwrap();
+        let src = reference::kernel_source(tag).unwrap();
+        let consts: HashMap<String, i64> =
+            row.constants.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        let analysis = KernelAnalysis::from_program(&parse(src)?, &consts)?;
+
+        // 1. analytic models
+        let pm = PortModel::analyze(&analysis, &machine, &policy)?;
+        let traffic = CachePredictor::new(&machine).predict(&analysis)?;
+        let ecm = EcmModel::build(&pm, &traffic, &machine)?;
+        let roofline = RooflineModel::build(&analysis, &traffic, &machine, Some(&pm))?;
+
+        // 2. virtual testbed measurement
+        let mut tb = VirtualTestbed::new(&machine);
+        tb.max_iterations = 1_500_000;
+        let sim = tb.run(&analysis)?;
+        let delta = (sim.cy_per_cl - ecm.t_mem()) / ecm.t_mem() * 100.0;
+        worst = worst.max(delta.abs());
+
+        // 3. native host run (smaller sizes keep this quick)
+        let native_consts: Vec<(&str, i64)> = row
+            .constants
+            .iter()
+            .map(|(k, v)| (*k, (*v).min(2_000_000)))
+            .collect();
+        let native = bench_mode::run_native(tag, &native_consts, 3)?;
+
+        // 4. PJRT artifact run (the three-layer path)
+        let pjrt = if have_artifacts {
+            let name = pjrt_names.iter().find(|(t, _)| t == &tag).unwrap().1;
+            match bench_mode::run_pjrt(artifacts, name, 3) {
+                Ok(r) => format!("{:.3e}", r.it_per_s),
+                Err(e) => format!("err: {e}"),
+            }
+        } else {
+            "n/a".to_string()
+        };
+
+        println!(
+            "{:<11} | {:>9.1} {:>9.1} | {:>11.1} {:>+5.1}% | {:>12.3e} | {:>12}",
+            tag,
+            ecm.t_mem(),
+            roofline.prediction(),
+            sim.cy_per_cl,
+            delta,
+            native.it_per_s,
+            pjrt
+        );
+    }
+    println!("worst |virtual - ECM| deviation: {worst:.1}%");
+    println!("validate OK — record these rows in EXPERIMENTS.md");
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT lowering: JAX/Pallas benchmark graphs → XLA HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the ``xla`` crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+
+Besides one ``<name>.hlo.txt`` per kernel a ``manifest.tsv`` is written
+with everything the Rust Benchmark mode needs to time and normalize the
+execution: input shapes/dtypes, repetitions per executable, inner
+iterations per sweep, and source flops per iteration.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_defs():
+    """(name, lowered_fn, arg_specs, reps, iters_per_sweep, flops_per_it)."""
+    f = jnp.float64
+    defs = []
+
+    # 2D-5pt Jacobi: 258x256 grid, 20 ping-pong sweeps
+    m, n, reps = 258, 256, 20
+    defs.append(
+        dict(
+            name="jacobi2d",
+            fn=lambda a, s, r=reps: (model.jacobi2d_bench(a, s, r),),
+            args=[spec((m, n), f), spec((), f)],
+            reps=reps,
+            iters=(m - 2) * (n - 2),
+            flops=4,
+        )
+    )
+
+    # Schönauer triad: 2^20 elements, 20 sweeps
+    nt, reps = 1 << 20, 20
+    defs.append(
+        dict(
+            name="triad",
+            fn=lambda b, c, d, r=reps: (model.triad_bench(b, c, d, r),),
+            args=[spec((nt,), f)] * 3,
+            reps=reps,
+            iters=nt,
+            flops=2,
+        )
+    )
+
+    # Kahan dot product: 2^16 elements, 10 sweeps
+    nk, reps = 1 << 16, 10
+    defs.append(
+        dict(
+            name="kahan_ddot",
+            fn=lambda a, b, r=reps: (model.kahan_ddot_bench(a, b, r),),
+            args=[spec((nk,), f)] * 2,
+            reps=reps,
+            iters=nk,
+            flops=5,
+        )
+    )
+
+    # UXX: 36^3 with halo 2 → 32 interior planes, 5 sweeps
+    mu, reps = 36, 5
+    defs.append(
+        dict(
+            name="uxx",
+            fn=lambda u1, d1, xx, xy, xz, r=reps: (
+                model.uxx_bench(u1, d1, xx, xy, xz, r),
+            ),
+            args=[spec((mu, mu, mu), f)] * 5,
+            reps=reps,
+            iters=(mu - 4) ** 3,
+            flops=16,
+        )
+    )
+
+    # long-range: 40^3 with halo 4 → 32 interior planes, 5 sweeps
+    ml, reps = 40, 5
+    defs.append(
+        dict(
+            name="long_range",
+            fn=lambda U, V, ROC, r=reps: (model.long_range_bench(U, V, ROC, r),),
+            args=[spec((ml, ml, ml), f)] * 3,
+            reps=reps,
+            iters=(ml - 8) ** 3,
+            flops=41,
+        )
+    )
+    return defs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="lower a single kernel by name"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []
+    for d in artifact_defs():
+        if args.only and d["name"] != args.only:
+            continue
+        lowered = jax.jit(d["fn"]).lower(*d["args"])
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{d['name']}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        shapes = ";".join(
+            f"{a.dtype}:{','.join(str(s) for s in a.shape)}" for a in d["args"]
+        )
+        manifest_rows.append(
+            f"{d['name']}\t{d['name']}.hlo.txt\t{d['reps']}\t{d['iters']}\t{d['flops']}\t{shapes}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    header = "name\tfile\treps\titers_per_sweep\tflops_per_iter\tinputs\n"
+    with open(manifest, "w") as fh:
+        fh.write(header)
+        fh.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

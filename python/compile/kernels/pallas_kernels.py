@@ -1,0 +1,295 @@
+"""L1: Pallas implementations of the five paper kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's layer
+condition — "enough consecutive layers of the grid must fit in cache
+level k" — becomes the BlockSpec choice here. Every stencil is tiled so
+one block plus its halo fits VMEM; halos are materialized by passing
+pre-shifted views of the input (sliced in the L2 wrapper), which keeps
+every BlockSpec a plain non-overlapping tiling.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowering produces plain
+HLO that the Rust runtime loads and executes (see gen_hlo.py in
+/opt/xla-example). Correctness is pinned against ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# ---------------------------------------------------------------------------
+# 2D 5-point Jacobi (paper Listing 3)
+# ---------------------------------------------------------------------------
+
+
+def _jacobi_kernel(top_ref, mid_ref, bot_ref, s_ref, out_ref):
+    top = top_ref[...]
+    mid = mid_ref[...]
+    bot = bot_ref[...]
+    s = s_ref[0]
+    res = (mid[:, :-2] + mid[:, 2:] + top[:, 1:-1] + bot[:, 1:-1]) * s
+    out_ref[...] = jnp.pad(res, ((0, 0), (1, 1)))
+
+
+def jacobi2d(a, s, block_rows=None):
+    """One Jacobi sweep; returns an array shaped like ``a`` with the
+    boundary zeroed (matching ``ref.jacobi2d``)."""
+    m, n = a.shape
+    rows = m - 2
+    if block_rows is None:
+        block_rows = _pick_block(rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    s_arr = jnp.asarray([s], dtype=a.dtype)
+    spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    interior = pl.pallas_call(
+        _jacobi_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), a.dtype),
+        interpret=True,
+    )(a[:-2], a[1:-1], a[2:], s_arr)
+    return jnp.zeros_like(a).at[1:-1, :].set(interior)
+
+
+# ---------------------------------------------------------------------------
+# Schönauer triad (paper Listing 9)
+# ---------------------------------------------------------------------------
+
+
+def _triad_kernel(b_ref, c_ref, d_ref, a_ref):
+    a_ref[...] = b_ref[...] + c_ref[...] * d_ref[...]
+
+
+def triad(b, c, d, block=None):
+    """a = b + c * d, tiled in 1D chunks."""
+    (n,) = b.shape
+    if block is None:
+        block = _pick_block(n)
+    assert n % block == 0, (n, block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=(n // block,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(b, c, d)
+
+
+# ---------------------------------------------------------------------------
+# Kahan-compensated dot product (paper Listing 8)
+# ---------------------------------------------------------------------------
+
+
+def _kahan_kernel(a_ref, b_ref, out_ref):
+    x = a_ref[...]
+    y = b_ref[...]
+
+    def body(carry, xy):
+        s, c = carry
+        prod = xy[0] * xy[1]
+        yy = prod - c
+        t = s + yy
+        c_new = (t - s) - yy
+        return (t, c_new), None
+
+    (s, c), _ = jax.lax.scan(
+        body, (jnp.zeros((), x.dtype), jnp.zeros((), x.dtype)), (x, y)
+    )
+    out_ref[0, 0] = s
+    out_ref[0, 1] = c
+
+def kahan_ddot(a, b, block=None):
+    """Blocked compensated dot product.
+
+    Each block produces a compensated partial (sum, c); the partials are
+    combined with a final sequential compensated pass. For block == n the
+    result is bit-identical to ``ref.kahan_ddot``.
+    """
+    (n,) = a.shape
+    if block is None:
+        block = _pick_block(n)
+    assert n % block == 0, (n, block)
+    nblocks = n // block
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    partials = pl.pallas_call(
+        _kahan_kernel,
+        grid=(nblocks,),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, 2), a.dtype),
+        interpret=True,
+    )(a, b)
+
+    # combine block partials with the same compensated scheme; the first
+    # partial seeds the accumulator so a single block is bit-identical to
+    # the sequential reference
+    def body(carry, p):
+        s, c = carry
+        y = p[0] - (c + p[1])
+        t = s + y
+        c_new = (t - s) - y
+        return (t, c_new), None
+
+    (s, c), _ = jax.lax.scan(
+        body, (partials[0, 0], partials[0, 1]), partials[1:]
+    )
+    return s, c
+
+
+# ---------------------------------------------------------------------------
+# UXX stencil (paper Listing 6)
+# ---------------------------------------------------------------------------
+
+
+def _uxx_kernel(
+    u1_ref, d1k_ref, d1km_ref, xx_ref, xy_ref, xzm2_ref, xzm1_ref, xz0_ref,
+    xzp1_ref, coef_ref, out_ref,
+):
+    # refs are interior-k slices; j/i shifts happen inside the block
+    c1 = coef_ref[0]
+    c2 = coef_ref[1]
+    dth = coef_ref[2]
+    u1 = u1_ref[...]
+    d1k = d1k_ref[...]   # d1 at plane k
+    d1km = d1km_ref[...] # d1 at plane k-1
+    xx = xx_ref[...]
+    xy = xy_ref[...]
+
+    def j(arr, dj):
+        return arr[:, 2 + dj : arr.shape[1] - 2 + dj or None, 2:-2]
+
+    def i(arr, di):
+        return arr[:, 2:-2, 2 + di : arr.shape[2] - 2 + di or None]
+
+    def ji(arr):
+        return arr[:, 2:-2, 2:-2]
+
+    d = (ji(d1km) + j(d1km, -1) + ji(d1k) + j(d1k, -1)) * 0.25
+    res = ji(u1) + (dth / d) * (
+        c1 * (ji(xx) - i(xx, -1))
+        + c2 * (i(xx, 1) - i(xx, -2))
+        + c1 * (ji(xy) - j(xy, -1))
+        + c2 * (j(xy, 1) - j(xy, -2))
+        + c1 * (ji(xz0_ref[...]) - ji(xzm1_ref[...]))
+        + c2 * (ji(xzp1_ref[...]) - ji(xzm2_ref[...]))
+    )
+    out_ref[...] = res
+
+
+def uxx(u1, d1, xx, xy, xz, c1, c2, dth, block_k=None):
+    """UXX interior update; returns u1 with the interior replaced."""
+    m, n, _ = u1.shape
+    kk = m - 4  # interior planes
+    if block_k is None:
+        block_k = _pick_block(kk)
+    assert kk % block_k == 0, (kk, block_k)
+    grid = (kk // block_k,)
+    full = pl.BlockSpec((block_k, n, n), lambda i: (i, 0, 0))
+    coef = jnp.asarray([c1, c2, dth], dtype=u1.dtype)
+    interior = pl.pallas_call(
+        _uxx_kernel,
+        grid=grid,
+        in_specs=[full] * 9 + [pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=pl.BlockSpec(
+            (block_k, n - 4, n - 4), lambda i: (i, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((kk, n - 4, n - 4), u1.dtype),
+        interpret=True,
+    )(
+        u1[2:-2],
+        d1[2:-2],
+        d1[1:-3],
+        xx[2:-2],
+        xy[2:-2],
+        xz[0:-4],
+        xz[1:-3],
+        xz[2:-2],
+        xz[3:-1],
+        coef,
+    )
+    return u1.at[2:-2, 2:-2, 2:-2].set(interior)
+
+
+# ---------------------------------------------------------------------------
+# Fourth-order long-range stencil (paper Listing 7)
+# ---------------------------------------------------------------------------
+
+
+def _long_range_kernel(*refs):
+    # refs: U, ROC, V_km4..V_kp4 (9 k-shifted views), coef, out
+    u_ref = refs[0]
+    roc_ref = refs[1]
+    v_refs = refs[2:11]
+    coef_ref = refs[11]
+    out_ref = refs[12]
+    r = 4
+    c = coef_ref[...]
+    v0 = v_refs[r][...]  # dk = 0 view
+
+    def j(arr, dj):
+        return arr[:, r + dj : arr.shape[1] - r + dj or None, r:-r]
+
+    def i(arr, di):
+        return arr[:, r:-r, r + di : arr.shape[2] - r + di or None]
+
+    def ji(arr):
+        return arr[:, r:-r, r:-r]
+
+    lap = c[0] * ji(v0)
+    for o in range(1, 5):
+        lap = lap + c[o] * (i(v0, o) + i(v0, -o))
+        lap = lap + c[o] * (j(v0, o) + j(v0, -o))
+        lap = lap + c[o] * (ji(v_refs[r + o][...]) + ji(v_refs[r - o][...]))
+    out_ref[...] = 2.0 * ji(v0) - ji(u_ref[...]) + ji(roc_ref[...]) * lap
+
+
+def long_range(U, V, ROC, c, block_k=None):
+    """Fourth-order star stencil update of U (halo width 4)."""
+    m, n, _ = U.shape
+    r = 4
+    kk = m - 2 * r
+    if block_k is None:
+        block_k = _pick_block(kk)
+    assert kk % block_k == 0, (kk, block_k)
+    grid = (kk // block_k,)
+    full = pl.BlockSpec((block_k, n, n), lambda i: (i, 0, 0))
+    coef = jnp.asarray(c, dtype=U.dtype)
+    v_views = [V[r + dk : m - r + dk or None] for dk in range(-r, r + 1)]
+    interior = pl.pallas_call(
+        _long_range_kernel,
+        grid=grid,
+        in_specs=[full, full] + [full] * 9 + [pl.BlockSpec((5,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_k, n - 2 * r, n - 2 * r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kk, n - 2 * r, n - 2 * r), U.dtype),
+        interpret=True,
+    )(U[r:-r], ROC[r:-r], *v_views, coef)
+    return U.at[r:-r, r:-r, r:-r].set(interior)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _pick_block(n):
+    """Largest divisor of n not exceeding a VMEM-friendly bound.
+
+    Prefer LARGE blocks: every grid step lowers (under interpret=True) to
+    one iteration of an XLA while loop, so tiny blocks turn streaming
+    kernels into loop-overhead benchmarks (§Perf iteration 3: the triad
+    artifact went from a 16384-step grid to 64 steps, >100x faster on the
+    CPU PJRT runtime).
+    """
+    for cand in (16384, 4096, 1024, 256, 64, 32, 16, 8, 4, 2, 1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+@functools.lru_cache(maxsize=None)
+def kernel_names():
+    return ("jacobi2d", "triad", "kahan_ddot", "uxx", "long_range")

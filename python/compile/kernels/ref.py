@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the five paper kernels (L1 correctness baseline).
+
+Each function mirrors the C kernel in `kernels/*.c` exactly — including
+the boundary handling (untouched halo cells) — so the Pallas kernels and
+the Rust virtual testbed all validate against the same semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def jacobi2d(a, s):
+    """One 2D 5-point Jacobi sweep (paper Listing 3).
+
+    b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s for the
+    interior; the boundary of the output is zero.
+    """
+    interior = (a[1:-1, :-2] + a[1:-1, 2:] + a[:-2, 1:-1] + a[2:, 1:-1]) * s
+    return jnp.zeros_like(a).at[1:-1, 1:-1].set(interior)
+
+
+def triad(b, c, d):
+    """Schönauer triad (paper Listing 9): a = b + c * d."""
+    return b + c * d
+
+
+def kahan_ddot(a, b):
+    """Kahan-compensated dot product (paper Listing 8).
+
+    Returns (sum, c) after the sequential compensated accumulation.
+    """
+
+    def body(carry, xy):
+        s, c = carry
+        x, y_in = xy
+        prod = x * y_in
+        y = prod - c
+        t = s + y
+        c_new = (t - s) - y
+        return (t, c_new), None
+
+    (s, c), _ = jax.lax.scan(
+        body, (jnp.zeros((), a.dtype), jnp.zeros((), a.dtype)), (a, b)
+    )
+    return s, c
+
+
+def _sh(arr, halo, dk=0, dj=0, di=0):
+    """Shifted interior view with the given halo width."""
+    return arr[
+        slice(halo + dk, arr.shape[0] - halo + dk or None),
+        slice(halo + dj, arr.shape[1] - halo + dj or None),
+        slice(halo + di, arr.shape[2] - halo + di or None),
+    ]
+
+
+def uxx(u1, d1, xx, xy, xz, c1, c2, dth):
+    """UXX stencil (paper Listing 6), interior update with halo width 2."""
+
+    def sh(arr, dk=0, dj=0, di=0):
+        return _sh(arr, 2, dk, dj, di)
+
+    d = (sh(d1, -1, 0, 0) + sh(d1, -1, -1, 0) + sh(d1, 0, 0, 0) + sh(d1, 0, -1, 0)) * 0.25
+    upd = sh(u1) + (dth / d) * (
+        c1 * (sh(xx) - sh(xx, 0, 0, -1))
+        + c2 * (sh(xx, 0, 0, 1) - sh(xx, 0, 0, -2))
+        + c1 * (sh(xy) - sh(xy, 0, -1, 0))
+        + c2 * (sh(xy, 0, 1, 0) - sh(xy, 0, -2, 0))
+        + c1 * (sh(xz) - sh(xz, -1, 0, 0))
+        + c2 * (sh(xz, 1, 0, 0) - sh(xz, -2, 0, 0))
+    )
+    return u1.at[2:-2, 2:-2, 2:-2].set(upd)
+
+
+def long_range(U, V, ROC, c):
+    """Fourth-order long-range stencil (paper Listing 7).
+
+    `c` is a length-5 coefficient vector (c0..c4). Interior halo width 4.
+    Returns the updated U.
+    """
+    r = 4
+
+    def sh(arr, dk=0, dj=0, di=0):
+        return _sh(arr, r, dk, dj, di)
+
+    lap = c[0] * sh(V)
+    for o in range(1, 5):
+        lap = lap + c[o] * (sh(V, 0, 0, o) + sh(V, 0, 0, -o))
+        lap = lap + c[o] * (sh(V, 0, o, 0) + sh(V, 0, -o, 0))
+        lap = lap + c[o] * (sh(V, o, 0, 0) + sh(V, -o, 0, 0))
+    upd = 2.0 * sh(V) - sh(U) + sh(ROC) * lap
+    return U.at[r:-r, r:-r, r:-r].set(upd)

@@ -1,0 +1,74 @@
+"""L2: JAX benchmark wrappers around the L1 Pallas kernels.
+
+Each ``<name>_bench`` repeats the kernel ``reps`` times inside a
+``lax.fori_loop`` with a data-dependent carry, so XLA cannot elide any
+sweep — this is the computation the Rust Benchmark mode times after AOT
+lowering (Python never runs on the measurement path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as pk
+
+
+def jacobi2d_step(a, s):
+    """One Jacobi sweep (Pallas)."""
+    return pk.jacobi2d(a, s)
+
+
+def jacobi2d_bench(a, s, reps: int):
+    """`reps` ping-pong Jacobi sweeps."""
+
+    def body(_, carry):
+        return pk.jacobi2d(carry, s)
+
+    return jax.lax.fori_loop(0, reps, body, a)
+
+
+def triad_step(b, c, d):
+    return pk.triad(b, c, d)
+
+
+def triad_bench(b, c, d, reps: int):
+    def body(_, carry):
+        return pk.triad(carry, c, d)
+
+    return jax.lax.fori_loop(0, reps, body, b)
+
+
+def kahan_ddot_step(a, b):
+    s, c = pk.kahan_ddot(a, b)
+    return s, c
+
+
+def kahan_ddot_bench(a, b, reps: int):
+    def body(_, acc):
+        s, _ = pk.kahan_ddot(a + acc * 1e-30, b)
+        return s
+
+    return jax.lax.fori_loop(0, reps, body, jnp.zeros((), a.dtype))
+
+
+def uxx_step(u1, d1, xx, xy, xz, c1, c2, dth):
+    return pk.uxx(u1, d1, xx, xy, xz, c1, c2, dth)
+
+
+def uxx_bench(u1, d1, xx, xy, xz, reps: int):
+    def body(_, carry):
+        return pk.uxx(carry, d1, xx, xy, xz, 0.5, 0.25, 0.1)
+
+    return jax.lax.fori_loop(0, reps, body, u1)
+
+
+def long_range_step(U, V, ROC, c):
+    return pk.long_range(U, V, ROC, c)
+
+
+def long_range_bench(U, V, ROC, reps: int):
+    c = jnp.asarray([0.5, 0.2, 0.1, 0.05, 0.025], dtype=U.dtype)
+
+    def body(_, carry):
+        return pk.long_range(carry, V, ROC, c)
+
+    return jax.lax.fori_loop(0, reps, body, U)

@@ -1,0 +1,120 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and block sizes; fixed-seed numpy data
+keeps the comparisons reproducible.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_kernels as pk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(min_value=4, max_value=34),
+    n=st.integers(min_value=4, max_value=40),
+    dt=st.sampled_from(DTYPES),
+)
+def test_jacobi2d_matches_ref(m, n, dt):
+    a = rand((m, n), dt, seed=m * 1000 + n)
+    got = pk.jacobi2d(a, 0.25, block_rows=1)
+    want = ref.jacobi2d(a, 0.25)
+    tol = 1e-5 if dt == jnp.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_rows", [1, 2, 4, 8])
+def test_jacobi2d_block_invariance(block_rows):
+    a = rand((18, 24), jnp.float64)
+    got = pk.jacobi2d(a, 0.5, block_rows=block_rows)
+    want = ref.jacobi2d(a, 0.5)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    logn=st.integers(min_value=2, max_value=10),
+    dt=st.sampled_from(DTYPES),
+)
+def test_triad_matches_ref(logn, dt):
+    n = 1 << logn
+    b = rand((n,), dt, seed=logn)
+    c = rand((n,), dt, seed=logn + 100)
+    d = rand((n,), dt, seed=logn + 200)
+    got = pk.triad(b, c, d, block=min(n, 64))
+    # atol covers catastrophic cancellation in b + c*d
+    np.testing.assert_allclose(got, ref.triad(b, c, d), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(64, 64), (256, 64), (1024, 128)])
+def test_kahan_matches_ref(n, block):
+    a, b = rand((n,), jnp.float64), rand((n,), jnp.float64)
+    s, _ = pk.kahan_ddot(a, b, block=block)
+    s_ref, _ = ref.kahan_ddot(a, b)
+    # compensated sums: block combination changes rounding by < 1 ulp of
+    # the condition; compare tightly anyway
+    np.testing.assert_allclose(float(s), float(s_ref), rtol=1e-13)
+
+
+def test_kahan_single_block_bit_identical():
+    a, b = rand((128,), jnp.float64), rand((128,), jnp.float64)
+    s, c = pk.kahan_ddot(a, b, block=128)
+    s_ref, c_ref = ref.kahan_ddot(a, b)
+    assert float(s) == float(s_ref)
+    assert float(c) == float(c_ref)
+
+
+def test_kahan_beats_naive_sum():
+    # the whole point of Kahan: ill-conditioned sums stay accurate
+    n = 4096
+    a = jnp.asarray(
+        np.concatenate([[1e16], RNG.standard_normal(n - 2), [-1e16]]),
+        dtype=jnp.float64,
+    )
+    b = jnp.ones((n,), jnp.float64)
+    s, _ = pk.kahan_ddot(a, b, block=n)
+    exact = float(np.sum(np.sort(np.asarray(a, dtype=np.float64))))
+    naive = float(jnp.dot(a, b))
+    assert abs(float(s) - exact) <= abs(naive - exact)
+
+
+@pytest.mark.parametrize("m", [8, 12])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_uxx_matches_ref(m, dt):
+    shape = (m, m, m)
+    u1, d1, xx, xy, xz = (rand(shape, dt) + 2.0 for _ in range(5))
+    got = pk.uxx(u1, d1, xx, xy, xz, 0.5, 0.25, 0.1, block_k=2)
+    want = ref.uxx(u1, d1, xx, xy, xz, 0.5, 0.25, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-4 if dt == jnp.float32 else 1e-12)
+
+
+@pytest.mark.parametrize("m", [12, 16])
+def test_long_range_matches_ref(m):
+    shape = (m, m, m)
+    U, V, ROC = rand(shape, jnp.float64), rand(shape, jnp.float64), rand(shape, jnp.float64)
+    c = [0.5, 0.2, 0.1, 0.05, 0.025]
+    got = pk.long_range(U, V, ROC, c, block_k=m - 8 if (m - 8) <= 4 else 4)
+    want = ref.long_range(U, V, ROC, jnp.asarray(c, dtype=jnp.float64))
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_jacobi_boundary_untouched():
+    a = rand((10, 10), jnp.float64)
+    out = pk.jacobi2d(a, 1.0, block_rows=2)
+    assert float(jnp.abs(out[0]).max()) == 0.0
+    assert float(jnp.abs(out[-1]).max()) == 0.0
+    assert float(jnp.abs(out[:, 0]).max()) == 0.0

@@ -1,0 +1,80 @@
+//! Hot-path microbenchmarks for the tool itself (criterion is not in the
+//! offline crate set; this is a median-of-N harness). §Perf of
+//! EXPERIMENTS.md tracks these numbers.
+//!
+//! Hot paths: (1) the backward-window cache predictor, (2) the
+//! trace-driven virtual testbed, (3) full ECM analysis end to end.
+
+use kerncraft::cache::CachePredictor;
+use kerncraft::incore::{CodegenPolicy, PortModel};
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::MachineModel;
+use kerncraft::models::{reference, EcmModel};
+use kerncraft::sim::VirtualTestbed;
+use kerncraft::util::{median, monotonic_ns};
+use std::collections::HashMap;
+
+fn time_ms<F: FnMut()>(mut f: F, samples: usize) -> f64 {
+    let mut t = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = monotonic_ns();
+        f();
+        t.push((monotonic_ns() - t0) as f64 / 1e6);
+    }
+    median(&t)
+}
+
+fn main() {
+    let machine = MachineModel::snb();
+    let policy = CodegenPolicy::for_machine(&machine);
+
+    // --- cache predictor on the three stencils ---
+    println!("=== hotpath: analytic cache predictor ===");
+    for (tag, n, m) in [("2D-5pt", 6000i64, 6000i64), ("UXX", 150, 150), ("long-range", 400, 400)]
+    {
+        let src = reference::kernel_source(tag).unwrap();
+        let consts: HashMap<String, i64> =
+            [("N".to_string(), n), ("M".to_string(), m)].into_iter().collect();
+        let analysis =
+            KernelAnalysis::from_program(&parse(src).unwrap(), &consts).unwrap();
+        let ms = time_ms(
+            || {
+                let _ = CachePredictor::new(&machine).predict(&analysis).unwrap();
+            },
+            5,
+        );
+        println!("cache_predict {tag:<11} N={n:<5} -> {ms:>8.2} ms");
+    }
+
+    // --- virtual testbed throughput ---
+    println!("=== hotpath: virtual testbed ===");
+    let consts: HashMap<String, i64> =
+        [("N".to_string(), 2000i64), ("M".to_string(), 600i64)].into_iter().collect();
+    let analysis =
+        KernelAnalysis::from_program(&parse(reference::KERNEL_2D5PT).unwrap(), &consts).unwrap();
+    let mut iters = 0u64;
+    let ms = time_ms(
+        || {
+            let mut tb = VirtualTestbed::new(&machine);
+            tb.max_iterations = 1_200_000;
+            let r = tb.run(&analysis).unwrap();
+            iters = r.iterations;
+        },
+        3,
+    );
+    let mips = iters as f64 / ms / 1e3;
+    println!("virtual_testbed jacobi {iters} iters -> {ms:>8.2} ms ({mips:.1} M it/s)");
+
+    // --- full ECM pipeline ---
+    println!("=== hotpath: full ECM analysis ===");
+    let ms = time_ms(
+        || {
+            let pm = PortModel::analyze(&analysis, &machine, &policy).unwrap();
+            let t = CachePredictor::new(&machine).predict(&analysis).unwrap();
+            let _ = EcmModel::build(&pm, &t, &machine).unwrap();
+        },
+        5,
+    );
+    println!("full_ecm jacobi -> {ms:>8.2} ms");
+    println!("hotpath bench OK");
+}

@@ -1,0 +1,54 @@
+//! Regenerates the paper's multicore-scaling claims (§2.3 and the
+//! "saturating at 3 cores" line of Listing 5): ECM scaling curves and
+//! saturation points for all five kernels on both machines.
+
+use kerncraft::cache::CachePredictor;
+use kerncraft::incore::{CodegenPolicy, PortModel};
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::MachineModel;
+use kerncraft::models::{reference, EcmModel, ScalingModel};
+use std::collections::HashMap;
+
+fn main() {
+    println!("=== Multicore scaling (ECM): saturation points ===");
+    println!(
+        "{:<11} {:<4} | {:>5} | {:>9} | scaling curve (work/cy x1000 per core count)",
+        "kernel", "arch", "n_s", "T_L3Mem"
+    );
+    for row in reference::TABLE5 {
+        let machine = MachineModel::builtin(row.arch).unwrap();
+        let src = reference::kernel_source(row.kernel).unwrap();
+        let consts: HashMap<String, i64> =
+            row.constants.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        let analysis =
+            KernelAnalysis::from_program(&parse(src).unwrap(), &consts).unwrap();
+        let pm = PortModel::analyze(&analysis, &machine, &CodegenPolicy::for_machine(&machine))
+            .unwrap();
+        let traffic = CachePredictor::new(&machine).predict(&analysis).unwrap();
+        let ecm = EcmModel::build(&pm, &traffic, &machine).unwrap();
+        let sc = ScalingModel::build(&ecm, &machine);
+        let curve: Vec<String> =
+            sc.curve().iter().map(|(_, t)| format!("{:.1}", t * 1000.0)).collect();
+        println!(
+            "{:<11} {:<4} | {:>5} | {:>9.1} | {}",
+            row.kernel,
+            row.arch,
+            sc.saturation,
+            sc.t_mem_link,
+            curve.join(" ")
+        );
+    }
+
+    // the paper's headline scaling claim: jacobi on SNB saturates at 3
+    let machine = MachineModel::snb();
+    let consts: HashMap<String, i64> =
+        [("N".to_string(), 6000i64), ("M".to_string(), 6000i64)].into_iter().collect();
+    let analysis =
+        KernelAnalysis::from_program(&parse(reference::KERNEL_2D5PT).unwrap(), &consts).unwrap();
+    let pm =
+        PortModel::analyze(&analysis, &machine, &CodegenPolicy::for_machine(&machine)).unwrap();
+    let traffic = CachePredictor::new(&machine).predict(&analysis).unwrap();
+    let ecm = EcmModel::build(&pm, &traffic, &machine).unwrap();
+    assert_eq!(ecm.saturation_cores(), 3, "paper: 'saturating at 3 cores'");
+    println!("scaling bench OK");
+}

@@ -1,0 +1,307 @@
+//! Benchmark mode (paper §4.7): run the kernel and *measure* cy/CL
+//! instead of predicting it.
+//!
+//! Three measurement paths:
+//! * **virtual** — the trace-driven testbed ([`crate::sim`]), standing in
+//!   for the paper's SNB/HSW machines (used by Table 5's Bench column);
+//! * **native** — hand-written Rust loops for the five paper kernels,
+//!   timed with the TSC on the *host* CPU;
+//! * **pjrt** — the AOT-lowered JAX/Pallas artifacts executed through the
+//!   PJRT runtime ([`crate::runtime`]), proving the three-layer stack
+//!   composes end to end.
+//!
+//! Native and PJRT numbers are host measurements; they validate relative
+//! behaviour (who is memory-bound, where saturation happens), not the
+//! SNB/HSW absolute cycle counts.
+
+use crate::kernel::KernelAnalysis;
+use crate::machine::MachineModel;
+use crate::util::{estimate_tsc_hz, median, monotonic_ns};
+use anyhow::{bail, Result};
+use std::hint::black_box;
+
+/// One benchmark-mode measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Which path produced it ("virtual", "native", "pjrt").
+    pub path: &'static str,
+    /// Cycles per cache line of work (8 iterations for doubles).
+    pub cy_per_cl: f64,
+    /// Iterations per second.
+    pub it_per_s: f64,
+    /// Wall seconds measured (0 for the virtual path).
+    pub wall_s: f64,
+    pub iterations: u64,
+}
+
+/// Run the virtual-testbed benchmark for a kernel analysis.
+pub fn run_virtual(analysis: &KernelAnalysis, machine: &MachineModel) -> Result<BenchResult> {
+    let sim = crate::sim::VirtualTestbed::new(machine).run(analysis)?;
+    Ok(BenchResult {
+        path: "virtual",
+        cy_per_cl: sim.cy_per_cl,
+        it_per_s: sim.iterations_per_second(machine.clock_hz),
+        wall_s: 0.0,
+        iterations: sim.iterations,
+    })
+}
+
+/// Native Rust implementations of the five paper kernels, for host
+/// measurements. Returns iterations executed.
+pub mod native {
+    use super::black_box;
+
+    /// 2D 5-point Jacobi sweep.
+    pub fn jacobi2d(a: &[f64], b: &mut [f64], m: usize, n: usize, s: f64) -> u64 {
+        for j in 1..m - 1 {
+            for i in 1..n - 1 {
+                b[j * n + i] =
+                    (a[j * n + i - 1] + a[j * n + i + 1] + a[(j - 1) * n + i] + a[(j + 1) * n + i])
+                        * s;
+            }
+        }
+        ((m - 2) * (n - 2)) as u64
+    }
+
+    /// Schönauer triad.
+    pub fn triad(a: &mut [f64], b: &[f64], c: &[f64], d: &[f64]) -> u64 {
+        let n = a.len();
+        for i in 0..n {
+            a[i] = b[i] + c[i] * d[i];
+        }
+        n as u64
+    }
+
+    /// Kahan-compensated dot product.
+    pub fn kahan_ddot(a: &[f64], b: &[f64]) -> (f64, u64) {
+        let (mut sum, mut c) = (0.0f64, 0.0f64);
+        for i in 0..a.len() {
+            let prod = a[i] * b[i];
+            let y = prod - c;
+            let t = sum + y;
+            c = black_box((t - sum) - y);
+            sum = t;
+        }
+        (sum, a.len() as u64)
+    }
+
+    /// UXX stencil sweep (arrays are m×n×n, row-major).
+    #[allow(clippy::too_many_arguments)]
+    pub fn uxx(
+        u1: &mut [f64],
+        d1: &[f64],
+        xx: &[f64],
+        xy: &[f64],
+        xz: &[f64],
+        m: usize,
+        n: usize,
+        c1: f64,
+        c2: f64,
+        dth: f64,
+    ) -> u64 {
+        let at = |k: usize, j: usize, i: usize| k * n * n + j * n + i;
+        for k in 2..m - 2 {
+            for j in 2..n - 2 {
+                for i in 2..n - 2 {
+                    let d = (d1[at(k - 1, j, i)]
+                        + d1[at(k - 1, j - 1, i)]
+                        + d1[at(k, j, i)]
+                        + d1[at(k, j - 1, i)])
+                        * 0.25;
+                    u1[at(k, j, i)] += (dth / d)
+                        * (c1 * (xx[at(k, j, i)] - xx[at(k, j, i - 1)])
+                            + c2 * (xx[at(k, j, i + 1)] - xx[at(k, j, i - 2)])
+                            + c1 * (xy[at(k, j, i)] - xy[at(k, j - 1, i)])
+                            + c2 * (xy[at(k, j + 1, i)] - xy[at(k, j - 2, i)])
+                            + c1 * (xz[at(k, j, i)] - xz[at(k - 1, j, i)])
+                            + c2 * (xz[at(k + 1, j, i)] - xz[at(k - 2, j, i)]));
+                }
+            }
+        }
+        (((m - 4) * (n - 4)) as u64) * ((n - 4) as u64)
+    }
+
+    /// Fourth-order long-range stencil sweep.
+    pub fn long_range(
+        u: &mut [f64],
+        v: &[f64],
+        roc: &[f64],
+        m: usize,
+        n: usize,
+        c: &[f64; 5],
+    ) -> u64 {
+        let at = |k: usize, j: usize, i: usize| k * n * n + j * n + i;
+        for k in 4..m - 4 {
+            for j in 4..n - 4 {
+                for i in 4..n - 4 {
+                    let mut lap = c[0] * v[at(k, j, i)];
+                    for o in 1..5usize {
+                        lap += c[o] * (v[at(k, j, i + o)] + v[at(k, j, i - o)]);
+                        lap += c[o] * (v[at(k, j + o, i)] + v[at(k, j - o, i)]);
+                        lap += c[o] * (v[at(k + o, j, i)] + v[at(k - o, j, i)]);
+                    }
+                    u[at(k, j, i)] = 2.0 * v[at(k, j, i)] - u[at(k, j, i)] + roc[at(k, j, i)] * lap;
+                }
+            }
+        }
+        (((m - 8) * (n - 8)) as u64) * ((n - 8) as u64)
+    }
+}
+
+/// Run a native host benchmark for a Table 5 kernel tag.
+pub fn run_native(tag: &str, constants: &[(&str, i64)], samples: usize) -> Result<BenchResult> {
+    let get = |name: &str| -> usize {
+        constants
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| *v as usize)
+            .unwrap_or(0)
+    };
+    let tsc_hz = estimate_tsc_hz();
+    let mut wall = Vec::new();
+    let mut iters = 0u64;
+    for _ in 0..samples.max(1) {
+        let t0 = monotonic_ns();
+        iters = match tag {
+            "2D-5pt" => {
+                let (m, n) = (get("M"), get("N"));
+                let a = vec![0.5f64; m * n];
+                let mut b = vec![0.0f64; m * n];
+                let it = native::jacobi2d(&a, &mut b, m, n, 0.25);
+                black_box(&b);
+                it
+            }
+            "triad" => {
+                let n = get("N");
+                let mut a = vec![0.0f64; n];
+                let (b, c, d) = (vec![1.0f64; n], vec![2.0f64; n], vec![3.0f64; n]);
+                let it = native::triad(&mut a, &b, &c, &d);
+                black_box(&a);
+                it
+            }
+            "Kahan-dot" => {
+                let n = get("N");
+                let (a, b) = (vec![0.5f64; n], vec![0.25f64; n]);
+                let (s, it) = native::kahan_ddot(&a, &b);
+                black_box(s);
+                it
+            }
+            "UXX" => {
+                let (m, n) = (get("M"), get("N"));
+                let mut u1 = vec![1.0f64; m * n * n];
+                let d1 = vec![2.0f64; m * n * n];
+                let xx = vec![0.5f64; m * n * n];
+                let xy = vec![0.25f64; m * n * n];
+                let xz = vec![0.75f64; m * n * n];
+                let it = native::uxx(&mut u1, &d1, &xx, &xy, &xz, m, n, 0.5, 0.25, 0.1);
+                black_box(&u1);
+                it
+            }
+            "long-range" => {
+                let (m, n) = (get("M"), get("N"));
+                let mut u = vec![1.0f64; m * n * n];
+                let v = vec![0.5f64; m * n * n];
+                let roc = vec![0.25f64; m * n * n];
+                let it = native::long_range(&mut u, &v, &roc, m, n, &[0.5, 0.2, 0.1, 0.05, 0.025]);
+                black_box(&u);
+                it
+            }
+            other => bail!("unknown kernel tag '{other}'"),
+        };
+        let t1 = monotonic_ns();
+        wall.push((t1 - t0) as f64 / 1e9);
+    }
+    let wall_s = median(&wall);
+    let it_per_s = iters as f64 / wall_s;
+    // cy/CL on the HOST: host cycles per 8 iterations
+    let cy_per_cl = tsc_hz / it_per_s * 8.0;
+    Ok(BenchResult { path: "native", cy_per_cl, it_per_s, wall_s, iterations: iters })
+}
+
+/// Run the PJRT (AOT artifact) benchmark for an artifact name.
+pub fn run_pjrt(artifacts_dir: &std::path::Path, name: &str, samples: usize) -> Result<BenchResult> {
+    let rt = crate::runtime::Runtime::cpu()?;
+    let metas = crate::runtime::load_manifest(artifacts_dir)?;
+    let meta = metas
+        .iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+    let loaded = rt.load(artifacts_dir, meta)?;
+    let timing = loaded.time(samples)?;
+    let tsc_hz = estimate_tsc_hz();
+    let it_per_s = timing.iterations_per_second();
+    Ok(BenchResult {
+        path: "pjrt",
+        cy_per_cl: tsc_hz / it_per_s * 8.0,
+        it_per_s,
+        wall_s: timing.median_ns / 1e9,
+        iterations: timing.iterations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::parse;
+    use std::collections::HashMap;
+
+    #[test]
+    fn native_jacobi_computes_correctly() {
+        let (m, n) = (6, 8);
+        let a: Vec<f64> = (0..m * n).map(|x| x as f64).collect();
+        let mut b = vec![0.0; m * n];
+        native::jacobi2d(&a, &mut b, m, n, 0.25);
+        // b[1][1] = (a[1][0] + a[1][2] + a[0][1] + a[2][1]) * 0.25
+        let want = (a[n] + a[n + 2] + a[1] + a[2 * n + 1]) * 0.25;
+        assert_eq!(b[n + 1], want);
+        assert_eq!(b[0], 0.0, "boundary untouched");
+    }
+
+    #[test]
+    fn native_kahan_beats_naive_on_ill_conditioned_sum() {
+        let n = 4096;
+        let mut a = vec![1e-8f64; n];
+        a[0] = 1e16;
+        a[n - 1] = -1e16;
+        let b = vec![1.0f64; n];
+        let (s, _) = native::kahan_ddot(&a, &b);
+        let exact = 1e-8 * (n as f64 - 2.0);
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((s - exact).abs() <= (naive - exact).abs());
+    }
+
+    #[test]
+    fn native_triad_values() {
+        let mut a = vec![0.0; 16];
+        let b = vec![1.0; 16];
+        let c = vec![2.0; 16];
+        let d = vec![3.0; 16];
+        native::triad(&mut a, &b, &c, &d);
+        assert!(a.iter().all(|&x| x == 7.0));
+    }
+
+    #[test]
+    fn run_native_reports_positive_rates() {
+        let r = run_native("triad", &[("N", 100_000)], 3).unwrap();
+        assert!(r.it_per_s > 0.0);
+        assert!(r.cy_per_cl > 0.0);
+        assert_eq!(r.iterations, 100_000);
+    }
+
+    #[test]
+    fn run_native_rejects_unknown_tag() {
+        assert!(run_native("nope", &[], 1).is_err());
+    }
+
+    #[test]
+    fn virtual_bench_agrees_with_sim() {
+        let m = MachineModel::snb();
+        let src = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+        let p = parse(src).unwrap();
+        let cmap: HashMap<String, i64> = [("N".to_string(), 500_000i64)].into_iter().collect();
+        let a = KernelAnalysis::from_program(&p, &cmap).unwrap();
+        let r = run_virtual(&a, &m).unwrap();
+        assert_eq!(r.path, "virtual");
+        assert!(r.cy_per_cl > 40.0 && r.cy_per_cl < 60.0, "{}", r.cy_per_cl);
+    }
+}

@@ -1,0 +1,381 @@
+//! Command-line interface, mirroring the paper's tool invocation
+//! (Listing 5):
+//!
+//! ```text
+//! kerncraft -p ECM --cores 1 -m machines/snb.yml kernels/2d-5pt.c \
+//!           -D N 6000 -D M 6000 [--unit cy/CL] [-v]
+//! ```
+//!
+//! Analysis modes (paper §4.6): `ECM`, `ECMData`, `ECMCPU`, `Roofline`,
+//! `RooflinePort` (the paper's RooflineIACA), `Benchmark`. Extras beyond
+//! the paper CLI: `--cache-viz` (Fig 2), `--machine-report` (Table 1),
+//! `--bench-path virtual|native|pjrt` for the three Benchmark backends.
+
+use crate::cache::CachePredictor;
+use crate::incore::{CodegenPolicy, PortModel};
+use crate::kernel::{parse, KernelAnalysis};
+use crate::machine::MachineModel;
+use crate::models::{EcmModel, RooflineModel, ScalingModel, Unit};
+use crate::report;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub mode: Mode,
+    pub machine: String,
+    pub kernel_path: Option<String>,
+    pub constants: HashMap<String, i64>,
+    pub cores: u32,
+    pub unit: Unit,
+    pub verbose: bool,
+    pub cache_viz: bool,
+    pub machine_report: bool,
+    pub bench_path: String,
+    pub artifacts_dir: String,
+    pub scalar_codegen: bool,
+}
+
+/// Analysis mode (paper §4.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Ecm,
+    EcmData,
+    EcmCpu,
+    Roofline,
+    RooflinePort,
+    Benchmark,
+}
+
+impl Mode {
+    fn parse(s: &str) -> Option<Mode> {
+        Some(match s {
+            "ECM" => Mode::Ecm,
+            "ECMData" => Mode::EcmData,
+            "ECMCPU" => Mode::EcmCpu,
+            "Roofline" => Mode::Roofline,
+            "RooflinePort" | "RooflineIACA" => Mode::RooflinePort,
+            "Benchmark" => Mode::Benchmark,
+            _ => return None,
+        })
+    }
+}
+
+/// Parse argv (without the program name).
+pub fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut args = Args {
+        mode: Mode::Ecm,
+        machine: "SNB".to_string(),
+        kernel_path: None,
+        constants: HashMap::new(),
+        cores: 1,
+        unit: Unit::CyPerCl,
+        verbose: false,
+        cache_viz: false,
+        machine_report: false,
+        bench_path: "virtual".to_string(),
+        artifacts_dir: "artifacts".to_string(),
+        scalar_codegen: false,
+    };
+    let mut it = argv.iter().peekable();
+    let mut next_val = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+                        flag: &str|
+     -> Result<String> {
+        it.next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing value after {flag}"))
+    };
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "-p" | "--pmodel" => {
+                let v = next_val(&mut it, "-p")?;
+                args.mode =
+                    Mode::parse(&v).ok_or_else(|| anyhow!("unknown analysis mode '{v}'"))?;
+            }
+            "-m" | "--machine" => args.machine = next_val(&mut it, "-m")?,
+            "-D" | "--define" => {
+                let name = next_val(&mut it, "-D")?;
+                let value = next_val(&mut it, "-D NAME")?;
+                let value: i64 =
+                    value.parse().with_context(|| format!("bad value for -D {name}"))?;
+                args.constants.insert(name, value);
+            }
+            "--cores" => {
+                args.cores = next_val(&mut it, "--cores")?.parse().context("--cores")?
+            }
+            "--unit" => {
+                let v = next_val(&mut it, "--unit")?;
+                args.unit = Unit::parse(&v).ok_or_else(|| anyhow!("unknown unit '{v}'"))?;
+            }
+            "-v" | "--verbose" => args.verbose = true,
+            "--cache-viz" => args.cache_viz = true,
+            "--machine-report" => args.machine_report = true,
+            "--bench-path" => args.bench_path = next_val(&mut it, "--bench-path")?,
+            "--artifacts" => args.artifacts_dir = next_val(&mut it, "--artifacts")?,
+            "--scalar" => args.scalar_codegen = true,
+            "-h" | "--help" => {
+                bail!("{}", usage());
+            }
+            other if !other.starts_with('-') => {
+                if args.kernel_path.is_some() {
+                    bail!("multiple kernel files given");
+                }
+                args.kernel_path = Some(other.to_string());
+            }
+            other => bail!("unknown flag '{other}'\n{}", usage()),
+        }
+    }
+    Ok(args)
+}
+
+/// CLI usage text.
+pub fn usage() -> String {
+    "usage: kerncraft -p MODE [-m MACHINE] kernel.c -D NAME VALUE ...\n\
+     modes: ECM ECMData ECMCPU Roofline RooflinePort Benchmark\n\
+     MACHINE: SNB | HSW | path/to/machine.yml\n\
+     options: --cores N  --unit {cy/CL,It/s,FLOP/s}  -v\n\
+              --cache-viz  --machine-report  --scalar\n\
+              --bench-path {virtual,native,pjrt}  --artifacts DIR"
+        .to_string()
+}
+
+/// Load the machine model named by `-m` (builtin tag or file path).
+pub fn load_machine(name: &str) -> Result<MachineModel> {
+    if let Some(m) = MachineModel::builtin(name) {
+        return Ok(m);
+    }
+    MachineModel::from_file(name)
+}
+
+/// Run the CLI; returns the report text.
+pub fn run(argv: &[String]) -> Result<String> {
+    let args = parse_args(argv)?;
+    let machine = load_machine(&args.machine)?;
+    let mut out = String::new();
+
+    if args.machine_report {
+        out.push_str(&report::machine_report(&machine));
+        if args.kernel_path.is_none() {
+            return Ok(out);
+        }
+    }
+
+    let Some(path) = &args.kernel_path else {
+        bail!("no kernel file given\n{}", usage());
+    };
+    let source = std::fs::read_to_string(path)
+        .with_context(|| format!("reading kernel file {path}"))?;
+    let program = parse(&source)?;
+    let analysis = KernelAnalysis::from_program(&program, &args.constants)?;
+
+    if args.verbose {
+        out.push_str(&report::analysis_report(&analysis));
+        out.push('\n');
+    }
+
+    let policy = if args.scalar_codegen {
+        CodegenPolicy::scalar()
+    } else {
+        CodegenPolicy::for_machine(&machine)
+    };
+
+    match args.mode {
+        Mode::EcmCpu => {
+            let pm = PortModel::analyze(&analysis, &machine, &policy)?;
+            out.push_str(&report::incore_report(&pm));
+        }
+        Mode::EcmData => {
+            let traffic =
+                CachePredictor::with_cores(&machine, args.cores).predict(&analysis)?;
+            let ecm = EcmModel::build_data_only(&traffic, &machine)?;
+            let sc = ScalingModel::build(&ecm, &machine);
+            out.push_str(&report::ecm_report(&ecm, &sc, args.unit, args.verbose));
+            if args.cache_viz {
+                out.push_str(&report::cache_viz(&analysis, &traffic));
+            }
+        }
+        Mode::Ecm => {
+            let pm = PortModel::analyze(&analysis, &machine, &policy)?;
+            let traffic =
+                CachePredictor::with_cores(&machine, args.cores).predict(&analysis)?;
+            let ecm = EcmModel::build(&pm, &traffic, &machine)?;
+            let sc = ScalingModel::build(&ecm, &machine);
+            if args.verbose {
+                out.push_str(&report::incore_report(&pm));
+            }
+            out.push_str(&report::ecm_report(&ecm, &sc, args.unit, args.verbose));
+            if args.cache_viz {
+                out.push_str(&report::cache_viz(&analysis, &traffic));
+            }
+        }
+        Mode::Roofline | Mode::RooflinePort => {
+            let traffic =
+                CachePredictor::with_cores(&machine, args.cores).predict(&analysis)?;
+            let pm = if args.mode == Mode::RooflinePort {
+                Some(PortModel::analyze(&analysis, &machine, &policy)?)
+            } else {
+                None
+            };
+            let roofline = RooflineModel::build_cores(
+                &analysis,
+                &traffic,
+                &machine,
+                pm.as_ref(),
+                args.cores,
+            )?;
+            out.push_str(&report::roofline_report(&roofline, args.unit));
+            if args.cache_viz {
+                out.push_str(&report::cache_viz(&analysis, &traffic));
+            }
+        }
+        Mode::Benchmark => match args.bench_path.as_str() {
+            "virtual" => {
+                let r = crate::bench_mode::run_virtual(&analysis, &machine)?;
+                out.push_str(&format!(
+                    "Benchmark (virtual testbed {}): {:.1} cy/CL ({:.3e} It/s)\n",
+                    machine.arch, r.cy_per_cl, r.it_per_s
+                ));
+            }
+            "native" => {
+                // map the kernel file back to a Table 5 tag by structure
+                let tag = native_tag_for(path)
+                    .ok_or_else(|| anyhow!("no native implementation for {path}"))?;
+                let consts: Vec<(&str, i64)> =
+                    args.constants.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+                let r = crate::bench_mode::run_native(tag, &consts, 3)?;
+                out.push_str(&format!(
+                    "Benchmark (native host): {:.1} host-cy/CL ({:.3e} It/s)\n",
+                    r.cy_per_cl, r.it_per_s
+                ));
+            }
+            "pjrt" => {
+                let name = pjrt_name_for(path)
+                    .ok_or_else(|| anyhow!("no artifact mapping for {path}"))?;
+                let r = crate::bench_mode::run_pjrt(
+                    std::path::Path::new(&args.artifacts_dir),
+                    name,
+                    3,
+                )?;
+                out.push_str(&format!(
+                    "Benchmark (PJRT artifact '{}'): {:.1} host-cy/CL ({:.3e} It/s, wall {:.3} ms)\n",
+                    name,
+                    r.cy_per_cl,
+                    r.it_per_s,
+                    r.wall_s * 1e3
+                ));
+            }
+            other => bail!("unknown --bench-path '{other}'"),
+        },
+    }
+    Ok(out)
+}
+
+/// Map a kernel file path to the Table 5 tag used by the native bench.
+fn native_tag_for(path: &str) -> Option<&'static str> {
+    let stem = std::path::Path::new(path).file_stem()?.to_str()?;
+    Some(match stem {
+        "2d-5pt" => "2D-5pt",
+        "uxx" => "UXX",
+        "long-range" => "long-range",
+        "kahan-ddot" => "Kahan-dot",
+        "triad" => "triad",
+        _ => return None,
+    })
+}
+
+/// Map a kernel file path to the AOT artifact name.
+fn pjrt_name_for(path: &str) -> Option<&'static str> {
+    let stem = std::path::Path::new(path).file_stem()?.to_str()?;
+    Some(match stem {
+        "2d-5pt" => "jacobi2d",
+        "uxx" => "uxx",
+        "long-range" => "long_range",
+        "kahan-ddot" => "kahan_ddot",
+        "triad" => "triad",
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_paper_invocation() {
+        let a = parse_args(&argv(
+            "-p ECM --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000",
+        ))
+        .unwrap();
+        assert_eq!(a.mode, Mode::Ecm);
+        assert_eq!(a.machine, "SNB");
+        assert_eq!(a.constants["N"], 6000);
+        assert_eq!(a.cores, 1);
+        assert_eq!(a.kernel_path.as_deref(), Some("kernels/2d-5pt.c"));
+    }
+
+    #[test]
+    fn roofline_iaca_alias() {
+        let a = parse_args(&argv("-p RooflineIACA k.c")).unwrap();
+        assert_eq!(a.mode, Mode::RooflinePort);
+    }
+
+    #[test]
+    fn rejects_unknown_mode_and_flag() {
+        assert!(parse_args(&argv("-p Nope k.c")).is_err());
+        assert!(parse_args(&argv("--frobnicate k.c")).is_err());
+    }
+
+    #[test]
+    fn unit_flag() {
+        let a = parse_args(&argv("-p ECM --unit FLOP/s k.c")).unwrap();
+        assert_eq!(a.unit, Unit::FlopPerS);
+    }
+
+    #[test]
+    fn end_to_end_ecm_run_matches_listing5() {
+        // paper Listing 5 invocation against the shipped kernel corpus
+        let out = run(&argv(
+            "-p ECM --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000",
+        ))
+        .unwrap();
+        assert!(out.contains("ECM model"), "{out}");
+        assert!(out.contains("saturating at 3 cores"), "{out}");
+    }
+
+    #[test]
+    fn end_to_end_roofline_run() {
+        let out = run(&argv(
+            "-p RooflinePort --unit cy/CL --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000 -v",
+        ))
+        .unwrap();
+        assert!(out.contains("Bottlenecks"), "{out}");
+        assert!(out.contains("Cache or mem bound"), "{out}");
+    }
+
+    #[test]
+    fn benchmark_virtual_mode_runs() {
+        let out = run(&argv(
+            "-p Benchmark -m SNB kernels/triad.c -D N 500000",
+        ))
+        .unwrap();
+        assert!(out.contains("virtual testbed"), "{out}");
+    }
+
+    #[test]
+    fn machine_report_standalone() {
+        let out = run(&argv("--machine-report -m HSW")).unwrap();
+        assert!(out.contains("HSW"), "{out}");
+    }
+
+    #[test]
+    fn mapping_tables() {
+        assert_eq!(native_tag_for("kernels/2d-5pt.c"), Some("2D-5pt"));
+        assert_eq!(pjrt_name_for("kernels/long-range.c"), Some("long_range"));
+        assert_eq!(native_tag_for("kernels/custom.c"), None);
+    }
+}

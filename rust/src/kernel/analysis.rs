@@ -1,0 +1,835 @@
+//! Static kernel analysis (paper §4.3, Tables 2–4).
+//!
+//! Turns a parsed [`Program`] plus `-D` constant bindings into:
+//! * the **loop stack** (Table 2): index variable, start, exclusive end,
+//!   step, for every loop of the nest;
+//! * **data sources and destinations** (Tables 3/4): every array access
+//!   classified per dimension as `direct` or `relative ±offset`;
+//! * the **linearized access set** (§4.5): each access as an affine
+//!   function of the loop indices in *elements* of the underlying array,
+//!   which is what the cache predictor consumes;
+//! * **flop counts** (adds, muls, divides) of the innermost body;
+//! * scalar classification: true sources, temporaries, and loop-carried
+//!   scalars (the latter drive the critical-path model, e.g. Kahan).
+
+use super::ast::*;
+use super::KernelError;
+use std::collections::HashMap;
+use std::fmt;
+
+/// One entry of the loop stack (paper Table 2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoopInfo {
+    /// Index variable name.
+    pub index: String,
+    /// First value of the index.
+    pub start: i64,
+    /// Exclusive upper bound.
+    pub end: i64,
+    /// Positive step.
+    pub step: i64,
+}
+
+impl LoopInfo {
+    /// Number of iterations this loop executes.
+    pub fn trip(&self) -> i64 {
+        if self.end <= self.start {
+            0
+        } else {
+            (self.end - self.start + self.step - 1) / self.step
+        }
+    }
+}
+
+/// A declared array with resolved dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayInfo {
+    pub name: String,
+    pub ty: Type,
+    /// Resolved dimension extents in elements (outermost first).
+    pub dims: Vec<u64>,
+    /// Row-major strides in elements (same order as `dims`).
+    pub strides: Vec<u64>,
+}
+
+impl ArrayInfo {
+    /// Total elements.
+    pub fn elements(&self) -> u64 {
+        self.dims.iter().product()
+    }
+
+    /// Total size in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.elements() * self.ty.size()
+    }
+}
+
+/// How a single dimension of an access refers to the iteration space
+/// (the paper's "direct" vs "relative" classification of Tables 3/4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DimAccess {
+    /// Constant index (`xy[0][..]`), or a `-D`-bound constant.
+    Direct(i64),
+    /// `loop_var ± offset`.
+    Relative { var: String, offset: i64 },
+}
+
+impl fmt::Display for DimAccess {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DimAccess::Direct(c) => write!(f, "direct {c}"),
+            DimAccess::Relative { var, offset } => {
+                if *offset == 0 {
+                    write!(f, "relative {var}")
+                } else if *offset > 0 {
+                    write!(f, "relative {var}+{offset}")
+                } else {
+                    write!(f, "relative {var}{offset}")
+                }
+            }
+        }
+    }
+}
+
+/// An array access in both per-dimension form (for reporting) and
+/// linearized affine form (for traffic analysis).
+///
+/// The linear offset of the access at iteration-space displacement
+/// `delta` (one entry per loop, outer→inner) from the loop center is
+/// `offset + Σ coeffs[k] * delta[k]`, in elements of the array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinearAccess {
+    /// Index into [`KernelAnalysis::arrays`].
+    pub array: usize,
+    /// Per-dimension classification (reporting form, Tables 3/4).
+    pub dims: Vec<DimAccess>,
+    /// Stride coefficient per loop variable (outer→inner), elements.
+    pub coeffs: Vec<i64>,
+    /// Constant part of the linearized index, elements, with the loop
+    /// center at zero (direct-index contributions are folded in).
+    pub offset: i64,
+    /// How many times this exact access appears in the body.
+    pub multiplicity: u32,
+}
+
+impl LinearAccess {
+    /// Linear element offset at iteration displacement `delta`.
+    pub fn offset_at(&self, delta: &[i64]) -> i64 {
+        debug_assert_eq!(delta.len(), self.coeffs.len());
+        self.offset + self.coeffs.iter().zip(delta).map(|(c, d)| c * d).sum::<i64>()
+    }
+}
+
+/// Flop counts of one inner-loop iteration (source-level, per the paper:
+/// compiler transformations like CSE are intentionally not modeled here —
+/// the in-core port model applies its own codegen policies).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FlopCount {
+    pub adds: u32,
+    pub muls: u32,
+    pub divs: u32,
+}
+
+impl FlopCount {
+    /// Total flops per inner iteration.
+    pub fn total(&self) -> u32 {
+        self.adds + self.muls + self.divs
+    }
+}
+
+/// Scalar classification result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScalarUse {
+    /// Read-only input (a "data source" in Table 3): `s`, `c0`, ...
+    Source,
+    /// Written before read within one iteration: `d`, `lap`, `prod`, ...
+    Temporary,
+    /// Read before written ⇒ carries a dependency across iterations
+    /// (`sum`, `c` in Kahan; `s` in a scalar product).
+    LoopCarried,
+}
+
+/// Full static analysis of a kernel (everything downstream stages need).
+#[derive(Debug, Clone)]
+pub struct KernelAnalysis {
+    /// Loop stack, outermost first (Table 2).
+    pub loops: Vec<LoopInfo>,
+    /// Declared arrays that are actually accessed.
+    pub arrays: Vec<ArrayInfo>,
+    /// Array reads of one inner iteration (deduplicated, with multiplicity).
+    pub reads: Vec<LinearAccess>,
+    /// Array writes of one inner iteration.
+    pub writes: Vec<LinearAccess>,
+    /// Scalar classification by name.
+    pub scalars: HashMap<String, ScalarUse>,
+    /// Source-level flop counts per inner iteration.
+    pub flops: FlopCount,
+    /// The innermost statements (cloned for downstream IR generation).
+    pub stmts: Vec<Stmt>,
+    /// Dominant element type (widest across accessed arrays).
+    pub element: Type,
+    /// The constant bindings used.
+    pub constants: HashMap<String, i64>,
+}
+
+/// Alias kept for API clarity: the per-iteration access pattern.
+pub type AccessPattern = (Vec<LinearAccess>, Vec<LinearAccess>);
+
+/// Evaluate an integer expression under constant bindings.
+fn eval_int(e: &Expr, consts: &HashMap<String, i64>) -> Result<i64, KernelError> {
+    match e {
+        Expr::Int(v) => Ok(*v),
+        Expr::Float(_) => Err(KernelError::Restriction(
+            "float literal where an integer is required".into(),
+        )),
+        Expr::Var(name) => consts
+            .get(name)
+            .copied()
+            .ok_or_else(|| KernelError::UnboundConstant(name.clone())),
+        Expr::Neg(inner) => Ok(-eval_int(inner, consts)?),
+        Expr::Binary { op, lhs, rhs } => {
+            let l = eval_int(lhs, consts)?;
+            let r = eval_int(rhs, consts)?;
+            Ok(match op {
+                BinOp::Add => l + r,
+                BinOp::Sub => l - r,
+                BinOp::Mul => l * r,
+                BinOp::Div => {
+                    if r == 0 {
+                        return Err(KernelError::Semantic("division by zero in size expression".into()));
+                    }
+                    l / r
+                }
+            })
+        }
+        Expr::Index { .. } => Err(KernelError::Restriction(
+            "array access inside a size/bound expression".into(),
+        )),
+    }
+}
+
+/// Normalize an index expression to `var ± offset` or a constant, per the
+/// paper's §4.3 restrictions.
+fn classify_index(
+    e: &Expr,
+    loop_vars: &[String],
+    consts: &HashMap<String, i64>,
+) -> Result<DimAccess, KernelError> {
+    // Try pure-constant evaluation first (covers `0`, `N/2`, bound consts).
+    if let Ok(v) = eval_int(e, consts) {
+        return Ok(DimAccess::Direct(v));
+    }
+    fn split(
+        e: &Expr,
+        loop_vars: &[String],
+        consts: &HashMap<String, i64>,
+    ) -> Result<(Option<String>, i64), KernelError> {
+        match e {
+            Expr::Var(name) if loop_vars.contains(name) => Ok((Some(name.clone()), 0)),
+            Expr::Var(name) => consts
+                .get(name)
+                .map(|v| (None, *v))
+                .ok_or_else(|| KernelError::UnboundConstant(name.clone())),
+            Expr::Int(v) => Ok((None, *v)),
+            Expr::Neg(inner) => {
+                let (v, o) = split(inner, loop_vars, consts)?;
+                if v.is_some() {
+                    return Err(KernelError::Restriction(
+                        "negated loop index in array subscript".into(),
+                    ));
+                }
+                Ok((None, -o))
+            }
+            Expr::Binary { op: BinOp::Add, lhs, rhs } => {
+                let (lv, lo) = split(lhs, loop_vars, consts)?;
+                let (rv, ro) = split(rhs, loop_vars, consts)?;
+                match (lv, rv) {
+                    (Some(v), None) | (None, Some(v)) => Ok((Some(v), lo + ro)),
+                    (None, None) => Ok((None, lo + ro)),
+                    (Some(_), Some(_)) => Err(KernelError::Restriction(
+                        "sum of two loop indices in array subscript".into(),
+                    )),
+                }
+            }
+            Expr::Binary { op: BinOp::Sub, lhs, rhs } => {
+                let (lv, lo) = split(lhs, loop_vars, consts)?;
+                let (rv, ro) = split(rhs, loop_vars, consts)?;
+                match (lv, rv) {
+                    (Some(v), None) => Ok((Some(v), lo - ro)),
+                    (None, None) => Ok((None, lo - ro)),
+                    _ => Err(KernelError::Restriction(
+                        "loop index on the right of a subtraction in subscript".into(),
+                    )),
+                }
+            }
+            other => Err(KernelError::Restriction(format!(
+                "array subscript must be `loop_var ± const` or a constant, found {other:?}"
+            ))),
+        }
+    }
+    let (var, off) = split(e, loop_vars, consts)?;
+    match var {
+        Some(v) => Ok(DimAccess::Relative { var: v, offset: off }),
+        None => Ok(DimAccess::Direct(off)),
+    }
+}
+
+impl KernelAnalysis {
+    /// Run the full static analysis of `program` under `constants`.
+    pub fn from_program(
+        program: &Program,
+        constants: &HashMap<String, i64>,
+    ) -> Result<Self, KernelError> {
+        // --- loop stack (Table 2) ---
+        let mut loops = Vec::new();
+        for l in program.loops() {
+            let start = eval_int(&l.start, constants)?;
+            let end = eval_int(&l.end, constants)?;
+            if l.step <= 0 {
+                return Err(KernelError::Restriction("non-positive loop step".into()));
+            }
+            loops.push(LoopInfo { index: l.index.clone(), start, end, step: l.step });
+        }
+        let loop_vars: Vec<String> = loops.iter().map(|l| l.index.clone()).collect();
+        {
+            let mut sorted = loop_vars.clone();
+            sorted.sort();
+            sorted.dedup();
+            if sorted.len() != loop_vars.len() {
+                return Err(KernelError::Semantic("duplicate loop index variable".into()));
+            }
+        }
+
+        let stmts = program.inner_stmts().to_vec();
+
+        // --- gather raw array accesses & scalar uses in statement order ---
+        let mut raw: Vec<Raw> = Vec::new();
+        let mut scalar_events: Vec<(String, bool)> = Vec::new(); // (name, is_write)
+
+        fn walk_expr(e: &Expr, raw: &mut Vec<Raw>, scalars: &mut Vec<(String, bool)>) {
+            match e {
+                Expr::Index { array, indices } => {
+                    raw.push(Raw { name: array.clone(), dims_expr: indices.clone(), write: false });
+                    // index sub-expressions cannot contain data accesses
+                    // (validated by classify_index later)
+                }
+                Expr::Var(name) => scalars.push((name.clone(), false)),
+                Expr::Binary { lhs, rhs, .. } => {
+                    walk_expr(lhs, raw, scalars);
+                    walk_expr(rhs, raw, scalars);
+                }
+                Expr::Neg(inner) => walk_expr(inner, raw, scalars),
+                _ => {}
+            }
+        }
+
+        let mut flops = FlopCount::default();
+        fn count_flops(e: &Expr, f: &mut FlopCount) {
+            match e {
+                Expr::Binary { op, lhs, rhs } => {
+                    match op {
+                        BinOp::Add | BinOp::Sub => f.adds += 1,
+                        BinOp::Mul => f.muls += 1,
+                        BinOp::Div => f.divs += 1,
+                    }
+                    count_flops(lhs, f);
+                    count_flops(rhs, f);
+                }
+                Expr::Neg(inner) => count_flops(inner, f),
+                _ => {}
+            }
+        }
+
+        for st in &stmts {
+            // RHS first (reads), then LHS (write) — matches C semantics.
+            walk_expr(&st.rhs, &mut raw, &mut scalar_events);
+            count_flops(&st.rhs, &mut flops);
+            if let Some(op) = st.op.bin_op() {
+                // compound assignment implies a read of the destination
+                // and one extra flop
+                match op {
+                    BinOp::Add | BinOp::Sub => flops.adds += 1,
+                    BinOp::Mul => flops.muls += 1,
+                    BinOp::Div => flops.divs += 1,
+                }
+                match &st.lhs {
+                    Expr::Index { array, indices } => raw.push(Raw {
+                        name: array.clone(),
+                        dims_expr: indices.clone(),
+                        write: false,
+                    }),
+                    Expr::Var(name) => scalar_events.push((name.clone(), false)),
+                    _ => unreachable!("parser enforces lhs shape"),
+                }
+            }
+            match &st.lhs {
+                Expr::Index { array, indices } => {
+                    raw.push(Raw { name: array.clone(), dims_expr: indices.clone(), write: true })
+                }
+                Expr::Var(name) => scalar_events.push((name.clone(), true)),
+                _ => unreachable!("parser enforces lhs shape"),
+            }
+        }
+
+        // --- resolve arrays actually accessed ---
+        let mut arrays: Vec<ArrayInfo> = Vec::new();
+        let mut array_ix: HashMap<String, usize> = HashMap::new();
+        let mut element = Type::Float;
+        for r in &raw {
+            if array_ix.contains_key(&r.name) {
+                continue;
+            }
+            let decl = program.decl(&r.name).ok_or_else(|| {
+                KernelError::Semantic(format!("array '{}' used but not declared", r.name))
+            })?;
+            if !decl.is_array() {
+                return Err(KernelError::Semantic(format!(
+                    "'{}' is declared scalar but indexed as array",
+                    r.name
+                )));
+            }
+            if decl.dims.len() != r.dims_expr.len() {
+                return Err(KernelError::Semantic(format!(
+                    "array '{}' declared with {} dims but accessed with {}",
+                    r.name,
+                    decl.dims.len(),
+                    r.dims_expr.len()
+                )));
+            }
+            let mut dims = Vec::new();
+            for (k, d) in decl.dims.iter().enumerate() {
+                let extent = match d {
+                    Expr::Var(v) if v == "__unbounded__" => {
+                        // `double a[]`: infer the extent from the loop that
+                        // indexes this dimension (max index + slack).
+                        infer_unbounded_extent(&raw, &r.name, k, &loops)?
+                    }
+                    other => {
+                        let v = eval_int(other, constants)?;
+                        if v <= 0 {
+                            return Err(KernelError::Semantic(format!(
+                                "array '{}' dimension {k} resolves to non-positive {v}",
+                                r.name
+                            )));
+                        }
+                        v as u64
+                    }
+                };
+                dims.push(extent);
+            }
+            let mut strides = vec![1u64; dims.len()];
+            for k in (0..dims.len().saturating_sub(1)).rev() {
+                strides[k] = strides[k + 1] * dims[k + 1];
+            }
+            if decl.ty == Type::Double {
+                element = Type::Double;
+            }
+            array_ix.insert(r.name.clone(), arrays.len());
+            arrays.push(ArrayInfo { name: r.name.clone(), ty: decl.ty, dims, strides });
+        }
+
+        // --- linearize accesses ---
+        let mut reads: Vec<LinearAccess> = Vec::new();
+        let mut writes: Vec<LinearAccess> = Vec::new();
+        for r in &raw {
+            let aix = array_ix[&r.name];
+            let info = &arrays[aix];
+            let mut dims = Vec::new();
+            let mut coeffs = vec![0i64; loops.len()];
+            let mut offset = 0i64;
+            for (k, ix_expr) in r.dims_expr.iter().enumerate() {
+                let cls = classify_index(ix_expr, &loop_vars, constants)?;
+                match &cls {
+                    DimAccess::Direct(c) => {
+                        offset += c * info.strides[k] as i64;
+                    }
+                    DimAccess::Relative { var, offset: o } => {
+                        let li = loop_vars.iter().position(|v| v == var).ok_or_else(|| {
+                            KernelError::Semantic(format!("index var '{var}' is not a loop index"))
+                        })?;
+                        coeffs[li] += info.strides[k] as i64;
+                        offset += o * info.strides[k] as i64;
+                    }
+                }
+                dims.push(cls);
+            }
+            let target = if r.write { &mut writes } else { &mut reads };
+            if let Some(existing) = target
+                .iter_mut()
+                .find(|a| a.array == aix && a.coeffs == coeffs && a.offset == offset)
+            {
+                existing.multiplicity += 1;
+            } else {
+                target.push(LinearAccess { array: aix, dims, coeffs, offset, multiplicity: 1 });
+            }
+        }
+
+        // --- scalar classification ---
+        let mut scalars: HashMap<String, ScalarUse> = HashMap::new();
+        let mut written: Vec<String> = Vec::new();
+        for (name, is_write) in &scalar_events {
+            if loop_vars.contains(name) {
+                continue; // loop indices are not data
+            }
+            if *is_write {
+                if !written.contains(name) {
+                    written.push(name.clone());
+                }
+                // keep an earlier LoopCarried / Temporary classification
+                scalars.entry(name.clone()).or_insert(ScalarUse::Temporary);
+                if scalars[name] == ScalarUse::Source {
+                    // was read before this write ⇒ loop-carried
+                    scalars.insert(name.clone(), ScalarUse::LoopCarried);
+                }
+            } else if !written.contains(name) {
+                // read before any write in iteration order
+                scalars.entry(name.clone()).or_insert(ScalarUse::Source);
+            }
+        }
+
+        Ok(Self {
+            loops,
+            arrays,
+            reads,
+            writes,
+            scalars,
+            flops,
+            stmts,
+            element,
+            constants: constants.clone(),
+        })
+    }
+
+    /// Elements per cache line for the dominant element type.
+    pub fn elements_per_cacheline(&self, cacheline_bytes: u64) -> u64 {
+        cacheline_bytes / self.element.size()
+    }
+
+    /// Iterations that constitute one "unit of work" — the number of inner
+    /// iterations covering exactly one cache line of stride-1 progress
+    /// (paper §2.3: "a number of iterations that leads to a small integer
+    /// number of cache line transfers").
+    pub fn unit_of_work(&self, cacheline_bytes: u64) -> u64 {
+        let inner_step = self.loops.last().map(|l| l.step).unwrap_or(1) as u64;
+        let epc = self.elements_per_cacheline(cacheline_bytes).max(1);
+        (epc / inner_step).max(1)
+    }
+
+    /// Total inner-loop iterations of the whole nest.
+    pub fn total_iterations(&self) -> u64 {
+        self.loops.iter().map(|l| l.trip().max(0) as u64).product()
+    }
+
+    /// Names of scalar data sources (Table 3's scalar rows).
+    pub fn scalar_sources(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .scalars
+            .iter()
+            .filter(|(_, u)| **u == ScalarUse::Source)
+            .map(|(n, _)| n.as_str())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Names of loop-carried scalars (drive the recurrence critical path).
+    pub fn carried_scalars(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .scalars
+            .iter()
+            .filter(|(_, u)| **u == ScalarUse::LoopCarried)
+            .map(|(n, _)| n.as_str())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Render the loop stack as the paper's Table 2.
+    pub fn loop_stack_table(&self) -> String {
+        let mut s = String::from("index | start | end | step\n");
+        for l in &self.loops {
+            s.push_str(&format!("{} | {} | {} | +{}\n", l.index, l.start, l.end, l.step));
+        }
+        s
+    }
+
+    /// Render data sources (Table 3) and destinations (Table 4).
+    pub fn access_table(&self) -> String {
+        let mut s = String::from("sources:\n");
+        for a in &self.reads {
+            let dims: Vec<String> = a.dims.iter().map(|d| d.to_string()).collect();
+            s.push_str(&format!("  {}: [{}]\n", self.arrays[a.array].name, dims.join(", ")));
+        }
+        for name in self.scalar_sources() {
+            s.push_str(&format!("  {name}: direct\n"));
+        }
+        s.push_str("destinations:\n");
+        for a in &self.writes {
+            let dims: Vec<String> = a.dims.iter().map(|d| d.to_string()).collect();
+            s.push_str(&format!("  {}: [{}]\n", self.arrays[a.array].name, dims.join(", ")));
+        }
+        s
+    }
+
+    /// Bytes loaded from registers' perspective per inner iteration
+    /// (reads × element size; write-allocate excluded).
+    pub fn read_bytes_per_iteration(&self) -> u64 {
+        self.reads
+            .iter()
+            .map(|a| a.multiplicity as u64 * self.arrays[a.array].ty.size())
+            .sum()
+    }
+
+    /// Bytes stored per inner iteration.
+    pub fn write_bytes_per_iteration(&self) -> u64 {
+        self.writes
+            .iter()
+            .map(|a| a.multiplicity as u64 * self.arrays[a.array].ty.size())
+            .sum()
+    }
+}
+
+/// A raw (pre-linearization) array access gathered from the statements.
+struct Raw {
+    name: String,
+    dims_expr: Vec<Expr>,
+    write: bool,
+}
+
+/// Infer the extent of an unbounded (`[]`) array dimension from whichever
+/// loop variable indexes it: loop end bound plus a cache line of slack for
+/// `±offset` subscripts.
+fn infer_unbounded_extent(
+    raw: &[Raw],
+    name: &str,
+    dim: usize,
+    loops: &[LoopInfo],
+) -> Result<u64, KernelError> {
+    for r in raw {
+        if r.name != name {
+            continue;
+        }
+        let var = match r.dims_expr.get(dim) {
+            Some(Expr::Var(v)) => Some(v.clone()),
+            Some(Expr::Binary { lhs, rhs, .. }) => match (lhs.as_ref(), rhs.as_ref()) {
+                (Expr::Var(v), _) | (_, Expr::Var(v)) => Some(v.clone()),
+                _ => None,
+            },
+            _ => None,
+        };
+        if let Some(var) = var {
+            if let Some(l) = loops.iter().find(|l| l.index == var) {
+                return Ok((l.end + 64).max(64) as u64);
+            }
+        }
+    }
+    Err(KernelError::Semantic(format!(
+        "cannot infer extent of unbounded dimension {dim} of '{name}'"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse;
+    use super::*;
+
+    fn consts(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    const JACOBI: &str = r#"
+        double a[M][N], b[M][N], s;
+        for (int j = 1; j < M - 1; j++)
+            for (int i = 1; i < N - 1; i++)
+                b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s;
+    "#;
+
+    #[test]
+    fn jacobi_loop_stack_matches_table2() {
+        // Paper Table 2: N=5000, M=500 → j: 1..499 step 1; i: 1..4999.
+        let p = parse(JACOBI).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 5000), ("M", 500)])).unwrap();
+        assert_eq!(a.loops.len(), 2);
+        assert_eq!(a.loops[0], LoopInfo { index: "j".into(), start: 1, end: 499, step: 1 });
+        assert_eq!(a.loops[1], LoopInfo { index: "i".into(), start: 1, end: 4999, step: 1 });
+        assert_eq!(a.loops[0].trip(), 498);
+    }
+
+    #[test]
+    fn jacobi_accesses_match_tables_3_and_4() {
+        let p = parse(JACOBI).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 40), ("M", 40)])).unwrap();
+        // 4 distinct reads of a[], 1 write of b[], scalar source s
+        assert_eq!(a.reads.len(), 4);
+        assert_eq!(a.writes.len(), 1);
+        assert_eq!(a.scalar_sources(), vec!["s"]);
+        // linearized relative offsets must be -1, +1, -N, +N
+        let mut offs: Vec<i64> = a.reads.iter().map(|r| r.offset).collect();
+        offs.sort();
+        assert_eq!(offs, vec![-40, -1, 1, 40]);
+        // write at center
+        assert_eq!(a.writes[0].offset, 0);
+        // coefficient check: a[j][i] has coeffs [N, 1]
+        let r = a.reads.iter().find(|r| r.offset == -1).unwrap();
+        assert_eq!(r.coeffs, vec![40, 1]);
+    }
+
+    #[test]
+    fn jacobi_flops() {
+        let p = parse(JACOBI).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 40), ("M", 40)])).unwrap();
+        assert_eq!(a.flops, FlopCount { adds: 3, muls: 1, divs: 0 });
+    }
+
+    #[test]
+    fn kahan_scalar_classification() {
+        let src = r#"
+            double a[N], b[N], c;
+            double sum, prod, t, y;
+            for (int i = 0; i < N; ++i) {
+                prod = a[i] * b[i];
+                y = prod - c;
+                t = sum + y;
+                c = (t - sum) - y;
+                sum = t;
+            }
+        "#;
+        let p = parse(src).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 1000)])).unwrap();
+        let carried = a.carried_scalars();
+        assert!(carried.contains(&"c"), "c is read (y=prod-c) before written");
+        assert!(carried.contains(&"sum"), "sum is read (t=sum+y) before written");
+        assert_eq!(a.scalars["prod"], ScalarUse::Temporary);
+        assert_eq!(a.scalars["y"], ScalarUse::Temporary);
+        assert_eq!(a.scalars["t"], ScalarUse::Temporary);
+        // Kahan: 2 flops of the product line? prod = a*b (1 mul);
+        // y (1 add), t (1 add), c (2 adds), total adds = 4
+        assert_eq!(a.flops, FlopCount { adds: 4, muls: 1, divs: 0 });
+    }
+
+    #[test]
+    fn triad_reads_writes() {
+        let src = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+        let p = parse(src).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 1000)])).unwrap();
+        assert_eq!(a.reads.len(), 3);
+        assert_eq!(a.writes.len(), 1);
+        assert_eq!(a.flops, FlopCount { adds: 1, muls: 1, divs: 0 });
+        assert_eq!(a.read_bytes_per_iteration(), 24);
+        assert_eq!(a.write_bytes_per_iteration(), 8);
+    }
+
+    #[test]
+    fn compound_assignment_counts_read_and_flop() {
+        let src = "double a[N], s;\nfor (int i = 0; i < N; i++) s += a[i];";
+        let p = parse(src).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 100)])).unwrap();
+        assert_eq!(a.flops.adds, 1);
+        assert_eq!(a.scalars["s"], ScalarUse::LoopCarried);
+    }
+
+    #[test]
+    fn uxx_division_detected() {
+        let src = r#"
+            double u1[M][N][N], d1[M][N][N], xx[M][N][N];
+            double c1, c2, d, dth;
+            for (int k = 2; k < M - 2; k++) {
+                for (int j = 2; j < N - 2; j++) {
+                    for (int i = 2; i < N - 2; i++) {
+                        d = (d1[k-1][j][i] + d1[k-1][j-1][i] + d1[k][j][i] + d1[k][j-1][i]) * 0.25;
+                        u1[k][j][i] = u1[k][j][i] + (dth / d) * (c1 * (xx[k][j][i] - xx[k][j][i-1]) + c2 * (xx[k][j][i+1] - xx[k][j][i-2]));
+                    }
+                }
+            }
+        "#;
+        let p = parse(src).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 150), ("M", 150)])).unwrap();
+        assert_eq!(a.flops.divs, 1);
+        assert_eq!(a.scalars["d"], ScalarUse::Temporary);
+        assert!(a.scalar_sources().contains(&"dth"));
+        // u1 is both read and written
+        let u1_reads = a.reads.iter().filter(|r| a.arrays[r.array].name == "u1").count();
+        assert_eq!(u1_reads, 1);
+        assert_eq!(a.writes.len(), 1);
+    }
+
+    #[test]
+    fn direct_first_dimension() {
+        let src = "double xy[K][M][N];\nfor (int j = 1; j < M-1; j++) for (int i = 1; i < N-1; i++) xy[0][j][i+1] = xy[0][j][i] + 1.0;";
+        let p = parse(src).unwrap();
+        let a =
+            KernelAnalysis::from_program(&p, &consts(&[("K", 3), ("M", 10), ("N", 20)])).unwrap();
+        let w = &a.writes[0];
+        assert_eq!(w.dims[0], DimAccess::Direct(0));
+        assert!(matches!(&w.dims[2], DimAccess::Relative { var, offset: 1 } if var == "i"));
+    }
+
+    #[test]
+    fn multiplicity_deduplicates_repeated_access() {
+        let src = "double a[N], b[N];\nfor (int i = 0; i < N; i++) b[i] = a[i] * a[i];";
+        let p = parse(src).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 64)])).unwrap();
+        assert_eq!(a.reads.len(), 1);
+        assert_eq!(a.reads[0].multiplicity, 2);
+    }
+
+    #[test]
+    fn unbound_constant_reported() {
+        let p = parse(JACOBI).unwrap();
+        let err = KernelAnalysis::from_program(&p, &consts(&[("N", 100)])).unwrap_err();
+        assert!(matches!(err, KernelError::UnboundConstant(ref v) if v == "M"));
+    }
+
+    #[test]
+    fn rejects_nonaffine_subscript() {
+        let src = "double a[N];\nfor (int i = 0; i < N; i++) a[i*2] = 1.0;";
+        let p = parse(src).unwrap();
+        assert!(KernelAnalysis::from_program(&p, &consts(&[("N", 100)])).is_err());
+    }
+
+    #[test]
+    fn rejects_two_indices_in_one_subscript() {
+        let src = "double a[N][N];\nfor (int j = 0; j < N; j++) for (int i = 0; i < N; i++) a[0][i+j] = 1.0;";
+        let p = parse(src).unwrap();
+        assert!(KernelAnalysis::from_program(&p, &consts(&[("N", 100)])).is_err());
+    }
+
+    #[test]
+    fn unit_of_work_is_one_cacheline() {
+        let p = parse(JACOBI).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 40), ("M", 40)])).unwrap();
+        assert_eq!(a.unit_of_work(64), 8); // 8 doubles per 64B line
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let src = "double u[K][M][N];\nfor (int k=1;k<K-1;k++) for (int j=1;j<M-1;j++) for (int i=1;i<N-1;i++) u[k][j][i] = u[k-1][j][i] + 1.0;";
+        let p = parse(src).unwrap();
+        let a =
+            KernelAnalysis::from_program(&p, &consts(&[("K", 4), ("M", 5), ("N", 6)])).unwrap();
+        assert_eq!(a.arrays[0].strides, vec![30, 6, 1]);
+        let r = &a.reads[0];
+        assert_eq!(r.offset, -30); // u[k-1][j][i]
+        assert_eq!(r.coeffs, vec![30, 6, 1]);
+    }
+
+    #[test]
+    fn loop_stack_table_renders() {
+        let p = parse(JACOBI).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 5000), ("M", 500)])).unwrap();
+        let t = a.loop_stack_table();
+        assert!(t.contains("j | 1 | 499 | +1"));
+        assert!(t.contains("i | 1 | 4999 | +1"));
+    }
+
+    #[test]
+    fn access_table_renders_relative_notation() {
+        let p = parse(JACOBI).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 5000), ("M", 500)])).unwrap();
+        let t = a.access_table();
+        assert!(t.contains("relative j"), "{t}");
+        assert!(t.contains("relative i-1"), "{t}");
+        assert!(t.contains("relative i+1"), "{t}");
+        assert!(t.contains("s: direct"), "{t}");
+    }
+}

@@ -1,0 +1,240 @@
+//! Abstract syntax tree for the restricted kernel language.
+
+use std::fmt;
+
+/// Floating-point element type of a declared variable (paper supports
+/// `double`; `float` is the "single precision" extension listed as future
+/// work in §7 — we implement it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Type {
+    Double,
+    Float,
+}
+
+impl Type {
+    /// Element size in bytes.
+    pub fn size(self) -> u64 {
+        match self {
+            Type::Double => 8,
+            Type::Float => 4,
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Double => write!(f, "double"),
+            Type::Float => write!(f, "float"),
+        }
+    }
+}
+
+/// Binary arithmetic operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl fmt::Display for BinOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let c = match self {
+            BinOp::Add => '+',
+            BinOp::Sub => '-',
+            BinOp::Mul => '*',
+            BinOp::Div => '/',
+        };
+        write!(f, "{c}")
+    }
+}
+
+/// Assignment operator on statements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignOp {
+    /// `=`
+    Set,
+    /// `+=`
+    Add,
+    /// `-=`
+    Sub,
+    /// `*=`
+    Mul,
+    /// `/=`
+    Div,
+}
+
+impl AssignOp {
+    /// The arithmetic op a compound assignment implies, if any.
+    pub fn bin_op(self) -> Option<BinOp> {
+        match self {
+            AssignOp::Set => None,
+            AssignOp::Add => Some(BinOp::Add),
+            AssignOp::Sub => Some(BinOp::Sub),
+            AssignOp::Mul => Some(BinOp::Mul),
+            AssignOp::Div => Some(BinOp::Div),
+        }
+    }
+}
+
+/// Expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// Scalar variable or symbolic constant reference.
+    Var(String),
+    /// Array element access `name[e0][e1]...`.
+    Index { array: String, indices: Vec<Expr> },
+    /// Binary arithmetic.
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    /// Unary negation.
+    Neg(Box<Expr>),
+}
+
+impl Expr {
+    /// Walk the expression tree, calling `f` on every node (pre-order).
+    pub fn visit<'a>(&'a self, f: &mut impl FnMut(&'a Expr)) {
+        f(self);
+        match self {
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.visit(f);
+                rhs.visit(f);
+            }
+            Expr::Neg(e) => e.visit(f),
+            Expr::Index { indices, .. } => {
+                for ix in indices {
+                    ix.visit(f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// A single assignment statement in the innermost loop body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stmt {
+    /// Destination: `Expr::Var` (scalar) or `Expr::Index` (array element).
+    pub lhs: Expr,
+    pub op: AssignOp,
+    pub rhs: Expr,
+}
+
+/// One `for` loop header. `end` is the *exclusive* upper bound expression
+/// (a `<=` comparison is normalized to `< end+1` by the parser).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Loop {
+    /// Index variable name.
+    pub index: String,
+    /// Start expression (must evaluate to an integer after binding).
+    pub start: Expr,
+    /// Exclusive end expression.
+    pub end: Expr,
+    /// Step (positive integer; `++i`/`i++` is 1, `i += k` is `k`).
+    pub step: i64,
+    /// Body: either exactly one nested loop or the innermost statements.
+    pub body: LoopBody,
+}
+
+/// Loop body alternative.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoopBody {
+    /// Single nested loop (perfect nest, per the paper's restrictions).
+    Nest(Box<Loop>),
+    /// Innermost statements.
+    Stmts(Vec<Stmt>),
+}
+
+/// One declared variable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decl {
+    pub name: String,
+    pub ty: Type,
+    /// Empty for scalars; dimension expressions for arrays. Dimension
+    /// expressions must evaluate to positive integers after constant
+    /// binding (`N`, `M+3`, `5000`, ...).
+    pub dims: Vec<Expr>,
+    /// Optional scalar initializer (value is irrelevant to the analysis;
+    /// retained for benchmark-code generation).
+    pub init: Option<f64>,
+}
+
+impl Decl {
+    /// True if this declares an array.
+    pub fn is_array(&self) -> bool {
+        !self.dims.is_empty()
+    }
+}
+
+/// A parsed kernel: declarations followed by one loop nest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub decls: Vec<Decl>,
+    pub nest: Loop,
+}
+
+impl Program {
+    /// All loops of the nest, outermost first.
+    pub fn loops(&self) -> Vec<&Loop> {
+        let mut out = Vec::new();
+        let mut cur = &self.nest;
+        loop {
+            out.push(cur);
+            match &cur.body {
+                LoopBody::Nest(inner) => cur = inner,
+                LoopBody::Stmts(_) => break,
+            }
+        }
+        out
+    }
+
+    /// The innermost statement list.
+    pub fn inner_stmts(&self) -> &[Stmt] {
+        let mut cur = &self.nest;
+        loop {
+            match &cur.body {
+                LoopBody::Nest(inner) => cur = inner,
+                LoopBody::Stmts(s) => return s,
+            }
+        }
+    }
+
+    /// Look up a declaration by name.
+    pub fn decl(&self, name: &str) -> Option<&Decl> {
+        self.decls.iter().find(|d| d.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_sizes() {
+        assert_eq!(Type::Double.size(), 8);
+        assert_eq!(Type::Float.size(), 4);
+    }
+
+    #[test]
+    fn assign_op_maps_to_binop() {
+        assert_eq!(AssignOp::Add.bin_op(), Some(BinOp::Add));
+        assert_eq!(AssignOp::Set.bin_op(), None);
+    }
+
+    #[test]
+    fn visit_reaches_all_nodes() {
+        let e = Expr::Binary {
+            op: BinOp::Add,
+            lhs: Box::new(Expr::Var("x".into())),
+            rhs: Box::new(Expr::Neg(Box::new(Expr::Int(3)))),
+        };
+        let mut count = 0;
+        e.visit(&mut |_| count += 1);
+        assert_eq!(count, 4);
+    }
+}

@@ -1,0 +1,333 @@
+//! Tokenizer for the restricted kernel language.
+
+use super::KernelError;
+
+/// A lexical token with its source position (1-based line/column).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Token kinds. Keywords are folded into [`TokenKind::Kw`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    /// Identifier (variable / array name).
+    Ident(String),
+    /// Integer literal.
+    Int(i64),
+    /// Floating-point literal (including forms like `0.25`, `2.f`, `1e-3`).
+    Float(f64),
+    /// Keyword: `for`, `int`, `long`, `double`, `float`, `const`,
+    /// `unsigned`, `restrict`.
+    Kw(Kw),
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    LBrace,
+    RBrace,
+    Semicolon,
+    Comma,
+    /// `=`
+    Assign,
+    /// `+=`, `-=`, `*=`, `/=`
+    CompoundAssign(char),
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+    /// `++`
+    Incr,
+    /// `--`
+    Decr,
+}
+
+/// Recognized keywords.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kw {
+    For,
+    Int,
+    Long,
+    Double,
+    Float,
+    Const,
+    Unsigned,
+    Restrict,
+}
+
+fn keyword(s: &str) -> Option<Kw> {
+    Some(match s {
+        "for" => Kw::For,
+        "int" => Kw::Int,
+        "long" => Kw::Long,
+        "double" => Kw::Double,
+        "float" => Kw::Float,
+        "const" => Kw::Const,
+        "unsigned" => Kw::Unsigned,
+        "restrict" | "__restrict__" | "__restrict" => Kw::Restrict,
+        _ => return None,
+    })
+}
+
+/// Tokenize `src`. `//` and `/* */` comments and `#`-lines (preprocessor
+/// remnants) are skipped.
+pub fn lex(src: &str) -> Result<Vec<Token>, KernelError> {
+    let mut out = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let n = bytes.len();
+    let mut i = 0;
+    let mut line = 1usize;
+    let mut col = 1usize;
+
+    macro_rules! push {
+        ($kind:expr, $len:expr) => {{
+            out.push(Token { kind: $kind, line, col });
+            i += $len;
+            col += $len;
+        }};
+    }
+
+    while i < n {
+        let c = bytes[i];
+        let c2 = if i + 1 < n { bytes[i + 1] } else { '\0' };
+        match c {
+            '\n' => {
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            ' ' | '\t' | '\r' => {
+                i += 1;
+                col += 1;
+            }
+            '#' => {
+                // preprocessor line: skip to end of line
+                while i < n && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if c2 == '/' => {
+                while i < n && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if c2 == '*' => {
+                i += 2;
+                col += 2;
+                loop {
+                    if i + 1 >= n {
+                        return Err(KernelError::Lex {
+                            line,
+                            col,
+                            msg: "unterminated block comment".into(),
+                        });
+                    }
+                    if bytes[i] == '*' && bytes[i + 1] == '/' {
+                        i += 2;
+                        col += 2;
+                        break;
+                    }
+                    if bytes[i] == '\n' {
+                        line += 1;
+                        col = 1;
+                        i += 1;
+                    } else {
+                        i += 1;
+                        col += 1;
+                    }
+                }
+            }
+            '(' => push!(TokenKind::LParen, 1),
+            ')' => push!(TokenKind::RParen, 1),
+            '[' => push!(TokenKind::LBracket, 1),
+            ']' => push!(TokenKind::RBracket, 1),
+            '{' => push!(TokenKind::LBrace, 1),
+            '}' => push!(TokenKind::RBrace, 1),
+            ';' => push!(TokenKind::Semicolon, 1),
+            ',' => push!(TokenKind::Comma, 1),
+            '+' if c2 == '+' => push!(TokenKind::Incr, 2),
+            '-' if c2 == '-' => push!(TokenKind::Decr, 2),
+            '+' if c2 == '=' => push!(TokenKind::CompoundAssign('+'), 2),
+            '-' if c2 == '=' => push!(TokenKind::CompoundAssign('-'), 2),
+            '*' if c2 == '=' => push!(TokenKind::CompoundAssign('*'), 2),
+            '/' if c2 == '=' => push!(TokenKind::CompoundAssign('/'), 2),
+            '+' => push!(TokenKind::Plus, 1),
+            '-' => push!(TokenKind::Minus, 1),
+            '*' => push!(TokenKind::Star, 1),
+            '/' => push!(TokenKind::Slash, 1),
+            '<' if c2 == '=' => push!(TokenKind::Le, 2),
+            '<' => push!(TokenKind::Lt, 1),
+            '>' if c2 == '=' => push!(TokenKind::Ge, 2),
+            '>' => push!(TokenKind::Gt, 1),
+            '=' => push!(TokenKind::Assign, 1),
+            c if c.is_ascii_digit() || (c == '.' && c2.is_ascii_digit()) => {
+                let start = i;
+                let start_col = col;
+                let mut is_float = false;
+                while i < n && (bytes[i].is_ascii_digit()) {
+                    i += 1;
+                }
+                if i < n && bytes[i] == '.' {
+                    is_float = true;
+                    i += 1;
+                    while i < n && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < n && (bytes[i] == 'e' || bytes[i] == 'E') {
+                    let save = i;
+                    i += 1;
+                    if i < n && (bytes[i] == '+' || bytes[i] == '-') {
+                        i += 1;
+                    }
+                    if i < n && bytes[i].is_ascii_digit() {
+                        is_float = true;
+                        while i < n && bytes[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    } else {
+                        i = save; // not an exponent ('e' belongs to an ident? reject later)
+                    }
+                }
+                let text: String = bytes[start..i].iter().collect();
+                // float suffixes f/F/l/L (e.g. `2.f` in the long-range kernel)
+                let mut suffixed = false;
+                if i < n && matches!(bytes[i], 'f' | 'F' | 'l' | 'L') {
+                    suffixed = true;
+                    i += 1;
+                }
+                col = start_col + (i - start);
+                if is_float || suffixed && text.contains('.') {
+                    let v: f64 = text.parse().map_err(|_| KernelError::Lex {
+                        line,
+                        col: start_col,
+                        msg: format!("bad float literal '{text}'"),
+                    })?;
+                    out.push(Token { kind: TokenKind::Float(v), line, col: start_col });
+                } else if suffixed {
+                    // e.g. `2f` — treat as float
+                    let v: f64 = text.parse().map_err(|_| KernelError::Lex {
+                        line,
+                        col: start_col,
+                        msg: format!("bad literal '{text}'"),
+                    })?;
+                    out.push(Token { kind: TokenKind::Float(v), line, col: start_col });
+                } else {
+                    let v: i64 = text.parse().map_err(|_| KernelError::Lex {
+                        line,
+                        col: start_col,
+                        msg: format!("bad int literal '{text}'"),
+                    })?;
+                    out.push(Token { kind: TokenKind::Int(v), line, col: start_col });
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                let start_col = col;
+                while i < n && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                }
+                let text: String = bytes[start..i].iter().collect();
+                col = start_col + (i - start);
+                match keyword(&text) {
+                    Some(kw) => out.push(Token { kind: TokenKind::Kw(kw), line, col: start_col }),
+                    None => out.push(Token { kind: TokenKind::Ident(text), line, col: start_col }),
+                }
+            }
+            other => {
+                return Err(KernelError::Lex {
+                    line,
+                    col,
+                    msg: format!("unexpected character '{other}'"),
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn lexes_simple_loop() {
+        let ks = kinds("for(i=0; i<N; ++i) s += a[i]*b[i];");
+        assert_eq!(ks[0], TokenKind::Kw(Kw::For));
+        assert!(ks.contains(&TokenKind::Incr));
+        assert!(ks.contains(&TokenKind::CompoundAssign('+')));
+        assert!(ks.contains(&TokenKind::Ident("a".into())));
+    }
+
+    #[test]
+    fn lexes_floats_and_suffixes() {
+        assert_eq!(kinds("0.25"), vec![TokenKind::Float(0.25)]);
+        assert_eq!(kinds("2.f"), vec![TokenKind::Float(2.0)]);
+        assert_eq!(kinds("1e-3"), vec![TokenKind::Float(1e-3)]);
+        assert_eq!(kinds("1.5E2"), vec![TokenKind::Float(150.0)]);
+        assert_eq!(kinds("0."), vec![TokenKind::Float(0.0)]);
+    }
+
+    #[test]
+    fn lexes_ints() {
+        assert_eq!(kinds("42"), vec![TokenKind::Int(42)]);
+        assert_eq!(
+            kinds("a[5000]"),
+            vec![
+                TokenKind::Ident("a".into()),
+                TokenKind::LBracket,
+                TokenKind::Int(5000),
+                TokenKind::RBracket
+            ]
+        );
+    }
+
+    #[test]
+    fn skips_comments_and_preprocessor() {
+        let ks = kinds("// comment\n#define X 1\n/* block\n comment */ x");
+        assert_eq!(ks, vec![TokenKind::Ident("x".into())]);
+    }
+
+    #[test]
+    fn compound_operators() {
+        assert_eq!(kinds("<="), vec![TokenKind::Le]);
+        assert_eq!(kinds("<"), vec![TokenKind::Lt]);
+        assert_eq!(kinds("-="), vec![TokenKind::CompoundAssign('-')]);
+        assert_eq!(kinds("--"), vec![TokenKind::Decr]);
+    }
+
+    #[test]
+    fn restrict_variants_fold_to_keyword() {
+        assert_eq!(kinds("restrict"), vec![TokenKind::Kw(Kw::Restrict)]);
+        assert_eq!(kinds("__restrict__"), vec![TokenKind::Kw(Kw::Restrict)]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("a @ b").is_err());
+        assert!(lex("/* unterminated").is_err());
+    }
+
+    #[test]
+    fn tracks_line_numbers() {
+        let toks = lex("a\nb\n  c").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+        assert_eq!(toks[2].col, 3);
+    }
+}

@@ -1,0 +1,51 @@
+//! Restricted-C99 kernel language frontend (paper §4.3).
+//!
+//! Kerncraft analyzes loop kernels written in a small C dialect:
+//! declarations of scalars and fixed-size arrays followed by a single
+//! `for`-loop nest whose innermost body is a sequence of assignment
+//! statements. Array sizes may use symbolic constants (bound on the
+//! command line via `-D NAME VALUE`) with an optional `±integer`, and
+//! array indices must be `loop_var ± integer`, a constant, or a fixed
+//! integer — exactly the restrictions the paper states.
+//!
+//! The module is split conventionally:
+//! * [`lexer`] — tokenizer,
+//! * [`ast`] — syntax tree,
+//! * [`parser`] — recursive-descent parser,
+//! * [`analysis`] — static analysis: loop stack (Table 2), data sources
+//!   and destinations (Tables 3/4), flop counts, and the linearized
+//!   (1D) access representation that feeds the cache predictor (§4.5).
+
+pub mod analysis;
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+
+pub use analysis::{
+    AccessPattern, ArrayInfo, DimAccess, FlopCount, KernelAnalysis, LinearAccess, LoopInfo,
+    ScalarUse,
+};
+pub use ast::{AssignOp, BinOp, Expr, Program, Stmt, Type};
+pub use parser::parse;
+
+use thiserror::Error;
+
+/// Errors produced anywhere in the kernel frontend.
+#[derive(Debug, Error)]
+pub enum KernelError {
+    /// Tokenizer rejected a character or malformed literal.
+    #[error("lex error at line {line}, col {col}: {msg}")]
+    Lex { line: usize, col: usize, msg: String },
+    /// Parser rejected the token stream.
+    #[error("parse error at line {line}, col {col}: {msg}")]
+    Parse { line: usize, col: usize, msg: String },
+    /// Source violates one of the paper's §4.3 restrictions.
+    #[error("unsupported kernel construct: {0}")]
+    Restriction(String),
+    /// A symbolic constant was not bound via `-D`.
+    #[error("unbound constant '{0}' (pass -D {0} <value>)")]
+    UnboundConstant(String),
+    /// Semantic inconsistency (e.g. use of an undeclared array).
+    #[error("semantic error: {0}")]
+    Semantic(String),
+}

@@ -1,0 +1,492 @@
+//! Recursive-descent parser for the restricted kernel language.
+
+use super::ast::*;
+use super::lexer::{lex, Kw, Token, TokenKind};
+use super::KernelError;
+
+/// Parse kernel source into a [`Program`].
+pub fn parse(src: &str) -> Result<Program, KernelError> {
+    let tokens = lex(src)?;
+    Parser { toks: tokens, pos: 0 }.program()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&TokenKind> {
+        self.toks.get(self.pos).map(|t| &t.kind)
+    }
+
+    fn peek2(&self) -> Option<&TokenKind> {
+        self.toks.get(self.pos + 1).map(|t| &t.kind)
+    }
+
+    fn next(&mut self) -> Option<TokenKind> {
+        let t = self.toks.get(self.pos).map(|t| t.kind.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: impl Into<String>) -> KernelError {
+        let (line, col) = self
+            .toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|t| (t.line, t.col))
+            .unwrap_or((0, 0));
+        KernelError::Parse { line, col, msg: msg.into() }
+    }
+
+    fn expect(&mut self, kind: &TokenKind) -> Result<(), KernelError> {
+        match self.peek() {
+            Some(k) if k == kind => {
+                self.pos += 1;
+                Ok(())
+            }
+            other => Err(self.err(format!("expected {kind:?}, found {other:?}"))),
+        }
+    }
+
+    fn eat(&mut self, kind: &TokenKind) -> bool {
+        if self.peek() == Some(kind) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn program(&mut self) -> Result<Program, KernelError> {
+        let mut decls = Vec::new();
+        // Declarations until the first `for`.
+        loop {
+            match self.peek() {
+                Some(TokenKind::Kw(Kw::For)) => break,
+                Some(TokenKind::Kw(Kw::Const)) => {
+                    self.pos += 1; // `const` qualifier on a declaration
+                }
+                Some(TokenKind::Kw(Kw::Double)) | Some(TokenKind::Kw(Kw::Float)) => {
+                    decls.extend(self.declaration()?);
+                }
+                Some(TokenKind::Kw(Kw::Int)) | Some(TokenKind::Kw(Kw::Long))
+                | Some(TokenKind::Kw(Kw::Unsigned)) => {
+                    // Integer declarations (e.g. problem-size constants
+                    // declared in-source) are skipped up to `;`: sizes
+                    // must come from `-D` bindings, per the paper's CLI.
+                    while !matches!(self.peek(), Some(TokenKind::Semicolon) | None) {
+                        self.pos += 1;
+                    }
+                    self.expect(&TokenKind::Semicolon)?;
+                }
+                None => return Err(self.err("expected a for loop, found end of input")),
+                other => {
+                    return Err(self.err(format!("expected declaration or for loop, found {other:?}")))
+                }
+            }
+        }
+        let nest = self.for_loop()?;
+        // Trailing tokens (besides stray semicolons/braces) are an error:
+        // the paper's kernels are a single loop nest.
+        while self.eat(&TokenKind::Semicolon) {}
+        if self.peek().is_some() {
+            return Err(self.err("unexpected trailing tokens after the loop nest (only a single loop nest is supported)"));
+        }
+        Ok(Program { decls, nest })
+    }
+
+    /// `double a[M][N], s = 0., c1;`
+    fn declaration(&mut self) -> Result<Vec<Decl>, KernelError> {
+        let ty = match self.next() {
+            Some(TokenKind::Kw(Kw::Double)) => Type::Double,
+            Some(TokenKind::Kw(Kw::Float)) => Type::Float,
+            other => return Err(self.err(format!("expected type, found {other:?}"))),
+        };
+        let mut out = Vec::new();
+        loop {
+            // optional `restrict` / `*` (pointer declarations degrade to 1D
+            // arrays of unknown size, which the analysis rejects later if
+            // actually indexed multi-dimensionally)
+            while self.eat(&TokenKind::Star) || self.eat(&TokenKind::Kw(Kw::Restrict)) {}
+            let name = match self.next() {
+                Some(TokenKind::Ident(n)) => n,
+                other => return Err(self.err(format!("expected identifier, found {other:?}"))),
+            };
+            let mut dims = Vec::new();
+            while self.eat(&TokenKind::LBracket) {
+                // `double a[]` (empty dimension) is allowed for 1D streaming
+                // arrays; it is treated as "large" by the analysis.
+                if self.eat(&TokenKind::RBracket) {
+                    dims.push(Expr::Var("__unbounded__".into()));
+                    continue;
+                }
+                let e = self.expr()?;
+                self.expect(&TokenKind::RBracket)?;
+                dims.push(e);
+            }
+            let mut init = None;
+            if self.eat(&TokenKind::Assign) {
+                match self.expr()? {
+                    Expr::Float(v) => init = Some(v),
+                    Expr::Int(v) => init = Some(v as f64),
+                    Expr::Neg(inner) => match *inner {
+                        Expr::Float(v) => init = Some(-v),
+                        Expr::Int(v) => init = Some(-(v as f64)),
+                        _ => return Err(self.err("initializer must be a literal")),
+                    },
+                    _ => return Err(self.err("initializer must be a literal")),
+                }
+            }
+            out.push(Decl { name, ty, dims, init });
+            if self.eat(&TokenKind::Comma) {
+                continue;
+            }
+            self.expect(&TokenKind::Semicolon)?;
+            break;
+        }
+        Ok(out)
+    }
+
+    /// `for (int i = start; i < end; ++i) body`
+    fn for_loop(&mut self) -> Result<Loop, KernelError> {
+        self.expect(&TokenKind::Kw(Kw::For))?;
+        self.expect(&TokenKind::LParen)?;
+        // init: optional type keyword, then `i = expr`
+        while matches!(
+            self.peek(),
+            Some(TokenKind::Kw(Kw::Int)) | Some(TokenKind::Kw(Kw::Long)) | Some(TokenKind::Kw(Kw::Unsigned))
+        ) {
+            self.pos += 1;
+        }
+        let index = match self.next() {
+            Some(TokenKind::Ident(n)) => n,
+            other => return Err(self.err(format!("expected loop index, found {other:?}"))),
+        };
+        self.expect(&TokenKind::Assign)?;
+        let start = self.expr()?;
+        self.expect(&TokenKind::Semicolon)?;
+        // condition: `i < expr` or `i <= expr`
+        match self.next() {
+            Some(TokenKind::Ident(n)) if n == index => {}
+            other => return Err(self.err(format!("loop condition must test '{index}', found {other:?}"))),
+        }
+        let le = match self.next() {
+            Some(TokenKind::Lt) => false,
+            Some(TokenKind::Le) => true,
+            other => return Err(self.err(format!("expected < or <= in loop condition, found {other:?}"))),
+        };
+        let mut end = self.expr()?;
+        if le {
+            // normalize `i <= e` to exclusive bound `e + 1`
+            end = Expr::Binary {
+                op: BinOp::Add,
+                lhs: Box::new(end),
+                rhs: Box::new(Expr::Int(1)),
+            };
+        }
+        self.expect(&TokenKind::Semicolon)?;
+        // increment: ++i | i++ | i += k
+        let step = match self.peek() {
+            Some(TokenKind::Incr) => {
+                self.pos += 1;
+                match self.next() {
+                    Some(TokenKind::Ident(n)) if n == index => 1,
+                    other => return Err(self.err(format!("expected '{index}' after ++, found {other:?}"))),
+                }
+            }
+            Some(TokenKind::Ident(n)) if *n == index => {
+                self.pos += 1;
+                match self.next() {
+                    Some(TokenKind::Incr) => 1,
+                    Some(TokenKind::CompoundAssign('+')) => match self.next() {
+                        Some(TokenKind::Int(k)) if k > 0 => k,
+                        other => {
+                            return Err(self.err(format!("expected positive step, found {other:?}")))
+                        }
+                    },
+                    other => return Err(self.err(format!("unsupported loop increment {other:?}"))),
+                }
+            }
+            other => return Err(self.err(format!("unsupported loop increment {other:?}"))),
+        };
+        self.expect(&TokenKind::RParen)?;
+        let body = self.loop_body()?;
+        Ok(Loop { index, start, end, step, body })
+    }
+
+    fn loop_body(&mut self) -> Result<LoopBody, KernelError> {
+        if self.eat(&TokenKind::LBrace) {
+            // Either a nested loop (possibly with trailing '}'s) or
+            // statements.
+            if self.peek() == Some(&TokenKind::Kw(Kw::For)) {
+                let inner = self.for_loop()?;
+                while self.eat(&TokenKind::Semicolon) {}
+                self.expect(&TokenKind::RBrace)?;
+                return Ok(LoopBody::Nest(Box::new(inner)));
+            }
+            let mut stmts = Vec::new();
+            while self.peek() != Some(&TokenKind::RBrace) {
+                if self.peek().is_none() {
+                    return Err(self.err("unterminated loop body"));
+                }
+                stmts.push(self.statement()?);
+                while self.eat(&TokenKind::Semicolon) {}
+            }
+            self.expect(&TokenKind::RBrace)?;
+            if stmts.is_empty() {
+                return Err(self.err("empty loop body"));
+            }
+            Ok(LoopBody::Stmts(stmts))
+        } else if self.peek() == Some(&TokenKind::Kw(Kw::For)) {
+            Ok(LoopBody::Nest(Box::new(self.for_loop()?)))
+        } else {
+            let stmt = self.statement()?;
+            while self.eat(&TokenKind::Semicolon) {}
+            Ok(LoopBody::Stmts(vec![stmt]))
+        }
+    }
+
+    /// `lhs (=|+=|-=|*=|/=) expr ;`
+    fn statement(&mut self) -> Result<Stmt, KernelError> {
+        let lhs = self.primary()?;
+        match &lhs {
+            Expr::Var(_) | Expr::Index { .. } => {}
+            _ => return Err(self.err("assignment destination must be a variable or array element")),
+        }
+        let op = match self.next() {
+            Some(TokenKind::Assign) => AssignOp::Set,
+            Some(TokenKind::CompoundAssign('+')) => AssignOp::Add,
+            Some(TokenKind::CompoundAssign('-')) => AssignOp::Sub,
+            Some(TokenKind::CompoundAssign('*')) => AssignOp::Mul,
+            Some(TokenKind::CompoundAssign('/')) => AssignOp::Div,
+            other => return Err(self.err(format!("expected assignment operator, found {other:?}"))),
+        };
+        let rhs = self.expr()?;
+        self.expect(&TokenKind::Semicolon)?;
+        Ok(Stmt { lhs, op, rhs })
+    }
+
+    /// expr := term (('+'|'-') term)*
+    fn expr(&mut self) -> Result<Expr, KernelError> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek() {
+                Some(TokenKind::Plus) => BinOp::Add,
+                Some(TokenKind::Minus) => BinOp::Sub,
+                _ => break,
+            };
+            self.pos += 1;
+            let rhs = self.term()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    /// term := factor (('*'|'/') factor)*
+    fn term(&mut self) -> Result<Expr, KernelError> {
+        let mut lhs = self.factor()?;
+        loop {
+            let op = match self.peek() {
+                Some(TokenKind::Star) => BinOp::Mul,
+                Some(TokenKind::Slash) => BinOp::Div,
+                _ => break,
+            };
+            self.pos += 1;
+            let rhs = self.factor()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    /// factor := '-' factor | primary
+    fn factor(&mut self) -> Result<Expr, KernelError> {
+        if self.eat(&TokenKind::Minus) {
+            return Ok(Expr::Neg(Box::new(self.factor()?)));
+        }
+        self.primary()
+    }
+
+    /// primary := number | ident ('[' expr ']')* | '(' expr ')'
+    fn primary(&mut self) -> Result<Expr, KernelError> {
+        match self.peek().cloned() {
+            Some(TokenKind::Int(v)) => {
+                self.pos += 1;
+                Ok(Expr::Int(v))
+            }
+            Some(TokenKind::Float(v)) => {
+                self.pos += 1;
+                Ok(Expr::Float(v))
+            }
+            Some(TokenKind::LParen) => {
+                self.pos += 1;
+                let e = self.expr()?;
+                self.expect(&TokenKind::RParen)?;
+                Ok(e)
+            }
+            Some(TokenKind::Ident(name)) => {
+                self.pos += 1;
+                if self.peek() == Some(&TokenKind::LBracket) {
+                    let mut indices = Vec::new();
+                    while self.eat(&TokenKind::LBracket) {
+                        let e = self.expr()?;
+                        self.expect(&TokenKind::RBracket)?;
+                        indices.push(e);
+                    }
+                    Ok(Expr::Index { array: name, indices })
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            other => Err(self.err(format!("expected expression, found {other:?}"))),
+        }
+    }
+}
+
+/// Make `peek2` reachable for future lookahead needs without a dead-code
+/// warning (used by tests).
+#[allow(dead_code)]
+fn _lookahead_is_used(p: &Parser) -> Option<&TokenKind> {
+    p.peek2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const JACOBI: &str = r#"
+        double a[M][N], b[M][N], s;
+        for (int j = 1; j < M - 1; j++)
+            for (int i = 1; i < N - 1; i++)
+                b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s;
+    "#;
+
+    #[test]
+    fn parses_jacobi() {
+        let p = parse(JACOBI).unwrap();
+        assert_eq!(p.decls.len(), 3);
+        assert!(p.decls[0].is_array());
+        assert!(!p.decls[2].is_array());
+        let loops = p.loops();
+        assert_eq!(loops.len(), 2);
+        assert_eq!(loops[0].index, "j");
+        assert_eq!(loops[1].index, "i");
+        assert_eq!(p.inner_stmts().len(), 1);
+    }
+
+    #[test]
+    fn parses_scalar_product() {
+        let src = "double a[N], b[N], s = 0.;\nfor (i = 0; i < N; ++i)\n  s += a[i] * b[i];";
+        let p = parse(src).unwrap();
+        assert_eq!(p.decls[2].init, Some(0.0));
+        assert_eq!(p.nest.step, 1);
+        let st = &p.inner_stmts()[0];
+        assert_eq!(st.op, AssignOp::Add);
+    }
+
+    #[test]
+    fn parses_triad() {
+        let src = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++)\n  a[i] = b[i] + c[i] * d[i];";
+        let p = parse(src).unwrap();
+        assert_eq!(p.loops().len(), 1);
+    }
+
+    #[test]
+    fn parses_multi_statement_body() {
+        let src = r#"
+            double a[N], b[N], c;
+            double sum, prod, t, y;
+            for (int i = 0; i < N; ++i) {
+                prod = a[i] * b[i];
+                y = prod - c;
+                t = sum + y;
+                c = (t - sum) - y;
+                sum = t;
+            }
+        "#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.inner_stmts().len(), 5);
+    }
+
+    #[test]
+    fn parses_3d_nest_with_braces() {
+        let src = r#"
+            double u[M][N][N], v[M][N][N];
+            for (int k = 2; k < M - 2; k++) {
+                for (int j = 2; j < N - 2; j++) {
+                    for (int i = 2; i < N - 2; i++) {
+                        u[k][j][i] = v[k][j][i] + v[k][j][i-1];
+                    }
+                }
+            }
+        "#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.loops().len(), 3);
+        assert_eq!(p.loops()[0].index, "k");
+    }
+
+    #[test]
+    fn normalizes_le_condition() {
+        let src = "double a[N];\nfor (int i = 0; i <= N - 1; i++) a[i] = a[i] + 1.0;";
+        let p = parse(src).unwrap();
+        // `<= N-1` becomes exclusive `< (N-1)+1`
+        match &p.nest.end {
+            Expr::Binary { op: BinOp::Add, rhs, .. } => assert_eq!(**rhs, Expr::Int(1)),
+            other => panic!("expected normalized end, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dim_with_offset() {
+        let src = "double u[N][M+3];\nfor (int i = 0; i < N; i++) u[i][0] = 1.0;";
+        let p = parse(src).unwrap();
+        assert_eq!(p.decls[0].dims.len(), 2);
+    }
+
+    #[test]
+    fn rejects_trailing_junk() {
+        let src = "double a[N];\nfor (int i = 0; i < N; i++) a[i] = 1.0;\ndouble z;";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn rejects_weird_increment() {
+        let src = "double a[N];\nfor (int i = 0; i < N; i = i * 2) a[i] = 1.0;";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_semicolon() {
+        let src = "double a[N];\nfor (int i = 0; i < N; i++) a[i] = 1.0";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn parses_step_gt_one() {
+        let src = "double a[N];\nfor (int i = 0; i < N; i += 2) a[i] = 0.5;";
+        let p = parse(src).unwrap();
+        assert_eq!(p.nest.step, 2);
+    }
+
+    #[test]
+    fn parses_negated_literal_init() {
+        let src = "double a[N], s = -1.5;\nfor (int i = 0; i < N; i++) a[i] = s;";
+        let p = parse(src).unwrap();
+        assert_eq!(p.decls[1].init, Some(-1.5));
+    }
+
+    #[test]
+    fn precedence_mul_over_add() {
+        let src = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+        let p = parse(src).unwrap();
+        match &p.inner_stmts()[0].rhs {
+            Expr::Binary { op: BinOp::Add, rhs, .. } => match rhs.as_ref() {
+                Expr::Binary { op: BinOp::Mul, .. } => {}
+                other => panic!("expected mul on rhs, got {other:?}"),
+            },
+            other => panic!("expected add at top, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! # kerncraft — automatic loop kernel analysis and performance modeling
+//!
+//! A from-scratch reproduction of *"Automatic Loop Kernel Analysis and
+//! Performance Modeling With Kerncraft"* (Hammer, Hager, Eitzinger,
+//! Wellein; PMBS @ SC'15, DOI 10.1145/2832087.2832092).
+//!
+//! The pipeline mirrors the paper's Figure 1:
+//!
+//! ```text
+//!   kernel.c ──► kernel::parse ──► kernel::KernelAnalysis
+//!                                   │ loop stack (Table 2)
+//!                                   │ data accesses (Tables 3/4)
+//!                                   │ flop counts
+//!                    machine.yml ──►│
+//!                                   ▼
+//!            ┌──────────────┬───────────────────┐
+//!            │ incore::     │ cache::           │
+//!            │ port model   │ layer conditions  │
+//!            │ (IACA subst.)│ + offset simulator│
+//!            └──────┬───────┴─────────┬─────────┘
+//!                   ▼                 ▼
+//!              models::ecm / models::roofline ──► report::
+//!                   ▲
+//!      validation:  │
+//!        sim::      │  trace-driven virtual testbed (SNB/HSW stand-in)
+//!        bench_mode │  host execution: native loops + PJRT artifacts
+//!        runtime::  │  (JAX/Pallas kernels AOT-lowered to HLO text)
+//! ```
+//!
+//! Entry points: [`analyze`] for one-shot analysis, [`cli`] for the
+//! command-line front end, and the individual modules for programmatic use.
+
+pub mod bench_mode;
+pub mod cache;
+pub mod cli;
+pub mod incore;
+pub mod kernel;
+pub mod machine;
+pub mod microbench;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// One-shot convenience API: parse `source`, bind `constants`, and build
+/// the full ECM + Roofline analysis against `machine`.
+///
+/// (`no_run`: doctest binaries do not inherit the xla_extension rpath;
+/// the same flow is exercised by `cli::tests::end_to_end_ecm_run_...`.)
+///
+/// ```no_run
+/// use kerncraft::machine::MachineModel;
+/// let src = "double a[N], b[N], c[N], d[N];\n\
+///            for (int i = 0; i < N; i++)\n  a[i] = b[i] + c[i] * d[i];";
+/// let machine = MachineModel::snb();
+/// let consts = [("N".to_string(), 10_000_000i64)].into_iter().collect();
+/// let out = kerncraft::analyze(src, &consts, &machine).unwrap();
+/// assert!(out.ecm.t_mem() > 0.0);
+/// ```
+pub fn analyze(
+    source: &str,
+    constants: &HashMap<String, i64>,
+    machine: &machine::MachineModel,
+) -> Result<AnalysisOutput> {
+    let program = kernel::parse(source)?;
+    let analysis = kernel::KernelAnalysis::from_program(&program, constants)?;
+    let incore = incore::PortModel::analyze(&analysis, machine, &incore::CodegenPolicy::for_machine(machine))?;
+    let traffic = cache::CachePredictor::new(machine).predict(&analysis)?;
+    let ecm = models::EcmModel::build(&incore, &traffic, machine)?;
+    let roofline = models::RooflineModel::build(&analysis, &traffic, machine, Some(&incore))?;
+    Ok(AnalysisOutput { analysis, incore, traffic, ecm, roofline })
+}
+
+/// Bundled result of [`analyze`]: every intermediate product is exposed so
+/// callers (CLI, benches, examples) can drill into any stage.
+pub struct AnalysisOutput {
+    /// Static analysis of the kernel source (loop stack, accesses, flops).
+    pub analysis: kernel::KernelAnalysis,
+    /// In-core port-model prediction (IACA substitute).
+    pub incore: incore::PortModel,
+    /// Per-level data traffic prediction.
+    pub traffic: cache::TrafficPrediction,
+    /// Execution-Cache-Memory model.
+    pub ecm: models::EcmModel,
+    /// Roofline model (port-model in-core variant).
+    pub roofline: models::RooflineModel,
+}

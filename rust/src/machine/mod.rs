@@ -1,0 +1,619 @@
+//! Machine model (paper §4.2): microarchitecture, topology, memory
+//! hierarchy, execution ports, and the microbenchmark database.
+//!
+//! Machine descriptions are YAML files (paper Listing 2). Two calibrated
+//! descriptions ship with the crate — `machines/snb.yml` (Xeon E5-2680,
+//! Sandy Bridge-EP) and `machines/hsw.yml` (Xeon E5-2695 v3, Haswell-EP in
+//! Cluster-on-Die mode) — reproducing the paper's Table 1 testbed. The
+//! measured-bandwidth sections hold values consistent with the published
+//! ECM reference results (see DESIGN.md §1 on substitutions: we cannot run
+//! likwid-bench on the authors' Xeons, so the shipped numbers are
+//! calibrated to the publicly documented measurements).
+
+pub mod topology;
+pub mod yaml;
+
+use anyhow::{anyhow, bail, Context, Result};
+use yaml::Value;
+
+/// µop classes used by the port model (IACA substitute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UopClass {
+    /// Floating-point add/subtract.
+    Add,
+    /// Floating-point multiply.
+    Mul,
+    /// Floating-point divide (occupies the divider for several cycles).
+    Div,
+    /// Fused multiply-add.
+    Fma,
+    /// Load data movement (the "2D"/"3D" port portions in the paper).
+    Load,
+    /// Store data movement.
+    Store,
+    /// Address generation.
+    Agu,
+    /// Store-address generation (HSW port 7; simple addressing only).
+    StAgu,
+    /// Everything else (branches, shuffles, loop overhead).
+    Misc,
+}
+
+impl UopClass {
+    fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "ADD" => UopClass::Add,
+            "MUL" => UopClass::Mul,
+            "DIV" => UopClass::Div,
+            "FMA" => UopClass::Fma,
+            "LOAD" => UopClass::Load,
+            "STORE" => UopClass::Store,
+            "AGU" => UopClass::Agu,
+            "STAGU" => UopClass::StAgu,
+            "MISC" => UopClass::Misc,
+            _ => return None,
+        })
+    }
+}
+
+/// One execution port and the µop classes it accepts.
+#[derive(Debug, Clone)]
+pub struct Port {
+    pub name: String,
+    pub accepts: Vec<UopClass>,
+}
+
+/// Peak flop rates per cycle for one precision.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlopsPerCycle {
+    pub total: f64,
+    pub add: f64,
+    pub mul: f64,
+    /// 0 when the architecture has no FMA.
+    pub fma: f64,
+}
+
+/// ISA/codegen parameters of the architecture.
+#[derive(Debug, Clone)]
+pub struct IsaParams {
+    /// SIMD register width in bytes (32 for AVX).
+    pub vector_bytes: u64,
+    /// Whether FMA contraction is available.
+    pub fma: bool,
+    /// Max bytes a single load µop moves (16 on SNB, 32 on HSW).
+    pub load_uop_bytes: u64,
+    /// Max bytes a single store µop moves.
+    pub store_uop_bytes: u64,
+    /// Load instruction width the modeled compiler prefers (the paper's
+    /// icc 15 emits half-wide 16-byte AVX loads for these kernels).
+    pub preferred_load_bytes: u64,
+    /// Store instruction width the modeled compiler prefers.
+    pub preferred_store_bytes: u64,
+}
+
+/// Instruction latencies (cycles) for the critical-path model.
+#[derive(Debug, Clone, Copy)]
+pub struct Latencies {
+    pub add: f64,
+    pub mul: f64,
+    pub fma: f64,
+    pub load: f64,
+}
+
+/// One level of the memory hierarchy.
+#[derive(Debug, Clone)]
+pub struct MemLevel {
+    /// "L1", "L2", "L3", "MEM".
+    pub name: String,
+    /// Capacity per group in bytes (None for MEM).
+    pub size_bytes: Option<u64>,
+    /// Associativity (for the trace-driven simulator).
+    pub ways: u32,
+    /// Cores sharing one group of this level.
+    pub cores_per_group: u32,
+    /// Number of groups in the whole system.
+    pub groups: u32,
+    /// Documented cycles to move one cache line between this level and the
+    /// next-outer one (the ECM T_{Lk,Lk+1} unit cost). None ⇒ derived from
+    /// measured bandwidth (the MEM link).
+    pub cycles_per_cacheline: Option<f64>,
+    /// Load-to-use latency in cycles (used by the virtual testbed).
+    pub latency: f64,
+}
+
+/// Stream signature of a microbenchmark kernel: (pure reads, read+write,
+/// pure writes) — the taxonomy of the paper's Listing 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamSig {
+    pub reads: u32,
+    pub read_writes: u32,
+    pub writes: u32,
+}
+
+impl StreamSig {
+    /// Squared Euclidean distance between stream signatures, used for the
+    /// "closest match" benchmark selection (paper §4.6.1).
+    pub fn dist2(&self, other: &StreamSig) -> i64 {
+        let d = |a: u32, b: u32| {
+            let d = a as i64 - b as i64;
+            d * d
+        };
+        d(self.reads, other.reads)
+            + d(self.read_writes, other.read_writes)
+            + d(self.writes, other.writes)
+    }
+}
+
+/// One microbenchmark kernel description.
+#[derive(Debug, Clone)]
+pub struct BenchKernel {
+    pub name: String,
+    pub streams: StreamSig,
+    pub flops_per_iteration: u32,
+}
+
+/// Measured bandwidths of one benchmark kernel in one memory level:
+/// `bandwidth_bs[c]` is bytes/second using `c+1` cores.
+#[derive(Debug, Clone)]
+pub struct BenchMeasurement {
+    pub level: String,
+    pub kernel: String,
+    pub bandwidth_bs: Vec<f64>,
+}
+
+/// Microbenchmark database of the machine file.
+#[derive(Debug, Clone, Default)]
+pub struct BenchmarkDb {
+    pub kernels: Vec<BenchKernel>,
+    pub measurements: Vec<BenchMeasurement>,
+}
+
+impl BenchmarkDb {
+    /// Find the benchmark kernel closest to the given stream signature.
+    pub fn closest_kernel(&self, sig: &StreamSig) -> Option<&BenchKernel> {
+        self.kernels.iter().min_by_key(|k| k.streams.dist2(sig))
+    }
+
+    /// Measured bandwidth (bytes/s) of `kernel` in `level` with `cores`.
+    /// Saturates at the highest measured core count.
+    pub fn bandwidth(&self, level: &str, kernel: &str, cores: u32) -> Option<f64> {
+        let m = self
+            .measurements
+            .iter()
+            .find(|m| m.level == level && m.kernel == kernel)?;
+        if m.bandwidth_bs.is_empty() {
+            return None;
+        }
+        let ix = (cores.max(1) as usize - 1).min(m.bandwidth_bs.len() - 1);
+        Some(m.bandwidth_bs[ix])
+    }
+
+    /// Saturated (max-core) bandwidth of `kernel` in `level`.
+    pub fn saturated_bandwidth(&self, level: &str, kernel: &str) -> Option<f64> {
+        let m = self
+            .measurements
+            .iter()
+            .find(|m| m.level == level && m.kernel == kernel)?;
+        m.bandwidth_bs.iter().copied().fold(None, |acc, b| {
+            Some(match acc {
+                None => b,
+                Some(a) if b > a => b,
+                Some(a) => a,
+            })
+        })
+    }
+}
+
+/// Complete machine description.
+#[derive(Debug, Clone)]
+pub struct MachineModel {
+    pub model_name: String,
+    /// Short microarchitecture tag: "SNB", "HSW".
+    pub arch: String,
+    pub clock_hz: f64,
+    pub sockets: u32,
+    pub cores_per_socket: u32,
+    pub threads_per_core: u32,
+    pub cacheline_bytes: u64,
+    pub flops_per_cycle_dp: FlopsPerCycle,
+    pub flops_per_cycle_sp: FlopsPerCycle,
+    pub ports: Vec<Port>,
+    /// Port names whose occupancy belongs to the overlapping time T_OL.
+    pub overlapping_ports: Vec<String>,
+    /// Port names whose occupancy is the non-overlapping time T_nOL
+    /// (the load/store data portions, "2D"/"3D" in the paper).
+    pub non_overlapping_ports: Vec<String>,
+    pub isa: IsaParams,
+    pub latency: Latencies,
+    /// DIV reciprocal throughput (divider occupancy in cycles) by vector
+    /// element count: `div_throughput[&1]` scalar, `[&4]` 4-wide AVX.
+    pub div_throughput: Vec<(u32, f64)>,
+    /// Inner (register-adjacent) to outer ordering: L1, L2, L3, MEM.
+    pub memory_hierarchy: Vec<MemLevel>,
+    pub benchmarks: BenchmarkDb,
+}
+
+impl MachineModel {
+    /// Parse a machine description from YAML text.
+    pub fn from_yaml(text: &str) -> Result<Self> {
+        let v = yaml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Load a machine description from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading machine file {path}"))?;
+        Self::from_yaml(&text).with_context(|| format!("parsing machine file {path}"))
+    }
+
+    /// Built-in Sandy Bridge-EP (Xeon E5-2680) description — paper Table 1.
+    pub fn snb() -> Self {
+        Self::from_yaml(SNB_YML).expect("builtin snb.yml must parse")
+    }
+
+    /// Built-in Haswell-EP (Xeon E5-2695 v3, Cluster-on-Die) description.
+    pub fn hsw() -> Self {
+        Self::from_yaml(HSW_YML).expect("builtin hsw.yml must parse")
+    }
+
+    /// Look up a built-in machine by tag ("SNB"/"HSW", case-insensitive).
+    pub fn builtin(tag: &str) -> Option<Self> {
+        match tag.to_ascii_uppercase().as_str() {
+            "SNB" | "SANDYBRIDGE" => Some(Self::snb()),
+            "HSW" | "HASWELL" => Some(Self::hsw()),
+            _ => None,
+        }
+    }
+
+    /// Memory level by name.
+    pub fn level(&self, name: &str) -> Option<&MemLevel> {
+        self.memory_hierarchy.iter().find(|l| l.name == name)
+    }
+
+    /// Cache levels only (everything except MEM), inner to outer.
+    pub fn cache_levels(&self) -> Vec<&MemLevel> {
+        self.memory_hierarchy.iter().filter(|l| l.name != "MEM").collect()
+    }
+
+    /// DIV throughput for a given vector element count (falls back to the
+    /// widest configured width at or below `elems`).
+    pub fn div_cycles(&self, elems: u32) -> f64 {
+        let mut best: Option<(u32, f64)> = None;
+        for &(w, c) in &self.div_throughput {
+            if w <= elems && best.map(|(bw, _)| w > bw).unwrap_or(true) {
+                best = Some((w, c));
+            }
+        }
+        best.map(|(_, c)| c)
+            .or_else(|| self.div_throughput.first().map(|&(_, c)| c))
+            .unwrap_or(20.0)
+    }
+
+    /// Number of ports accepting a µop class.
+    pub fn ports_accepting(&self, class: UopClass) -> usize {
+        self.ports.iter().filter(|p| p.accepts.contains(&class)).count()
+    }
+
+    /// Cores in one memory group (ccNUMA domain) — the unit for saturated
+    /// memory bandwidth.
+    pub fn cores_per_numa_domain(&self) -> u32 {
+        self.level("MEM").map(|l| l.cores_per_group).unwrap_or(self.cores_per_socket)
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let req = |key: &str| {
+            v.get(key).ok_or_else(|| anyhow!("machine file missing key '{key}'"))
+        };
+        let model_name = req("model name")?.as_str().unwrap_or("unknown").to_string();
+        let arch = req("micro-architecture")?
+            .as_str()
+            .ok_or_else(|| anyhow!("bad micro-architecture"))?
+            .to_string();
+        let clock_hz = req("clock")?.as_hz().ok_or_else(|| anyhow!("bad clock"))?;
+        let sockets = req("sockets")?.as_i64().unwrap_or(1) as u32;
+        let cores_per_socket = req("cores per socket")?.as_i64().unwrap_or(1) as u32;
+        let threads_per_core = v
+            .get("threads per core")
+            .and_then(|x| x.as_i64())
+            .unwrap_or(1) as u32;
+        let cacheline_bytes = req("cacheline size")?
+            .as_bytes()
+            .ok_or_else(|| anyhow!("bad cacheline size"))?;
+
+        let fpc = |prec: &str| -> Result<FlopsPerCycle> {
+            let node = v
+                .get("FLOPs per cycle")
+                .and_then(|f| f.get(prec))
+                .ok_or_else(|| anyhow!("missing FLOPs per cycle / {prec}"))?;
+            Ok(FlopsPerCycle {
+                total: node.get("total").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                add: node.get("ADD").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                mul: node.get("MUL").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                fma: node.get("FMA").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            })
+        };
+
+        let mut ports = Vec::new();
+        for (name, classes) in req("ports")?.entries() {
+            let mut accepts = Vec::new();
+            for c in classes.items() {
+                let cname = c.as_str().unwrap_or("");
+                accepts.push(
+                    UopClass::parse(cname)
+                        .ok_or_else(|| anyhow!("unknown uop class '{cname}' on port {name}"))?,
+                );
+            }
+            ports.push(Port { name: name.clone(), accepts });
+        }
+        let str_list = |key: &str| -> Vec<String> {
+            v.get(key)
+                .map(|l| l.items().iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+        let overlapping_ports = str_list("overlapping ports");
+        let non_overlapping_ports = str_list("non-overlapping ports");
+
+        let isa_node = req("isa")?;
+        let isa = IsaParams {
+            vector_bytes: isa_node.get("vector bytes").and_then(|x| x.as_i64()).unwrap_or(32)
+                as u64,
+            fma: isa_node.get("fma").and_then(|x| x.as_bool()).unwrap_or(false),
+            load_uop_bytes: isa_node
+                .get("load uop bytes")
+                .and_then(|x| x.as_i64())
+                .unwrap_or(32) as u64,
+            store_uop_bytes: isa_node
+                .get("store uop bytes")
+                .and_then(|x| x.as_i64())
+                .unwrap_or(32) as u64,
+            preferred_load_bytes: isa_node
+                .get("preferred load bytes")
+                .and_then(|x| x.as_i64())
+                .unwrap_or(32) as u64,
+            preferred_store_bytes: isa_node
+                .get("preferred store bytes")
+                .and_then(|x| x.as_i64())
+                .unwrap_or(32) as u64,
+        };
+
+        let lat_node = req("latency")?;
+        let latency = Latencies {
+            add: lat_node.get("ADD").and_then(|x| x.as_f64()).unwrap_or(3.0),
+            mul: lat_node.get("MUL").and_then(|x| x.as_f64()).unwrap_or(5.0),
+            fma: lat_node.get("FMA").and_then(|x| x.as_f64()).unwrap_or(5.0),
+            load: lat_node.get("LOAD").and_then(|x| x.as_f64()).unwrap_or(4.0),
+        };
+
+        let mut div_throughput = Vec::new();
+        if let Some(div) = v.get("throughput").and_then(|t| t.get("DIV")) {
+            for (w, c) in div.entries() {
+                div_throughput.push((
+                    w.parse::<u32>().map_err(|_| anyhow!("bad DIV width '{w}'"))?,
+                    c.as_f64().ok_or_else(|| anyhow!("bad DIV cycles"))?,
+                ));
+            }
+        }
+
+        let mut memory_hierarchy = Vec::new();
+        for item in req("memory hierarchy")?.items() {
+            let name = item
+                .get("level")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("memory level missing 'level'"))?
+                .to_string();
+            memory_hierarchy.push(MemLevel {
+                size_bytes: item.get("size per group").and_then(|x| x.as_bytes()),
+                ways: item.get("ways").and_then(|x| x.as_i64()).unwrap_or(8) as u32,
+                cores_per_group: item
+                    .get("cores per group")
+                    .and_then(|x| x.as_i64())
+                    .unwrap_or(1) as u32,
+                groups: item.get("groups").and_then(|x| x.as_i64()).unwrap_or(1) as u32,
+                cycles_per_cacheline: item
+                    .get("cycles per cacheline transfer")
+                    .and_then(|x| x.as_f64()),
+                latency: item.get("access latency").and_then(|x| x.as_f64()).unwrap_or(4.0),
+                name,
+            });
+        }
+        if memory_hierarchy.is_empty() {
+            bail!("machine file has an empty memory hierarchy");
+        }
+
+        let mut benchmarks = BenchmarkDb::default();
+        if let Some(b) = v.get("benchmarks") {
+            if let Some(kernels) = b.get("kernels") {
+                for (name, k) in kernels.entries() {
+                    benchmarks.kernels.push(BenchKernel {
+                        name: name.clone(),
+                        streams: StreamSig {
+                            reads: k.get("read streams").and_then(|x| x.as_i64()).unwrap_or(0)
+                                as u32,
+                            read_writes: k
+                                .get("read+write streams")
+                                .and_then(|x| x.as_i64())
+                                .unwrap_or(0) as u32,
+                            writes: k.get("write streams").and_then(|x| x.as_i64()).unwrap_or(0)
+                                as u32,
+                        },
+                        flops_per_iteration: k
+                            .get("FLOPs per iteration")
+                            .and_then(|x| x.as_i64())
+                            .unwrap_or(0) as u32,
+                    });
+                }
+            }
+            if let Some(ms) = b.get("measurements") {
+                for m in ms.items() {
+                    let level = m
+                        .get("level")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("measurement missing level"))?
+                        .to_string();
+                    let kernel = m
+                        .get("kernel")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("measurement missing kernel"))?
+                        .to_string();
+                    let bandwidth_bs: Vec<f64> = m
+                        .get("bandwidth GB/s")
+                        .map(|l| {
+                            l.items()
+                                .iter()
+                                .filter_map(|x| x.as_f64())
+                                .map(|g| g * 1e9)
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    if bandwidth_bs.is_empty() {
+                        bail!("measurement {level}/{kernel} has no bandwidths");
+                    }
+                    benchmarks.measurements.push(BenchMeasurement { level, kernel, bandwidth_bs });
+                }
+            }
+        }
+
+        Ok(MachineModel {
+            model_name,
+            arch,
+            clock_hz,
+            sockets,
+            cores_per_socket,
+            threads_per_core,
+            cacheline_bytes,
+            flops_per_cycle_dp: fpc("DP")?,
+            flops_per_cycle_sp: fpc("SP")?,
+            ports,
+            overlapping_ports,
+            non_overlapping_ports,
+            isa,
+            latency,
+            div_throughput,
+            memory_hierarchy,
+            benchmarks,
+        })
+    }
+}
+
+/// Built-in machine files (also available on disk under `machines/`).
+pub const SNB_YML: &str = include_str!("../../../machines/snb.yml");
+/// Haswell-EP description.
+pub const HSW_YML: &str = include_str!("../../../machines/hsw.yml");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snb_parses_and_matches_table1() {
+        let m = MachineModel::snb();
+        assert_eq!(m.arch, "SNB");
+        assert_eq!(m.clock_hz, 2.7e9);
+        assert_eq!(m.cores_per_socket, 8);
+        assert_eq!(m.sockets, 2);
+        assert_eq!(m.cacheline_bytes, 64);
+        assert_eq!(m.flops_per_cycle_dp.total, 8.0);
+        assert!(!m.isa.fma);
+        // L1-L2 32 B/cy ⇒ 2 cy per 64 B cache line (Table 1)
+        assert_eq!(m.level("L1").unwrap().cycles_per_cacheline, Some(2.0));
+        assert_eq!(m.level("L2").unwrap().cycles_per_cacheline, Some(2.0));
+        assert_eq!(m.level("L1").unwrap().size_bytes, Some(32 * 1024));
+        assert_eq!(m.level("L3").unwrap().size_bytes, Some(20 * 1024 * 1024));
+    }
+
+    #[test]
+    fn hsw_parses_and_matches_table1() {
+        let m = MachineModel::hsw();
+        assert_eq!(m.arch, "HSW");
+        assert_eq!(m.clock_hz, 2.3e9);
+        // Cluster-on-Die: 7 cores per memory domain
+        assert_eq!(m.cores_per_numa_domain(), 7);
+        assert!(m.isa.fma);
+        assert_eq!(m.flops_per_cycle_dp.total, 16.0);
+        // L1-L2 64 B/cy ⇒ 1 cy/CL on Haswell
+        assert_eq!(m.level("L1").unwrap().cycles_per_cacheline, Some(1.0));
+        assert_eq!(m.level("L2").unwrap().cycles_per_cacheline, Some(2.0));
+    }
+
+    #[test]
+    fn ports_classified() {
+        let m = MachineModel::snb();
+        assert_eq!(m.ports_accepting(UopClass::Load), 2);
+        assert_eq!(m.ports_accepting(UopClass::Agu), 2);
+        assert_eq!(m.ports_accepting(UopClass::Store), 1);
+        assert!(m.non_overlapping_ports.contains(&"2D".to_string()));
+        let hsw = MachineModel::hsw();
+        assert_eq!(hsw.ports_accepting(UopClass::Fma), 2);
+    }
+
+    #[test]
+    fn benchmark_closest_match() {
+        let m = MachineModel::snb();
+        // jacobi at MEM: 1 read stream, 1 write ⇒ copy
+        let sig = StreamSig { reads: 1, read_writes: 0, writes: 1 };
+        assert_eq!(m.benchmarks.closest_kernel(&sig).unwrap().name, "copy");
+        // kahan: 2 pure reads ⇒ load
+        let sig = StreamSig { reads: 2, read_writes: 0, writes: 0 };
+        assert_eq!(m.benchmarks.closest_kernel(&sig).unwrap().name, "load");
+        // triad: 3 reads + 1 write ⇒ triad
+        let sig = StreamSig { reads: 3, read_writes: 0, writes: 1 };
+        assert_eq!(m.benchmarks.closest_kernel(&sig).unwrap().name, "triad");
+    }
+
+    #[test]
+    fn bandwidth_lookup_and_saturation() {
+        let m = MachineModel::snb();
+        let b1 = m.benchmarks.bandwidth("MEM", "copy", 1).unwrap();
+        let b8 = m.benchmarks.bandwidth("MEM", "copy", 8).unwrap();
+        assert!(b1 < b8);
+        // beyond measured core count: saturate
+        assert_eq!(m.benchmarks.bandwidth("MEM", "copy", 99), Some(b8));
+        assert_eq!(m.benchmarks.saturated_bandwidth("MEM", "copy"), Some(b8));
+    }
+
+    #[test]
+    fn mem_bandwidth_reproduces_paper_t_l3mem() {
+        // Jacobi on SNB: 3 cache lines (192 B) per unit of work at the
+        // saturated copy bandwidth must be ≈12.7 cy (paper Table 5).
+        let m = MachineModel::snb();
+        let bw = m.benchmarks.saturated_bandwidth("MEM", "copy").unwrap();
+        let cy = 192.0 / bw * m.clock_hz;
+        assert!((cy - 12.7).abs() < 0.2, "got {cy}");
+        // Haswell: 192 B at the CoD-domain copy bandwidth ≈ 16.7 cy.
+        let h = MachineModel::hsw();
+        let bw = h.benchmarks.saturated_bandwidth("MEM", "copy").unwrap();
+        let cy = 192.0 / bw * h.clock_hz;
+        assert!((cy - 16.7).abs() < 0.2, "got {cy}");
+    }
+
+    #[test]
+    fn div_cycles_width_fallback() {
+        let m = MachineModel::snb();
+        assert_eq!(m.div_cycles(4), 42.0);
+        assert_eq!(m.div_cycles(1), 22.0);
+        assert_eq!(m.div_cycles(2), 22.0);
+        let h = MachineModel::hsw();
+        assert_eq!(h.div_cycles(4), 28.0);
+    }
+
+    #[test]
+    fn builtin_lookup() {
+        assert!(MachineModel::builtin("snb").is_some());
+        assert!(MachineModel::builtin("Haswell").is_some());
+        assert!(MachineModel::builtin("EPYC").is_none());
+    }
+
+    #[test]
+    fn missing_key_is_reported() {
+        let err = MachineModel::from_yaml("clock: 2 GHz\n").unwrap_err();
+        assert!(format!("{err}").contains("missing key"));
+    }
+
+    #[test]
+    fn cache_levels_excludes_mem() {
+        let m = MachineModel::snb();
+        let names: Vec<&str> = m.cache_levels().iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["L1", "L2", "L3"]);
+    }
+}

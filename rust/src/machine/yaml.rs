@@ -1,0 +1,565 @@
+//! Minimal YAML-subset parser for machine description files.
+//!
+//! The paper distributes hardware descriptions as YAML (Listing 2). The
+//! offline crate set has no YAML library, so we implement the subset the
+//! machine files actually use:
+//!
+//! * indentation-scoped block maps (`key: value` / `key:` + indented body),
+//! * block lists (`- item`, `- {inline map}`),
+//! * inline (flow) lists `[a, b, c]` and inline maps `{k: v, k2: v2}`,
+//! * scalars with optional units (`2.7 GHz`, `32 kB`, `64 B/cy`),
+//! * `#` comments and `null`.
+//!
+//! Anchors, multi-line strings, multi-document streams etc. are
+//! intentionally unsupported and rejected loudly.
+
+use thiserror::Error;
+
+/// Parse error with line information.
+#[derive(Debug, Error)]
+#[error("yaml error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Scalar stored verbatim (unit parsing happens in the accessors).
+    Scalar(String),
+    /// `null` / `~` / empty.
+    Null,
+    List(Vec<Value>),
+    /// Insertion-ordered key/value pairs.
+    Map(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Look up a key in a map value.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Map entries (empty for non-maps).
+    pub fn entries(&self) -> &[(String, Value)] {
+        match self {
+            Value::Map(e) => e,
+            _ => &[],
+        }
+    }
+
+    /// List items (empty for non-lists).
+    pub fn items(&self) -> &[Value] {
+        match self {
+            Value::List(v) => v,
+            _ => &[],
+        }
+    }
+
+    /// Raw scalar string, if this is a scalar.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Scalar(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Parse the scalar as `f64`, ignoring a trailing unit word
+    /// (`"2.7 GHz"` → 2.7).
+    pub fn as_f64(&self) -> Option<f64> {
+        let s = self.as_str()?;
+        let first = s.split_whitespace().next()?;
+        first.parse().ok()
+    }
+
+    /// Parse as integer.
+    pub fn as_i64(&self) -> Option<i64> {
+        let s = self.as_str()?;
+        let first = s.split_whitespace().next()?;
+        first.parse().ok()
+    }
+
+    /// Parse as boolean (`true`/`false`).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self.as_str()? {
+            "true" | "True" => Some(true),
+            "false" | "False" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// Parse a size with unit into bytes: `32 kB`, `20 MB`, `64 B`.
+    /// Uses binary multipliers (kB = 1024) as cache sizes conventionally do.
+    pub fn as_bytes(&self) -> Option<u64> {
+        let s = self.as_str()?;
+        let mut parts = s.split_whitespace();
+        let num: f64 = parts.next()?.parse().ok()?;
+        let mult = match parts.next().unwrap_or("B") {
+            "B" => 1.0,
+            "kB" | "KB" | "KiB" => 1024.0,
+            "MB" | "MiB" => 1024.0 * 1024.0,
+            "GB" | "GiB" => 1024.0 * 1024.0 * 1024.0,
+            _ => return None,
+        };
+        Some((num * mult) as u64)
+    }
+
+    /// Parse a frequency into Hz: `2.7 GHz`, `2300 MHz`.
+    pub fn as_hz(&self) -> Option<f64> {
+        let s = self.as_str()?;
+        let mut parts = s.split_whitespace();
+        let num: f64 = parts.next()?.parse().ok()?;
+        Some(match parts.next().unwrap_or("Hz") {
+            "Hz" => num,
+            "kHz" => num * 1e3,
+            "MHz" => num * 1e6,
+            "GHz" => num * 1e9,
+            _ => return None,
+        })
+    }
+
+    /// Parse a bandwidth into bytes/second: `40.8 GB/s` (decimal
+    /// multipliers, matching how memory bandwidth is reported).
+    pub fn as_bandwidth(&self) -> Option<f64> {
+        let s = self.as_str()?;
+        let mut parts = s.split_whitespace();
+        let num: f64 = parts.next()?.parse().ok()?;
+        Some(match parts.next().unwrap_or("B/s") {
+            "B/s" => num,
+            "kB/s" => num * 1e3,
+            "MB/s" => num * 1e6,
+            "GB/s" => num * 1e9,
+            _ => return None,
+        })
+    }
+}
+
+/// Parse a YAML-subset document into a [`Value`].
+pub fn parse(src: &str) -> Result<Value, YamlError> {
+    // Pre-process: strip comments and blank lines, record indentation.
+    // Lines with unbalanced `[`/`{` are merged with their continuation
+    // lines so flow collections may wrap.
+    let mut lines: Vec<(usize, usize, String)> = Vec::new(); // (lineno, indent, content)
+    for (ln, raw) in src.lines().enumerate() {
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        if let Some((_, _, prev)) = lines.last_mut() {
+            if flow_depth(prev) > 0 {
+                prev.push(' ');
+                prev.push_str(trimmed.trim_start());
+                continue;
+            }
+        }
+        lines.push((ln + 1, indent, trimmed.trim_start().to_string()));
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, 0)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            line: lines[pos].0,
+            msg: "unexpected content after document (bad indentation?)".into(),
+        });
+    }
+    Ok(v)
+}
+
+/// Net `[`/`{` nesting depth of a line (quote-aware).
+fn flow_depth(s: &str) -> i32 {
+    let mut depth = 0i32;
+    let mut in_quote: Option<char> = None;
+    for c in s.chars() {
+        match in_quote {
+            Some(q) => {
+                if c == q {
+                    in_quote = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => in_quote = Some(c),
+                '[' | '{' => depth += 1,
+                ']' | '}' => depth -= 1,
+                _ => {}
+            },
+        }
+    }
+    depth
+}
+
+fn strip_comment(line: &str) -> String {
+    // '#' starts a comment unless inside quotes
+    let mut out = String::new();
+    let mut in_quote: Option<char> = None;
+    for c in line.chars() {
+        match in_quote {
+            Some(q) => {
+                if c == q {
+                    in_quote = None;
+                }
+                out.push(c);
+            }
+            None => {
+                if c == '#' {
+                    break;
+                }
+                if c == '"' || c == '\'' {
+                    in_quote = Some(c);
+                }
+                out.push(c);
+            }
+        }
+    }
+    out
+}
+
+fn parse_block(
+    lines: &[(usize, usize, String)],
+    pos: &mut usize,
+    indent: usize,
+) -> Result<Value, YamlError> {
+    if *pos >= lines.len() {
+        return Ok(Value::Null);
+    }
+    let (_, first_indent, first) = &lines[*pos];
+    if *first_indent != indent {
+        return Err(YamlError {
+            line: lines[*pos].0,
+            msg: format!("expected indent {indent}, found {first_indent}"),
+        });
+    }
+    if first.starts_with("- ") || first == "-" {
+        parse_block_list(lines, pos, indent)
+    } else {
+        parse_block_map(lines, pos, indent)
+    }
+}
+
+fn parse_block_list(
+    lines: &[(usize, usize, String)],
+    pos: &mut usize,
+    indent: usize,
+) -> Result<Value, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let (ln, ind, content) = &lines[*pos];
+        if *ind < indent {
+            break;
+        }
+        if *ind > indent {
+            return Err(YamlError { line: *ln, msg: "unexpected deeper indent in list".into() });
+        }
+        if !(content.starts_with("- ") || content == "-") {
+            break;
+        }
+        let rest = content.strip_prefix('-').unwrap().trim_start();
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block under the dash
+            let inner_indent =
+                lines.get(*pos).map(|(_, i, _)| *i).filter(|i| *i > indent).ok_or(YamlError {
+                    line: *ln,
+                    msg: "empty list item".into(),
+                })?;
+            items.push(parse_block(lines, pos, inner_indent)?);
+        } else if let Some(stripped) = rest.strip_suffix(':') {
+            // `- key:` — a map item whose first key has a nested value
+            let key = unquote(stripped);
+            let inner_indent =
+                lines.get(*pos).map(|(_, i, _)| *i).filter(|i| *i > indent).ok_or(YamlError {
+                    line: *ln,
+                    msg: "missing value for list-item key".into(),
+                })?;
+            let v = parse_block(lines, pos, inner_indent)?;
+            items.push(Value::Map(vec![(key, v)]));
+        } else {
+            items.push(parse_inline(rest, *ln)?);
+        }
+    }
+    Ok(Value::List(items))
+}
+
+fn parse_block_map(
+    lines: &[(usize, usize, String)],
+    pos: &mut usize,
+    indent: usize,
+) -> Result<Value, YamlError> {
+    let mut entries = Vec::new();
+    while *pos < lines.len() {
+        let (ln, ind, content) = &lines[*pos];
+        if *ind < indent {
+            break;
+        }
+        if *ind > indent {
+            return Err(YamlError { line: *ln, msg: "unexpected deeper indent in map".into() });
+        }
+        if content.starts_with("- ") {
+            break;
+        }
+        let colon = find_key_colon(content).ok_or(YamlError {
+            line: *ln,
+            msg: format!("expected 'key: value', found '{content}'"),
+        })?;
+        let key = unquote(content[..colon].trim());
+        let rest = content[colon + 1..].trim();
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block (map or list) or null
+            match lines.get(*pos) {
+                Some((_, i, _)) if *i > indent => {
+                    let inner = *i;
+                    entries.push((key, parse_block(lines, pos, inner)?));
+                }
+                Some((_, i, c)) if *i == indent && (c.starts_with("- ") || c == "-") => {
+                    // list at same indentation level (common YAML style)
+                    entries.push((key, parse_block_list(lines, pos, indent)?));
+                }
+                _ => entries.push((key, Value::Null)),
+            }
+        } else {
+            entries.push((key, parse_inline(rest, *ln)?));
+        }
+    }
+    Ok(Value::Map(entries))
+}
+
+/// Find the colon separating key from value at nesting depth 0.
+fn find_key_colon(s: &str) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut in_quote: Option<char> = None;
+    for (i, c) in s.char_indices() {
+        match in_quote {
+            Some(q) => {
+                if c == q {
+                    in_quote = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => in_quote = Some(c),
+                '[' | '{' => depth += 1,
+                ']' | '}' => depth -= 1,
+                ':' if depth == 0 => {
+                    // require end-of-string or whitespace after ':' so that
+                    // e.g. "B/s" in units never splits
+                    let next = s[i + 1..].chars().next();
+                    if next.is_none() || next == Some(' ') {
+                        return Some(i);
+                    }
+                }
+                _ => {}
+            },
+        }
+    }
+    None
+}
+
+/// Parse an inline value: flow list, flow map, or scalar.
+fn parse_inline(s: &str, line: usize) -> Result<Value, YamlError> {
+    let s = s.trim();
+    if s == "null" || s == "~" {
+        return Ok(Value::Null);
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or(YamlError {
+            line,
+            msg: "unterminated inline list".into(),
+        })?;
+        let mut items = Vec::new();
+        for part in split_flow(body) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_inline(p, line)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    if let Some(body) = s.strip_prefix('{') {
+        let body = body.strip_suffix('}').ok_or(YamlError {
+            line,
+            msg: "unterminated inline map".into(),
+        })?;
+        let mut entries = Vec::new();
+        for part in split_flow(body) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            let colon = find_key_colon(p).ok_or(YamlError {
+                line,
+                msg: format!("expected 'key: value' in inline map, found '{p}'"),
+            })?;
+            let key = unquote(p[..colon].trim());
+            let val = parse_inline(p[colon + 1..].trim(), line)?;
+            entries.push((key, val));
+        }
+        return Ok(Value::Map(entries));
+    }
+    Ok(Value::Scalar(unquote(s)))
+}
+
+/// Split a flow collection body on top-level commas.
+fn split_flow(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut in_quote: Option<char> = None;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match in_quote {
+            Some(q) => {
+                if c == q {
+                    in_quote = None;
+                }
+                cur.push(c);
+            }
+            None => match c {
+                '"' | '\'' => {
+                    in_quote = Some(c);
+                    cur.push(c);
+                }
+                '[' | '{' => {
+                    depth += 1;
+                    cur.push(c);
+                }
+                ']' | '}' => {
+                    depth -= 1;
+                    cur.push(c);
+                }
+                ',' if depth == 0 => {
+                    out.push(std::mem::take(&mut cur));
+                }
+                _ => cur.push(c),
+            },
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_map() {
+        let v = parse("clock: 2.7 GHz\ncores per socket: 8\n").unwrap();
+        assert_eq!(v.get("clock").unwrap().as_hz(), Some(2.7e9));
+        assert_eq!(v.get("cores per socket").unwrap().as_i64(), Some(8));
+    }
+
+    #[test]
+    fn parses_nested_map() {
+        let src = "FLOPs per cycle:\n  DP: {total: 8, ADD: 4, MUL: 4}\n  SP: {total: 16, ADD: 8, MUL: 8}\n";
+        let v = parse(src).unwrap();
+        let dp = v.get("FLOPs per cycle").unwrap().get("DP").unwrap();
+        assert_eq!(dp.get("total").unwrap().as_i64(), Some(8));
+        assert_eq!(dp.get("MUL").unwrap().as_i64(), Some(4));
+    }
+
+    #[test]
+    fn parses_inline_list_with_quotes() {
+        let v = parse("non-overlapping ports: [\"2D\", \"3D\"]\n").unwrap();
+        let items = v.get("non-overlapping ports").unwrap().items();
+        assert_eq!(items[0].as_str(), Some("2D"));
+        assert_eq!(items[1].as_str(), Some("3D"));
+    }
+
+    #[test]
+    fn parses_block_list_of_inline_maps() {
+        let src = "memory hierarchy:\n  - {level: L1, size per group: 32 kB, ways: 8}\n  - {level: L2, size per group: 256 kB, ways: 8}\n";
+        let v = parse(src).unwrap();
+        let mh = v.get("memory hierarchy").unwrap().items();
+        assert_eq!(mh.len(), 2);
+        assert_eq!(mh[0].get("level").unwrap().as_str(), Some("L1"));
+        assert_eq!(mh[0].get("size per group").unwrap().as_bytes(), Some(32 * 1024));
+    }
+
+    #[test]
+    fn parses_list_at_key_indent() {
+        // `key:` followed by `- item` at the same indent
+        let src = "levels:\n- one\n- two\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("levels").unwrap().items().len(), 2);
+    }
+
+    #[test]
+    fn null_values() {
+        let v = parse("bandwidth: null\nsize: ~\n").unwrap();
+        assert_eq!(v.get("bandwidth"), Some(&Value::Null));
+        assert_eq!(v.get("size"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn comments_are_stripped() {
+        let v = parse("# header\nclock: 2.3 GHz  # fixed\n").unwrap();
+        assert_eq!(v.get("clock").unwrap().as_hz(), Some(2.3e9));
+    }
+
+    #[test]
+    fn unit_accessors() {
+        assert_eq!(Value::Scalar("64 B".into()).as_bytes(), Some(64));
+        assert_eq!(Value::Scalar("20 MB".into()).as_bytes(), Some(20 * 1024 * 1024));
+        assert_eq!(Value::Scalar("40.8 GB/s".into()).as_bandwidth(), Some(40.8e9));
+        assert_eq!(Value::Scalar("true".into()).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn nested_inline_structures() {
+        let v = parse("x: {a: [1, 2], b: {c: 3}}\n").unwrap();
+        let x = v.get("x").unwrap();
+        assert_eq!(x.get("a").unwrap().items().len(), 2);
+        assert_eq!(x.get("b").unwrap().get("c").unwrap().as_i64(), Some(3));
+    }
+
+    #[test]
+    fn colon_in_unit_not_split() {
+        // "B/s" style strings must not confuse the key splitter
+        let v = parse("bw: 12 GB/s\n").unwrap();
+        assert_eq!(v.get("bw").unwrap().as_bandwidth(), Some(12e9));
+    }
+
+    #[test]
+    fn rejects_bad_indent() {
+        assert!(parse("a: 1\n   b: 2\n").is_err());
+    }
+
+    #[test]
+    fn quoted_keys() {
+        let v = parse("\"0DV\": [DIV]\n").unwrap();
+        assert_eq!(v.get("0DV").unwrap().items()[0].as_str(), Some("DIV"));
+    }
+
+    #[test]
+    fn deep_nesting_blocks() {
+        let src = "a:\n  b:\n    c: 1\n  d: 2\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().get("b").unwrap().get("c").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("a").unwrap().get("d").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn list_item_with_nested_block() {
+        let src = "ms:\n  - level: MEM\n    kernel: copy\n";
+        // `- key: value` with continuation lines is NOT in our subset;
+        // ensure it errors rather than silently mis-parsing.
+        assert!(parse(src).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! `kerncraft` binary — see [`kerncraft::cli`] for the flag reference.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", kerncraft::cli::usage());
+        std::process::exit(2);
+    }
+    match kerncraft::cli::run(&argv) {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("kerncraft: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! STREAM-style microbenchmark suite — the `likwid-bench` substitute.
+//!
+//! Measures achievable bandwidth of the five benchmark kernels the paper's
+//! machine files use (load, copy, update, daxpy, triad) for a range of
+//! working-set sizes, so `examples/machine_probe.rs` can fill the
+//! `benchmarks:` section of a host machine file (paper §4.2,
+//! `likwid_auto_bench.py`).
+
+use crate::util::{median, monotonic_ns};
+use std::hint::black_box;
+
+/// The benchmark kernels with their per-iteration traffic in bytes
+/// (including write-allocate, as likwid-bench reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamKernel {
+    Load,
+    Copy,
+    Update,
+    Daxpy,
+    Triad,
+}
+
+impl StreamKernel {
+    /// All kernels in machine-file order.
+    pub fn all() -> [StreamKernel; 5] {
+        [
+            StreamKernel::Load,
+            StreamKernel::Copy,
+            StreamKernel::Update,
+            StreamKernel::Daxpy,
+            StreamKernel::Triad,
+        ]
+    }
+
+    /// Machine-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamKernel::Load => "load",
+            StreamKernel::Copy => "copy",
+            StreamKernel::Update => "update",
+            StreamKernel::Daxpy => "daxpy",
+            StreamKernel::Triad => "triad",
+        }
+    }
+
+    /// Bytes moved per iteration, counting write-allocate traffic.
+    pub fn bytes_per_iteration(&self) -> u64 {
+        match self {
+            StreamKernel::Load => 8,          // read a
+            StreamKernel::Copy => 24,         // read b + WA a + write a
+            StreamKernel::Update => 16,       // read a + write a
+            StreamKernel::Daxpy => 24,        // read a, b + write a
+            StreamKernel::Triad => 40,        // read b, c, d + WA a + write a
+        }
+    }
+}
+
+/// One measurement: kernel × working-set size.
+#[derive(Debug, Clone)]
+pub struct BandwidthSample {
+    pub kernel: StreamKernel,
+    /// Total working set in bytes (all arrays).
+    pub working_set: u64,
+    /// Measured bandwidth in bytes/second.
+    pub bandwidth_bs: f64,
+}
+
+/// Measure one kernel at one per-array length, repeating the sweep until
+/// ~`min_ms` of work and taking the median of `samples`.
+pub fn measure(kernel: StreamKernel, n: usize, samples: usize, min_ms: u64) -> BandwidthSample {
+    let mut a = vec![1.0f64; n];
+    let b = vec![2.0f64; n];
+    let c = vec![3.0f64; n];
+    let d = vec![4.0f64; n];
+    let s = 1.000001f64;
+
+    let bytes_per_sweep = kernel.bytes_per_iteration() * n as u64;
+    // calibrate sweep count for the target duration
+    let mut sweeps = 1u64;
+    loop {
+        let t0 = monotonic_ns();
+        run_sweeps(kernel, &mut a, &b, &c, &d, s, sweeps);
+        let dt = monotonic_ns() - t0;
+        if dt >= min_ms * 1_000_000 || sweeps > 1 << 24 {
+            break;
+        }
+        sweeps = (sweeps * 2).max(((min_ms * 1_000_000) / dt.max(1)) * sweeps + 1);
+    }
+
+    let mut bws = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = monotonic_ns();
+        run_sweeps(kernel, &mut a, &b, &c, &d, s, sweeps);
+        let dt = (monotonic_ns() - t0) as f64 / 1e9;
+        bws.push(bytes_per_sweep as f64 * sweeps as f64 / dt);
+    }
+    let arrays = match kernel {
+        StreamKernel::Load | StreamKernel::Update => 1,
+        StreamKernel::Copy => 2,
+        StreamKernel::Daxpy => 2,
+        StreamKernel::Triad => 4,
+    };
+    BandwidthSample {
+        kernel,
+        working_set: arrays * n as u64 * 8,
+        bandwidth_bs: median(&bws),
+    }
+}
+
+fn run_sweeps(
+    kernel: StreamKernel,
+    a: &mut [f64],
+    b: &[f64],
+    c: &[f64],
+    d: &[f64],
+    s: f64,
+    sweeps: u64,
+) {
+    let n = a.len();
+    for _ in 0..sweeps {
+        match kernel {
+            StreamKernel::Load => {
+                let mut acc = 0.0f64;
+                for x in a.iter() {
+                    acc += *x;
+                }
+                black_box(acc);
+            }
+            StreamKernel::Copy => {
+                for i in 0..n {
+                    a[i] = b[i];
+                }
+            }
+            StreamKernel::Update => {
+                for i in 0..n {
+                    a[i] *= s;
+                }
+            }
+            StreamKernel::Daxpy => {
+                for i in 0..n {
+                    a[i] += s * b[i];
+                }
+            }
+            StreamKernel::Triad => {
+                for i in 0..n {
+                    a[i] = b[i] + c[i] * d[i];
+                }
+            }
+        }
+        black_box(&a[0]);
+    }
+}
+
+/// Sweep all kernels over per-level working-set sizes derived from the
+/// host caches: returns (level_name, samples).
+pub fn sweep_levels(cache_sizes: &[(String, u64)]) -> Vec<(String, Vec<BandwidthSample>)> {
+    let mut out = Vec::new();
+    for (name, size) in cache_sizes {
+        // target half the capacity so the set comfortably fits
+        let per_array = (size / 2 / 8).max(512) as usize;
+        let mut samples = Vec::new();
+        for k in StreamKernel::all() {
+            samples.push(measure(k, per_array, 3, 20));
+        }
+        out.push((name.clone(), samples));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_accounting() {
+        assert_eq!(StreamKernel::Copy.bytes_per_iteration(), 24);
+        assert_eq!(StreamKernel::Triad.bytes_per_iteration(), 40);
+    }
+
+    #[test]
+    fn measure_produces_positive_bandwidth() {
+        let s = measure(StreamKernel::Copy, 4096, 2, 5);
+        assert!(s.bandwidth_bs > 1e6, "{}", s.bandwidth_bs);
+        assert_eq!(s.working_set, 2 * 4096 * 8);
+    }
+
+    #[test]
+    fn cache_resident_faster_than_memory_sized() {
+        // a 16 kB set should beat a 64 MB set on any real machine;
+        // tolerate noisy CI by only asserting a loose ordering
+        let small = measure(StreamKernel::Triad, 2048, 3, 10);
+        let large = measure(StreamKernel::Triad, 8 << 20, 1, 10);
+        assert!(
+            small.bandwidth_bs > large.bandwidth_bs * 0.8,
+            "small {} vs large {}",
+            small.bandwidth_bs,
+            large.bandwidth_bs
+        );
+    }
+
+    #[test]
+    fn all_kernels_run() {
+        for k in StreamKernel::all() {
+            let s = measure(k, 1024, 1, 2);
+            assert!(s.bandwidth_bs.is_finite() && s.bandwidth_bs > 0.0);
+        }
+    }
+}

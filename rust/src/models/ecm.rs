@@ -1,0 +1,354 @@
+//! Execution-Cache-Memory model construction (paper §2.3, §4.6.2).
+//!
+//! Shorthand notation (cycles per cache line of work):
+//!
+//! ```text
+//! { T_OL ‖ T_nOL | T_L1L2 | T_L2L3 | T_L3Mem }
+//! ```
+//!
+//! The in-memory runtime prediction is
+//! `T_ECM,Mem = max(T_OL, T_nOL + T_L1L2 + T_L2L3 + T_L3Mem)`, and the
+//! prediction for a data set residing in level *k* truncates the sum.
+
+use crate::cache::TrafficPrediction;
+use crate::incore::PortModel;
+use crate::machine::MachineModel;
+use crate::util::fmt_cy;
+use anyhow::{bail, Result};
+
+/// One inter-level data transfer contribution.
+#[derive(Debug, Clone)]
+pub struct EcmContribution {
+    /// Link label, e.g. "L1L2", "L3Mem".
+    pub link: String,
+    /// Cache lines crossing this link per unit of work.
+    pub lines: f64,
+    /// Cycles per unit of work.
+    pub cycles: f64,
+    /// Microbenchmark used for the bandwidth (memory link only).
+    pub benchmark: Option<String>,
+}
+
+/// The assembled ECM model for one kernel × machine.
+#[derive(Debug, Clone)]
+pub struct EcmModel {
+    /// Overlapping in-core time (cy/CL).
+    pub t_ol: f64,
+    /// Non-overlapping (data-port) in-core time (cy/CL).
+    pub t_nol: f64,
+    /// Data-transfer contributions, inner link first.
+    pub contributions: Vec<EcmContribution>,
+    /// Iterations per unit of work.
+    pub iterations_per_cl: u64,
+    /// Source flops per unit of work.
+    pub flops_per_cl: f64,
+    /// Clock for unit conversions.
+    pub clock_hz: f64,
+    /// Saturated memory bandwidth used for T_L3Mem (bytes/s).
+    pub mem_bandwidth_bs: f64,
+}
+
+impl EcmModel {
+    /// Assemble the ECM model from the in-core prediction, the traffic
+    /// prediction and the machine description.
+    pub fn build(
+        incore: &PortModel,
+        traffic: &TrafficPrediction,
+        machine: &MachineModel,
+    ) -> Result<EcmModel> {
+        Self::build_data(Some(incore), traffic, machine)
+    }
+
+    /// ECMData mode (paper §4.6.2): data contributions only; the in-core
+    /// part is zero. Useful when no in-core model is available.
+    pub fn build_data_only(
+        traffic: &TrafficPrediction,
+        machine: &MachineModel,
+    ) -> Result<EcmModel> {
+        Self::build_data(None, traffic, machine)
+    }
+
+    fn build_data(
+        incore: Option<&PortModel>,
+        traffic: &TrafficPrediction,
+        machine: &MachineModel,
+    ) -> Result<EcmModel> {
+        let cl = machine.cacheline_bytes as f64;
+        let mut contributions = Vec::new();
+        let n_levels = traffic.levels.len();
+        if n_levels == 0 {
+            bail!("traffic prediction has no cache levels");
+        }
+        let mut mem_bw = 0.0;
+        for (ix, lt) in traffic.levels.iter().enumerate() {
+            let outer = if ix + 1 < n_levels {
+                traffic.levels[ix + 1].level.clone()
+            } else {
+                "Mem".to_string()
+            };
+            let link = format!("{}{}", lt.level, outer);
+            let lines = lt.total_lines();
+            let lvl = machine
+                .level(&lt.level)
+                .ok_or_else(|| anyhow::anyhow!("machine lacks level {}", lt.level))?;
+            let (cycles, benchmark) = match lvl.cycles_per_cacheline {
+                Some(cpc) => (lines * cpc, None),
+                None => {
+                    // outermost link: saturated measured bandwidth of the
+                    // closest-matching microbenchmark (paper §2.3: "the
+                    // only measured input")
+                    let bench = machine
+                        .benchmarks
+                        .closest_kernel(&lt.miss_streams)
+                        .ok_or_else(|| anyhow::anyhow!("no benchmark kernels in machine file"))?;
+                    let bw = machine
+                        .benchmarks
+                        .saturated_bandwidth("MEM", &bench.name)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("no MEM measurement for {}", bench.name)
+                        })?;
+                    mem_bw = bw;
+                    let cy = lines * cl / bw * machine.clock_hz;
+                    (cy, Some(bench.name.clone()))
+                }
+            };
+            contributions.push(EcmContribution { link, lines, cycles, benchmark });
+        }
+        let (t_ol, t_nol, flops, iters) = match incore {
+            Some(pm) => (pm.t_ol, pm.t_nol, pm.flops_per_cl, pm.iterations_per_cl),
+            None => (0.0, 0.0, 0.0, traffic.unit_iterations),
+        };
+        Ok(EcmModel {
+            t_ol,
+            t_nol,
+            contributions,
+            iterations_per_cl: iters,
+            flops_per_cl: flops,
+            clock_hz: machine.clock_hz,
+            mem_bandwidth_bs: mem_bw,
+        })
+    }
+
+    /// Transfer time of the outermost (memory) link.
+    pub fn t_l3mem(&self) -> f64 {
+        self.contributions.last().map(|c| c.cycles).unwrap_or(0.0)
+    }
+
+    /// In-memory prediction: `max(T_OL, T_nOL + ΣT_data)`.
+    pub fn t_mem(&self) -> f64 {
+        let data: f64 = self.contributions.iter().map(|c| c.cycles).sum();
+        self.t_ol.max(self.t_nol + data)
+    }
+
+    /// Prediction for a data set residing in cache level `k`
+    /// (0 = L1: no transfer contributions at all).
+    pub fn t_at(&self, k: usize) -> f64 {
+        let data: f64 = self.contributions.iter().take(k).map(|c| c.cycles).sum();
+        self.t_ol.max(self.t_nol + data)
+    }
+
+    /// All per-level predictions `{ECM_L1 \ ECM_L2 \ ... \ ECM_Mem}`.
+    pub fn level_predictions(&self) -> Vec<f64> {
+        (0..=self.contributions.len()).map(|k| self.t_at(k)).collect()
+    }
+
+    /// Core count at which performance saturates:
+    /// `n_s = ⌈T_ECM,Mem / T_L3Mem⌉` (paper §2.3).
+    pub fn saturation_cores(&self) -> u32 {
+        let t_mem_link = self.t_l3mem();
+        if t_mem_link <= 0.0 {
+            return u32::MAX; // never saturates (cache-resident data)
+        }
+        (self.t_mem() / t_mem_link).ceil() as u32
+    }
+
+    /// Multicore prediction: cycles per cache line of work for the whole
+    /// chip with `n` cores (perfect scaling until the bandwidth limit).
+    pub fn t_mem_multicore(&self, n: u32) -> f64 {
+        let n = n.max(1) as f64;
+        let scaled = self.t_mem() / n;
+        scaled.max(self.t_l3mem())
+    }
+
+    /// The compact model notation, e.g. `{9 ‖ 8 | 10 | 6 | 12.7} cy/CL`.
+    pub fn notation(&self) -> String {
+        let mut parts = vec![format!("{} \u{2016} {}", fmt_cy(self.t_ol), fmt_cy(self.t_nol))];
+        for c in &self.contributions {
+            parts.push(fmt_cy(c.cycles));
+        }
+        format!("{{{}}} cy/CL", parts.join(" | "))
+    }
+
+    /// The per-level prediction notation, e.g. `{9 \ 18 \ 24 \ 36.7} cy/CL`.
+    pub fn prediction_notation(&self) -> String {
+        let preds: Vec<String> = self.level_predictions().iter().map(|p| fmt_cy(*p)).collect();
+        format!("{{{}}} cy/CL", preds.join(" \\ "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CachePredictor;
+    use crate::incore::CodegenPolicy;
+    use crate::kernel::{parse, KernelAnalysis};
+    use std::collections::HashMap;
+
+    fn consts(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn build(src: &str, c: &[(&str, i64)], machine: &MachineModel) -> EcmModel {
+        let p = parse(src).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(c)).unwrap();
+        let pm = PortModel::analyze(&a, machine, &CodegenPolicy::for_machine(machine)).unwrap();
+        let t = CachePredictor::new(machine).predict(&a).unwrap();
+        EcmModel::build(&pm, &t, machine).unwrap()
+    }
+
+    const JACOBI: &str = r#"
+        double a[M][N], b[M][N], s;
+        for (int j = 1; j < M - 1; j++)
+            for (int i = 1; i < N - 1; i++)
+                b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s;
+    "#;
+
+    #[test]
+    fn jacobi_snb_full_ecm_matches_table5() {
+        // Paper: {9.5 ‖ 8 | 10 | 6 | 12.7}, T_ECM,Mem = 36.7 cy/CL.
+        let m = MachineModel::snb();
+        let e = build(JACOBI, &[("N", 6000), ("M", 6000)], &m);
+        assert_eq!(e.t_nol, 8.0);
+        assert!((e.t_ol - 9.0).abs() < 0.6);
+        assert_eq!(e.contributions[0].cycles, 10.0, "T_L1L2");
+        assert_eq!(e.contributions[1].cycles, 6.0, "T_L2L3");
+        assert!((e.contributions[2].cycles - 12.7).abs() < 0.2, "T_L3Mem = {}", e.contributions[2].cycles);
+        let t_mem = e.t_mem();
+        assert!((t_mem - 36.7).abs() < 0.8, "T_ECM,Mem = {t_mem}");
+        assert_eq!(e.contributions[2].benchmark.as_deref(), Some("copy"));
+    }
+
+    #[test]
+    fn jacobi_hsw_full_ecm_matches_table5() {
+        // Paper: {9.4 ‖ 8 | 5 | 6 | 16.7}, T_ECM,Mem = 35.7 cy/CL.
+        let m = MachineModel::hsw();
+        let e = build(JACOBI, &[("N", 6000), ("M", 6000)], &m);
+        assert_eq!(e.t_nol, 8.0);
+        assert_eq!(e.contributions[0].cycles, 5.0, "T_L1L2 (64 B/cy on HSW)");
+        assert_eq!(e.contributions[1].cycles, 6.0, "T_L2L3");
+        assert!((e.contributions[2].cycles - 16.7).abs() < 0.2);
+        assert!((e.t_mem() - 35.7).abs() < 0.8);
+    }
+
+    #[test]
+    fn jacobi_saturates_at_3_cores_on_snb() {
+        // Paper Listing 5: "saturating at 3 cores".
+        let m = MachineModel::snb();
+        let e = build(JACOBI, &[("N", 6000), ("M", 6000)], &m);
+        assert_eq!(e.saturation_cores(), 3);
+    }
+
+    #[test]
+    fn multicore_prediction_saturates() {
+        let m = MachineModel::snb();
+        let e = build(JACOBI, &[("N", 6000), ("M", 6000)], &m);
+        let t1 = e.t_mem_multicore(1);
+        let t3 = e.t_mem_multicore(3);
+        let t8 = e.t_mem_multicore(8);
+        assert_eq!(t1, e.t_mem());
+        assert!(t3 < t1);
+        assert_eq!(t8, e.t_l3mem(), "beyond saturation the bandwidth limit rules");
+    }
+
+    #[test]
+    fn kahan_ecm_is_core_bound() {
+        // Paper: ECM prediction equals T_OL = 96 on both machines.
+        let src = r#"
+            double a[N], b[N], c;
+            double sum, prod, t, y;
+            for (int i = 0; i < N; ++i) {
+                prod = a[i] * b[i]; y = prod - c;
+                t = sum + y; c = (t - sum) - y; sum = t;
+            }
+        "#;
+        for m in [MachineModel::snb(), MachineModel::hsw()] {
+            let e = build(src, &[("N", 8000000)], &m);
+            assert_eq!(e.t_mem(), 96.0, "{}", m.arch);
+            assert_eq!(e.contributions[2].benchmark.as_deref(), Some("load"));
+        }
+    }
+
+    #[test]
+    fn triad_ecm_matches_table5() {
+        // Paper SNB: {4 ‖ 6 | 10 | 10 | 21.9} → 47.9 cy/CL.
+        let m = MachineModel::snb();
+        let e = build(
+            "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];",
+            &[("N", 8000000)],
+            &m,
+        );
+        assert_eq!(e.contributions[0].cycles, 10.0);
+        assert_eq!(e.contributions[1].cycles, 10.0);
+        assert!((e.contributions[2].cycles - 21.9).abs() < 0.3);
+        assert!((e.t_mem() - 47.9).abs() < 0.5, "T = {}", e.t_mem());
+        // Haswell: {4 ‖ 3 | 5 | 10 | 26.3} → 44.3 cy/CL.
+        let h = MachineModel::hsw();
+        let e = build(
+            "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];",
+            &[("N", 8000000)],
+            &h,
+        );
+        assert_eq!(e.contributions[0].cycles, 5.0);
+        assert_eq!(e.contributions[1].cycles, 10.0);
+        assert!((e.contributions[2].cycles - 26.3).abs() < 0.3);
+        assert!((e.t_mem() - 44.3).abs() < 0.5, "T = {}", e.t_mem());
+    }
+
+    #[test]
+    fn level_predictions_monotonic() {
+        let m = MachineModel::snb();
+        let e = build(JACOBI, &[("N", 6000), ("M", 6000)], &m);
+        let preds = e.level_predictions();
+        assert_eq!(preds.len(), 4); // L1, L2, L3, Mem
+        for w in preds.windows(2) {
+            assert!(w[1] >= w[0], "{preds:?}");
+        }
+        assert_eq!(preds[3], e.t_mem());
+    }
+
+    #[test]
+    fn ecm_data_only_mode() {
+        let m = MachineModel::snb();
+        let p = parse(JACOBI).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 6000), ("M", 6000)])).unwrap();
+        let t = CachePredictor::new(&m).predict(&a).unwrap();
+        let e = EcmModel::build_data_only(&t, &m).unwrap();
+        assert_eq!(e.t_ol, 0.0);
+        assert_eq!(e.t_nol, 0.0);
+        assert!((e.t_mem() - 28.7).abs() < 0.5, "data-only sum: {}", e.t_mem());
+    }
+
+    #[test]
+    fn notation_renders() {
+        let m = MachineModel::snb();
+        let e = build(JACOBI, &[("N", 6000), ("M", 6000)], &m);
+        let n = e.notation();
+        assert!(n.starts_with('{'), "{n}");
+        assert!(n.contains('\u{2016}'), "{n}");
+        assert!(n.contains("| 10 | 6 |"), "{n}");
+        let p = e.prediction_notation();
+        assert!(p.contains('\\'), "{p}");
+    }
+
+    #[test]
+    fn ecm_mem_ge_any_single_contribution() {
+        // invariant: the serialized sum can never undercut a component
+        let m = MachineModel::snb();
+        let e = build(JACOBI, &[("N", 6000), ("M", 6000)], &m);
+        for c in &e.contributions {
+            assert!(e.t_mem() >= c.cycles);
+        }
+        assert!(e.t_mem() >= e.t_ol);
+        assert!(e.t_mem() >= e.t_nol);
+    }
+}

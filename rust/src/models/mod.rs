@@ -1,0 +1,88 @@
+//! Performance model construction (paper §2.2, §2.3, §4.6): the
+//! Execution-Cache-Memory model, the Roofline model (with either the
+//! port-model in-core prediction or the arithmetic-peak in-core
+//! prediction), multicore scaling, and the paper's published reference
+//! values for Table 5.
+
+pub mod ecm;
+pub mod reference;
+pub mod roofline;
+pub mod scaling;
+
+pub use ecm::EcmModel;
+pub use roofline::{RooflineBottleneck, RooflineMode, RooflineModel};
+pub use scaling::ScalingModel;
+
+/// Output units supported by the CLI (paper §4.6.1: cy/CL, It/s, FLOP/s).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Cycles per cache line of work (the models' native unit).
+    CyPerCl,
+    /// Inner-loop iterations per second.
+    ItPerS,
+    /// Floating-point operations per second.
+    FlopPerS,
+}
+
+impl Unit {
+    /// Parse a `--unit` argument.
+    pub fn parse(s: &str) -> Option<Unit> {
+        match s {
+            "cy/CL" | "cy/cl" => Some(Unit::CyPerCl),
+            "It/s" | "it/s" => Some(Unit::ItPerS),
+            "FLOP/s" | "flop/s" | "FLOPs" => Some(Unit::FlopPerS),
+            _ => None,
+        }
+    }
+
+    /// Convert a cycles-per-cacheline figure into this unit.
+    ///
+    /// `iterations_per_cl` and `flops_per_cl` describe the unit of work;
+    /// `clock_hz` converts cycles to seconds.
+    pub fn convert(
+        &self,
+        cy_per_cl: f64,
+        iterations_per_cl: f64,
+        flops_per_cl: f64,
+        clock_hz: f64,
+    ) -> f64 {
+        match self {
+            Unit::CyPerCl => cy_per_cl,
+            Unit::ItPerS => iterations_per_cl / (cy_per_cl / clock_hz),
+            Unit::FlopPerS => flops_per_cl / (cy_per_cl / clock_hz),
+        }
+    }
+
+    /// Unit suffix for reports.
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Unit::CyPerCl => "cy/CL",
+            Unit::ItPerS => "It/s",
+            Unit::FlopPerS => "FLOP/s",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_parsing() {
+        assert_eq!(Unit::parse("cy/CL"), Some(Unit::CyPerCl));
+        assert_eq!(Unit::parse("It/s"), Some(Unit::ItPerS));
+        assert_eq!(Unit::parse("FLOP/s"), Some(Unit::FlopPerS));
+        assert_eq!(Unit::parse("bogus"), None);
+    }
+
+    #[test]
+    fn unit_conversion_roundtrip() {
+        // 36.7 cy/CL on a 2.7 GHz machine with 8 it/CL and 32 flop/CL
+        let cy = 36.7;
+        let its = Unit::ItPerS.convert(cy, 8.0, 32.0, 2.7e9);
+        assert!((its - 8.0 * 2.7e9 / 36.7).abs() < 1.0);
+        let flops = Unit::FlopPerS.convert(cy, 8.0, 32.0, 2.7e9);
+        assert!((flops / its - 4.0).abs() < 1e-9); // 4 flops per iteration
+        assert_eq!(Unit::CyPerCl.convert(cy, 8.0, 32.0, 2.7e9), cy);
+    }
+}

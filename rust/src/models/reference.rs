@@ -1,0 +1,201 @@
+//! The paper's published numbers (Table 5) and the benchmark kernel
+//! corpus, embedded so every bench/example can print paper-vs-measured
+//! deltas.
+
+/// Kernel sources shipped in `kernels/` (paper Listings 3, 6, 7, 8, 9).
+pub const KERNEL_2D5PT: &str = include_str!("../../../kernels/2d-5pt.c");
+/// UXX stencil (Listing 6).
+pub const KERNEL_UXX: &str = include_str!("../../../kernels/uxx.c");
+/// Long-range stencil (Listing 7).
+pub const KERNEL_LONG_RANGE: &str = include_str!("../../../kernels/long-range.c");
+/// Kahan dot product (Listing 8).
+pub const KERNEL_KAHAN: &str = include_str!("../../../kernels/kahan-ddot.c");
+/// Schönauer triad (Listing 9).
+pub const KERNEL_TRIAD: &str = include_str!("../../../kernels/triad.c");
+
+/// One Table 5 row as published.
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    /// Kernel tag ("2D-5pt", "UXX", "long-range", "Kahan-dot", "triad").
+    pub kernel: &'static str,
+    /// Architecture tag ("SNB"/"HSW").
+    pub arch: &'static str,
+    /// Problem-size constants as (name, value).
+    pub constants: &'static [(&'static str, i64)],
+    /// Paper's Kerncraft ECM components {T_OL ‖ T_nOL | L1L2 | L2L3 | L3Mem}.
+    pub ecm_model: [f64; 5],
+    /// Paper's ECM in-memory prediction (cy/CL).
+    pub ecm_mem: f64,
+    /// Paper's Roofline in-memory prediction (cy/CL).
+    pub roofline: f64,
+    /// Paper's Benchmark-mode measurement (cy/CL).
+    pub bench: f64,
+    /// Reference ECM components from earlier publications, when available.
+    pub reference_ecm: Option<[f64; 5]>,
+}
+
+/// The complete published Table 5.
+pub const TABLE5: &[Table5Row] = &[
+    Table5Row {
+        kernel: "2D-5pt",
+        arch: "SNB",
+        constants: &[("N", 6000), ("M", 6000)],
+        ecm_model: [9.5, 8.0, 10.0, 6.0, 12.7],
+        ecm_mem: 36.7,
+        roofline: 29.8,
+        bench: 36.4,
+        reference_ecm: Some([6.0, 8.0, 10.0, 10.0, 13.0]),
+    },
+    Table5Row {
+        kernel: "2D-5pt",
+        arch: "HSW",
+        constants: &[("N", 6000), ("M", 6000)],
+        ecm_model: [9.4, 8.0, 5.0, 6.0, 16.7],
+        ecm_mem: 35.7,
+        roofline: 26.6,
+        bench: 30.0,
+        reference_ecm: None,
+    },
+    Table5Row {
+        kernel: "UXX",
+        arch: "SNB",
+        constants: &[("N", 150), ("M", 150)],
+        ecm_model: [84.0, 32.5, 20.0, 20.0, 26.3],
+        ecm_mem: 98.8,
+        roofline: 84.0,
+        bench: 112.5,
+        reference_ecm: Some([84.0, 38.0, 20.0, 20.0, 26.0]),
+    },
+    Table5Row {
+        kernel: "UXX",
+        arch: "HSW",
+        constants: &[("N", 150), ("M", 150)],
+        ecm_model: [56.0, 27.5, 10.0, 20.0, 31.6],
+        ecm_mem: 89.1,
+        roofline: 61.7,
+        bench: 86.9,
+        reference_ecm: None,
+    },
+    Table5Row {
+        kernel: "long-range",
+        arch: "SNB",
+        constants: &[("N", 100), ("M", 100)],
+        ecm_model: [57.0, 53.0, 24.0, 24.0, 17.0],
+        ecm_mem: 118.0,
+        roofline: 65.9,
+        bench: 134.2,
+        reference_ecm: Some([68.0, 64.0, 24.0, 24.0, 17.0]),
+    },
+    Table5Row {
+        kernel: "long-range",
+        arch: "HSW",
+        constants: &[("N", 100), ("M", 100)],
+        ecm_model: [57.0, 47.5, 12.0, 24.0, 22.3],
+        ecm_mem: 105.8,
+        roofline: 63.6,
+        bench: 104.5,
+        reference_ecm: None,
+    },
+    Table5Row {
+        kernel: "Kahan-dot",
+        arch: "SNB",
+        constants: &[("N", 20_000_000)],
+        ecm_model: [96.0, 8.0, 4.0, 4.0, 7.8],
+        ecm_mem: 96.0,
+        roofline: 96.0,
+        bench: 101.1,
+        reference_ecm: Some([32.0, 8.0, 4.0, 4.0, 7.9]),
+    },
+    Table5Row {
+        kernel: "Kahan-dot",
+        arch: "HSW",
+        constants: &[("N", 20_000_000)],
+        ecm_model: [96.0, 8.0, 2.0, 4.0, 9.1],
+        ecm_mem: 96.0,
+        roofline: 96.0,
+        bench: 98.0,
+        reference_ecm: None,
+    },
+    Table5Row {
+        kernel: "triad",
+        arch: "SNB",
+        constants: &[("N", 20_000_000)],
+        ecm_model: [4.0, 6.0, 10.0, 10.0, 21.9],
+        ecm_mem: 47.9,
+        roofline: 54.3,
+        bench: 58.8,
+        reference_ecm: Some([4.0, 6.0, 10.0, 10.0, 24.0]),
+    },
+    Table5Row {
+        kernel: "triad",
+        arch: "HSW",
+        constants: &[("N", 20_000_000)],
+        ecm_model: [4.0, 3.0, 5.0, 10.0, 26.3],
+        ecm_mem: 44.3,
+        roofline: 46.4,
+        bench: 48.3,
+        reference_ecm: None,
+    },
+];
+
+/// Source text of a kernel by its Table 5 tag.
+pub fn kernel_source(tag: &str) -> Option<&'static str> {
+    Some(match tag {
+        "2D-5pt" => KERNEL_2D5PT,
+        "UXX" => KERNEL_UXX,
+        "long-range" => KERNEL_LONG_RANGE,
+        "Kahan-dot" => KERNEL_KAHAN,
+        "triad" => KERNEL_TRIAD,
+        _ => return None,
+    })
+}
+
+/// All kernel tags in Table 5 order.
+pub fn kernel_tags() -> Vec<&'static str> {
+    vec!["2D-5pt", "UXX", "long-range", "Kahan-dot", "triad"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::parse;
+
+    #[test]
+    fn all_kernel_sources_parse() {
+        for tag in kernel_tags() {
+            let src = kernel_source(tag).unwrap();
+            parse(src).unwrap_or_else(|e| panic!("{tag} fails to parse: {e}"));
+        }
+    }
+
+    #[test]
+    fn table5_covers_both_architectures() {
+        for tag in kernel_tags() {
+            for arch in ["SNB", "HSW"] {
+                assert!(
+                    TABLE5.iter().any(|r| r.kernel == tag && r.arch == arch),
+                    "missing {tag}/{arch}"
+                );
+            }
+        }
+        assert_eq!(TABLE5.len(), 10);
+    }
+
+    #[test]
+    fn ecm_mem_consistent_with_components() {
+        // sanity: published T_ECM,Mem ≈ max(T_OL, T_nOL + ΣT_data)
+        for row in TABLE5 {
+            let [ol, nol, a, b, c] = row.ecm_model;
+            let serial = nol + a + b + c;
+            let expect = ol.max(serial);
+            assert!(
+                (expect - row.ecm_mem).abs() < 0.35,
+                "{}/{}: {} vs {}",
+                row.kernel,
+                row.arch,
+                expect,
+                row.ecm_mem
+            );
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! Roofline model construction (paper §2.2, §4.6.1).
+//!
+//! Two in-core variants, exactly as Kerncraft's modes:
+//! * [`RooflineMode::Peak`] ("Roofline"): theoretical MULT+ADD peak,
+//!   with the L1 cache as an additional bandwidth bottleneck;
+//! * [`RooflineMode::PortModel`] ("RooflineIACA" in the paper): the port
+//!   model provides the in-core time, L1 is covered by T_nOL.
+//!
+//! Every memory link is a candidate bottleneck: its predicted data volume
+//! over the *measured* bandwidth of the closest-matching microbenchmark
+//! in that level (with the requested core count) gives a time bound; the
+//! largest bound wins (single-bottleneck model).
+
+use crate::cache::TrafficPrediction;
+use crate::incore::PortModel;
+use crate::kernel::KernelAnalysis;
+use crate::machine::MachineModel;
+use anyhow::{bail, Result};
+
+/// In-core flavour of the Roofline model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RooflineMode {
+    /// Arithmetic peak performance (no compiler/IACA required).
+    Peak,
+    /// Port-model in-core prediction (the paper's RooflineIACA).
+    PortModel,
+}
+
+/// One candidate bottleneck row of the Roofline report (paper Listing 5).
+#[derive(Debug, Clone)]
+pub struct RooflineBottleneck {
+    /// "CPU", "L1", "L1-L2", "L2-L3", "L3-MEM".
+    pub level: String,
+    /// Predicted time in cycles per cache line of work.
+    pub cycles: f64,
+    /// Bandwidth assumed (bytes/s), None for the CPU row.
+    pub bandwidth_bs: Option<f64>,
+    /// Matched microbenchmark, None for the CPU row.
+    pub benchmark: Option<String>,
+    /// Arithmetic intensity at this level (flop/byte), None for CPU.
+    pub arith_intensity: Option<f64>,
+}
+
+/// Assembled Roofline model.
+#[derive(Debug, Clone)]
+pub struct RooflineModel {
+    pub mode: RooflineMode,
+    pub bottlenecks: Vec<RooflineBottleneck>,
+    /// Iterations per unit of work.
+    pub iterations_per_cl: u64,
+    /// Flops per unit of work.
+    pub flops_per_cl: f64,
+    pub clock_hz: f64,
+    /// Cores assumed for bandwidth measurements.
+    pub cores: u32,
+}
+
+impl RooflineModel {
+    /// Build with the default single-core setting. `incore = Some` ⇒
+    /// RooflineIACA flavour, `None` ⇒ arithmetic-peak flavour.
+    pub fn build(
+        analysis: &KernelAnalysis,
+        traffic: &TrafficPrediction,
+        machine: &MachineModel,
+        incore: Option<&PortModel>,
+    ) -> Result<RooflineModel> {
+        Self::build_cores(analysis, traffic, machine, incore, 1)
+    }
+
+    /// Build for `cores` active cores (paper `--cores`).
+    pub fn build_cores(
+        analysis: &KernelAnalysis,
+        traffic: &TrafficPrediction,
+        machine: &MachineModel,
+        incore: Option<&PortModel>,
+        cores: u32,
+    ) -> Result<RooflineModel> {
+        let cl = machine.cacheline_bytes as f64;
+        let cores = cores.max(1);
+        let iterations_per_cl = traffic.unit_iterations;
+        let flops_per_cl = analysis.flops.total() as f64 * iterations_per_cl as f64;
+        let mut bottlenecks = Vec::new();
+
+        // --- CPU row ---
+        let (mode, cpu_cycles) = match incore {
+            Some(pm) => (RooflineMode::PortModel, pm.t_ol.max(pm.t_nol)),
+            None => {
+                // theoretical peak: flops per CL over peak flops/cy,
+                // assuming the ideal ADD/MUL mix the hardware offers
+                let peak = match analysis.element {
+                    crate::kernel::Type::Double => machine.flops_per_cycle_dp.total,
+                    crate::kernel::Type::Float => machine.flops_per_cycle_sp.total,
+                };
+                if peak <= 0.0 {
+                    bail!("machine file lacks peak flop rates");
+                }
+                (RooflineMode::Peak, flops_per_cl / peak)
+            }
+        };
+        // single-core CPU capability scales with cores for chip-level use
+        bottlenecks.push(RooflineBottleneck {
+            level: "CPU".to_string(),
+            cycles: cpu_cycles / cores as f64,
+            bandwidth_bs: None,
+            benchmark: None,
+            arith_intensity: None,
+        });
+
+        // --- L1 row (Peak mode only: register↔L1 traffic as bandwidth) ---
+        if mode == RooflineMode::Peak {
+            let bytes_per_cl = (analysis.read_bytes_per_iteration()
+                + analysis.write_bytes_per_iteration()) as f64
+                * iterations_per_cl as f64;
+            // L1 streams ≈ the kernel's full stream mix
+            let sig = full_stream_signature(analysis);
+            let bench = machine
+                .benchmarks
+                .closest_kernel(&sig)
+                .ok_or_else(|| anyhow::anyhow!("no benchmark kernels"))?;
+            if let Some(bw) = machine.benchmarks.bandwidth("L1", &bench.name, 1) {
+                let bw_total = bw * cores as f64; // L1 is per-core
+                bottlenecks.push(RooflineBottleneck {
+                    level: "L1".to_string(),
+                    cycles: bytes_per_cl / bw_total * machine.clock_hz,
+                    bandwidth_bs: Some(bw_total),
+                    benchmark: Some(bench.name.clone()),
+                    arith_intensity: Some(flops_per_cl / bytes_per_cl),
+                });
+            }
+        }
+
+        // --- memory-link rows ---
+        let n = traffic.levels.len();
+        for (ix, lt) in traffic.levels.iter().enumerate() {
+            let outer_name = if ix + 1 < n {
+                traffic.levels[ix + 1].level.clone()
+            } else {
+                "MEM".to_string()
+            };
+            let label = format!("{}-{}", lt.level, outer_name);
+            let bytes = lt.total_lines() * cl;
+            if bytes <= 0.0 {
+                continue;
+            }
+            let bench = machine
+                .benchmarks
+                .closest_kernel(&lt.miss_streams)
+                .ok_or_else(|| anyhow::anyhow!("no benchmark kernels"))?;
+            let Some(mut bw) = machine.benchmarks.bandwidth(&outer_name, &bench.name, cores)
+            else {
+                continue;
+            };
+            // private caches scale with the core count
+            if let Some(lvl) = machine.level(&outer_name) {
+                if lvl.cores_per_group <= 1 {
+                    bw *= cores as f64;
+                }
+            }
+            bottlenecks.push(RooflineBottleneck {
+                level: label,
+                cycles: bytes / bw * machine.clock_hz,
+                bandwidth_bs: Some(bw),
+                benchmark: Some(bench.name.clone()),
+                arith_intensity: Some(flops_per_cl / bytes),
+            });
+        }
+
+        Ok(RooflineModel {
+            mode,
+            bottlenecks,
+            iterations_per_cl,
+            flops_per_cl,
+            clock_hz: machine.clock_hz,
+            cores,
+        })
+    }
+
+    /// The binding bottleneck (largest time bound).
+    pub fn bottleneck(&self) -> &RooflineBottleneck {
+        self.bottlenecks
+            .iter()
+            .max_by(|a, b| a.cycles.partial_cmp(&b.cycles).unwrap())
+            .expect("at least the CPU row exists")
+    }
+
+    /// The Roofline prediction in cycles per cache line of work.
+    pub fn prediction(&self) -> f64 {
+        self.bottleneck().cycles
+    }
+
+    /// Whether the kernel is bound by data transfers rather than compute.
+    pub fn is_memory_bound(&self) -> bool {
+        self.bottleneck().level != "CPU"
+    }
+}
+
+/// Stream signature of the whole kernel (used for the L1 row).
+fn full_stream_signature(analysis: &KernelAnalysis) -> crate::machine::StreamSig {
+    use std::collections::HashSet;
+    let written: HashSet<usize> = analysis.writes.iter().map(|w| w.array).collect();
+    let read: HashSet<usize> = analysis.reads.iter().map(|r| r.array).collect();
+    let mut sig = crate::machine::StreamSig { reads: 0, read_writes: 0, writes: 0 };
+    for a in 0..analysis.arrays.len() {
+        match (read.contains(&a), written.contains(&a)) {
+            (true, true) => sig.read_writes += 1,
+            (true, false) => sig.reads += 1,
+            (false, true) => sig.writes += 1,
+            (false, false) => {}
+        }
+    }
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CachePredictor;
+    use crate::incore::CodegenPolicy;
+    use crate::kernel::parse;
+    use std::collections::HashMap;
+
+    fn consts(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    const JACOBI: &str = r#"
+        double a[M][N], b[M][N], s;
+        for (int j = 1; j < M - 1; j++)
+            for (int i = 1; i < N - 1; i++)
+                b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s;
+    "#;
+
+    fn build(
+        src: &str,
+        c: &[(&str, i64)],
+        machine: &MachineModel,
+        with_incore: bool,
+        cores: u32,
+    ) -> RooflineModel {
+        let p = parse(src).unwrap();
+        let a = KernelAnalysis::from_program(&p, &consts(c)).unwrap();
+        let t = CachePredictor::with_cores(machine, cores).predict(&a).unwrap();
+        let pm = if with_incore {
+            Some(PortModel::analyze(&a, machine, &CodegenPolicy::for_machine(machine)).unwrap())
+        } else {
+            None
+        };
+        RooflineModel::build_cores(&a, &t, machine, pm.as_ref(), cores).unwrap()
+    }
+
+    #[test]
+    fn jacobi_snb_roofline_matches_listing5() {
+        // Paper Listing 5 / Table 5: single-core Roofline = 29.8 cy/CL,
+        // bound by L3-MEM with the copy benchmark at 17.4 GB/s.
+        let m = MachineModel::snb();
+        let r = build(JACOBI, &[("N", 6000), ("M", 6000)], &m, true, 1);
+        let b = r.bottleneck();
+        assert_eq!(b.level, "L3-MEM");
+        assert_eq!(b.benchmark.as_deref(), Some("copy"));
+        assert!((r.prediction() - 29.8).abs() < 0.3, "pred = {}", r.prediction());
+        assert!(r.is_memory_bound());
+        // arithmetic intensity ≈ 0.17 flop/B (4 flops×8 / 192 B)
+        assert!((b.arith_intensity.unwrap() - 0.1667).abs() < 0.01);
+    }
+
+    #[test]
+    fn jacobi_hsw_roofline_matches_table5() {
+        // Paper: 26.6 cy/CL on Haswell.
+        let m = MachineModel::hsw();
+        let r = build(JACOBI, &[("N", 6000), ("M", 6000)], &m, true, 1);
+        assert!((r.prediction() - 26.6).abs() < 0.4, "pred = {}", r.prediction());
+    }
+
+    #[test]
+    fn kahan_roofline_is_cpu_bound() {
+        // Paper: Roofline = ECM = 96 cy/CL (T_OL dominates).
+        let src = r#"
+            double a[N], b[N], c;
+            double sum, prod, t, y;
+            for (int i = 0; i < N; ++i) {
+                prod = a[i] * b[i]; y = prod - c;
+                t = sum + y; c = (t - sum) - y; sum = t;
+            }
+        "#;
+        for m in [MachineModel::snb(), MachineModel::hsw()] {
+            let r = build(src, &[("N", 8000000)], &m, true, 1);
+            assert_eq!(r.prediction(), 96.0, "{}", m.arch);
+            assert!(!r.is_memory_bound());
+        }
+    }
+
+    #[test]
+    fn triad_roofline_matches_table5() {
+        // Paper SNB 54.3 cy/CL, HSW 46.4 cy/CL (single-core, in-memory).
+        let src = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+        let m = MachineModel::snb();
+        let r = build(src, &[("N", 8000000)], &m, true, 1);
+        assert!((r.prediction() - 54.3).abs() < 0.8, "SNB pred = {}", r.prediction());
+        let h = MachineModel::hsw();
+        let r = build(src, &[("N", 8000000)], &h, true, 1);
+        assert!((r.prediction() - 46.4).abs() < 0.8, "HSW pred = {}", r.prediction());
+    }
+
+    #[test]
+    fn peak_mode_has_l1_row() {
+        let m = MachineModel::snb();
+        let r = build(JACOBI, &[("N", 6000), ("M", 6000)], &m, false, 1);
+        assert_eq!(r.mode, RooflineMode::Peak);
+        assert!(r.bottlenecks.iter().any(|b| b.level == "L1"));
+        // peak CPU time: 32 flops / 8 flops/cy = 4 cy — optimistic
+        let cpu = r.bottlenecks.iter().find(|b| b.level == "CPU").unwrap();
+        assert_eq!(cpu.cycles, 4.0);
+    }
+
+    #[test]
+    fn multicore_bandwidth_saturation() {
+        // 8 cores: memory bandwidth saturates; roofline drops below the
+        // single-core time but stays bandwidth-limited.
+        let m = MachineModel::snb();
+        let r1 = build(JACOBI, &[("N", 6000), ("M", 6000)], &m, true, 1);
+        let r8 = build(JACOBI, &[("N", 6000), ("M", 6000)], &m, true, 8);
+        assert!(r8.prediction() < r1.prediction());
+        assert!(r8.is_memory_bound());
+        // saturated bandwidth ⇒ ≈ 3 CL × 64 B at 40.8 GB/s ≈ 12.7 cy
+        assert!((r8.prediction() - 12.7).abs() < 0.4, "pred = {}", r8.prediction());
+    }
+
+    #[test]
+    fn roofline_never_exceeds_sum_of_parts() {
+        // single-bottleneck optimism: prediction == max of rows
+        let m = MachineModel::snb();
+        let r = build(JACOBI, &[("N", 6000), ("M", 6000)], &m, true, 1);
+        let max = r.bottlenecks.iter().map(|b| b.cycles).fold(0.0, f64::max);
+        assert_eq!(r.prediction(), max);
+    }
+}

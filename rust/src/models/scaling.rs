@@ -1,0 +1,135 @@
+//! Multicore scaling model (paper §2.3): perfect scalability until the
+//! memory-bandwidth bottleneck, then a flat bandwidth-limited plateau at
+//! which the ECM prediction coincides with the bandwidth Roofline.
+
+use super::ecm::EcmModel;
+use crate::machine::MachineModel;
+
+/// Chip-level scaling prediction derived from a single-core ECM model.
+#[derive(Debug, Clone)]
+pub struct ScalingModel {
+    /// Single-core in-memory time (cy/CL).
+    pub t_single: f64,
+    /// Memory-link time (cy/CL) — the plateau.
+    pub t_mem_link: f64,
+    /// Saturation core count n_s.
+    pub saturation: u32,
+    /// Cores available in one memory domain.
+    pub domain_cores: u32,
+    /// Iterations per unit of work (for unit conversion).
+    pub iterations_per_cl: u64,
+    pub flops_per_cl: f64,
+    pub clock_hz: f64,
+}
+
+impl ScalingModel {
+    /// Build from an assembled ECM model.
+    pub fn build(ecm: &EcmModel, machine: &MachineModel) -> ScalingModel {
+        ScalingModel {
+            t_single: ecm.t_mem(),
+            t_mem_link: ecm.t_l3mem(),
+            saturation: ecm.saturation_cores(),
+            domain_cores: machine.cores_per_numa_domain(),
+            iterations_per_cl: ecm.iterations_per_cl,
+            flops_per_cl: ecm.flops_per_cl,
+            clock_hz: ecm.clock_hz,
+        }
+    }
+
+    /// Chip throughput with `n` cores, in units of work (cache lines of
+    /// work) per cycle.
+    pub fn throughput(&self, n: u32) -> f64 {
+        let n = n.max(1) as f64;
+        if self.t_mem_link <= 0.0 {
+            return n / self.t_single; // cache-resident: scales forever
+        }
+        (n / self.t_single).min(1.0 / self.t_mem_link)
+    }
+
+    /// Performance in flop/s with `n` cores.
+    pub fn flops(&self, n: u32) -> f64 {
+        self.throughput(n) * self.flops_per_cl * self.clock_hz
+    }
+
+    /// Speedup over one core.
+    pub fn speedup(&self, n: u32) -> f64 {
+        self.throughput(n) / self.throughput(1)
+    }
+
+    /// The scaling curve up to the domain size: (cores, work/cy).
+    pub fn curve(&self) -> Vec<(u32, f64)> {
+        (1..=self.domain_cores).map(|n| (n, self.throughput(n))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CachePredictor;
+    use crate::incore::{CodegenPolicy, PortModel};
+    use crate::kernel::{parse, KernelAnalysis};
+    use std::collections::HashMap;
+
+    fn jacobi_scaling(machine: &MachineModel) -> ScalingModel {
+        let src = r#"
+            double a[M][N], b[M][N], s;
+            for (int j = 1; j < M - 1; j++)
+                for (int i = 1; i < N - 1; i++)
+                    b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s;
+        "#;
+        let p = parse(src).unwrap();
+        let c: HashMap<String, i64> =
+            [("N".to_string(), 6000i64), ("M".to_string(), 6000i64)].into_iter().collect();
+        let a = KernelAnalysis::from_program(&p, &c).unwrap();
+        let pm = PortModel::analyze(&a, machine, &CodegenPolicy::for_machine(machine)).unwrap();
+        let t = CachePredictor::new(machine).predict(&a).unwrap();
+        let ecm = EcmModel::build(&pm, &t, machine).unwrap();
+        ScalingModel::build(&ecm, machine)
+    }
+
+    #[test]
+    fn jacobi_snb_saturates_at_three_cores() {
+        let m = MachineModel::snb();
+        let s = jacobi_scaling(&m);
+        assert_eq!(s.saturation, 3);
+        assert_eq!(s.domain_cores, 8);
+        // speedup at the plateau: T_single / T_link
+        let plateau = s.speedup(8);
+        assert!((plateau - s.t_single / s.t_mem_link).abs() < 1e-9);
+        // 2 cores still scale perfectly
+        assert!((s.speedup(2) - 2.0).abs() < 1e-9);
+        // 4 cores are already clamped
+        assert!(s.speedup(4) < 4.0);
+    }
+
+    #[test]
+    fn curve_is_monotonic_nondecreasing() {
+        let m = MachineModel::snb();
+        let s = jacobi_scaling(&m);
+        let curve = s.curve();
+        assert_eq!(curve.len(), 8);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn saturated_ecm_equals_bandwidth_roofline() {
+        // Paper §2.3: at saturation the ECM prediction coincides with the
+        // bandwidth-based Roofline (the plateau is 1/T_L3Mem).
+        let m = MachineModel::snb();
+        let s = jacobi_scaling(&m);
+        let at_sat = s.throughput(s.saturation);
+        assert!((at_sat - 1.0 / s.t_mem_link).abs() / at_sat < 0.05);
+    }
+
+    #[test]
+    fn flops_scale_with_throughput() {
+        let m = MachineModel::hsw();
+        let s = jacobi_scaling(&m);
+        assert!(s.flops(2) > s.flops(1));
+        let f7 = s.flops(7);
+        let f6 = s.flops(6);
+        assert!((f7 - f6).abs() / f7 < 0.2, "plateau reached");
+    }
+}

@@ -1,0 +1,297 @@
+//! Report rendering: the CLI output formats of paper Listing 5 (ECM and
+//! Roofline reports), the Fig. 2 cache-usage visualization, and the
+//! machine summary.
+
+use crate::cache::TrafficPrediction;
+use crate::incore::PortModel;
+use crate::kernel::KernelAnalysis;
+use crate::machine::MachineModel;
+use crate::models::{EcmModel, RooflineModel, ScalingModel, Unit};
+use crate::util::fmt_cy;
+
+/// Render the ECM analysis report (paper Listing 5, upper half).
+pub fn ecm_report(
+    ecm: &EcmModel,
+    scaling: &ScalingModel,
+    unit: Unit,
+    verbose: bool,
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("ECM model: {}\n", ecm.notation()));
+    s.push_str(&format!("ECM prediction: {}\n", ecm.prediction_notation()));
+    if unit != Unit::CyPerCl {
+        let preds = ecm.level_predictions();
+        let conv: Vec<String> = preds
+            .iter()
+            .map(|p| {
+                format!(
+                    "{:.3e}",
+                    unit.convert(
+                        *p,
+                        ecm.iterations_per_cl as f64,
+                        ecm.flops_per_cl,
+                        ecm.clock_hz
+                    )
+                )
+            })
+            .collect();
+        s.push_str(&format!("ECM prediction ({}): {{{}}}\n", unit.suffix(), conv.join(" \\ ")));
+    }
+    if scaling.t_mem_link > 0.0 {
+        s.push_str(&format!("saturating at {} cores\n", scaling.saturation));
+    } else {
+        s.push_str("no bandwidth saturation (cache-resident working set)\n");
+    }
+    if verbose {
+        for c in &ecm.contributions {
+            s.push_str(&format!(
+                "  {}: {} CL/unit = {} cy{}\n",
+                c.link,
+                c.lines,
+                fmt_cy(c.cycles),
+                c.benchmark
+                    .as_ref()
+                    .map(|b| format!(" (bw from {b} benchmark)"))
+                    .unwrap_or_default()
+            ));
+        }
+    }
+    s
+}
+
+/// Render the Roofline report (paper Listing 5, lower half).
+pub fn roofline_report(roofline: &RooflineModel, unit: Unit) -> String {
+    let mut s = String::new();
+    s.push_str("Bottlenecks:\n");
+    s.push_str("  level   | ar.int. |  perfor. |   bandw.  | bw kernel\n");
+    s.push_str("          | FLOP/B  |  cy/CL   |   GB/s    |\n");
+    s.push_str("  --------+---------+----------+-----------+----------\n");
+    for b in &roofline.bottlenecks {
+        s.push_str(&format!(
+            "  {:<7} | {:>7} | {:>8} | {:>9} | {}\n",
+            b.level,
+            b.arith_intensity.map(|ai| format!("{ai:.2}")).unwrap_or_else(|| "-".into()),
+            fmt_cy(b.cycles),
+            b.bandwidth_bs.map(|bw| format!("{:.1}", bw / 1e9)).unwrap_or_else(|| "-".into()),
+            b.benchmark.clone().unwrap_or_else(|| "-".into()),
+        ));
+    }
+    let bn = roofline.bottleneck();
+    if roofline.is_memory_bound() {
+        s.push_str(&format!(
+            "Cache or mem bound: {} ({} benchmark)\n",
+            bn.level,
+            bn.benchmark.clone().unwrap_or_default()
+        ));
+        if let Some(ai) = bn.arith_intensity {
+            s.push_str(&format!("Arithmetic Intensity: {ai:.2} FLOP/B\n"));
+        }
+    } else {
+        s.push_str("CPU bound\n");
+    }
+    s.push_str(&format!(
+        "Roofline prediction: {} {}\n",
+        format_value(bn.cycles, roofline, unit),
+        unit.suffix()
+    ));
+    s
+}
+
+fn format_value(cy: f64, r: &RooflineModel, unit: Unit) -> String {
+    match unit {
+        Unit::CyPerCl => fmt_cy(cy),
+        _ => format!(
+            "{:.3e}",
+            unit.convert(cy, r.iterations_per_cl as f64, r.flops_per_cl, r.clock_hz)
+        ),
+    }
+}
+
+/// Render the in-core (ECMCPU) report.
+pub fn incore_report(pm: &PortModel) -> String {
+    pm.report()
+}
+
+/// Render the static-analysis tables (paper Tables 2-4).
+pub fn analysis_report(analysis: &KernelAnalysis) -> String {
+    let mut s = String::new();
+    s.push_str("loop stack (Table 2):\n");
+    s.push_str(&indent(&analysis.loop_stack_table()));
+    s.push_str("data accesses (Tables 3/4):\n");
+    s.push_str(&indent(&analysis.access_table()));
+    s.push_str(&format!(
+        "FLOPs per iteration: {} ({} ADD, {} MUL, {} DIV)\n",
+        analysis.flops.total(),
+        analysis.flops.adds,
+        analysis.flops.muls,
+        analysis.flops.divs
+    ));
+    s
+}
+
+/// ASCII rendering of the Fig. 2 cache-usage prediction: one line per
+/// array access, annotated with the level it hits.
+pub fn cache_viz(analysis: &KernelAnalysis, traffic: &TrafficPrediction) -> String {
+    let mut s = String::new();
+    s.push_str("cache usage prediction (cf. paper Fig. 2):\n");
+    s.push_str("  access                      | 1D offset | served by\n");
+    s.push_str("  ----------------------------+-----------+----------\n");
+    for (ix, acc) in analysis.reads.iter().enumerate() {
+        let arr = &analysis.arrays[acc.array];
+        let dims: Vec<String> = acc.dims.iter().map(|d| format!("[{d}]")).collect();
+        let label = format!("{}{}", arr.name, dims.join(""));
+        s.push_str(&format!(
+            "  {:<27} | {:>+9} | {}\n",
+            label, acc.offset, traffic.access_hit_level[ix]
+        ));
+    }
+    for acc in &analysis.writes {
+        let arr = &analysis.arrays[acc.array];
+        let dims: Vec<String> = acc.dims.iter().map(|d| format!("[{d}]")).collect();
+        s.push_str(&format!(
+            "  {:<27} | {:>+9} | store (write-allocate + evict)\n",
+            format!("{}{}", arr.name, dims.join("")),
+            acc.offset
+        ));
+    }
+    s.push_str("\nlayer conditions:\n");
+    s.push_str("  level | dim | required  | capacity  | satisfied\n");
+    for lc in &traffic.layer_conditions {
+        s.push_str(&format!(
+            "  {:<5} | {:<3} | {:>9} | {:>9} | {}\n",
+            lc.level,
+            lc.dim_name,
+            human_bytes(lc.required_bytes),
+            human_bytes(lc.cache_bytes),
+            if lc.satisfied { "yes" } else { "NO" }
+        ));
+    }
+    s
+}
+
+/// Render a machine summary (Table 1 style).
+pub fn machine_report(m: &MachineModel) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("machine: {} ({})\n", m.model_name, m.arch));
+    s.push_str(&format!(
+        "  clock {} GHz, {} sockets x {} cores, {} threads/core\n",
+        m.clock_hz / 1e9,
+        m.sockets,
+        m.cores_per_socket,
+        m.threads_per_core
+    ));
+    s.push_str(&format!(
+        "  DP peak {} flop/cy (ADD {}, MUL {}, FMA {})\n",
+        m.flops_per_cycle_dp.total,
+        m.flops_per_cycle_dp.add,
+        m.flops_per_cycle_dp.mul,
+        m.flops_per_cycle_dp.fma
+    ));
+    for lvl in &m.memory_hierarchy {
+        s.push_str(&format!(
+            "  {:<4} {:>9} x{} groups, {} cores/group{}\n",
+            lvl.name,
+            lvl.size_bytes.map(human_bytes).unwrap_or_else(|| "-".into()),
+            lvl.groups,
+            lvl.cores_per_group,
+            lvl.cycles_per_cacheline
+                .map(|c| format!(", {c} cy/CL to next level"))
+                .unwrap_or_default()
+        ));
+    }
+    s
+}
+
+fn indent(text: &str) -> String {
+    text.lines().map(|l| format!("  {l}\n")).collect()
+}
+
+fn human_bytes(b: u64) -> String {
+    if b >= 1024 * 1024 {
+        format!("{:.1} MB", b as f64 / (1024.0 * 1024.0))
+    } else if b >= 1024 {
+        format!("{:.1} kB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CachePredictor;
+    use crate::incore::CodegenPolicy;
+    use crate::kernel::parse;
+    use crate::models::reference::KERNEL_2D5PT;
+    use std::collections::HashMap;
+
+    fn jacobi_stack() -> (KernelAnalysis, PortModel, TrafficPrediction, MachineModel) {
+        let m = MachineModel::snb();
+        let p = parse(KERNEL_2D5PT).unwrap();
+        let c: HashMap<String, i64> =
+            [("N".to_string(), 6000i64), ("M".to_string(), 6000i64)].into_iter().collect();
+        let a = KernelAnalysis::from_program(&p, &c).unwrap();
+        let pm = PortModel::analyze(&a, &m, &CodegenPolicy::for_machine(&m)).unwrap();
+        let t = CachePredictor::new(&m).predict(&a).unwrap();
+        (a, pm, t, m)
+    }
+
+    #[test]
+    fn ecm_report_contains_notation_and_saturation() {
+        let (_, pm, t, m) = jacobi_stack();
+        let ecm = EcmModel::build(&pm, &t, &m).unwrap();
+        let sc = ScalingModel::build(&ecm, &m);
+        let rep = ecm_report(&ecm, &sc, Unit::CyPerCl, true);
+        assert!(rep.contains("ECM model: {"), "{rep}");
+        assert!(rep.contains("saturating at 3 cores"), "{rep}");
+        assert!(rep.contains("copy benchmark"), "{rep}");
+    }
+
+    #[test]
+    fn roofline_report_shows_bottleneck_table() {
+        let (a, pm, t, m) = jacobi_stack();
+        let r = RooflineModel::build(&a, &t, &m, Some(&pm)).unwrap();
+        let rep = roofline_report(&r, Unit::CyPerCl);
+        assert!(rep.contains("L3-MEM"), "{rep}");
+        assert!(rep.contains("Cache or mem bound"), "{rep}");
+        assert!(rep.contains("Arithmetic Intensity"), "{rep}");
+    }
+
+    #[test]
+    fn unit_conversion_appears_in_reports() {
+        let (a, pm, t, m) = jacobi_stack();
+        let ecm = EcmModel::build(&pm, &t, &m).unwrap();
+        let sc = ScalingModel::build(&ecm, &m);
+        let rep = ecm_report(&ecm, &sc, Unit::FlopPerS, false);
+        assert!(rep.contains("FLOP/s"), "{rep}");
+        let r = RooflineModel::build(&a, &t, &m, Some(&pm)).unwrap();
+        let rep = roofline_report(&r, Unit::ItPerS);
+        assert!(rep.contains("It/s"), "{rep}");
+    }
+
+    #[test]
+    fn cache_viz_lists_all_accesses() {
+        let (a, _, t, _) = jacobi_stack();
+        let viz = cache_viz(&a, &t);
+        assert!(viz.contains("a[relative j][relative i-1]"), "{viz}");
+        assert!(viz.contains("store (write-allocate + evict)"), "{viz}");
+        assert!(viz.contains("layer conditions"), "{viz}");
+        assert!(viz.contains("NO"), "L1 layer condition must fail:\n{viz}");
+    }
+
+    #[test]
+    fn analysis_report_contains_tables() {
+        let (a, _, _, _) = jacobi_stack();
+        let rep = analysis_report(&a);
+        assert!(rep.contains("loop stack"));
+        assert!(rep.contains("FLOPs per iteration: 4"));
+    }
+
+    #[test]
+    fn machine_report_table1() {
+        let rep = machine_report(&MachineModel::snb());
+        assert!(rep.contains("SNB"));
+        assert!(rep.contains("2.7 GHz"));
+        assert!(rep.contains("20.0 MB"));
+    }
+}

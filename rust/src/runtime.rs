@@ -1,0 +1,248 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust.
+//!
+//! This is the only place the `xla` crate is touched. The interchange
+//! format is HLO *text* — the crate's xla_extension 0.5.1 rejects the
+//! 64-bit instruction ids jax ≥ 0.5 puts into serialized protos, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Python never runs on this path: once `artifacts/` exists the binary
+//! is self-contained.
+
+use crate::util::{median, monotonic_ns};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one artifact, parsed from `artifacts/manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Kernel sweeps fused into one executable invocation.
+    pub reps: u64,
+    /// Inner-loop iterations per sweep.
+    pub iters_per_sweep: u64,
+    /// Source flops per inner iteration.
+    pub flops_per_iter: u64,
+    /// Input specs: (dtype, dims) — dims empty for scalars.
+    pub inputs: Vec<(String, Vec<usize>)>,
+}
+
+impl ArtifactMeta {
+    /// Total inner iterations one execution performs.
+    pub fn iterations_per_exec(&self) -> u64 {
+        self.reps * self.iters_per_sweep
+    }
+}
+
+/// Parse `manifest.tsv`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+    let mut out = Vec::new();
+    for (ix, line) in text.lines().enumerate() {
+        if ix == 0 || line.trim().is_empty() {
+            continue; // header
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 6 {
+            bail!("manifest line {} has {} columns, expected 6", ix + 1, cols.len());
+        }
+        let inputs = cols[5]
+            .split(';')
+            .map(|spec| -> Result<(String, Vec<usize>)> {
+                let (dt, dims) = spec
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("bad input spec '{spec}'"))?;
+                let dims: Vec<usize> = if dims.is_empty() {
+                    vec![]
+                } else {
+                    dims.split(',')
+                        .map(|d| d.parse().map_err(|_| anyhow!("bad dim '{d}'")))
+                        .collect::<Result<_>>()?
+                };
+                Ok((dt.to_string(), dims))
+            })
+            .collect::<Result<_>>()?;
+        out.push(ArtifactMeta {
+            name: cols[0].to_string(),
+            file: cols[1].to_string(),
+            reps: cols[2].parse().context("reps")?,
+            iters_per_sweep: cols[3].parse().context("iters")?,
+            flops_per_iter: cols[4].parse().context("flops")?,
+            inputs,
+        });
+    }
+    Ok(out)
+}
+
+/// A PJRT CPU runtime holding compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One loaded artifact, compiled and ready to execute.
+pub struct LoadedKernel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Timing result of repeated executions.
+#[derive(Debug, Clone)]
+pub struct ExecTiming {
+    /// Median wall time per execution in nanoseconds.
+    pub median_ns: f64,
+    /// All samples (ns).
+    pub samples_ns: Vec<f64>,
+    /// Inner iterations per execution.
+    pub iterations: u64,
+}
+
+impl ExecTiming {
+    /// Iterations per second.
+    pub fn iterations_per_second(&self) -> f64 {
+        self.iterations as f64 / (self.median_ns / 1e9)
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Name of the PJRT platform backing this runtime.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one artifact.
+    pub fn load(&self, dir: &Path, meta: &ArtifactMeta) -> Result<LoadedKernel> {
+        let path: PathBuf = dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+        Ok(LoadedKernel { meta: meta.clone(), exe })
+    }
+
+    /// Load every artifact in a directory.
+    pub fn load_all(&self, dir: &Path) -> Result<Vec<LoadedKernel>> {
+        load_manifest(dir)?
+            .iter()
+            .map(|m| self.load(dir, m))
+            .collect()
+    }
+}
+
+impl LoadedKernel {
+    /// Build deterministic pseudo-random inputs matching the manifest.
+    pub fn make_inputs(&self, seed: u64) -> Result<Vec<xla::Literal>> {
+        let mut rng = crate::util::XorShift64::new(seed | 1);
+        self.meta
+            .inputs
+            .iter()
+            .map(|(dtype, dims)| -> Result<xla::Literal> {
+                let n: usize = dims.iter().product::<usize>().max(1);
+                match dtype.as_str() {
+                    "float64" => {
+                        let data: Vec<f64> =
+                            (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+                        let lit = xla::Literal::vec1(&data);
+                        if dims.is_empty() {
+                            // scalar: reshape 1-element vector to rank 0
+                            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
+                        } else {
+                            let shape: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+                            lit.reshape(&shape).map_err(|e| anyhow!("{e:?}"))
+                        }
+                    }
+                    "float32" => {
+                        let data: Vec<f32> =
+                            (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+                        let lit = xla::Literal::vec1(&data);
+                        if dims.is_empty() {
+                            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
+                        } else {
+                            let shape: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+                            lit.reshape(&shape).map_err(|e| anyhow!("{e:?}"))
+                        }
+                    }
+                    other => bail!("unsupported artifact dtype {other}"),
+                }
+            })
+            .collect()
+    }
+
+    /// Execute once, returning the first output literal (tuples unpacked).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.meta.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple
+        lit.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))
+    }
+
+    /// Time `samples` executions (after one warm-up) and report medians.
+    pub fn time(&self, samples: usize) -> Result<ExecTiming> {
+        let inputs = self.make_inputs(0xD00D)?;
+        let _warm = self.execute(&inputs)?;
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples.max(1) {
+            let t0 = monotonic_ns();
+            let _out = self.execute(&inputs)?;
+            let t1 = monotonic_ns();
+            times.push((t1 - t0) as f64);
+        }
+        Ok(ExecTiming {
+            median_ns: median(&times),
+            samples_ns: times,
+            iterations: self.meta.iterations_per_exec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_parses_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let metas = load_manifest(&dir).unwrap();
+        assert_eq!(metas.len(), 5);
+        let jac = metas.iter().find(|m| m.name == "jacobi2d").unwrap();
+        assert_eq!(jac.inputs.len(), 2);
+        assert!(jac.inputs[1].1.is_empty(), "scalar s");
+        assert_eq!(jac.flops_per_iter, 4);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("kerncraft_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "header\nbad line without tabs\n").unwrap();
+        assert!(load_manifest(&dir).is_err());
+    }
+
+    // The full load-execute path is covered by `rust/tests/runtime_e2e.rs`
+    // (it needs the PJRT client, which we only want to spin up once).
+}

@@ -1,0 +1,586 @@
+//! Trace-driven virtual testbed — the stand-in for running the kernel on
+//! the paper's Sandy Bridge / Haswell machines (see DESIGN.md §1).
+//!
+//! Where the analytic predictor (`cache::CachePredictor`) reasons about a
+//! steady-state unit of work, this module *executes* the kernel's memory
+//! trace against a set-associative, inclusive, write-allocate/write-back
+//! LRU cache hierarchy configured from the same machine file, and charges
+//! cycles with an ECM-style composition rule per unit of work:
+//!
+//! `T_unit = max(T_OL, T_nOL + Σ_links lines·cy/CL + latency penalties)`
+//!
+//! Cold caches, loop boundaries (pipeline restart at each inner-loop
+//! entry), and imperfect prefetching on non-sequential misses are
+//! modeled, so short loops deviate from the analytic model exactly the
+//! way the paper's Fig. 4 measurements do.
+//!
+//! For large problems the outer iteration space is truncated after the
+//! working set has cycled several times — the reported cy/CL is the
+//! steady-state mean over the simulated window.
+
+use crate::incore::{CodegenPolicy, PortModel};
+use crate::kernel::KernelAnalysis;
+use crate::machine::MachineModel;
+use anyhow::{bail, Result};
+
+/// One set-associative LRU cache level.
+struct CacheLevel {
+    sets: usize,
+    ways: usize,
+    /// tags\[set\]\[way\] — line address + 1 (0 = empty way).
+    tags: Vec<u64>,
+    /// LRU age per way (higher = more recent).
+    ages: Vec<u32>,
+    dirty: Vec<bool>,
+    clock: u32,
+    // statistics
+    hits: u64,
+    misses: u64,
+    writebacks: u64,
+}
+
+impl CacheLevel {
+    fn new(size_bytes: u64, ways: u32, line_size: u64) -> CacheLevel {
+        let lines = (size_bytes / line_size).max(1);
+        let ways = (ways as u64).min(lines).max(1) as usize;
+        let sets = (lines as usize / ways).max(1);
+        CacheLevel {
+            sets,
+            ways,
+            tags: vec![0; sets * ways],
+            ages: vec![0; sets * ways],
+            dirty: vec![false; sets * ways],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    /// Access a line address; returns (hit, evicted_dirty_line).
+    fn access(&mut self, line: u64, write: bool) -> (bool, Option<u64>) {
+        // store line+1 so 0 marks an empty way
+        let key = line + 1;
+        let set = (line as usize) % self.sets;
+        let base = set * self.ways;
+        self.clock = self.clock.wrapping_add(1);
+        let mut lru_way = 0;
+        let mut lru_age = u32::MAX;
+        for w in 0..self.ways {
+            let ix = base + w;
+            if self.tags[ix] == key {
+                self.hits += 1;
+                self.ages[ix] = self.clock;
+                if write {
+                    self.dirty[ix] = true;
+                }
+                return (true, None);
+            }
+            if self.tags[ix] == 0 {
+                lru_way = w;
+                lru_age = 0;
+            } else if self.ages[ix] < lru_age {
+                lru_age = self.ages[ix];
+                lru_way = w;
+            }
+        }
+        self.misses += 1;
+        let ix = base + lru_way;
+        let evicted = if self.tags[ix] != 0 && self.dirty[ix] {
+            self.writebacks += 1;
+            Some(self.tags[ix] - 1)
+        } else {
+            None
+        };
+        self.tags[ix] = key;
+        self.ages[ix] = self.clock;
+        self.dirty[ix] = write;
+        (false, evicted)
+    }
+}
+
+/// Per-level statistics of a simulation run.
+#[derive(Debug, Clone)]
+pub struct LevelStats {
+    pub level: String,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+/// Result of a virtual-testbed run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total simulated cycles.
+    pub cycles: f64,
+    /// Cycles per cache line of work (the Table 5 "Bench." unit).
+    pub cy_per_cl: f64,
+    /// Simulated inner iterations.
+    pub iterations: u64,
+    /// Whether the iteration space was truncated for tractability.
+    pub truncated: bool,
+    pub levels: Vec<LevelStats>,
+    /// In-core times used (cy per CL of work).
+    pub t_ol: f64,
+    pub t_nol: f64,
+}
+
+impl SimResult {
+    /// Measured performance in It/s at the given clock.
+    pub fn iterations_per_second(&self, clock_hz: f64) -> f64 {
+        self.iterations as f64 / (self.cycles / clock_hz)
+    }
+}
+
+/// The virtual testbed.
+pub struct VirtualTestbed<'m> {
+    machine: &'m MachineModel,
+    /// Hard cap on simulated inner iterations (after warm-up estimation).
+    pub max_iterations: u64,
+    /// Pipeline restart penalty charged at every inner-loop entry.
+    pub loop_start_penalty: f64,
+    /// Extra latency charged for a miss that the streaming prefetcher
+    /// did not anticipate (fraction of the serving level's latency).
+    pub prefetch_miss_factor: f64,
+}
+
+impl<'m> VirtualTestbed<'m> {
+    /// Testbed with default knobs.
+    pub fn new(machine: &'m MachineModel) -> Self {
+        VirtualTestbed {
+            machine,
+            max_iterations: 4_000_000,
+            loop_start_penalty: 25.0,
+            prefetch_miss_factor: 0.6,
+        }
+    }
+
+    /// Run the kernel on the virtual testbed.
+    pub fn run(&self, analysis: &KernelAnalysis) -> Result<SimResult> {
+        let policy = CodegenPolicy::for_machine(self.machine);
+        let pm = PortModel::analyze(analysis, self.machine, &policy)?;
+        self.run_with_incore(analysis, &pm)
+    }
+
+    /// Run with a pre-computed in-core model.
+    pub fn run_with_incore(
+        &self,
+        analysis: &KernelAnalysis,
+        pm: &PortModel,
+    ) -> Result<SimResult> {
+        let cl = self.machine.cacheline_bytes;
+        if analysis.loops.is_empty() {
+            bail!("kernel has no loops");
+        }
+        // build hierarchy
+        let mut levels: Vec<CacheLevel> = Vec::new();
+        let mut link_cpc: Vec<f64> = Vec::new(); // cycles per CL per link
+        let mut link_lat: Vec<f64> = Vec::new();
+        let cache_levels = self.machine.cache_levels();
+        for lvl in &cache_levels {
+            let Some(size) = lvl.size_bytes else {
+                bail!("cache level {} lacks a size", lvl.name)
+            };
+            levels.push(CacheLevel::new(size, lvl.ways, cl));
+            let cpc = match lvl.cycles_per_cacheline {
+                Some(c) => c,
+                None => {
+                    // memory link: saturated bandwidth of the copy kernel
+                    let bw = self
+                        .machine
+                        .benchmarks
+                        .saturated_bandwidth("MEM", "copy")
+                        .unwrap_or(20e9);
+                    cl as f64 / bw * self.machine.clock_hz
+                }
+            };
+            link_cpc.push(cpc);
+        }
+        for (ix, lvl) in cache_levels.iter().enumerate() {
+            // latency of the level that serves a miss at this level
+            let next = self
+                .machine
+                .memory_hierarchy
+                .get(ix + 1)
+                .map(|l| l.latency)
+                .unwrap_or(lvl.latency * 4.0);
+            link_lat.push(next);
+        }
+
+        // array layout (same placement rule as the analytic predictor)
+        let layout = crate::cache::ArrayLayout::new(analysis, cl);
+
+        // iteration bounds, possibly truncated in the OUTERMOST dimension
+        let trips: Vec<i64> = analysis.loops.iter().map(|l| l.trip().max(0)).collect();
+        let total: u64 = trips.iter().map(|t| *t as u64).product();
+        let mut outer_trip = trips[0] as u64;
+        let mut truncated = false;
+        if analysis.loops.len() > 1 {
+            if total > self.max_iterations {
+                let inner_total: u64 =
+                    trips[1..].iter().map(|t| *t as u64).product::<u64>().max(1);
+                outer_trip = (self.max_iterations / inner_total).clamp(1, trips[0] as u64);
+                truncated = outer_trip < trips[0] as u64;
+            }
+        } else if total > self.max_iterations {
+            outer_trip = self.max_iterations;
+            truncated = true;
+        }
+
+        // prefetcher model: per-array rolling lists of the lines touched
+        // in the current and previous unit of work — a miss whose
+        // predecessor line appears there is stream-prefetched (bandwidth
+        // only). Small Vecs beat hash sets here: ≤ a few dozen entries,
+        // scanned linearly (§Perf iteration 2).
+        let mut cur_lines: Vec<Vec<i64>> = vec![Vec::new(); analysis.arrays.len()];
+        let mut prev_lines: Vec<Vec<i64>> = vec![Vec::new(); analysis.arrays.len()];
+
+        let elem_sizes: Vec<i64> =
+            analysis.arrays.iter().map(|a| a.ty.size() as i64).collect();
+        let unit_iters = analysis.unit_of_work(cl).max(1);
+        let t_ol = pm.t_ol;
+        let t_nol = pm.t_nol;
+        // in-core time per iteration
+        let ol_per_iter = t_ol / unit_iters as f64;
+        let nol_per_iter = t_nol / unit_iters as f64;
+
+        let mut cycles = 0f64;
+        let mut iterations: u64 = 0;
+        // per-unit accumulators
+        let mut unit_count = 0u64;
+        let mut unit_link_lines = vec![0u64; levels.len()];
+        let mut unit_penalty = 0f64;
+
+        let n_loops = analysis.loops.len();
+        let mut idx: Vec<i64> = analysis.loops.iter().map(|l| l.start).collect();
+        // adjust outermost bound for truncation
+        let outer_end =
+            analysis.loops[0].start + outer_trip as i64 * analysis.loops[0].step;
+
+        'outer: loop {
+            // --- one inner iteration: issue all accesses ---
+            for acc in analysis.reads.iter() {
+                let a = acc.array;
+                let off =
+                    acc.offset + acc.coeffs.iter().zip(&idx).map(|(c, p)| c * p).sum::<i64>();
+                let byte = layout.base_of(a) + off * elem_sizes[a];
+                let line = byte.div_euclid(cl as i64) as u64;
+                self.touch(
+                    &mut levels,
+                    line,
+                    false,
+                    a,
+                    &mut cur_lines,
+                    &prev_lines,
+                    &link_lat,
+                    &mut unit_link_lines,
+                    &mut unit_penalty,
+                );
+            }
+            for acc in analysis.writes.iter() {
+                let a = acc.array;
+                let off =
+                    acc.offset + acc.coeffs.iter().zip(&idx).map(|(c, p)| c * p).sum::<i64>();
+                let byte = layout.base_of(a) + off * elem_sizes[a];
+                let line = byte.div_euclid(cl as i64) as u64;
+                self.touch(
+                    &mut levels,
+                    line,
+                    true,
+                    a,
+                    &mut cur_lines,
+                    &prev_lines,
+                    &link_lat,
+                    &mut unit_link_lines,
+                    &mut unit_penalty,
+                );
+            }
+            iterations += 1;
+            unit_count += 1;
+
+            // close a unit of work: ECM composition
+            if unit_count == unit_iters {
+                let mut data: f64 = 0.0;
+                for (k, lines) in unit_link_lines.iter().enumerate() {
+                    data += *lines as f64 * link_cpc[k];
+                }
+                let t_unit = (ol_per_iter * unit_count as f64)
+                    .max(nol_per_iter * unit_count as f64 + data + unit_penalty);
+                cycles += t_unit;
+                unit_count = 0;
+                unit_link_lines.iter_mut().for_each(|x| *x = 0);
+                unit_penalty = 0.0;
+                for (cur, prev) in cur_lines.iter_mut().zip(prev_lines.iter_mut()) {
+                    std::mem::swap(cur, prev);
+                    cur.clear();
+                }
+            }
+
+            // --- advance the loop nest ---
+            let mut k = n_loops - 1;
+            loop {
+                idx[k] += analysis.loops[k].step;
+                let end = if k == 0 { outer_end } else { analysis.loops[k].end };
+                if idx[k] < end {
+                    if k != n_loops - 1 {
+                        // entering a fresh inner loop: pipeline restart
+                        unit_penalty += self.loop_start_penalty;
+                    }
+                    break;
+                }
+                if k == 0 {
+                    break 'outer;
+                }
+                idx[k] = analysis.loops[k].start;
+                k -= 1;
+            }
+        }
+        // flush the trailing partial unit
+        if unit_count > 0 {
+            let mut data: f64 = 0.0;
+            for (k, lines) in unit_link_lines.iter().enumerate() {
+                data += *lines as f64 * link_cpc[k];
+            }
+            cycles += (ol_per_iter * unit_count as f64)
+                .max(nol_per_iter * unit_count as f64 + data + unit_penalty);
+        }
+
+        let stats = cache_levels
+            .iter()
+            .zip(&levels)
+            .map(|(m, l)| LevelStats {
+                level: m.name.clone(),
+                hits: l.hits,
+                misses: l.misses,
+                writebacks: l.writebacks,
+            })
+            .collect();
+        let units = iterations as f64 / unit_iters as f64;
+        Ok(SimResult {
+            cycles,
+            cy_per_cl: cycles / units,
+            iterations,
+            truncated,
+            levels: stats,
+            t_ol,
+            t_nol,
+        })
+    }
+
+    /// Issue one line access through the hierarchy, updating traffic and
+    /// penalty accumulators. Dirty evictions propagate inclusively: an
+    /// eviction from level k marks (or installs) the line dirty in level
+    /// k+1 and counts one write-back crossing that link.
+    #[allow(clippy::too_many_arguments)]
+    fn touch(
+        &self,
+        levels: &mut [CacheLevel],
+        line: u64,
+        write: bool,
+        array: usize,
+        cur_lines: &mut [Vec<i64>],
+        prev_lines: &[Vec<i64>],
+        link_lat: &[f64],
+        unit_link_lines: &mut [u64],
+        unit_penalty: &mut f64,
+    ) {
+        // sequential-stream detection: predecessor (or same) line seen in
+        // this or the previous unit of work
+        let sline = line as i64;
+        let hit_list = |v: &[i64]| v.iter().any(|&h| h == sline || h == sline - 1);
+        let sequential = hit_list(&cur_lines[array]) || hit_list(&prev_lines[array]);
+        if !cur_lines[array].contains(&sline) {
+            cur_lines[array].push(sline);
+        }
+
+        let n = levels.len();
+        let mut depth = 0usize;
+        for k in 0..n {
+            let (hit, evicted) = levels[k].access(line, write && k == 0);
+            if let Some(dirty_line) = evicted {
+                // write-back: crosses the link below level k, then marks
+                // the line dirty further out (installing it if the
+                // hierarchy drifted from strict inclusion)
+                unit_link_lines[k] += 1;
+                let mut wb = dirty_line;
+                for kk in k + 1..n {
+                    let (hit_wb, ev2) = levels[kk].access(wb, true);
+                    if let Some(d2) = ev2 {
+                        unit_link_lines[kk] += 1;
+                        if hit_wb {
+                            break;
+                        }
+                        wb = d2;
+                        continue;
+                    }
+                    break;
+                }
+            }
+            if hit {
+                break;
+            }
+            // miss: the fill crosses this link
+            unit_link_lines[k] += 1;
+            depth = k + 1;
+        }
+        // latency penalty for non-sequential (unprefetched) misses
+        if depth > 0 && !sequential {
+            let lat = link_lat[depth - 1];
+            *unit_penalty += lat * self.prefetch_miss_factor;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::parse;
+    use std::collections::HashMap;
+
+    fn consts(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn analyze(src: &str, c: &[(&str, i64)]) -> KernelAnalysis {
+        let p = parse(src).unwrap();
+        KernelAnalysis::from_program(&p, &consts(c)).unwrap()
+    }
+
+    #[test]
+    fn cache_level_lru_behaviour() {
+        // 2 sets × 2 ways of 64 B lines = 256 B cache
+        let mut c = CacheLevel::new(256, 2, 64);
+        assert_eq!(c.sets, 2);
+        // fill set 0 (even lines)
+        assert!(!c.access(0, false).0);
+        assert!(!c.access(2, false).0);
+        assert!(c.access(0, false).0, "0 still resident");
+        // third distinct even line evicts LRU (line 2)
+        assert!(!c.access(4, false).0);
+        assert!(c.access(0, false).0, "0 was MRU, stays");
+        assert!(!c.access(2, false).0, "2 was evicted");
+    }
+
+    #[test]
+    fn dirty_eviction_produces_writeback() {
+        let mut c = CacheLevel::new(128, 1, 64); // 2 sets × 1 way
+        c.access(0, true); // dirty
+        let (_, ev) = c.access(2, false); // same set, evicts line 0
+        assert_eq!(ev, Some(0));
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn triad_steady_state_matches_ecm() {
+        // For the pure streaming triad the virtual testbed must land close
+        // to the analytic ECM in-memory prediction (≈47.9 cy/CL on SNB).
+        let m = MachineModel::snb();
+        let a = analyze(
+            "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];",
+            &[("N", 2_000_000)],
+        );
+        let sim = VirtualTestbed::new(&m).run(&a).unwrap();
+        assert!(
+            (sim.cy_per_cl - 47.9).abs() / 47.9 < 0.15,
+            "sim {} vs ECM 47.9",
+            sim.cy_per_cl
+        );
+    }
+
+    #[test]
+    fn jacobi_bench_close_to_paper_measurement() {
+        // Paper Table 5: measured 36.4 cy/CL on SNB (model 36.7).
+        let m = MachineModel::snb();
+        let a = analyze(
+            crate::models::reference::KERNEL_2D5PT,
+            &[("N", 6000), ("M", 6000)],
+        );
+        let sim = VirtualTestbed::new(&m).run(&a).unwrap();
+        assert!(
+            (sim.cy_per_cl - 36.4).abs() / 36.4 < 0.2,
+            "sim {} vs paper bench 36.4",
+            sim.cy_per_cl
+        );
+    }
+
+    #[test]
+    fn simulated_traffic_matches_analytic_steady_state() {
+        // jacobi: the analytic model predicts 5 CL crossing the L1 link
+        // per unit of work (3 read rows + write-allocate + evict).
+        let m = MachineModel::snb();
+        let a = analyze(
+            crate::models::reference::KERNEL_2D5PT,
+            &[("N", 6000), ("M", 6000)],
+        );
+        let sim = VirtualTestbed::new(&m).run(&a).unwrap();
+        let units = sim.iterations as f64 / 8.0;
+        let l1 = &sim.levels[0];
+        let lines_per_unit = (l1.misses + l1.writebacks) as f64 / units;
+        assert!(
+            (lines_per_unit - 5.0).abs() < 0.5,
+            "L1 link lines/unit = {lines_per_unit}"
+        );
+    }
+
+    #[test]
+    fn truncation_engages_for_huge_spaces() {
+        let m = MachineModel::snb();
+        let a = analyze(
+            crate::models::reference::KERNEL_2D5PT,
+            &[("N", 4000), ("M", 100000)],
+        );
+        let tb = VirtualTestbed::new(&m);
+        let sim = tb.run(&a).unwrap();
+        assert!(sim.truncated);
+        assert!(sim.iterations <= tb.max_iterations + 4000 * 8);
+    }
+
+    #[test]
+    fn small_n_exceeds_steady_state_model() {
+        // Fig 4: for very short inner loops the measurement lies above the
+        // analytic prediction (boundary effects dominate).
+        let m = MachineModel::snb();
+        let small = analyze(
+            crate::models::reference::KERNEL_LONG_RANGE,
+            &[("N", 20), ("M", 20)],
+        );
+        let big = analyze(
+            crate::models::reference::KERNEL_LONG_RANGE,
+            &[("N", 400), ("M", 400)],
+        );
+        let tb = VirtualTestbed::new(&m);
+        let s_small = tb.run(&small).unwrap();
+        let s_big = tb.run(&big).unwrap();
+        // per-CL cost at tiny N must exceed the large-N steady state
+        assert!(
+            s_small.cy_per_cl > s_big.cy_per_cl,
+            "small {} vs big {}",
+            s_small.cy_per_cl,
+            s_big.cy_per_cl
+        );
+    }
+
+    #[test]
+    fn hits_grow_with_cache_friendliness() {
+        let m = MachineModel::snb();
+        // N small enough for the L1 layer condition
+        let friendly = analyze(crate::models::reference::KERNEL_2D5PT, &[("N", 200), ("M", 4000)]);
+        let hostile = analyze(crate::models::reference::KERNEL_2D5PT, &[("N", 6000), ("M", 140)]);
+        let tb = VirtualTestbed::new(&m);
+        let f = tb.run(&friendly).unwrap();
+        let h = tb.run(&hostile).unwrap();
+        let f_l1_rate = f.levels[0].hits as f64 / (f.levels[0].hits + f.levels[0].misses) as f64;
+        let h_l1_rate = h.levels[0].hits as f64 / (h.levels[0].hits + h.levels[0].misses) as f64;
+        assert!(f_l1_rate > h_l1_rate, "{f_l1_rate} vs {h_l1_rate}");
+    }
+
+    #[test]
+    fn kahan_is_core_bound_in_sim_too() {
+        let m = MachineModel::snb();
+        let a = analyze(crate::models::reference::KERNEL_KAHAN, &[("N", 2_000_000)]);
+        let sim = VirtualTestbed::new(&m).run(&a).unwrap();
+        // paper bench: 101.1 cy/CL (model 96): core-bound, so the sim must
+        // land at T_OL (96) ± small memory effects
+        assert!((sim.cy_per_cl - 96.0).abs() / 96.0 < 0.12, "sim {}", sim.cy_per_cl);
+    }
+}

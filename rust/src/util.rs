@@ -1,0 +1,202 @@
+//! Small shared utilities: deterministic PRNG for property tests, cycle
+//! timing, and numeric helpers.
+
+/// xorshift64* PRNG — deterministic, dependency-free source of test
+/// randomness (the offline crate set has no `rand`).
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator from a non-zero seed (zero is mapped to a fixed
+    /// odd constant to keep the sequence non-degenerate).
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform value in `[0, bound)`; `bound` must be non-zero.
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        self.next_u64() % bound
+    }
+
+    /// Uniform `i64` in `[lo, hi]` (inclusive).
+    pub fn next_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + (self.next_below((hi - lo + 1) as u64) as i64)
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.next_below(items.len() as u64) as usize]
+    }
+}
+
+/// Read the timestamp counter. On x86_64 this is `rdtsc`; elsewhere we
+/// fall back to a monotonic-nanosecond clock (1 "cycle" == 1 ns).
+#[inline]
+pub fn rdtsc() -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_rdtsc()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        monotonic_ns()
+    }
+}
+
+/// Monotonic nanoseconds (CLOCK_MONOTONIC).
+pub fn monotonic_ns() -> u64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_nanos() as u64
+}
+
+/// Estimate the TSC frequency in Hz by spinning for ~50 ms. Used to convert
+/// measured cycles to wall time (and vice versa) in Benchmark mode.
+pub fn estimate_tsc_hz() -> f64 {
+    use std::time::{Duration, Instant};
+    let t0 = Instant::now();
+    let c0 = rdtsc();
+    while t0.elapsed() < Duration::from_millis(50) {
+        std::hint::spin_loop();
+    }
+    let c1 = rdtsc();
+    let dt = t0.elapsed().as_secs_f64();
+    (c1.wrapping_sub(c0)) as f64 / dt
+}
+
+/// Greatest common divisor.
+pub fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+/// Least common multiple (saturating).
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    (a / gcd(a, b)).saturating_mul(b)
+}
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+pub fn round_up(x: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Median of a slice (copies + sorts; fine for bench-sized inputs).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 { v[n / 2] } else { 0.5 * (v[n / 2 - 1] + v[n / 2]) }
+}
+
+/// Format a float trimming trailing zeros, kerncraft-report style
+/// (e.g. `12.7`, `8`, `9.54`).
+pub fn fmt_cy(x: f64) -> String {
+    if (x - x.round()).abs() < 5e-3 {
+        format!("{}", x.round() as i64)
+    } else {
+        let s = format!("{x:.2}");
+        let s = s.trim_end_matches('0').trim_end_matches('.').to_string();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_is_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xorshift_zero_seed_is_nondegenerate() {
+        let mut r = XorShift64::new(0);
+        let v: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        assert!(v.iter().any(|&x| x != 0));
+    }
+
+    #[test]
+    fn next_range_bounds() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            let v = r.next_range(-5, 9);
+            assert!((-5..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..1000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 5), 0);
+        assert_eq!(gcd(7, 0), 7);
+    }
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn fmt_cy_trims() {
+        assert_eq!(fmt_cy(8.0), "8");
+        assert_eq!(fmt_cy(12.70), "12.7");
+        assert_eq!(fmt_cy(9.539), "9.54");
+    }
+
+    #[test]
+    fn tsc_is_monotonic_enough() {
+        let a = rdtsc();
+        let b = rdtsc();
+        // Allow equality on coarse clocks; must not go backwards.
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,129 @@
+//! CLI integration: every analysis mode × both machines × all five paper
+//! kernels must produce a well-formed report.
+
+use kerncraft::cli::run;
+use kerncraft::models::reference;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(str::to_string).collect()
+}
+
+fn kernel_file(tag: &str) -> &'static str {
+    match tag {
+        "2D-5pt" => "kernels/2d-5pt.c",
+        "UXX" => "kernels/uxx.c",
+        "long-range" => "kernels/long-range.c",
+        "Kahan-dot" => "kernels/kahan-ddot.c",
+        "triad" => "kernels/triad.c",
+        _ => unreachable!(),
+    }
+}
+
+fn defines(tag: &str) -> String {
+    let row = reference::TABLE5.iter().find(|r| r.kernel == tag).unwrap();
+    row.constants
+        .iter()
+        .map(|(k, v)| format!("-D {k} {v}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[test]
+fn ecm_mode_all_kernels_both_machines() {
+    for tag in reference::kernel_tags() {
+        for arch in ["SNB", "HSW"] {
+            let cmd = format!("-p ECM -m {arch} {} {}", kernel_file(tag), defines(tag));
+            let out = run(&argv(&cmd)).unwrap_or_else(|e| panic!("{tag}/{arch}: {e:#}"));
+            assert!(out.contains("ECM model: {"), "{tag}/{arch}:\n{out}");
+            assert!(out.contains("ECM prediction"), "{tag}/{arch}:\n{out}");
+        }
+    }
+}
+
+#[test]
+fn roofline_modes_all_kernels() {
+    for tag in reference::kernel_tags() {
+        for mode in ["Roofline", "RooflinePort"] {
+            let cmd = format!("-p {mode} -m SNB {} {}", kernel_file(tag), defines(tag));
+            let out = run(&argv(&cmd)).unwrap_or_else(|e| panic!("{tag}/{mode}: {e:#}"));
+            assert!(out.contains("Roofline prediction"), "{tag}/{mode}:\n{out}");
+        }
+    }
+}
+
+#[test]
+fn ecmdata_and_ecmcpu_modes() {
+    let out = run(&argv("-p ECMData -m HSW kernels/triad.c -D N 4000000")).unwrap();
+    assert!(out.contains("ECM model"), "{out}");
+    let out = run(&argv("-p ECMCPU -m HSW kernels/triad.c -D N 4000000")).unwrap();
+    assert!(out.contains("T_OL"), "{out}");
+}
+
+#[test]
+fn benchmark_virtual_all_kernels() {
+    // use smaller sizes than Table 5 so the trace sim stays quick in CI
+    let cases = [
+        ("kernels/2d-5pt.c", "-D N 2000 -D M 400"),
+        ("kernels/triad.c", "-D N 400000"),
+        ("kernels/kahan-ddot.c", "-D N 400000"),
+        ("kernels/uxx.c", "-D N 60 -D M 60"),
+        ("kernels/long-range.c", "-D N 60 -D M 60"),
+    ];
+    for (file, defs) in cases {
+        let cmd = format!("-p Benchmark -m SNB {file} {defs}");
+        let out = run(&argv(&cmd)).unwrap_or_else(|e| panic!("{file}: {e:#}"));
+        assert!(out.contains("virtual testbed"), "{file}:\n{out}");
+    }
+}
+
+#[test]
+fn native_benchmark_triad() {
+    let out = run(&argv("-p Benchmark --bench-path native kernels/triad.c -D N 200000")).unwrap();
+    assert!(out.contains("native host"), "{out}");
+}
+
+#[test]
+fn verbose_shows_analysis_tables() {
+    let out = run(&argv(
+        "-p ECM -m SNB kernels/2d-5pt.c -D N 5000 -D M 500 -v",
+    ))
+    .unwrap();
+    // Table 2 values from the paper: j | 1 | 499, i | 1 | 4999
+    assert!(out.contains("j | 1 | 499 | +1"), "{out}");
+    assert!(out.contains("i | 1 | 4999 | +1"), "{out}");
+}
+
+#[test]
+fn cache_viz_flag() {
+    let out = run(&argv(
+        "-p ECM -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000 --cache-viz",
+    ))
+    .unwrap();
+    assert!(out.contains("cache usage prediction"), "{out}");
+    assert!(out.contains("layer conditions"), "{out}");
+}
+
+#[test]
+fn custom_machine_file_path() {
+    let out = run(&argv(
+        "-p ECM -m machines/hsw.yml kernels/triad.c -D N 4000000",
+    ))
+    .unwrap();
+    assert!(out.contains("ECM model"), "{out}");
+}
+
+#[test]
+fn missing_constant_is_a_clean_error() {
+    let err = run(&argv("-p ECM -m SNB kernels/2d-5pt.c -D N 100")).unwrap_err();
+    assert!(format!("{err:#}").contains("unbound constant 'M'"), "{err:#}");
+}
+
+#[test]
+fn units_flow_through() {
+    for unit in ["cy/CL", "It/s", "FLOP/s"] {
+        let cmd =
+            format!("-p ECM -m SNB kernels/triad.c -D N 4000000 --unit {unit}");
+        let out = run(&argv(&cmd)).unwrap();
+        assert!(!out.is_empty(), "{unit}");
+    }
+}

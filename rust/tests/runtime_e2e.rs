@@ -1,0 +1,144 @@
+//! End-to-end PJRT runtime tests: load every AOT artifact produced by
+//! `make artifacts`, execute it on the CPU PJRT client, and check the
+//! numerics against the native Rust implementation of the same kernel.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` is absent so
+//! `cargo test` works on a fresh checkout; `make test` always builds the
+//! artifacts first.
+
+use kerncraft::bench_mode::native;
+use kerncraft::runtime::{load_manifest, Runtime};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime e2e: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn all_artifacts_load_compile_and_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let metas = load_manifest(&dir).unwrap();
+    assert_eq!(metas.len(), 5, "five paper kernels expected");
+    for meta in &metas {
+        let loaded = rt.load(&dir, meta).unwrap_or_else(|e| panic!("{}: {e:#}", meta.name));
+        let inputs = loaded.make_inputs(1).unwrap();
+        let out = loaded
+            .execute(&inputs)
+            .unwrap_or_else(|e| panic!("executing {}: {e:#}", meta.name));
+        // every kernel returns finite floating-point data
+        let values: Vec<f64> = out.to_vec::<f64>().unwrap_or_default();
+        assert!(!values.is_empty(), "{} returned no data", meta.name);
+        assert!(
+            values.iter().all(|v| v.is_finite()),
+            "{} produced non-finite values",
+            meta.name
+        );
+    }
+}
+
+#[test]
+fn jacobi_artifact_matches_native_sweeps() {
+    // The jacobi2d artifact runs 20 ping-pong sweeps over a 258x256 f64
+    // grid. Recompute natively and compare.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let metas = load_manifest(&dir).unwrap();
+    let meta = metas.iter().find(|m| m.name == "jacobi2d").unwrap();
+    let loaded = rt.load(&dir, meta).unwrap();
+    let inputs = loaded.make_inputs(7).unwrap();
+    let out = loaded.execute(&inputs).unwrap();
+    let got: Vec<f64> = out.to_vec::<f64>().unwrap();
+
+    // reproduce the inputs: make_inputs is deterministic in the seed
+    let a0: Vec<f64> = inputs[0].to_vec::<f64>().unwrap();
+    let s: f64 = inputs[1].to_vec::<f64>().unwrap()[0];
+    let (m, n) = (meta.inputs[0].1[0], meta.inputs[0].1[1]);
+    let mut cur = a0;
+    let mut nxt = vec![0.0f64; m * n];
+    for _ in 0..meta.reps {
+        nxt.iter_mut().for_each(|x| *x = 0.0);
+        native::jacobi2d(&cur, &mut nxt, m, n, s);
+        // match ref.jacobi2d semantics: boundary zeroed
+        std::mem::swap(&mut cur, &mut nxt);
+    }
+    assert_eq!(got.len(), cur.len());
+    let mut max_err = 0.0f64;
+    for (g, w) in got.iter().zip(&cur) {
+        max_err = max_err.max((g - w).abs());
+    }
+    assert!(max_err < 1e-9, "max |pjrt - native| = {max_err}");
+}
+
+#[test]
+fn triad_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let metas = load_manifest(&dir).unwrap();
+    let meta = metas.iter().find(|m| m.name == "triad").unwrap();
+    let loaded = rt.load(&dir, meta).unwrap();
+    let inputs = loaded.make_inputs(3).unwrap();
+    let out = loaded.execute(&inputs).unwrap();
+    let got: Vec<f64> = out.to_vec::<f64>().unwrap();
+
+    let b: Vec<f64> = inputs[0].to_vec::<f64>().unwrap();
+    let c: Vec<f64> = inputs[1].to_vec::<f64>().unwrap();
+    let d: Vec<f64> = inputs[2].to_vec::<f64>().unwrap();
+    // reps sweeps with the carry fed back as `b`
+    let mut cur = b;
+    for _ in 0..meta.reps {
+        let mut a = vec![0.0f64; cur.len()];
+        for i in 0..cur.len() {
+            a[i] = cur[i] + c[i] * d[i];
+        }
+        cur = a;
+    }
+    let mut max_err = 0.0f64;
+    for (g, w) in got.iter().zip(&cur) {
+        max_err = max_err.max((g - w).abs() / w.abs().max(1.0));
+    }
+    assert!(max_err < 1e-9, "max rel err = {max_err}");
+}
+
+#[test]
+fn artifact_timing_is_positive_and_stable() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let metas = load_manifest(&dir).unwrap();
+    let meta = metas.iter().find(|m| m.name == "triad").unwrap();
+    let loaded = rt.load(&dir, meta).unwrap();
+    let t = loaded.time(3).unwrap();
+    assert!(t.median_ns > 0.0);
+    assert_eq!(t.iterations, meta.reps * meta.iters_per_sweep);
+    assert!(t.iterations_per_second() > 1e5, "{}", t.iterations_per_second());
+}
+
+#[test]
+fn triad_param_order_probe() {
+    // b=1, c=2, d=3 ⇒ after `reps` sweeps: 1 + reps·6 everywhere.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let metas = load_manifest(&dir).unwrap();
+    let meta = metas.iter().find(|m| m.name == "triad").unwrap();
+    let loaded = rt.load(&dir, meta).unwrap();
+    let n: usize = meta.inputs[0].1.iter().product();
+    let mk = |v: f64| {
+        xla::Literal::vec1(&vec![v; n])
+            .reshape(&[n as i64])
+            .unwrap()
+    };
+    let out = loaded.execute(&[mk(1.0), mk(2.0), mk(3.0)]).unwrap();
+    let got: Vec<f64> = out.to_vec::<f64>().unwrap();
+    let expect = 1.0 + meta.reps as f64 * 6.0;
+    assert!(
+        (got[0] - expect).abs() < 1e-9,
+        "param mapping broken: got {} expected {expect}",
+        got[0]
+    );
+}
