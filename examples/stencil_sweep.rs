@@ -1,58 +1,97 @@
 //! Figure 3-style sweep driver for ANY of the shipped kernels: ECM
-//! contributions and layer conditions as the problem size grows.
+//! contributions and layer conditions as the problem size grows — now on
+//! the parallel memoizing [`kerncraft::sweep::SweepEngine`].
 //!
 //! ```sh
-//! cargo run --release --example stencil_sweep -- [kernel-tag] [machine]
-//! # e.g.: cargo run --release --example stencil_sweep -- 2D-5pt HSW
+//! cargo run --release --example stencil_sweep -- [kernel-tag] [machine] [predictor]
+//! # e.g.: cargo run --release --example stencil_sweep -- 2D-5pt HSW auto
 //! ```
 
-use kerncraft::cache::CachePredictor;
-use kerncraft::incore::{CodegenPolicy, PortModel};
+use kerncraft::cache::CachePredictorKind;
 use kerncraft::kernel::{parse, KernelAnalysis};
-use kerncraft::machine::MachineModel;
-use kerncraft::models::{reference, EcmModel};
+use kerncraft::models::reference;
+use kerncraft::sweep::{SweepEngine, SweepJob};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let tag = std::env::args().nth(1).unwrap_or_else(|| "long-range".to_string());
     let arch = std::env::args().nth(2).unwrap_or_else(|| "SNB".to_string());
-    let machine = MachineModel::builtin(&arch)
-        .ok_or_else(|| anyhow::anyhow!("unknown machine {arch}"))?;
+    let predictor = std::env::args()
+        .nth(3)
+        .map(|s| {
+            CachePredictorKind::parse(&s)
+                .ok_or_else(|| anyhow::anyhow!("unknown predictor {s} (offsets|lc|auto)"))
+        })
+        .transpose()?
+        .unwrap_or(CachePredictorKind::Auto);
     let src = reference::kernel_source(&tag)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel {tag} (use a Table 5 tag)"))?;
-    let program = parse(src)?;
-    let policy = CodegenPolicy::for_machine(&machine);
+    let source: Arc<str> = Arc::from(src);
 
-    println!("ECM sweep for {tag} on {arch}");
-    println!(
-        "{:>7} | {:>7} {:>7} | {:>8} {:>8} {:>8} | {:>9} | sat.cores",
-        "N", "T_OL", "T_nOL", "L1L2", "L2L3", "L3Mem", "ECM_Mem"
-    );
+    let mut jobs = Vec::new();
     for exp in 4..13 {
         let n: i64 = 1 << exp;
-        let mut consts: HashMap<String, i64> = HashMap::new();
-        consts.insert("N".to_string(), n);
-        consts.insert("M".to_string(), n.min(600)); // keep 3D cases tractable
-        let Ok(analysis) = KernelAnalysis::from_program(&program, &consts) else {
-            continue;
+        jobs.push(SweepJob {
+            label: tag.clone(),
+            source: source.clone(),
+            machine: arch.clone(),
+            cores: 1,
+            constants: [("N".to_string(), n), ("M".to_string(), n.min(600))]
+                .into_iter()
+                .collect(),
+            predictor,
+        });
+    }
+
+    // Points whose halo does not fit are dropped up front (the engine
+    // fails the whole batch on any error, by design): a point is viable
+    // iff the static analysis binds and every loop has iterations.
+    let program = parse(src)?;
+    jobs.retain(|j| {
+        let consts: HashMap<String, i64> =
+            j.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        KernelAnalysis::from_program(&program, &consts)
+            .map(|a| a.loops.iter().all(|l| l.trip() > 0))
+            .unwrap_or(false)
+    });
+
+    let out = SweepEngine::new().run(&jobs)?;
+    println!("ECM sweep for {tag} on {arch} ({} predictor)", predictor.name());
+    println!(
+        "{:>7} | {:>7} {:>7} | {:>8} {:>8} {:>8} | {:>9} | sat | lc/walk | bands",
+        "N", "T_OL", "T_nOL", "L1L2", "L2L3", "L3Mem", "ECM_Mem"
+    );
+    for row in &out.rows {
+        let sat = if row.saturation_cores == u32::MAX {
+            "inf".to_string()
+        } else {
+            row.saturation_cores.to_string()
         };
-        if analysis.loops.iter().any(|l| l.trip() <= 0) {
-            continue;
-        }
-        let pm = PortModel::analyze(&analysis, &machine, &policy)?;
-        let traffic = CachePredictor::new(&machine).predict(&analysis)?;
-        let ecm = EcmModel::build(&pm, &traffic, &machine)?;
         println!(
-            "{:>7} | {:>7.1} {:>7.1} | {:>8.1} {:>8.1} {:>8.1} | {:>9.1} | {}",
-            n,
-            ecm.t_ol,
-            ecm.t_nol,
-            ecm.contributions[0].cycles,
-            ecm.contributions[1].cycles,
-            ecm.contributions[2].cycles,
-            ecm.t_mem(),
-            ecm.saturation_cores()
+            "{:>7} | {:>7.1} {:>7.1} | {:>8.1} {:>8.1} {:>8.1} | {:>9.1} | {:>3} | {:>3}/{:<4} | {}",
+            row.constants["N"],
+            row.t_ol,
+            row.t_nol,
+            row.links[0].2,
+            row.links[1].2,
+            row.links[2].2,
+            row.t_ecm_mem,
+            sat,
+            row.lc_fast_levels,
+            row.walk_levels,
+            row.lc_breakpoints.join(" ")
         );
     }
+    println!(
+        "memo: program {}h/{}m  analysis {}h/{}m  incore {}h/{}m  ({} threads)",
+        out.stats.program_hits,
+        out.stats.program_misses,
+        out.stats.analysis_hits,
+        out.stats.analysis_misses,
+        out.stats.incore_hits,
+        out.stats.incore_misses,
+        out.threads_used
+    );
     Ok(())
 }

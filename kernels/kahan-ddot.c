@@ -1,0 +1,10 @@
+double a[N], b[N], c;
+double sum, prod, t, y;
+
+for (int i = 0; i < N; ++i) {
+    prod = a[i] * b[i];
+    y = prod - c;
+    t = sum + y;
+    c = (t - sum) - y;
+    sum = t;
+}

@@ -1,0 +1,15 @@
+double u[M][N][N], v[M][N][N], roc[M][N][N];
+double c0, c1, c2, c3, c4, lap;
+
+for (int k = 4; k < M - 4; k++) {
+    for (int j = 4; j < N - 4; j++) {
+        for (int i = 4; i < N - 4; i++) {
+            lap = c0 * v[k][j][i]
+                + c1 * (v[k][j][i+1] + v[k][j][i-1] + v[k][j+1][i] + v[k][j-1][i] + v[k+1][j][i] + v[k-1][j][i])
+                + c2 * (v[k][j][i+2] + v[k][j][i-2] + v[k][j+2][i] + v[k][j-2][i] + v[k+2][j][i] + v[k-2][j][i])
+                + c3 * (v[k][j][i+3] + v[k][j][i-3] + v[k][j+3][i] + v[k][j-3][i] + v[k+3][j][i] + v[k-3][j][i])
+                + c4 * (v[k][j][i+4] + v[k][j][i-4] + v[k][j+4][i] + v[k][j-4][i] + v[k+4][j][i] + v[k-4][j][i]);
+            u[k][j][i] = 2.0 * v[k][j][i] - u[k][j][i] + roc[k][j][i] * lap;
+        }
+    }
+}

@@ -1,0 +1,4 @@
+double a[N], b[N], c[N], d[N];
+
+for (int i = 0; i < N; i++)
+    a[i] = b[i] + c[i] * d[i];

@@ -1,73 +1,73 @@
 //! Regenerates paper **Figure 3**: single-core ECM contributions for the
 //! 3D long-range stencil versus the inner/middle dimension N on SNB,
 //! together with the layer-condition bands shown below the paper's plot.
+//!
+//! Since the sweep PR this bench runs on [`kerncraft::sweep::SweepEngine`]
+//! — the whole grid is evaluated in parallel with stage memoization, and
+//! the Auto cache predictor answers decisive levels analytically (the
+//! `lc/walk` column shows how many levels skipped the backward walk).
 
-use kerncraft::cache::CachePredictor;
-use kerncraft::incore::{CodegenPolicy, PortModel};
-use kerncraft::kernel::{parse, KernelAnalysis};
-use kerncraft::machine::MachineModel;
-use kerncraft::models::{reference, EcmModel};
-use std::collections::HashMap;
+use kerncraft::cache::CachePredictorKind;
+use kerncraft::models::reference;
+use kerncraft::sweep::{SweepEngine, SweepJob};
+use std::sync::Arc;
 
 fn main() {
-    let machine = MachineModel::snb();
-    let src = reference::KERNEL_LONG_RANGE;
-    let program = parse(src).unwrap();
-    let policy = CodegenPolicy::for_machine(&machine);
-
-    println!("=== Fig 3: long-range stencil ECM contributions vs N (SNB) ===");
-    println!(
-        "{:>6} | {:>7} {:>7} | {:>7} {:>7} {:>7} | {:>8} | layer conditions (dim@level)",
-        "N", "T_OL", "T_nOL", "L1L2", "L2L3", "L3Mem", "ECM_Mem"
-    );
+    let src: Arc<str> = Arc::from(reference::KERNEL_LONG_RANGE);
     // log-spaced N values covering the paper's 10..4000 range; M is kept
-    // equal to N as in the paper
+    // equal to N as in the paper (clamped so the halo fits)
     let ns: Vec<i64> = vec![
         10, 14, 20, 28, 40, 56, 80, 100, 140, 200, 280, 400, 560, 800, 1100, 1600, 2200, 3000,
     ];
-    for &n in &ns {
-        let consts: HashMap<String, i64> =
-            [("N".to_string(), n), ("M".to_string(), n.max(12))].into_iter().collect();
-        let analysis = match KernelAnalysis::from_program(&program, &consts) {
-            Ok(a) => a,
-            Err(_) => continue, // too small for the halo
-        };
-        if analysis.loops.iter().any(|l| l.trip() <= 0) {
-            continue;
-        }
-        let pm = PortModel::analyze(&analysis, &machine, &policy).unwrap();
-        let traffic = CachePredictor::new(&machine).predict(&analysis).unwrap();
-        let ecm = EcmModel::build(&pm, &traffic, &machine).unwrap();
+    let jobs: Vec<SweepJob> = ns
+        .iter()
+        .map(|&n| SweepJob {
+            label: "long-range".into(),
+            source: src.clone(),
+            machine: "SNB".into(),
+            cores: 1,
+            constants: [("N".to_string(), n), ("M".to_string(), n.max(12))]
+                .into_iter()
+                .collect(),
+            predictor: CachePredictorKind::Auto,
+        })
+        .collect();
 
-        // layer-condition band summary: innermost level where each dim's
-        // condition holds
-        let mut bands = Vec::new();
-        for dim in 0..analysis.loops.len() {
-            let holds: Vec<&str> = traffic
-                .layer_conditions
-                .iter()
-                .filter(|lc| lc.dim_index == dim && lc.satisfied)
-                .map(|lc| lc.level.as_str())
-                .collect();
-            bands.push(format!(
-                "{}@{}",
-                analysis.loops[dim].index,
-                holds.first().copied().unwrap_or("MEM")
-            ));
-        }
+    let t0 = std::time::Instant::now();
+    let out = SweepEngine::new().run(&jobs).expect("sweep failed");
+    let dt = t0.elapsed();
+
+    println!("=== Fig 3: long-range stencil ECM contributions vs N (SNB) ===");
+    println!(
+        "{:>6} | {:>7} {:>7} | {:>7} {:>7} {:>7} | {:>8} | lc/walk | layer conditions (dim@level)",
+        "N", "T_OL", "T_nOL", "L1L2", "L2L3", "L3Mem", "ECM_Mem"
+    );
+    for row in &out.rows {
+        let n = row.constants["N"];
         println!(
-            "{:>6} | {:>7.1} {:>7.1} | {:>7.1} {:>7.1} {:>7.1} | {:>8.1} | {}",
+            "{:>6} | {:>7.1} {:>7.1} | {:>7.1} {:>7.1} {:>7.1} | {:>8.1} | {:>3}/{:<3} | {}",
             n,
-            ecm.t_ol,
-            ecm.t_nol,
-            ecm.contributions[0].cycles,
-            ecm.contributions[1].cycles,
-            ecm.contributions[2].cycles,
-            ecm.t_mem(),
-            bands.join(" ")
+            row.t_ol,
+            row.t_nol,
+            row.links[0].2,
+            row.links[1].2,
+            row.links[2].2,
+            row.t_ecm_mem,
+            row.lc_fast_levels,
+            row.walk_levels,
+            row.lc_breakpoints.join(" ")
         );
     }
-    // the paper's Table 5 entry is the N=100 point
-    println!("(Table 5 uses the N=100 row; paper reference {{57 ‖ 53 | 24 | 24 | 17.0}})");
+    println!(
+        "(Table 5 uses the N=100 row; paper reference {{57 ‖ 53 | 24 | 24 | 17.0}})"
+    );
+    println!(
+        "{} points in {:.1} ms on {} threads; memo: {} program hits, {} incore hits",
+        out.rows.len(),
+        dt.as_secs_f64() * 1e3,
+        out.threads_used,
+        out.stats.program_hits,
+        out.stats.incore_hits
+    );
     println!("fig3 bench OK");
 }

@@ -1,0 +1,109 @@
+//! Sweep-engine benchmark: a 64-point Fig.-3-style grid (2D-5pt Jacobi,
+//! 16 sizes × 2 machines × 2 core counts) evaluated three ways:
+//!
+//! 1. **serial baseline** — 64 independent pipeline runs, re-parsing and
+//!    re-analyzing every point (what a shell loop over `kerncraft -p ECM`
+//!    would do), offset-walk predictor;
+//! 2. **engine, 1 thread** — memoized stages, Auto predictor;
+//! 3. **engine, N threads** — memoized + parallel, Auto predictor.
+//!
+//! Asserts that all three produce identical ECM numbers, then prints the
+//! timings (the PR's acceptance evidence: parallel+memoized beats the
+//! serial baseline on a multi-core runner).
+
+use kerncraft::cache::{CachePredictor, CachePredictorKind};
+use kerncraft::incore::{CodegenPolicy, PortModel};
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::models::{reference, EcmModel};
+use kerncraft::sweep::{build_jobs, SweepEngine};
+use kerncraft::util::{median, monotonic_ns};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let src = reference::KERNEL_2D5PT;
+    let ns: Vec<i64> = (7..23).map(|e| 1i64 << e).collect(); // 128 .. 4M
+    let machines = ["SNB".to_string(), "HSW".to_string()];
+    let cores = [1u32, 2];
+    let jobs = build_jobs(
+        "2d-5pt",
+        Arc::from(src),
+        &machines,
+        &cores,
+        &[("N".to_string(), ns.clone()), ("M".to_string(), vec![4000])],
+        CachePredictorKind::Auto,
+    );
+    assert_eq!(jobs.len(), 64);
+
+    // --- serial baseline: full pipeline per point, no memoization ---
+    let serial_run = || -> Vec<f64> {
+        let mut t_mems = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            let machine = kerncraft::cli::load_machine(&job.machine).unwrap();
+            let program = parse(src).unwrap();
+            let consts: HashMap<String, i64> =
+                job.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
+            let analysis = KernelAnalysis::from_program(&program, &consts).unwrap();
+            let pm = PortModel::analyze(
+                &analysis,
+                &machine,
+                &CodegenPolicy::for_machine(&machine),
+            )
+            .unwrap();
+            let traffic =
+                CachePredictor::with_cores(&machine, job.cores).predict(&analysis).unwrap();
+            let ecm = EcmModel::build(&pm, &traffic, &machine).unwrap();
+            t_mems.push(ecm.t_mem());
+        }
+        t_mems
+    };
+
+    let time_ms = |f: &mut dyn FnMut(), samples: usize| -> f64 {
+        let mut t = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = monotonic_ns();
+            f();
+            t.push((monotonic_ns() - t0) as f64 / 1e6);
+        }
+        median(&t)
+    };
+
+    let mut serial_result = Vec::new();
+    let serial_ms = time_ms(&mut || serial_result = serial_run(), 3);
+
+    let mut engine1_rows = Vec::new();
+    let engine1_ms = time_ms(
+        &mut || engine1_rows = SweepEngine::serial().run(&jobs).unwrap().rows,
+        3,
+    );
+
+    let mut enginep_rows = Vec::new();
+    let mut threads_used = 1;
+    let enginep_ms = time_ms(
+        &mut || {
+            let out = SweepEngine::new().run(&jobs).unwrap();
+            threads_used = out.threads_used;
+            enginep_rows = out.rows;
+        },
+        3,
+    );
+
+    // identical per-point numbers across all three paths
+    assert_eq!(engine1_rows.len(), serial_result.len());
+    for (row, want) in engine1_rows.iter().zip(&serial_result) {
+        assert_eq!(row.t_ecm_mem, *want, "engine(1) diverged at {:?}", row.constants);
+    }
+    assert_eq!(engine1_rows, enginep_rows, "parallel rows must be bit-identical");
+
+    println!("=== sweep bench: 64-point jacobi grid (16 N × 2 machines × 2 cores) ===");
+    println!("serial analyze calls : {serial_ms:>9.2} ms   (baseline)");
+    println!(
+        "engine, 1 thread     : {engine1_ms:>9.2} ms   ({:.2}x vs serial)",
+        serial_ms / engine1_ms
+    );
+    println!(
+        "engine, {threads_used:>2} threads   : {enginep_ms:>9.2} ms   ({:.2}x vs serial)",
+        serial_ms / enginep_ms
+    );
+    println!("sweep bench OK");
+}

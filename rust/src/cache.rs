@@ -1,30 +1,90 @@
 //! Data traffic analysis — the offset-set cache predictor of paper §4.5
 //! plus the analytic layer-condition evaluator of [18].
 //!
-//! For each cache level (inspected independently, as the paper describes)
-//! we walk the iteration space *backwards* from a steady-state "unit of
-//! work" (the inner iterations covering one cache line), accumulating the
-//! set of cache lines touched by reads, until the accumulated footprint
-//! exceeds the cache capacity. Unit-of-work read lines not present in
-//! that window are misses at this level and generate traffic to the next
-//! level. Write-allocate and eviction traffic are added per the paper:
-//! "all writes offsets are also treated as reads [and] added to an evict
-//! list and no caching is tracked on this" — one write-allocate transfer
-//! (unless the line is covered by reads) and one eviction transfer per
-//! store line per level.
+//! Two predictor back ends are available (mirroring upstream Kerncraft's
+//! `--cache-predictor` knob), selected via [`CachePredictorKind`]:
 //!
-//! The walk stops early once no original access could possibly be covered
-//! anymore (beyond the maximum reuse distance) — this is the hot path of
-//! the whole tool and is benchmarked by `benches/hotpath.rs`.
+//! * **Offsets** — for each cache level (inspected independently, as the
+//!   paper describes) we walk the iteration space *backwards* from a
+//!   steady-state "unit of work" (the inner iterations covering one cache
+//!   line), accumulating the set of cache lines touched by reads, until
+//!   the accumulated footprint exceeds the cache capacity. Unit-of-work
+//!   read lines not present in that window are misses at this level and
+//!   generate traffic to the next level. Write-allocate and eviction
+//!   traffic are added per the paper: "all writes offsets are also
+//!   treated as reads [and] added to an evict list and no caching is
+//!   tracked on this" — one write-allocate transfer (unless the line is
+//!   covered by reads) and one eviction transfer per store line per level.
+//!   The walk stops early once no original access could possibly be
+//!   covered anymore (beyond the maximum reuse distance) — this is the
+//!   hot path of the whole tool and is benchmarked by `benches/hotpath.rs`.
+//!
+//! * **LayerConditions** — the analytic evaluator of Stengel et al.: for
+//!   each level, find the outermost loop dimension whose layer condition
+//!   holds; per-array traffic is then the number of distinct access
+//!   "layers" in the dimensions outside it. O(#accesses) per level — no
+//!   walk at all.
+//!
+//! * **Auto** — consult the layer conditions first and take the analytic
+//!   answer only when it is *decisive* (clear margins on every condition,
+//!   unit-stride streaming shape); otherwise fall back to the offset
+//!   walk. Decisive levels therefore skip the documented hot path
+//!   entirely, which is what makes large sweeps (see [`crate::sweep`])
+//!   cheap. [`PredictorStats`] counts which path served each level.
 
 use crate::kernel::{DimAccess, KernelAnalysis, LinearAccess};
 use crate::machine::{MachineModel, StreamSig};
 use anyhow::{bail, Result};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+
+/// Which cache predictor back end to use (upstream `--cache-predictor`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CachePredictorKind {
+    /// Backward offset-walk simulation (the paper's §4.5 predictor).
+    #[default]
+    Offsets,
+    /// Pure analytic layer-condition evaluation (fast, steady-state only).
+    LayerConditions,
+    /// Layer conditions when decisive, offset walk otherwise.
+    Auto,
+}
+
+impl CachePredictorKind {
+    /// Parse a CLI spelling: `offsets`, `lc`/`layer-conditions`, `auto`.
+    pub fn parse(s: &str) -> Option<CachePredictorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "offsets" | "sim" => Some(CachePredictorKind::Offsets),
+            "lc" | "layerconditions" | "layer-conditions" => {
+                Some(CachePredictorKind::LayerConditions)
+            }
+            "auto" => Some(CachePredictorKind::Auto),
+            _ => None,
+        }
+    }
+
+    /// CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePredictorKind::Offsets => "offsets",
+            CachePredictorKind::LayerConditions => "lc",
+            CachePredictorKind::Auto => "auto",
+        }
+    }
+}
+
+/// Which back end served each cache level of a prediction — the
+/// observability hook for the layer-condition fast path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PredictorStats {
+    /// Levels answered analytically (backward walk skipped).
+    pub lc_fast_levels: u32,
+    /// Levels that ran the backward offset walk.
+    pub walk_levels: u32,
+}
 
 /// Traffic across the link between one cache level and the next-outer
 /// level, in cache lines per unit of work.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LevelTraffic {
     /// Cache level name on the inner side of the link ("L1" ⇒ L1↔L2).
     pub level: String,
@@ -79,6 +139,8 @@ pub struct TrafficPrediction {
     pub access_hit_level: Vec<String>,
     /// Layer-condition table.
     pub layer_conditions: Vec<LcEntry>,
+    /// Which back end served each level.
+    pub stats: PredictorStats,
 }
 
 impl TrafficPrediction {
@@ -102,17 +164,27 @@ pub struct CachePredictor<'m> {
     /// Cores assumed to be running this kernel concurrently: shared cache
     /// levels are partitioned accordingly.
     cores: u32,
+    kind: CachePredictorKind,
 }
 
 impl<'m> CachePredictor<'m> {
-    /// Predictor for single-core analysis.
+    /// Predictor for single-core analysis (offset walk).
     pub fn new(machine: &'m MachineModel) -> Self {
-        Self { machine, cores: 1 }
+        Self { machine, cores: 1, kind: CachePredictorKind::Offsets }
     }
 
     /// Predictor assuming `cores` active cores (shared caches divided).
     pub fn with_cores(machine: &'m MachineModel, cores: u32) -> Self {
-        Self { machine, cores: cores.max(1) }
+        Self { machine, cores: cores.max(1), kind: CachePredictorKind::Offsets }
+    }
+
+    /// Predictor with an explicit back-end choice.
+    pub fn with_kind(
+        machine: &'m MachineModel,
+        cores: u32,
+        kind: CachePredictorKind,
+    ) -> Self {
+        Self { machine, cores: cores.max(1), kind }
     }
 
     /// Effective capacity of a cache level for one core.
@@ -134,6 +206,18 @@ impl<'m> CachePredictor<'m> {
         if analysis.loops.is_empty() {
             bail!("kernel has no loops");
         }
+        for l in &analysis.loops {
+            if l.trip() <= 0 {
+                bail!(
+                    "empty iteration space: loop '{}' runs {}..{} (step {}) — no iterations",
+                    l.index,
+                    l.start,
+                    l.end,
+                    l.step
+                );
+            }
+        }
+        validate_magnitudes(analysis)?;
         let layout = ArrayLayout::new(analysis, cl);
         let unit_iterations = analysis.unit_of_work(cl);
 
@@ -158,12 +242,13 @@ impl<'m> CachePredictor<'m> {
         // iterations available before the unit start (for the space cap)
         let mut before: i64 = 0;
         {
-            // count lexicographic predecessors of `center`
+            // count lexicographic predecessors of `center` (saturating:
+            // huge iteration spaces only need "more than the reuse cap")
             let mut mult: i64 = 1;
             for k in (0..analysis.loops.len()).rev() {
                 let l = &analysis.loops[k];
                 let pos = ((center[k] - l.start) / l.step).max(0);
-                before += pos * mult;
+                before = before.saturating_add(pos.saturating_mul(mult));
                 mult = mult.saturating_mul(trips[k]);
             }
         }
@@ -191,17 +276,56 @@ impl<'m> CachePredictor<'m> {
                 store_lines.insert(layout.line_of(acc, p, analysis));
             }
         }
+        let store_arrays: HashSet<usize> = analysis.writes.iter().map(|w| w.array).collect();
 
         // --- backward-walk reuse cap ---
         // Beyond the maximum pairwise offset distance (in inner
         // iterations) no unit line can be covered anymore.
-        let reuse_cap = max_reuse_iterations(analysis) + unit_iterations as i64 + 8 * epc;
+        let reuse_cap = max_reuse_iterations(analysis)?
+            .saturating_add(unit_iterations as i64)
+            .saturating_add(8i64.saturating_mul(epc));
 
-        // --- per-level windows ---
+        // --- layer conditions & analytic oracle ---
+        let layer_conditions = layer_conditions(analysis, self.machine, self.cores);
+        let oracle = LcOracle::build(analysis, cl);
+
+        // --- per-level traffic ---
+        let mut stats = PredictorStats::default();
         let mut levels = Vec::new();
         let mut hit_level: Vec<Option<String>> = vec![None; analysis.reads.len()];
         for lvl in self.machine.cache_levels() {
             let size = self.effective_size(lvl);
+            let decision = match self.kind {
+                CachePredictorKind::Offsets => None,
+                CachePredictorKind::LayerConditions => {
+                    Some(oracle.decide(&layer_conditions, &lvl.name, size))
+                }
+                CachePredictorKind::Auto => {
+                    oracle.try_decide(&layer_conditions, &lvl.name, size)
+                }
+            };
+            if let Some(d) = decision {
+                // analytic fast path: the backward walk is skipped
+                stats.lc_fast_levels += 1;
+                let hits = unit_read_lines.len().saturating_sub(d.read_miss_total);
+                let miss_streams =
+                    stream_signature(analysis, &d.miss_per_array, &store_arrays);
+                for (ix, covered) in d.covered.iter().enumerate() {
+                    if hit_level[ix].is_none() && *covered {
+                        hit_level[ix] = Some(lvl.name.clone());
+                    }
+                }
+                levels.push(LevelTraffic {
+                    level: lvl.name.clone(),
+                    read_miss_lines: d.read_miss_total as f64,
+                    write_allocate_lines: d.write_allocate as f64,
+                    evict_lines: d.evict as f64,
+                    hit_lines: hits as f64,
+                    miss_streams,
+                });
+                continue;
+            }
+            stats.walk_levels += 1;
             let max_lines = (size / cl) as usize;
             let window = self.backward_window(
                 analysis,
@@ -235,7 +359,11 @@ impl<'m> CachePredictor<'m> {
                 .iter()
                 .filter(|l| !window.contains(l.0, l.1) && !unit_read_lines.contains(l))
                 .count();
-            let miss_streams = miss_stream_signature(analysis, &miss_lines, &store_lines);
+            let mut miss_per_array: HashMap<usize, u32> = HashMap::new();
+            for (a, _) in &miss_lines {
+                *miss_per_array.entry(*a).or_insert(0) += 1;
+            }
+            let miss_streams = stream_signature(analysis, &miss_per_array, &store_arrays);
             levels.push(LevelTraffic {
                 level: lvl.name.clone(),
                 read_miss_lines: miss_lines.len() as f64,
@@ -251,14 +379,13 @@ impl<'m> CachePredictor<'m> {
             .map(|h| h.unwrap_or_else(|| "MEM".to_string()))
             .collect();
 
-        let layer_conditions = layer_conditions(analysis, self.machine, self.cores);
-
         Ok(TrafficPrediction {
             unit_iterations,
             cacheline_bytes: cl,
             levels,
             access_hit_level,
             layer_conditions,
+            stats,
         })
     }
 
@@ -295,6 +422,261 @@ impl<'m> CachePredictor<'m> {
             }
         }
         window
+    }
+}
+
+/// One level's analytic (layer-condition) traffic answer.
+struct LcDecision {
+    /// Distinct missing streams per array (cache lines per unit of work).
+    miss_per_array: HashMap<usize, u32>,
+    read_miss_total: usize,
+    write_allocate: usize,
+    evict: usize,
+    /// Per `analysis.reads` entry: covered (hits) at this level?
+    covered: Vec<bool>,
+}
+
+/// Per-access data the analytic evaluator needs, precomputed once.
+struct LcAccess {
+    array: usize,
+    /// Linear stride coefficient per loop dim (elements/iteration).
+    coeffs: Vec<i64>,
+    /// Summed relative offsets per loop dim (iteration units).
+    rel: Vec<i64>,
+    /// Full linear offset (elements).
+    offset: i64,
+}
+
+/// The analytic layer-condition evaluator (fast path).
+struct LcOracle {
+    reads: Vec<LcAccess>,
+    writes: Vec<LcAccess>,
+    cacheline: u64,
+    /// Element size of every accessed array (None when mixed — the
+    /// streaming-shape preconditions then fail).
+    uniform_elem: Option<u64>,
+    /// Structural preconditions for Auto mode (unit-stride streaming nest).
+    shape_ok: bool,
+}
+
+impl LcOracle {
+    fn build(analysis: &KernelAnalysis, cacheline: u64) -> LcOracle {
+        let n_loops = analysis.loops.len();
+        let var_of: Vec<&str> = analysis.loops.iter().map(|l| l.index.as_str()).collect();
+        let mk = |acc: &LinearAccess| -> LcAccess {
+            let mut rel = vec![0i64; n_loops];
+            for d in &acc.dims {
+                if let DimAccess::Relative { var, offset } = d {
+                    if let Some(ix) = var_of.iter().position(|v| v == var) {
+                        rel[ix] += offset;
+                    }
+                }
+            }
+            LcAccess {
+                array: acc.array,
+                coeffs: acc.coeffs.clone(),
+                rel,
+                offset: acc.offset,
+            }
+        };
+        let reads: Vec<LcAccess> = analysis.reads.iter().map(mk).collect();
+        let writes: Vec<LcAccess> = analysis.writes.iter().map(mk).collect();
+
+        let mut elem_sizes: Vec<u64> =
+            analysis.arrays.iter().map(|a| a.ty.size()).collect();
+        elem_sizes.sort_unstable();
+        elem_sizes.dedup();
+        let uniform_elem = if elem_sizes.len() == 1 { Some(elem_sizes[0]) } else { None };
+
+        // Auto-mode structural preconditions: the closed-form per-unit
+        // traffic (one new line per stream per unit of work) only holds
+        // for dense unit-stride streaming nests in steady state.
+        let mut shape_ok = uniform_elem == Some(analysis.element.size());
+        shape_ok &= analysis.loops.iter().all(|l| l.step == 1 && l.trip() >= 4);
+        for acc in analysis.reads.iter().chain(analysis.writes.iter()) {
+            // every access streams with the inner loop at unit stride
+            shape_ok &= acc.coeffs.last() == Some(&1);
+            // every loop dimension advances the access: outer-invariant
+            // accesses (coeff 0) are re-touched each outer iteration — a
+            // reuse pattern the stream classes don't model (the walk does)
+            shape_ok &= acc.coeffs.iter().all(|c| *c > 0);
+            // each loop var indexes at most one array dimension
+            let mut seen: Vec<&str> = Vec::new();
+            for d in &acc.dims {
+                if let DimAccess::Relative { var, .. } = d {
+                    if seen.contains(&var.as_str()) {
+                        shape_ok = false;
+                    }
+                    seen.push(var);
+                }
+            }
+        }
+        // write streams must either be the only streams of their array or
+        // coincide exactly with a read stream: the closed-form
+        // write-allocate rule only covers those two cases
+        for w in &writes {
+            let array_reads: Vec<&LcAccess> =
+                reads.iter().filter(|r| r.array == w.array).collect();
+            if !array_reads.is_empty()
+                && !array_reads
+                    .iter()
+                    .any(|r| r.coeffs == w.coeffs && r.rel == w.rel && r.offset == w.offset)
+            {
+                shape_ok = false;
+            }
+        }
+
+        LcOracle { reads, writes, cacheline, uniform_elem, shape_ok }
+    }
+
+    /// Required bytes of the condition at depth `d` for `level`.
+    fn required<'e>(entries: &'e [LcEntry], level: &str, d: usize) -> Option<&'e LcEntry> {
+        entries.iter().find(|e| e.level == level && e.dim_index == d)
+    }
+
+    /// Auto mode: answer only when decisive, with safety margins on every
+    /// condition so the result is bit-identical to the offset walk.
+    fn try_decide(
+        &self,
+        entries: &[LcEntry],
+        level: &str,
+        size: u64,
+    ) -> Option<LcDecision> {
+        if !self.shape_ok || size < 64 * self.cacheline {
+            return None;
+        }
+        let n_loops = self.reads.first().map(|a| a.rel.len()).unwrap_or(0);
+        if n_loops == 0 {
+            return None;
+        }
+        // margin scan, outermost first: the chosen dimension must hold
+        // with 2x headroom and every outer dimension must fail by 2x.
+        let mut d_min: Option<usize> = None;
+        for d in 0..n_loops {
+            let e = Self::required(entries, level, d)?;
+            let r = e.required_bytes;
+            if r == 0 {
+                return None; // dimension unused by any stream: indecisive
+            }
+            if r.saturating_mul(2) <= size {
+                d_min = Some(d);
+                break;
+            }
+            if r < size.saturating_mul(2) {
+                return None; // gray zone around the breakpoint
+            }
+        }
+        let d_min = d_min?;
+        Some(self.evaluate(d_min, size))
+    }
+
+    /// Forced layer-condition mode: always answers, using the plain
+    /// satisfied flags (approximate near breakpoints, exact in steady
+    /// state away from them).
+    fn decide(&self, entries: &[LcEntry], level: &str, size: u64) -> LcDecision {
+        let n_loops = self
+            .reads
+            .iter()
+            .chain(self.writes.iter())
+            .next()
+            .map(|a| a.rel.len())
+            .unwrap_or(0);
+        let mut d_min = n_loops; // n_loops ⇒ no condition holds: full resolution
+        for d in 0..n_loops {
+            if Self::required(entries, level, d).map(|e| e.satisfied).unwrap_or(false) {
+                d_min = d;
+                break;
+            }
+        }
+        self.evaluate(d_min, size)
+    }
+
+    /// Shared evaluation: stream classes with dims `>= d_min` collapsed.
+    /// Per unit of work each surviving class (one "leading layer") misses
+    /// exactly one cache line; trailing members of a class hit. Note there
+    /// is deliberately no whole-array residency shortcut: like the offset
+    /// walk (whose window is capped at the reuse distance), reuse only
+    /// exists between accesses — a stream touched once is a miss no matter
+    /// how small its array is.
+    fn evaluate(&self, d_min: usize, size: u64) -> LcDecision {
+        // class key: (array, coeffs, outer rel offsets, residue). Streams
+        // of one array that differ only by a small constant lag share the
+        // leading line, so nearby residues merge into one cluster below.
+        let key_of = |acc: &LcAccess| -> (usize, Vec<i64>, Vec<i64>, i64) {
+            let stripped: i64 = acc
+                .rel
+                .iter()
+                .zip(&acc.coeffs)
+                .skip(d_min)
+                .map(|(r, c)| r * c)
+                .sum();
+            (
+                acc.array,
+                acc.coeffs.clone(),
+                acc.rel.iter().take(d_min).copied().collect(),
+                acc.offset - stripped,
+            )
+        };
+        let elem = self.uniform_elem.unwrap_or(8) as i64;
+        let merge_gap = ((size / 4) as i64 / elem).max(2 * self.cacheline as i64 / elem);
+
+        // group reads into classes, merging nearby residues
+        let mut groups: HashMap<(usize, Vec<i64>, Vec<i64>), Vec<(i64, Vec<i64>, usize)>> =
+            HashMap::new();
+        for (ix, acc) in self.reads.iter().enumerate() {
+            let (a, c, outer, res) = key_of(acc);
+            // ties on residue break by full rel vector (outer-to-inner
+            // lexicographic): the true stream leader is the access that
+            // touches new data first
+            groups.entry((a, c, outer)).or_default().push((res, acc.rel.clone(), ix));
+        }
+        let mut miss_per_array: HashMap<usize, u32> = HashMap::new();
+        let mut covered = vec![false; self.reads.len()];
+        for (key, members) in &groups {
+            let a = key.0;
+            let mut ms = members.clone();
+            ms.sort();
+            // split residues into clusters separated by more than the
+            // merge gap; each cluster is one stream with one leading line
+            let mut cluster_start = 0usize;
+            for i in 0..ms.len() {
+                let is_last = i + 1 == ms.len();
+                let gap_breaks = !is_last && ms[i + 1].0 - ms[i].0 > merge_gap;
+                if is_last || gap_breaks {
+                    *miss_per_array.entry(a).or_insert(0) += 1;
+                    // every member except the cluster leader (max key)
+                    // trails another access of the same stream and hits
+                    for (_, _, ix) in &ms[cluster_start..i] {
+                        covered[*ix] = true;
+                    }
+                    cluster_start = i + 1;
+                }
+            }
+        }
+        let read_miss_total: usize = miss_per_array.values().map(|v| *v as usize).sum();
+
+        // stores: same classing; evict is unconditional ("no caching is
+        // tracked on the evict list"), write-allocate is waived when a
+        // read stream shares the class (its lines are then read-covered)
+        let gap = merge_gap.max(1);
+        let mut store_groups: HashSet<(usize, Vec<i64>, Vec<i64>, i64)> = HashSet::new();
+        for acc in &self.writes {
+            let (a, c, outer, res) = key_of(acc);
+            store_groups.insert((a, c, outer, res.div_euclid(gap)));
+        }
+        let read_keys: HashSet<(usize, Vec<i64>, Vec<i64>, i64)> = self
+            .reads
+            .iter()
+            .map(|acc| {
+                let (a, c, outer, res) = key_of(acc);
+                (a, c, outer, res.div_euclid(gap))
+            })
+            .collect();
+        let evict = store_groups.len();
+        let write_allocate =
+            store_groups.iter().filter(|k| !read_keys.contains(*k)).count();
+
+        LcDecision { miss_per_array, read_miss_total, write_allocate, evict, covered }
     }
 }
 
@@ -437,10 +819,41 @@ fn step_backward(pos: &mut [i64], analysis: &KernelAnalysis, steps: &[i64]) -> b
     false
 }
 
+/// Reject access offsets / stride coefficients whose line arithmetic
+/// would overflow `i64` (wrapping would silently corrupt the prediction,
+/// and the backward walk could spin on a wrapped reuse cap).
+fn validate_magnitudes(analysis: &KernelAnalysis) -> Result<()> {
+    let overflow = |name: &str| {
+        anyhow::anyhow!(
+            "access magnitudes of array '{name}' overflow the address arithmetic \
+             (offset/stride × iteration count exceeds i64)"
+        )
+    };
+    for acc in analysis.reads.iter().chain(analysis.writes.iter()) {
+        let name = &analysis.arrays[acc.array].name;
+        let elem = analysis.arrays[acc.array].ty.size() as i64;
+        let mut extreme: i64 = acc.offset;
+        for (c, l) in acc.coeffs.iter().zip(&analysis.loops) {
+            let bound = l.start.unsigned_abs().max(l.end.unsigned_abs());
+            let bound = i64::try_from(bound).map_err(|_| overflow(name))?;
+            let term = c.checked_mul(bound).ok_or_else(|| overflow(name))?;
+            let term = term.checked_abs().ok_or_else(|| overflow(name))?;
+            extreme = extreme
+                .checked_abs()
+                .and_then(|e| e.checked_add(term))
+                .ok_or_else(|| overflow(name))?;
+        }
+        extreme.checked_mul(elem).ok_or_else(|| overflow(name))?;
+    }
+    Ok(())
+}
+
 /// Maximum reuse distance in inner-loop iterations: the largest pairwise
 /// linear-offset difference among accesses to the same array, divided by
-/// the inner stride coefficient.
-fn max_reuse_iterations(analysis: &KernelAnalysis) -> i64 {
+/// the inner stride coefficient. Errors (instead of wrapping) on offset
+/// spans that overflow `i64` — degenerate inputs the walk could otherwise
+/// spin on.
+fn max_reuse_iterations(analysis: &KernelAnalysis) -> Result<i64> {
     let mut max_iters: i64 = 0;
     for a in 0..analysis.arrays.len() {
         let offs: Vec<i64> = analysis
@@ -462,22 +875,30 @@ fn max_reuse_iterations(analysis: &KernelAnalysis) -> i64 {
             .max(1);
         let max = offs.iter().max().copied().unwrap_or(0);
         let min = offs.iter().min().copied().unwrap_or(0);
-        max_iters = max_iters.max((max - min) / inner_coeff + 1);
+        let span = max.checked_sub(min).ok_or_else(|| {
+            anyhow::anyhow!(
+                "access offset span of array '{}' overflows ({} .. {})",
+                analysis.arrays[a].name,
+                min,
+                max
+            )
+        })?;
+        max_iters = max_iters.max(span / inner_coeff + 1);
     }
-    max_iters
+    Ok(max_iters)
 }
 
 /// Build the stream signature of a level's misses (for benchmark
-/// matching). Streams group accesses by (array, row-class): two accesses
-/// differing only in the innermost relative offset belong to one stream.
-fn miss_stream_signature(
+/// matching) from per-array miss-line counts. Streams group accesses by
+/// (array, row-class): two accesses differing only in the innermost
+/// relative offset belong to one stream.
+fn stream_signature(
     analysis: &KernelAnalysis,
-    miss_lines: &HashSet<(usize, i64)>,
-    store_lines: &HashSet<(usize, i64)>,
+    miss_per_array: &HashMap<usize, u32>,
+    store_arrays: &HashSet<usize>,
 ) -> StreamSig {
-    use std::collections::HashMap;
     // arrays that are written / read
-    let written: HashSet<usize> = analysis.writes.iter().map(|w| w.array).collect();
+    let written: &HashSet<usize> = store_arrays;
     let read: HashSet<usize> = analysis.reads.iter().map(|r| r.array).collect();
 
     // group read accesses into row streams: key strips the innermost
@@ -502,15 +923,11 @@ fn miss_stream_signature(
     for (a, _, _) in &streams {
         *per_array_streams.entry(*a).or_insert(0) += 1;
     }
-    let mut per_array_miss_lines: HashMap<usize, u32> = HashMap::new();
-    for (a, _) in miss_lines {
-        *per_array_miss_lines.entry(*a).or_insert(0) += 1;
-    }
 
     let mut sig = StreamSig { reads: 0, read_writes: 0, writes: 0 };
     for (a, n_streams) in per_array_streams {
         // at most one miss stream per distinct miss line of the array
-        let n = n_streams.min(per_array_miss_lines.get(&a).copied().unwrap_or(0));
+        let n = n_streams.min(miss_per_array.get(&a).copied().unwrap_or(0));
         if n == 0 {
             continue;
         }
@@ -522,13 +939,8 @@ fn miss_stream_signature(
         }
     }
     // pure write streams: written arrays never read
-    let mut pure_writes: HashSet<usize> = HashSet::new();
-    for (a, _) in store_lines {
-        if !read.contains(a) {
-            pure_writes.insert(*a);
-        }
-    }
-    sig.writes += pure_writes.len() as u32;
+    let pure_writes = written.iter().filter(|a| !read.contains(a)).count();
+    sig.writes += pure_writes as u32;
     sig
 }
 
@@ -585,7 +997,8 @@ fn layer_conditions(
                 let n_layers = (hi - lo) as u64 + 1;
                 // one layer = memory touched while the dim-d index is
                 // fixed = the dim-d stride of this array
-                required += n_layers * coeff as u64 * arr.ty.size();
+                required = required
+                    .saturating_add(n_layers.saturating_mul(coeff as u64) * arr.ty.size());
             }
             out.push(LcEntry {
                 level: lvl.name.clone(),
@@ -619,6 +1032,12 @@ mod tests {
         "#;
         let p = parse(src).unwrap();
         KernelAnalysis::from_program(&p, &consts(&[("N", n), ("M", m)])).unwrap()
+    }
+
+    fn triad(n: i64) -> KernelAnalysis {
+        let src = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+        let p = parse(src).unwrap();
+        KernelAnalysis::from_program(&p, &consts(&[("N", n)])).unwrap()
     }
 
     #[test]
@@ -656,9 +1075,7 @@ mod tests {
 
     #[test]
     fn triad_streams_miss_everywhere() {
-        let src = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
-        let p = parse(src).unwrap();
-        let a = KernelAnalysis::from_program(&p, &consts(&[("N", 8_000_000)])).unwrap();
+        let a = triad(8_000_000);
         let m = MachineModel::snb();
         let t = CachePredictor::new(&m).predict(&a).unwrap();
         for lvl in &t.levels {
@@ -806,5 +1223,127 @@ mod tests {
         for lvl in &t.levels {
             assert_eq!(lvl.hit_lines + lvl.read_miss_lines, total0, "{}", lvl.level);
         }
+    }
+
+    // --- layer-condition fast path ---
+
+    /// Compare every externally-visible field of two predictions.
+    fn assert_traffic_eq(a: &TrafficPrediction, b: &TrafficPrediction, ctx: &str) {
+        assert_eq!(a.unit_iterations, b.unit_iterations, "{ctx}: unit");
+        assert_eq!(a.levels.len(), b.levels.len(), "{ctx}: levels");
+        for (x, y) in a.levels.iter().zip(&b.levels) {
+            assert_eq!(x, y, "{ctx}: level {}", x.level);
+        }
+        assert_eq!(a.access_hit_level, b.access_hit_level, "{ctx}: hit levels");
+    }
+
+    #[test]
+    fn auto_matches_offsets_on_jacobi_across_lc_breakpoint() {
+        let m = MachineModel::snb();
+        // N=4000: L1 condition clearly fails (128 kB vs 32 kB), L2/L3
+        // clearly hold. N=256: all levels hold. Both sides of the Fig. 3
+        // breakpoint must agree bit-identically with the walk.
+        for (n, mm) in [(4000i64, 4000i64), (256, 4000)] {
+            let a = jacobi(n, mm);
+            let walk = CachePredictor::new(&m).predict(&a).unwrap();
+            let auto = CachePredictor::with_kind(&m, 1, CachePredictorKind::Auto)
+                .predict(&a)
+                .unwrap();
+            assert_traffic_eq(&walk, &auto, &format!("jacobi N={n}"));
+            assert_eq!(
+                auto.stats.walk_levels, 0,
+                "all levels decisive at N={n}: {:?}",
+                auto.stats
+            );
+            assert_eq!(auto.stats.lc_fast_levels, 3);
+            assert_eq!(walk.stats.lc_fast_levels, 0, "offsets mode never uses LC");
+        }
+    }
+
+    #[test]
+    fn auto_matches_offsets_on_triad_both_sizes() {
+        let m = MachineModel::snb();
+        for n in [256i64, 500_000] {
+            let a = triad(n);
+            let walk = CachePredictor::new(&m).predict(&a).unwrap();
+            let auto = CachePredictor::with_kind(&m, 1, CachePredictorKind::Auto)
+                .predict(&a)
+                .unwrap();
+            assert_traffic_eq(&walk, &auto, &format!("triad N={n}"));
+            assert_eq!(auto.stats.walk_levels, 0, "triad N={n}: {:?}", auto.stats);
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_to_walk_in_gray_zone() {
+        // N=2020: the L1 j-condition needs ~63 kB against a 32 kB cache —
+        // inside the 2x safety margin, so Auto must run the walk there
+        // (and still agree with it, trivially).
+        let m = MachineModel::snb();
+        let a = jacobi(2020, 2020);
+        let walk = CachePredictor::new(&m).predict(&a).unwrap();
+        let auto =
+            CachePredictor::with_kind(&m, 1, CachePredictorKind::Auto).predict(&a).unwrap();
+        assert_traffic_eq(&walk, &auto, "jacobi gray zone");
+        assert!(auto.stats.walk_levels >= 1, "{:?}", auto.stats);
+        assert!(auto.stats.lc_fast_levels >= 1, "{:?}", auto.stats);
+    }
+
+    #[test]
+    fn forced_lc_mode_answers_every_level() {
+        let m = MachineModel::snb();
+        let a = jacobi(6000, 6000);
+        let lc = CachePredictor::with_kind(&m, 1, CachePredictorKind::LayerConditions)
+            .predict(&a)
+            .unwrap();
+        assert_eq!(lc.stats.walk_levels, 0);
+        assert_eq!(lc.stats.lc_fast_levels, 3);
+        // steady-state numbers match the walk for this far-from-breakpoint size
+        let walk = CachePredictor::new(&m).predict(&a).unwrap();
+        assert_traffic_eq(&walk, &lc, "jacobi forced LC");
+    }
+
+    #[test]
+    fn predictor_kind_parsing() {
+        assert_eq!(CachePredictorKind::parse("offsets"), Some(CachePredictorKind::Offsets));
+        assert_eq!(CachePredictorKind::parse("LC"), Some(CachePredictorKind::LayerConditions));
+        assert_eq!(
+            CachePredictorKind::parse("layer-conditions"),
+            Some(CachePredictorKind::LayerConditions)
+        );
+        assert_eq!(CachePredictorKind::parse("auto"), Some(CachePredictorKind::Auto));
+        assert_eq!(CachePredictorKind::parse("bogus"), None);
+    }
+
+    // --- degenerate inputs ---
+
+    #[test]
+    fn empty_iteration_space_is_a_clean_error() {
+        // M=2 leaves the outer loop with zero iterations (1..1).
+        let m = MachineModel::snb();
+        let a = jacobi(100, 2);
+        let err = CachePredictor::new(&m).predict(&a).unwrap_err();
+        assert!(format!("{err}").contains("empty iteration space"), "{err}");
+    }
+
+    #[test]
+    fn absurd_offset_span_is_a_clean_error() {
+        // Hand-craft an analysis whose offsets would overflow the reuse
+        // computation; predict() must error, not wrap or spin.
+        let mut a = jacobi(64, 64);
+        a.reads[0].offset = i64::MIN + 1;
+        a.reads[1].offset = i64::MAX - 1;
+        let m = MachineModel::snb();
+        let err = CachePredictor::new(&m).predict(&a).unwrap_err();
+        assert!(format!("{err}").contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn single_iteration_loops_are_fine() {
+        // 3x3 jacobi: each loop runs exactly once; no spin, no panic.
+        let m = MachineModel::snb();
+        let a = jacobi(3, 3);
+        let t = CachePredictor::new(&m).predict(&a).unwrap();
+        assert_eq!(t.levels.len(), 3);
     }
 }

@@ -9,16 +9,30 @@
 //! Analysis modes (paper §4.6): `ECM`, `ECMData`, `ECMCPU`, `Roofline`,
 //! `RooflinePort` (the paper's RooflineIACA), `Benchmark`. Extras beyond
 //! the paper CLI: `--cache-viz` (Fig 2), `--machine-report` (Table 1),
-//! `--bench-path virtual|native|pjrt` for the three Benchmark backends.
+//! `--bench-path virtual|native|pjrt` for the three Benchmark backends,
+//! `--cache-predictor offsets|lc|auto` (upstream Kerncraft's knob), and
+//! the batched **sweep** subcommand:
+//!
+//! ```text
+//! kerncraft sweep -m SNB,HSW kernels/2d-5pt.c -D N 128:8M:log2 -D M 4000 \
+//!           [--cores 1,2] [--predictor auto] [--format csv|json] [--threads K]
+//! ```
+//!
+//! Grid axes use `START:END[:log2|*K|+K]` with binary magnitude suffixes
+//! (`8M` = 8·1024²); every combination of machine × cores × grid point is
+//! evaluated by [`crate::sweep::SweepEngine`] in parallel with
+//! stage memoization, and emitted as CSV or JSON rows.
 
-use crate::cache::CachePredictor;
+use crate::cache::{CachePredictor, CachePredictorKind};
 use crate::incore::{CodegenPolicy, PortModel};
 use crate::kernel::{parse, KernelAnalysis};
 use crate::machine::MachineModel;
 use crate::models::{EcmModel, RooflineModel, ScalingModel, Unit};
 use crate::report;
+use crate::sweep;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -35,6 +49,7 @@ pub struct Args {
     pub bench_path: String,
     pub artifacts_dir: String,
     pub scalar_codegen: bool,
+    pub cache_predictor: CachePredictorKind,
 }
 
 /// Analysis mode (paper §4.6).
@@ -77,6 +92,7 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
         bench_path: "virtual".to_string(),
         artifacts_dir: "artifacts".to_string(),
         scalar_codegen: false,
+        cache_predictor: CachePredictorKind::Offsets,
     };
     let mut it = argv.iter().peekable();
     let mut next_val = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
@@ -108,6 +124,11 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
                 let v = next_val(&mut it, "--unit")?;
                 args.unit = Unit::parse(&v).ok_or_else(|| anyhow!("unknown unit '{v}'"))?;
             }
+            "--cache-predictor" => {
+                let v = next_val(&mut it, "--cache-predictor")?;
+                args.cache_predictor = CachePredictorKind::parse(&v)
+                    .ok_or_else(|| anyhow!("unknown cache predictor '{v}' (offsets|lc|auto)"))?;
+            }
             "-v" | "--verbose" => args.verbose = true,
             "--cache-viz" => args.cache_viz = true,
             "--machine-report" => args.machine_report = true,
@@ -135,8 +156,15 @@ pub fn usage() -> String {
      modes: ECM ECMData ECMCPU Roofline RooflinePort Benchmark\n\
      MACHINE: SNB | HSW | path/to/machine.yml\n\
      options: --cores N  --unit {cy/CL,It/s,FLOP/s}  -v\n\
+              --cache-predictor {offsets,lc,auto}\n\
               --cache-viz  --machine-report  --scalar\n\
-              --bench-path {virtual,native,pjrt}  --artifacts DIR"
+              --bench-path {virtual,native,pjrt}  --artifacts DIR\n\
+     \n\
+     batched sweeps over problem-size grids:\n\
+     kerncraft sweep [-m M1,M2] kernel.c -D NAME GRID [-D NAME2 GRID2 ...]\n\
+              GRID: VALUE | START:END[:log2|*K|+K]   (suffixes k/M/G, 1024-based)\n\
+              --cores LIST  --predictor {offsets,lc,auto}  --threads K\n\
+              --format {csv,json}  --serial  -v"
         .to_string()
 }
 
@@ -150,6 +178,9 @@ pub fn load_machine(name: &str) -> Result<MachineModel> {
 
 /// Run the CLI; returns the report text.
 pub fn run(argv: &[String]) -> Result<String> {
+    if argv.first().map(String::as_str) == Some("sweep") {
+        return run_sweep(&argv[1..]);
+    }
     let args = parse_args(argv)?;
     let machine = load_machine(&args.machine)?;
     let mut out = String::new();
@@ -179,6 +210,8 @@ pub fn run(argv: &[String]) -> Result<String> {
     } else {
         CodegenPolicy::for_machine(&machine)
     };
+    let predictor =
+        |m: &MachineModel| CachePredictor::with_kind(m, args.cores, args.cache_predictor);
 
     match args.mode {
         Mode::EcmCpu => {
@@ -186,8 +219,7 @@ pub fn run(argv: &[String]) -> Result<String> {
             out.push_str(&report::incore_report(&pm));
         }
         Mode::EcmData => {
-            let traffic =
-                CachePredictor::with_cores(&machine, args.cores).predict(&analysis)?;
+            let traffic = predictor(&machine).predict(&analysis)?;
             let ecm = EcmModel::build_data_only(&traffic, &machine)?;
             let sc = ScalingModel::build(&ecm, &machine);
             out.push_str(&report::ecm_report(&ecm, &sc, args.unit, args.verbose));
@@ -197,8 +229,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         }
         Mode::Ecm => {
             let pm = PortModel::analyze(&analysis, &machine, &policy)?;
-            let traffic =
-                CachePredictor::with_cores(&machine, args.cores).predict(&analysis)?;
+            let traffic = predictor(&machine).predict(&analysis)?;
             let ecm = EcmModel::build(&pm, &traffic, &machine)?;
             let sc = ScalingModel::build(&ecm, &machine);
             if args.verbose {
@@ -210,8 +241,7 @@ pub fn run(argv: &[String]) -> Result<String> {
             }
         }
         Mode::Roofline | Mode::RooflinePort => {
-            let traffic =
-                CachePredictor::with_cores(&machine, args.cores).predict(&analysis)?;
+            let traffic = predictor(&machine).predict(&analysis)?;
             let pm = if args.mode == Mode::RooflinePort {
                 Some(PortModel::analyze(&analysis, &machine, &policy)?)
             } else {
@@ -271,6 +301,162 @@ pub fn run(argv: &[String]) -> Result<String> {
     Ok(out)
 }
 
+/// Parsed `sweep` subcommand arguments.
+#[derive(Debug, Clone)]
+pub struct SweepArgs {
+    pub machines: Vec<String>,
+    pub kernel_path: Option<String>,
+    /// (name, grid values) in the order given on the command line.
+    pub axes: Vec<(String, Vec<i64>)>,
+    pub cores: Vec<u32>,
+    pub predictor: CachePredictorKind,
+    pub threads: Option<usize>,
+    pub format: SweepFormat,
+    pub verbose: bool,
+}
+
+/// Sweep output format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepFormat {
+    Csv,
+    Json,
+}
+
+/// Parse `sweep` subcommand argv (after the `sweep` word).
+pub fn parse_sweep_args(argv: &[String]) -> Result<SweepArgs> {
+    let mut args = SweepArgs {
+        machines: vec!["SNB".to_string()],
+        kernel_path: None,
+        axes: Vec::new(),
+        cores: vec![1],
+        predictor: CachePredictorKind::Auto,
+        threads: None,
+        format: SweepFormat::Csv,
+        verbose: false,
+    };
+    let mut it = argv.iter().peekable();
+    let mut next_val = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+                        flag: &str|
+     -> Result<String> {
+        it.next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing value after {flag}"))
+    };
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "-m" | "--machine" => {
+                let v = next_val(&mut it, "-m")?;
+                args.machines = v.split(',').map(str::to_string).filter(|s| !s.is_empty()).collect();
+                if args.machines.is_empty() {
+                    bail!("empty machine list");
+                }
+            }
+            "-D" | "--define" => {
+                let name = next_val(&mut it, "-D")?;
+                let spec = next_val(&mut it, "-D NAME")?;
+                let values = sweep::parse_grid(&spec)
+                    .with_context(|| format!("grid for -D {name}"))?;
+                if args.axes.iter().any(|(n, _)| *n == name) {
+                    bail!("duplicate -D {name}");
+                }
+                args.axes.push((name, values));
+            }
+            "--cores" => {
+                let v = next_val(&mut it, "--cores")?;
+                args.cores = v
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse::<u32>().with_context(|| format!("bad core count '{s}'")))
+                    .collect::<Result<_>>()?;
+                if args.cores.is_empty() {
+                    bail!("empty core list");
+                }
+            }
+            "--predictor" | "--cache-predictor" => {
+                let v = next_val(&mut it, "--predictor")?;
+                args.predictor = CachePredictorKind::parse(&v)
+                    .ok_or_else(|| anyhow!("unknown cache predictor '{v}' (offsets|lc|auto)"))?;
+            }
+            "--threads" => {
+                args.threads =
+                    Some(next_val(&mut it, "--threads")?.parse().context("--threads")?);
+            }
+            "--serial" => args.threads = Some(1),
+            "--format" => {
+                args.format = match next_val(&mut it, "--format")?.as_str() {
+                    "csv" => SweepFormat::Csv,
+                    "json" => SweepFormat::Json,
+                    other => bail!("unknown sweep format '{other}' (csv|json)"),
+                };
+            }
+            "-v" | "--verbose" => args.verbose = true,
+            "-h" | "--help" => bail!("{}", usage()),
+            other if !other.starts_with('-') => {
+                if args.kernel_path.is_some() {
+                    bail!("multiple kernel files given");
+                }
+                args.kernel_path = Some(other.to_string());
+            }
+            other => bail!("unknown sweep flag '{other}'\n{}", usage()),
+        }
+    }
+    Ok(args)
+}
+
+/// Run the `sweep` subcommand; returns CSV or JSON text.
+pub fn run_sweep(argv: &[String]) -> Result<String> {
+    let args = parse_sweep_args(argv)?;
+    let Some(path) = &args.kernel_path else {
+        bail!("no kernel file given for sweep\n{}", usage());
+    };
+    if args.axes.is_empty() {
+        bail!("sweep needs at least one -D axis\n{}", usage());
+    }
+    // file path, or a Table 5 tag as a convenience
+    let (label, source) = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let label = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or(path)
+                .to_string();
+            (label, text)
+        }
+        Err(io) => match crate::models::reference::kernel_source(path) {
+            Some(src) => (path.clone(), src.to_string()),
+            None => {
+                return Err(anyhow::Error::new(io)
+                    .context(format!("reading kernel file {path} (not a Table 5 tag either)")))
+            }
+        },
+    };
+    let source: Arc<str> = Arc::from(source.as_str());
+    let jobs = sweep::build_jobs(
+        &label,
+        source,
+        &args.machines,
+        &args.cores,
+        &args.axes,
+        args.predictor,
+    );
+    if jobs.is_empty() {
+        bail!("sweep grid is empty");
+    }
+    let engine = match args.threads {
+        Some(n) => sweep::SweepEngine::with_threads(n),
+        None => sweep::SweepEngine::new(),
+    };
+    let out = engine.run(&jobs)?;
+    let mut text = match args.format {
+        SweepFormat::Csv => report::sweep_csv(&out.rows),
+        SweepFormat::Json => report::sweep_json(&out.rows, &out.stats),
+    };
+    if args.verbose && args.format == SweepFormat::Csv {
+        text.push_str(&report::sweep_stats_comment(&out));
+    }
+    Ok(text)
+}
+
 /// Map a kernel file path to the Table 5 tag used by the native bench.
 fn native_tag_for(path: &str) -> Option<&'static str> {
     let stem = std::path::Path::new(path).file_stem()?.to_str()?;
@@ -316,6 +502,7 @@ mod tests {
         assert_eq!(a.constants["N"], 6000);
         assert_eq!(a.cores, 1);
         assert_eq!(a.kernel_path.as_deref(), Some("kernels/2d-5pt.c"));
+        assert_eq!(a.cache_predictor, CachePredictorKind::Offsets);
     }
 
     #[test]
@@ -337,6 +524,13 @@ mod tests {
     }
 
     #[test]
+    fn cache_predictor_flag() {
+        let a = parse_args(&argv("-p ECM --cache-predictor auto k.c")).unwrap();
+        assert_eq!(a.cache_predictor, CachePredictorKind::Auto);
+        assert!(parse_args(&argv("-p ECM --cache-predictor nope k.c")).is_err());
+    }
+
+    #[test]
     fn end_to_end_ecm_run_matches_listing5() {
         // paper Listing 5 invocation against the shipped kernel corpus
         let out = run(&argv(
@@ -345,6 +539,14 @@ mod tests {
         .unwrap();
         assert!(out.contains("ECM model"), "{out}");
         assert!(out.contains("saturating at 3 cores"), "{out}");
+    }
+
+    #[test]
+    fn ecm_run_with_auto_predictor_matches_offsets() {
+        let base = "-p ECM --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000";
+        let walk = run(&argv(base)).unwrap();
+        let auto = run(&argv(&format!("{base} --cache-predictor auto"))).unwrap();
+        assert_eq!(walk, auto, "auto predictor must not change the report");
     }
 
     #[test]
@@ -377,5 +579,31 @@ mod tests {
         assert_eq!(native_tag_for("kernels/2d-5pt.c"), Some("2D-5pt"));
         assert_eq!(pjrt_name_for("kernels/long-range.c"), Some("long_range"));
         assert_eq!(native_tag_for("kernels/custom.c"), None);
+    }
+
+    #[test]
+    fn parses_sweep_invocation() {
+        let a = parse_sweep_args(&argv(
+            "-m SNB,HSW kernels/2d-5pt.c -D N 128:1k:log2 -D M 4000 --cores 1,2 --predictor lc --format json --threads 3",
+        ))
+        .unwrap();
+        assert_eq!(a.machines, vec!["SNB", "HSW"]);
+        assert_eq!(a.kernel_path.as_deref(), Some("kernels/2d-5pt.c"));
+        assert_eq!(a.axes.len(), 2);
+        assert_eq!(a.axes[0].0, "N");
+        assert_eq!(a.axes[0].1, vec![128, 256, 512, 1024]);
+        assert_eq!(a.axes[1].1, vec![4000]);
+        assert_eq!(a.cores, vec![1, 2]);
+        assert_eq!(a.predictor, CachePredictorKind::LayerConditions);
+        assert_eq!(a.format, SweepFormat::Json);
+        assert_eq!(a.threads, Some(3));
+    }
+
+    #[test]
+    fn sweep_rejects_bad_specs() {
+        assert!(parse_sweep_args(&argv("k.c -D N 10:5:log2")).is_err());
+        assert!(parse_sweep_args(&argv("k.c -D N 1 -D N 2")).is_err());
+        assert!(parse_sweep_args(&argv("k.c --format xml")).is_err());
+        assert!(run_sweep(&argv("kernels/triad.c")).is_err(), "missing -D axis");
     }
 }

@@ -4,7 +4,8 @@
 //! Performance Modeling With Kerncraft"* (Hammer, Hager, Eitzinger,
 //! Wellein; PMBS @ SC'15, DOI 10.1145/2832087.2832092).
 //!
-//! The pipeline mirrors the paper's Figure 1:
+//! The pipeline mirrors the paper's Figure 1, with the batched sweep
+//! engine layered on top:
 //!
 //! ```text
 //!   kernel.c ──► kernel::parse ──► kernel::KernelAnalysis
@@ -13,22 +14,29 @@
 //!                                   │ flop counts
 //!                    machine.yml ──►│
 //!                                   ▼
-//!            ┌──────────────┬───────────────────┐
-//!            │ incore::     │ cache::           │
-//!            │ port model   │ layer conditions  │
-//!            │ (IACA subst.)│ + offset simulator│
-//!            └──────┬───────┴─────────┬─────────┘
+//!            ┌──────────────┬────────────────────────┐
+//!            │ incore::     │ cache::                │
+//!            │ port model   │ layer-cond. fast path  │
+//!            │ (IACA subst.)│ ⇄ offset walk (Auto)   │
+//!            └──────┬───────┴─────────┬──────────────┘
 //!                   ▼                 ▼
 //!              models::ecm / models::roofline ──► report::
-//!                   ▲
-//!      validation:  │
-//!        sim::      │  trace-driven virtual testbed (SNB/HSW stand-in)
-//!        bench_mode │  host execution: native loops + PJRT artifacts
-//!        runtime::  │  (JAX/Pallas kernels AOT-lowered to HLO text)
+//!                   ▲                                ▲
+//!      validation:  │            sweep:: ───────────┘
+//!        sim::      │  parallel grid evaluation over
+//!        bench_mode │  (source × constants × machine × cores),
+//!        runtime::  │  memoizing Program / KernelAnalysis /
+//!                   │  PortModel / MachineModel across points
+//!                   │  (CLI: `kerncraft sweep -D N 128:8M:log2`)
+//!                   │
+//!                   └─ trace-driven virtual testbed (SNB/HSW stand-in),
+//!                      native host loops, PJRT artifacts (JAX/Pallas
+//!                      kernels AOT-lowered to HLO text; `pjrt` feature)
 //! ```
 //!
-//! Entry points: [`analyze`] for one-shot analysis, [`cli`] for the
-//! command-line front end, and the individual modules for programmatic use.
+//! Entry points: [`analyze`] for one-shot analysis, [`sweep::SweepEngine`]
+//! for batched grids, [`cli`] for the command-line front end, and the
+//! individual modules for programmatic use.
 
 pub mod bench_mode;
 pub mod cache;
@@ -41,6 +49,7 @@ pub mod models;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 
 use anyhow::Result;

@@ -302,6 +302,13 @@ impl MachineModel {
     }
 
     fn from_value(v: &Value) -> Result<Self> {
+        if let Some(path) = find_todo(v, "") {
+            bail!(
+                "machine file field '{path}' is an unresolved TODO (emitted by the \
+                 topology probe for values it could not determine) — fill in a \
+                 measured value before using this file"
+            );
+        }
         let req = |key: &str| {
             v.get(key).ok_or_else(|| anyhow!("machine file missing key '{key}'"))
         };
@@ -493,6 +500,23 @@ impl MachineModel {
             memory_hierarchy,
             benchmarks,
         })
+    }
+}
+
+/// Depth-first scan for `TODO` scalar markers (emitted by the topology
+/// probe for fields it cannot determine); returns the key path of the
+/// first one found.
+fn find_todo(v: &Value, path: &str) -> Option<String> {
+    match v {
+        Value::Scalar(s) if s.trim().starts_with("TODO") => Some(path.to_string()),
+        Value::Map(entries) => entries.iter().find_map(|(k, child)| {
+            let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+            find_todo(child, &p)
+        }),
+        Value::List(items) => items.iter().enumerate().find_map(|(ix, child)| {
+            find_todo(child, &format!("{path}[{ix}]"))
+        }),
+        _ => None,
     }
 }
 

@@ -29,8 +29,11 @@ pub struct Topology {
     pub threads_per_core: u32,
     pub caches: Vec<ProbedCache>,
     pub cacheline_bytes: u64,
-    /// Base clock estimate in Hz (from cpuinfo; 0 if unknown).
-    pub clock_hz: f64,
+    /// Base clock estimate in Hz. `None` when the probe could not
+    /// determine it — the emitted machine file then carries an explicit
+    /// `TODO` marker that [`crate::machine::MachineModel`] refuses to
+    /// consume, instead of a silently fabricated frequency.
+    pub clock_hz: Option<f64>,
 }
 
 impl Topology {
@@ -115,20 +118,23 @@ impl Topology {
             threads_per_core,
             caches,
             cacheline_bytes,
-            clock_hz: clock_mhz * 1e6,
+            clock_hz: if clock_mhz > 0.0 { Some(clock_mhz * 1e6) } else { None },
         }
     }
 
-    /// Render a machine-file skeleton in our YAML dialect. Sections that
-    /// cannot be probed are emitted with TODO comments.
+    /// Render a machine-file skeleton in our YAML dialect. Fields the
+    /// probe could not determine are emitted as explicit `TODO` markers
+    /// (not fabricated placeholder values): the machine-file loader
+    /// refuses to consume them until a measured value is filled in.
     pub fn to_machine_yaml(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!("model name: {}\n", self.model_name));
         s.push_str("micro-architecture: HOST\n");
-        if self.clock_hz > 0.0 {
-            s.push_str(&format!("clock: {:.3} GHz\n", self.clock_hz / 1e9));
-        } else {
-            s.push_str("clock: 2.0 GHz  # TODO: fix the real base clock\n");
+        match self.clock_hz {
+            Some(hz) => s.push_str(&format!("clock: {:.3} GHz\n", hz / 1e9)),
+            None => s.push_str(
+                "clock: TODO  # probe could not read the base clock; fill in a measured value (e.g. `lscpu`)\n",
+            ),
         }
         s.push_str(&format!("sockets: {}\n", self.sockets));
         s.push_str(&format!(
@@ -210,14 +216,66 @@ mod tests {
         assert!(t.cacheline_bytes >= 16);
     }
 
+    fn synthetic_topology(clock_hz: Option<f64>) -> Topology {
+        Topology {
+            model_name: "Test CPU".into(),
+            logical_cpus: 8,
+            cores: 4,
+            sockets: 1,
+            threads_per_core: 2,
+            caches: vec![
+                ProbedCache {
+                    level: 1,
+                    size_bytes: 32 * 1024,
+                    ways: 8,
+                    shared_cpus: 2,
+                    kind: "Data".into(),
+                },
+                ProbedCache {
+                    level: 2,
+                    size_bytes: 1024 * 1024,
+                    ways: 16,
+                    shared_cpus: 8,
+                    kind: "Unified".into(),
+                },
+            ],
+            cacheline_bytes: 64,
+            clock_hz,
+        }
+    }
+
     #[test]
-    fn skeleton_yaml_parses_as_machine_file() {
-        let t = Topology::probe();
-        let yml = t.to_machine_yaml();
-        // The generated skeleton must round-trip through our loader.
+    fn skeleton_with_known_clock_parses_as_machine_file() {
+        let yml = synthetic_topology(Some(3.1e9)).to_machine_yaml();
         let m = MachineModel::from_yaml(&yml).expect("skeleton must parse");
         assert_eq!(m.arch, "HOST");
+        assert!((m.clock_hz - 3.1e9).abs() < 1e6);
         assert!(!m.memory_hierarchy.is_empty());
+    }
+
+    #[test]
+    fn skeleton_with_unknown_clock_cannot_be_consumed_silently() {
+        // An unprobed clock must NOT turn into a fabricated "2.0 GHz": the
+        // skeleton carries a TODO marker and the loader rejects it with a
+        // pointer to the offending field.
+        let yml = synthetic_topology(None).to_machine_yaml();
+        assert!(yml.contains("clock: TODO"), "{yml}");
+        let err = MachineModel::from_yaml(&yml).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("TODO"), "{msg}");
+        assert!(msg.contains("clock"), "{msg}");
+    }
+
+    #[test]
+    fn probe_skeleton_roundtrips_or_flags_todo() {
+        // On hosts where /proc/cpuinfo reveals the clock the skeleton
+        // parses outright; elsewhere it must fail loudly via the marker.
+        let t = Topology::probe();
+        let yml = t.to_machine_yaml();
+        match MachineModel::from_yaml(&yml) {
+            Ok(m) => assert_eq!(m.arch, "HOST"),
+            Err(e) => assert!(format!("{e:#}").contains("TODO"), "{e:#}"),
+        }
     }
 
     #[test]

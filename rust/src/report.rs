@@ -1,12 +1,13 @@
 //! Report rendering: the CLI output formats of paper Listing 5 (ECM and
-//! Roofline reports), the Fig. 2 cache-usage visualization, and the
-//! machine summary.
+//! Roofline reports), the Fig. 2 cache-usage visualization, the machine
+//! summary, and the CSV/JSON row formats of the `sweep` subcommand.
 
 use crate::cache::TrafficPrediction;
 use crate::incore::PortModel;
 use crate::kernel::KernelAnalysis;
 use crate::machine::MachineModel;
 use crate::models::{EcmModel, RooflineModel, ScalingModel, Unit};
+use crate::sweep::{MemoStats, SweepOutput, SweepRow};
 use crate::util::fmt_cy;
 
 /// Render the ECM analysis report (paper Listing 5, upper half).
@@ -202,6 +203,209 @@ pub fn machine_report(m: &MachineModel) -> String {
     s
 }
 
+/// Render sweep rows as CSV: one row per point, a stable header derived
+/// from the union of constant names and the union of link labels across
+/// all rows (machines may differ in cache-level names and counts).
+pub fn sweep_csv(rows: &[SweepRow]) -> String {
+    let mut const_names: Vec<&str> = Vec::new();
+    for r in rows {
+        for k in r.constants.keys() {
+            if !const_names.contains(&k.as_str()) {
+                const_names.push(k);
+            }
+        }
+    }
+    const_names.sort_unstable();
+    // union of link labels in first-appearance order, so heterogeneous
+    // machine hierarchies each keep their columns (absent links stay empty)
+    let mut link_names: Vec<&str> = Vec::new();
+    for r in rows {
+        for (n, _, _) in &r.links {
+            if !link_names.contains(&n.as_str()) {
+                link_names.push(n);
+            }
+        }
+    }
+
+    let mut s = String::from("kernel,machine,cores,predictor");
+    for c in &const_names {
+        s.push(',');
+        s.push_str(&csv_field(c));
+    }
+    s.push_str(",unit_it,T_OL,T_nOL");
+    for l in &link_names {
+        s.push_str(",T_");
+        s.push_str(l);
+    }
+    s.push_str(",T_ECM_Mem,sat_cores,mem_B_per_unit,lc_fast_levels,walk_levels,lc_bands\n");
+
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{}",
+            csv_field(&r.label),
+            csv_field(&r.machine),
+            r.cores,
+            r.predictor.name()
+        ));
+        for c in &const_names {
+            s.push(',');
+            if let Some(v) = r.constants.get(*c) {
+                s.push_str(&v.to_string());
+            }
+        }
+        s.push_str(&format!(",{},{},{}", r.unit_iterations, fmt_cy(r.t_ol), fmt_cy(r.t_nol)));
+        for l in &link_names {
+            s.push(',');
+            if let Some((_, _, cy)) = r.links.iter().find(|(n, _, _)| n == l) {
+                s.push_str(&fmt_cy(*cy));
+            }
+        }
+        let sat = if r.saturation_cores == u32::MAX {
+            "inf".to_string()
+        } else {
+            r.saturation_cores.to_string()
+        };
+        s.push_str(&format!(
+            ",{},{},{},{},{},{}\n",
+            fmt_cy(r.t_ecm_mem),
+            sat,
+            r.memory_bytes_per_unit,
+            r.lc_fast_levels,
+            r.walk_levels,
+            r.lc_breakpoints.join(" ")
+        ));
+    }
+    s
+}
+
+/// Render sweep rows plus memo statistics as a JSON document (hand-rolled:
+/// the offline crate set has no serde).
+pub fn sweep_json(rows: &[SweepRow], stats: &MemoStats) -> String {
+    let mut s = String::from("{\n  \"stats\": {");
+    s.push_str(&format!(
+        "\"machine_hits\": {}, \"machine_misses\": {}, \"program_hits\": {}, \"program_misses\": {}, \"analysis_hits\": {}, \"analysis_misses\": {}, \"incore_hits\": {}, \"incore_misses\": {}",
+        stats.machine_hits,
+        stats.machine_misses,
+        stats.program_hits,
+        stats.program_misses,
+        stats.analysis_hits,
+        stats.analysis_misses,
+        stats.incore_hits,
+        stats.incore_misses
+    ));
+    s.push_str("},\n  \"rows\": [\n");
+    for (ix, r) in rows.iter().enumerate() {
+        s.push_str("    {");
+        s.push_str(&format!(
+            "\"kernel\": {}, \"machine\": {}, \"cores\": {}, \"predictor\": \"{}\"",
+            json_str(&r.label),
+            json_str(&r.machine),
+            r.cores,
+            r.predictor.name()
+        ));
+        s.push_str(", \"constants\": {");
+        for (cx, (k, v)) in r.constants.iter().enumerate() {
+            if cx > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("{}: {}", json_str(k), v));
+        }
+        s.push_str(&format!(
+            "}}, \"unit_iterations\": {}, \"t_ol\": {}, \"t_nol\": {}",
+            r.unit_iterations,
+            json_num(r.t_ol),
+            json_num(r.t_nol)
+        ));
+        s.push_str(", \"links\": [");
+        for (lx, (name, lines, cycles)) in r.links.iter().enumerate() {
+            if lx > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"link\": {}, \"lines\": {}, \"cycles\": {}}}",
+                json_str(name),
+                json_num(*lines),
+                json_num(*cycles)
+            ));
+        }
+        s.push_str(&format!(
+            "], \"t_ecm_mem\": {}, \"saturation_cores\": {}, \"memory_bytes_per_unit\": {}, \"lc_fast_levels\": {}, \"walk_levels\": {}",
+            json_num(r.t_ecm_mem),
+            if r.saturation_cores == u32::MAX { "null".to_string() } else { r.saturation_cores.to_string() },
+            json_num(r.memory_bytes_per_unit),
+            r.lc_fast_levels,
+            r.walk_levels
+        ));
+        s.push_str(", \"lc_bands\": [");
+        for (bx, b) in r.lc_breakpoints.iter().enumerate() {
+            if bx > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&json_str(b));
+        }
+        s.push_str("]}");
+        s.push_str(if ix + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Trailing `#`-comment block with engine statistics (verbose CSV mode).
+pub fn sweep_stats_comment(out: &SweepOutput) -> String {
+    let st = &out.stats;
+    format!(
+        "# points: {}  threads: {}\n# memo hits/misses: machine {}/{}  program {}/{}  analysis {}/{}  incore {}/{}\n",
+        out.rows.len(),
+        out.threads_used,
+        st.machine_hits,
+        st.machine_misses,
+        st.program_hits,
+        st.program_misses,
+        st.analysis_hits,
+        st.analysis_misses,
+        st.incore_hits,
+        st.incore_misses
+    )
+}
+
+/// Quote a CSV field when it contains a delimiter, quote, or newline
+/// (RFC 4180): kernel labels and machine paths are user-controlled.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_num(v: f64) -> String {
+    // Rust's shortest-roundtrip float formatting is valid JSON for finite
+    // values (bare integers included)
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
 fn indent(text: &str) -> String {
     text.lines().map(|l| format!("  {l}\n")).collect()
 }
@@ -293,5 +497,43 @@ mod tests {
         assert!(rep.contains("SNB"));
         assert!(rep.contains("2.7 GHz"));
         assert!(rep.contains("20.0 MB"));
+    }
+
+    #[test]
+    fn sweep_renderers_produce_wellformed_output() {
+        use crate::cache::CachePredictorKind;
+        use crate::sweep::{build_jobs, SweepEngine};
+        use std::sync::Arc;
+        let src: Arc<str> = Arc::from(
+            "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];",
+        );
+        let jobs = build_jobs(
+            "triad",
+            src,
+            &["SNB".to_string()],
+            &[1],
+            &[("N".to_string(), vec![4096, 8192])],
+            CachePredictorKind::Auto,
+        );
+        let out = SweepEngine::serial().run(&jobs).unwrap();
+        let csv = sweep_csv(&out.rows);
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("kernel,machine,cores,predictor,N,"), "{header}");
+        assert!(header.contains("T_ECM_Mem"), "{header}");
+        assert_eq!(lines.count(), 2, "{csv}");
+        assert!(csv.contains("triad,SNB,1,auto,4096"), "{csv}");
+
+        let json = sweep_json(&out.rows, &out.stats);
+        assert!(json.contains("\"rows\": ["), "{json}");
+        assert!(json.contains("\"t_ecm_mem\""), "{json}");
+        assert!(json.contains("\"N\": 4096"), "{json}");
+        // crude balance check for the hand-rolled writer
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "{json}");
+
+        let comment = sweep_stats_comment(&out);
+        assert!(comment.starts_with("# points: 2"), "{comment}");
     }
 }

@@ -1,16 +1,24 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts produced by
 //! `python/compile/aot.py` and execute them from Rust.
 //!
-//! This is the only place the `xla` crate is touched. The interchange
-//! format is HLO *text* — the crate's xla_extension 0.5.1 rejects the
+//! This is the only place the `xla` crate is touched, and that crate
+//! (xla_extension bindings) is **not** part of the offline toolchain — so
+//! the real runtime is gated behind the `pjrt` cargo feature. Without the
+//! feature, [`Runtime`] and [`LoadedKernel`] compile to stubs whose
+//! constructors return a clear error, keeping every caller
+//! (`bench_mode::run_pjrt`, the CLI `--bench-path pjrt`) compiling and
+//! failing loudly at runtime instead of silently at build time. Enable
+//! the feature by adding an `xla` dependency alongside
+//! `--features pjrt`.
+//!
+//! The interchange format is HLO *text* — xla_extension 0.5.1 rejects the
 //! 64-bit instruction ids jax ≥ 0.5 puts into serialized protos, while
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
 //! Python never runs on this path: once `artifacts/` exists the binary
 //! is self-contained.
 
-use crate::util::{median, monotonic_ns};
 use anyhow::{anyhow, bail, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 /// Metadata of one artifact, parsed from `artifacts/manifest.tsv`.
 #[derive(Debug, Clone)]
@@ -76,17 +84,6 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
     Ok(out)
 }
 
-/// A PJRT CPU runtime holding compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// One loaded artifact, compiled and ready to execute.
-pub struct LoadedKernel {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
 /// Timing result of repeated executions.
 #[derive(Debug, Clone)]
 pub struct ExecTiming {
@@ -105,116 +102,191 @@ impl ExecTiming {
     }
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client })
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{ArtifactMeta, ExecTiming};
+    use crate::util::{median, monotonic_ns};
+    use anyhow::{anyhow, bail, Result};
+    use std::path::{Path, PathBuf};
+
+    /// A PJRT CPU runtime holding compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Name of the PJRT platform backing this runtime.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One loaded artifact, compiled and ready to execute.
+    pub struct LoadedKernel {
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Load and compile one artifact.
-    pub fn load(&self, dir: &Path, meta: &ArtifactMeta) -> Result<LoadedKernel> {
-        let path: PathBuf = dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
-        Ok(LoadedKernel { meta: meta.clone(), exe })
-    }
-
-    /// Load every artifact in a directory.
-    pub fn load_all(&self, dir: &Path) -> Result<Vec<LoadedKernel>> {
-        load_manifest(dir)?
-            .iter()
-            .map(|m| self.load(dir, m))
-            .collect()
-    }
-}
-
-impl LoadedKernel {
-    /// Build deterministic pseudo-random inputs matching the manifest.
-    pub fn make_inputs(&self, seed: u64) -> Result<Vec<xla::Literal>> {
-        let mut rng = crate::util::XorShift64::new(seed | 1);
-        self.meta
-            .inputs
-            .iter()
-            .map(|(dtype, dims)| -> Result<xla::Literal> {
-                let n: usize = dims.iter().product::<usize>().max(1);
-                match dtype.as_str() {
-                    "float64" => {
-                        let data: Vec<f64> =
-                            (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
-                        let lit = xla::Literal::vec1(&data);
-                        if dims.is_empty() {
-                            // scalar: reshape 1-element vector to rank 0
-                            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
-                        } else {
-                            let shape: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
-                            lit.reshape(&shape).map_err(|e| anyhow!("{e:?}"))
-                        }
-                    }
-                    "float32" => {
-                        let data: Vec<f32> =
-                            (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
-                        let lit = xla::Literal::vec1(&data);
-                        if dims.is_empty() {
-                            lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
-                        } else {
-                            let shape: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
-                            lit.reshape(&shape).map_err(|e| anyhow!("{e:?}"))
-                        }
-                    }
-                    other => bail!("unsupported artifact dtype {other}"),
-                }
-            })
-            .collect()
-    }
-
-    /// Execute once, returning the first output literal (tuples unpacked).
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {}: {e:?}", self.meta.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple
-        lit.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))
-    }
-
-    /// Time `samples` executions (after one warm-up) and report medians.
-    pub fn time(&self, samples: usize) -> Result<ExecTiming> {
-        let inputs = self.make_inputs(0xD00D)?;
-        let _warm = self.execute(&inputs)?;
-        let mut times = Vec::with_capacity(samples);
-        for _ in 0..samples.max(1) {
-            let t0 = monotonic_ns();
-            let _out = self.execute(&inputs)?;
-            let t1 = monotonic_ns();
-            times.push((t1 - t0) as f64);
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime { client })
         }
-        Ok(ExecTiming {
-            median_ns: median(&times),
-            samples_ns: times,
-            iterations: self.meta.iterations_per_exec(),
-        })
+
+        /// Name of the PJRT platform backing this runtime.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile one artifact.
+        pub fn load(&self, dir: &Path, meta: &ArtifactMeta) -> Result<LoadedKernel> {
+            let path: PathBuf = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+            Ok(LoadedKernel { meta: meta.clone(), exe })
+        }
+
+        /// Load every artifact in a directory.
+        pub fn load_all(&self, dir: &Path) -> Result<Vec<LoadedKernel>> {
+            super::load_manifest(dir)?
+                .iter()
+                .map(|m| self.load(dir, m))
+                .collect()
+        }
+    }
+
+    impl LoadedKernel {
+        /// Build deterministic pseudo-random inputs matching the manifest.
+        pub fn make_inputs(&self, seed: u64) -> Result<Vec<xla::Literal>> {
+            let mut rng = crate::util::XorShift64::new(seed | 1);
+            self.meta
+                .inputs
+                .iter()
+                .map(|(dtype, dims)| -> Result<xla::Literal> {
+                    let n: usize = dims.iter().product::<usize>().max(1);
+                    match dtype.as_str() {
+                        "float64" => {
+                            let data: Vec<f64> =
+                                (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+                            let lit = xla::Literal::vec1(&data);
+                            if dims.is_empty() {
+                                // scalar: reshape 1-element vector to rank 0
+                                lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
+                            } else {
+                                let shape: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+                                lit.reshape(&shape).map_err(|e| anyhow!("{e:?}"))
+                            }
+                        }
+                        "float32" => {
+                            let data: Vec<f32> =
+                                (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+                            let lit = xla::Literal::vec1(&data);
+                            if dims.is_empty() {
+                                lit.reshape(&[]).map_err(|e| anyhow!("{e:?}"))
+                            } else {
+                                let shape: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+                                lit.reshape(&shape).map_err(|e| anyhow!("{e:?}"))
+                            }
+                        }
+                        other => bail!("unsupported artifact dtype {other}"),
+                    }
+                })
+                .collect()
+        }
+
+        /// Execute once, returning the first output literal (tuples unpacked).
+        pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("executing {}: {e:?}", self.meta.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+            // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple
+            lit.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))
+        }
+
+        /// Time `samples` executions (after one warm-up) and report medians.
+        pub fn time(&self, samples: usize) -> Result<ExecTiming> {
+            let inputs = self.make_inputs(0xD00D)?;
+            let _warm = self.execute(&inputs)?;
+            let mut times = Vec::with_capacity(samples);
+            for _ in 0..samples.max(1) {
+                let t0 = monotonic_ns();
+                let _out = self.execute(&inputs)?;
+                let t1 = monotonic_ns();
+                times.push((t1 - t0) as f64);
+            }
+            Ok(ExecTiming {
+                median_ns: median(&times),
+                samples_ns: times,
+                iterations: self.meta.iterations_per_exec(),
+            })
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{ArtifactMeta, ExecTiming};
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: this build has no `pjrt` feature \
+         (the xla/xla_extension crate is not part of the offline toolchain). \
+         Rebuild with `cargo build --features pjrt` and an `xla` dependency \
+         to execute AOT artifacts; the `virtual` and `native` bench paths \
+         work without it";
+
+    /// Stub runtime (built without the `pjrt` feature): construction fails
+    /// with an actionable message.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    /// Stub loaded artifact — never constructed without the feature.
+    pub struct LoadedKernel {
+        pub meta: ArtifactMeta,
+    }
+
+    impl Runtime {
+        /// Always errors in this build; see the module docs.
+        pub fn cpu() -> Result<Runtime> {
+            bail!(UNAVAILABLE);
+        }
+
+        /// Stub platform name.
+        pub fn platform(&self) -> String {
+            "unavailable (no pjrt feature)".to_string()
+        }
+
+        /// Always errors in this build.
+        pub fn load(&self, _dir: &Path, _meta: &ArtifactMeta) -> Result<LoadedKernel> {
+            bail!(UNAVAILABLE);
+        }
+
+        /// Always errors in this build.
+        pub fn load_all(&self, _dir: &Path) -> Result<Vec<LoadedKernel>> {
+            bail!(UNAVAILABLE);
+        }
+    }
+
+    impl LoadedKernel {
+        /// Always errors in this build.
+        pub fn time(&self, _samples: usize) -> Result<ExecTiming> {
+            bail!(UNAVAILABLE);
+        }
+    }
+}
+
+pub use imp::{LoadedKernel, Runtime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -243,6 +315,14 @@ mod tests {
         assert!(load_manifest(&dir).is_err());
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+
     // The full load-execute path is covered by `rust/tests/runtime_e2e.rs`
-    // (it needs the PJRT client, which we only want to spin up once).
+    // (feature-gated: it needs the PJRT client, which we only want to spin
+    // up once and only in `--features pjrt` builds).
 }

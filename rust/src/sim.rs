@@ -212,13 +212,29 @@ impl<'m> VirtualTestbed<'m> {
 
         // iteration bounds, possibly truncated in the OUTERMOST dimension
         let trips: Vec<i64> = analysis.loops.iter().map(|l| l.trip().max(0)).collect();
-        let total: u64 = trips.iter().map(|t| *t as u64).product();
+        if let Some(l) = analysis.loops.iter().find(|l| l.trip() <= 0) {
+            // an empty space would otherwise clamp(1, 0) below (panic) and
+            // then issue out-of-bounds accesses for the phantom iteration
+            bail!(
+                "empty iteration space: loop '{}' runs {}..{} (step {}) — nothing to simulate",
+                l.index,
+                l.start,
+                l.end,
+                l.step
+            );
+        }
+        // saturating product: gigantic nests only need to compare > cap
+        let total: u64 = trips
+            .iter()
+            .fold(1u64, |acc, t| acc.saturating_mul(*t as u64));
         let mut outer_trip = trips[0] as u64;
         let mut truncated = false;
         if analysis.loops.len() > 1 {
             if total > self.max_iterations {
-                let inner_total: u64 =
-                    trips[1..].iter().map(|t| *t as u64).product::<u64>().max(1);
+                let inner_total: u64 = trips[1..]
+                    .iter()
+                    .fold(1u64, |acc, t| acc.saturating_mul(*t as u64))
+                    .max(1);
                 outer_trip = (self.max_iterations / inner_total).clamp(1, trips[0] as u64);
                 truncated = outer_trip < trips[0] as u64;
             }
@@ -533,6 +549,17 @@ mod tests {
         let sim = tb.run(&a).unwrap();
         assert!(sim.truncated);
         assert!(sim.iterations <= tb.max_iterations + 4000 * 8);
+    }
+
+    #[test]
+    fn empty_iteration_space_is_a_clean_error() {
+        // M=2 leaves the outer loop with zero trips; this used to reach a
+        // clamp(1, 0) panic in the truncation path and then simulate a
+        // phantom out-of-bounds iteration.
+        let m = MachineModel::snb();
+        let a = analyze(crate::models::reference::KERNEL_2D5PT, &[("N", 100), ("M", 2)]);
+        let err = VirtualTestbed::new(&m).run(&a).unwrap_err();
+        assert!(format!("{err}").contains("empty iteration space"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,616 @@
+//! Batched sweep engine — the paper's headline use case ("quickly gain
+//! insights by accelerated analytic modeling") industrialized: evaluate a
+//! whole grid of (kernel source × constants × machine × cores) points
+//! through the full pipeline, in parallel, with memoization of every
+//! stage product that is invariant across points:
+//!
+//! * parsed [`Program`] per kernel source,
+//! * [`KernelAnalysis`] per (source, constants) binding,
+//! * [`PortModel`] per (source, constants, machine) — the in-core model
+//!   does not depend on the cache predictor or core count,
+//! * [`MachineModel`] per machine key (builtin tag or file path).
+//!
+//! Per-point work then reduces to the cache prediction (which the
+//! layer-condition fast path of [`crate::cache`] answers analytically for
+//! decisive levels) and the ECM assembly. Results are bit-identical to
+//! running [`crate::analyze`]-style serial calls point by point: every
+//! stage is a pure function of its inputs, memoized or not.
+//!
+//! Grid axes use the CLI syntax `start:end:spec` (`-D N 128:8M:log2`),
+//! see [`parse_grid`].
+
+use crate::cache::{CachePredictor, CachePredictorKind};
+use crate::incore::{CodegenPolicy, PortModel};
+use crate::kernel::{KernelAnalysis, Program};
+use crate::machine::MachineModel;
+use crate::models::EcmModel;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One point of a sweep: a kernel source at one constants binding on one
+/// machine with one core count.
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    /// Display label (kernel tag or file stem).
+    pub label: String,
+    /// Kernel source text (share one `Arc` across the grid).
+    pub source: Arc<str>,
+    /// Machine key: builtin tag ("SNB"/"HSW") or a machine-file path.
+    pub machine: String,
+    /// Active cores (shared caches are partitioned accordingly).
+    pub cores: u32,
+    /// Constant bindings (ordered, so memo keys are stable).
+    pub constants: BTreeMap<String, i64>,
+    /// Cache predictor back end for this point.
+    pub predictor: CachePredictorKind,
+}
+
+/// One evaluated sweep point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRow {
+    pub label: String,
+    pub machine: String,
+    pub cores: u32,
+    pub constants: BTreeMap<String, i64>,
+    pub predictor: CachePredictorKind,
+    /// Inner iterations per unit of work.
+    pub unit_iterations: u64,
+    pub t_ol: f64,
+    pub t_nol: f64,
+    /// Per-link (name, cache lines, cycles) contributions, inner first.
+    pub links: Vec<(String, f64, f64)>,
+    /// In-memory ECM prediction (cy/CL).
+    pub t_ecm_mem: f64,
+    /// ECM saturation core count.
+    pub saturation_cores: u32,
+    /// Memory traffic per unit of work in bytes.
+    pub memory_bytes_per_unit: f64,
+    /// Cache levels answered by the layer-condition fast path.
+    pub lc_fast_levels: u32,
+    /// Cache levels that ran the backward offset walk.
+    pub walk_levels: u32,
+    /// Per loop dimension: innermost cache level whose layer condition
+    /// holds, e.g. `"j@L2"` (`"j@MEM"` when none does) — the Fig. 3
+    /// breakpoint bands.
+    pub lc_breakpoints: Vec<String>,
+}
+
+/// Memoization counters of one engine run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    pub machine_hits: u64,
+    pub machine_misses: u64,
+    pub program_hits: u64,
+    pub program_misses: u64,
+    pub analysis_hits: u64,
+    pub analysis_misses: u64,
+    pub incore_hits: u64,
+    pub incore_misses: u64,
+}
+
+/// Result of an engine run.
+#[derive(Debug, Clone)]
+pub struct SweepOutput {
+    /// One row per job, in job order.
+    pub rows: Vec<SweepRow>,
+    pub stats: MemoStats,
+    /// Worker threads actually used.
+    pub threads_used: usize,
+}
+
+/// The parallel, memoizing sweep engine.
+pub struct SweepEngine {
+    threads: usize,
+}
+
+#[derive(Default)]
+struct Caches {
+    /// Source-text interning: grid points share kernels, so downstream
+    /// memo keys carry a small id instead of the whole source string.
+    sources: Mutex<HashMap<String, usize>>,
+    machines: Mutex<HashMap<String, Arc<MachineModel>>>,
+    programs: Mutex<HashMap<String, Arc<Program>>>,
+    analyses: Mutex<HashMap<String, Arc<KernelAnalysis>>>,
+    incore: Mutex<HashMap<String, Arc<PortModel>>>,
+}
+
+impl Caches {
+    fn intern_source(&self, source: &str) -> usize {
+        let mut guard = self.sources.lock().unwrap();
+        let next = guard.len();
+        *guard.entry(source.to_string()).or_insert(next)
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    machine_hits: AtomicU64,
+    machine_misses: AtomicU64,
+    program_hits: AtomicU64,
+    program_misses: AtomicU64,
+    analysis_hits: AtomicU64,
+    analysis_misses: AtomicU64,
+    incore_hits: AtomicU64,
+    incore_misses: AtomicU64,
+}
+
+impl SweepEngine {
+    /// Engine with one worker per available hardware thread.
+    pub fn new() -> SweepEngine {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        SweepEngine { threads }
+    }
+
+    /// Single-threaded engine (still memoized) — the baseline for the
+    /// parallel-vs-serial equivalence guarantee.
+    pub fn serial() -> SweepEngine {
+        SweepEngine { threads: 1 }
+    }
+
+    /// Engine with an explicit worker count.
+    pub fn with_threads(threads: usize) -> SweepEngine {
+        SweepEngine { threads: threads.max(1) }
+    }
+
+    /// Evaluate all jobs; rows come back in job order. Any failing point
+    /// fails the sweep with its job context attached.
+    pub fn run(&self, jobs: &[SweepJob]) -> Result<SweepOutput> {
+        let caches = Caches::default();
+        let counters = Counters::default();
+        let next = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<Result<SweepRow>>>> =
+            jobs.iter().map(|_| Mutex::new(None)).collect();
+        let threads = self.threads.min(jobs.len()).max(1);
+
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let ix = next.fetch_add(1, Ordering::Relaxed);
+                    if ix >= jobs.len() {
+                        break;
+                    }
+                    let row = evaluate_job(&jobs[ix], &caches, &counters);
+                    *results[ix].lock().unwrap() = Some(row);
+                });
+            }
+        });
+
+        let mut rows = Vec::with_capacity(jobs.len());
+        for (ix, slot) in results.into_iter().enumerate() {
+            let r = slot
+                .into_inner()
+                .unwrap()
+                .unwrap_or_else(|| Err(anyhow!("job was never evaluated")));
+            let job = &jobs[ix];
+            rows.push(r.with_context(|| {
+                format!(
+                    "sweep point {} on {} ({} cores, {:?})",
+                    job.label, job.machine, job.cores, job.constants
+                )
+            })?);
+        }
+        let stats = MemoStats {
+            machine_hits: counters.machine_hits.load(Ordering::Relaxed),
+            machine_misses: counters.machine_misses.load(Ordering::Relaxed),
+            program_hits: counters.program_hits.load(Ordering::Relaxed),
+            program_misses: counters.program_misses.load(Ordering::Relaxed),
+            analysis_hits: counters.analysis_hits.load(Ordering::Relaxed),
+            analysis_misses: counters.analysis_misses.load(Ordering::Relaxed),
+            incore_hits: counters.incore_hits.load(Ordering::Relaxed),
+            incore_misses: counters.incore_misses.load(Ordering::Relaxed),
+        };
+        Ok(SweepOutput { rows, stats, threads_used: threads })
+    }
+}
+
+impl Default for SweepEngine {
+    fn default() -> Self {
+        SweepEngine::new()
+    }
+}
+
+/// Memo lookup helper: double-checked get-or-insert through a mutexed
+/// map. The builder runs OUTSIDE the lock so concurrent points don't
+/// serialize on each other's parse/analyze work; on a race the first
+/// insert wins (both values are equal — the stages are pure).
+fn memoize<T>(
+    map: &Mutex<HashMap<String, Arc<T>>>,
+    key: &str,
+    hits: &AtomicU64,
+    misses: &AtomicU64,
+    build: impl FnOnce() -> Result<T>,
+) -> Result<Arc<T>> {
+    if let Some(v) = map.lock().unwrap().get(key) {
+        hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(v.clone());
+    }
+    misses.fetch_add(1, Ordering::Relaxed);
+    let built = Arc::new(build()?);
+    let mut guard = map.lock().unwrap();
+    Ok(guard.entry(key.to_string()).or_insert(built).clone())
+}
+
+fn consts_key(constants: &BTreeMap<String, i64>) -> String {
+    let mut s = String::new();
+    for (k, v) in constants {
+        s.push_str(k);
+        s.push('=');
+        s.push_str(&v.to_string());
+        s.push(';');
+    }
+    s
+}
+
+fn evaluate_job(job: &SweepJob, caches: &Caches, c: &Counters) -> Result<SweepRow> {
+    let machine = memoize(
+        &caches.machines,
+        &job.machine,
+        &c.machine_hits,
+        &c.machine_misses,
+        || crate::cli::load_machine(&job.machine),
+    )?;
+    let source_id = caches.intern_source(&job.source);
+    let program = memoize(
+        &caches.programs,
+        &source_id.to_string(),
+        &c.program_hits,
+        &c.program_misses,
+        || crate::kernel::parse(&job.source).map_err(anyhow::Error::from),
+    )?;
+    let ckey = consts_key(&job.constants);
+    let akey = format!("{source_id}\u{1}{ckey}");
+    let analysis = memoize(
+        &caches.analyses,
+        &akey,
+        &c.analysis_hits,
+        &c.analysis_misses,
+        || {
+            let consts: HashMap<String, i64> =
+                job.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
+            KernelAnalysis::from_program(&program, &consts).map_err(anyhow::Error::from)
+        },
+    )?;
+    let ikey = format!("{}\u{1}{}", akey, job.machine);
+    let incore = memoize(&caches.incore, &ikey, &c.incore_hits, &c.incore_misses, || {
+        PortModel::analyze(&analysis, &machine, &CodegenPolicy::for_machine(&machine))
+    })?;
+
+    let traffic = CachePredictor::with_kind(&machine, job.cores, job.predictor)
+        .predict(&analysis)?;
+    let ecm = EcmModel::build(&incore, &traffic, &machine)?;
+
+    // Fig. 3 breakpoint bands: per dim, innermost level satisfying the LC
+    let mut lc_breakpoints = Vec::new();
+    for (d, l) in analysis.loops.iter().enumerate() {
+        let holds = traffic
+            .layer_conditions
+            .iter()
+            .find(|e| e.dim_index == d && e.satisfied)
+            .map(|e| e.level.clone())
+            .unwrap_or_else(|| "MEM".to_string());
+        lc_breakpoints.push(format!("{}@{}", l.index, holds));
+    }
+
+    Ok(SweepRow {
+        label: job.label.clone(),
+        machine: job.machine.clone(),
+        cores: job.cores,
+        constants: job.constants.clone(),
+        predictor: job.predictor,
+        unit_iterations: traffic.unit_iterations,
+        t_ol: ecm.t_ol,
+        t_nol: ecm.t_nol,
+        links: ecm
+            .contributions
+            .iter()
+            .map(|ct| (ct.link.clone(), ct.lines, ct.cycles))
+            .collect(),
+        t_ecm_mem: ecm.t_mem(),
+        saturation_cores: ecm.saturation_cores(),
+        memory_bytes_per_unit: traffic.memory_bytes_per_unit(),
+        lc_fast_levels: traffic.stats.lc_fast_levels,
+        walk_levels: traffic.stats.walk_levels,
+        lc_breakpoints,
+    })
+}
+
+/// Parse one grid axis:
+///
+/// * `4096` — a single value,
+/// * `128:8M:log2` — geometric, doubling from 128 up to 8·1024² inclusive,
+/// * `16:4096:*4` — geometric with factor 4,
+/// * `10:100:+30` — arithmetic with step 30.
+///
+/// Values take binary magnitude suffixes `k`, `M`, `G` (1024-based).
+pub fn parse_grid(spec: &str) -> Result<Vec<i64>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts.as_slice() {
+        [one] => Ok(vec![parse_size_value(one)?]),
+        [start, end] => grid_points(parse_size_value(start)?, parse_size_value(end)?, Step::Mul(2)),
+        [start, end, step] => {
+            let step = if *step == "log2" {
+                Step::Mul(2)
+            } else if let Some(f) = step.strip_prefix('*') {
+                let f: i64 = f.parse().with_context(|| format!("bad grid factor '{step}'"))?;
+                if f < 2 {
+                    bail!("grid factor must be >= 2, got {f}");
+                }
+                Step::Mul(f)
+            } else if let Some(a) = step.strip_prefix('+') {
+                let a = parse_size_value(a)?;
+                if a <= 0 {
+                    bail!("grid step must be positive, got {a}");
+                }
+                Step::Add(a)
+            } else {
+                bail!("unknown grid step '{step}' (use log2, *K, or +K)");
+            };
+            grid_points(parse_size_value(start)?, parse_size_value(end)?, step)
+        }
+        _ => bail!("bad grid spec '{spec}' (use VALUE or START:END[:log2|*K|+K])"),
+    }
+}
+
+enum Step {
+    Mul(i64),
+    Add(i64),
+}
+
+fn grid_points(start: i64, end: i64, step: Step) -> Result<Vec<i64>> {
+    if start <= 0 {
+        bail!("grid start must be positive, got {start}");
+    }
+    if end < start {
+        bail!("grid end {end} is below start {start}");
+    }
+    let mut out = Vec::new();
+    let mut v = start;
+    while v <= end {
+        out.push(v);
+        let next = match step {
+            Step::Mul(f) => v.checked_mul(f),
+            Step::Add(a) => v.checked_add(a),
+        };
+        match next {
+            Some(n) if n > v => v = n,
+            _ => break,
+        }
+        if out.len() > 100_000 {
+            bail!("grid has more than 100000 points — check the spec");
+        }
+    }
+    Ok(out)
+}
+
+/// Parse `8M`-style values: binary suffixes k (1024), M, G.
+pub fn parse_size_value(s: &str) -> Result<i64> {
+    let s = s.trim();
+    let (num, mult) = if let Some(n) = s.strip_suffix(['k', 'K']) {
+        (n, 1024i64)
+    } else if let Some(n) = s.strip_suffix('M') {
+        (n, 1024 * 1024)
+    } else if let Some(n) = s.strip_suffix('G') {
+        (n, 1024 * 1024 * 1024)
+    } else {
+        (s, 1)
+    };
+    let v: i64 = num.trim().parse().with_context(|| format!("bad grid value '{s}'"))?;
+    v.checked_mul(mult).ok_or_else(|| anyhow!("grid value '{s}' overflows"))
+}
+
+/// Cartesian product of named grid axes into per-point constant bindings,
+/// in row-major (last axis fastest) order.
+pub fn expand_constants(axes: &[(String, Vec<i64>)]) -> Vec<BTreeMap<String, i64>> {
+    let mut out: Vec<BTreeMap<String, i64>> = vec![BTreeMap::new()];
+    for (name, values) in axes {
+        let mut next = Vec::with_capacity(out.len() * values.len());
+        for base in &out {
+            for v in values {
+                let mut m = base.clone();
+                m.insert(name.clone(), *v);
+                next.push(m);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+/// Build the job list for a full sweep: every machine × core count ×
+/// constants-grid point of one kernel source.
+pub fn build_jobs(
+    label: &str,
+    source: Arc<str>,
+    machines: &[String],
+    cores: &[u32],
+    axes: &[(String, Vec<i64>)],
+    predictor: CachePredictorKind,
+) -> Vec<SweepJob> {
+    let bindings = expand_constants(axes);
+    let mut jobs = Vec::new();
+    for machine in machines {
+        for &c in cores {
+            for b in &bindings {
+                jobs.push(SweepJob {
+                    label: label.to_string(),
+                    source: source.clone(),
+                    machine: machine.clone(),
+                    cores: c,
+                    constants: b.clone(),
+                    predictor,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TRIAD: &str =
+        "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+
+    fn triad_jobs(ns: &[i64], predictor: CachePredictorKind) -> Vec<SweepJob> {
+        let src: Arc<str> = Arc::from(TRIAD);
+        build_jobs(
+            "triad",
+            src,
+            &["SNB".to_string()],
+            &[1],
+            &[("N".to_string(), ns.to_vec())],
+            predictor,
+        )
+    }
+
+    #[test]
+    fn grid_parsing() {
+        assert_eq!(parse_grid("4096").unwrap(), vec![4096]);
+        assert_eq!(parse_grid("128:1k:log2").unwrap(), vec![128, 256, 512, 1024]);
+        assert_eq!(parse_grid("16:256:*4").unwrap(), vec![16, 64, 256]);
+        assert_eq!(parse_grid("10:70:+30").unwrap(), vec![10, 40, 70]);
+        assert_eq!(parse_grid("8M").unwrap(), vec![8 * 1024 * 1024]);
+        assert_eq!(parse_grid("1:2:log2").unwrap(), vec![1, 2]);
+        assert!(parse_grid("10:5:log2").is_err());
+        assert!(parse_grid("0:5:log2").is_err());
+        assert!(parse_grid("1:5:*1").is_err());
+        assert!(parse_grid("1:5:+0").is_err());
+        assert!(parse_grid("1:5:frobnicate").is_err());
+        assert!(parse_grid("a:b:c:d").is_err());
+    }
+
+    #[test]
+    fn grid_endpoint_inclusive_when_hit_exactly() {
+        assert_eq!(parse_grid("128:8M:log2").unwrap().len(), 17); // 2^7..2^23
+    }
+
+    #[test]
+    fn cartesian_expansion_order() {
+        let axes = vec![
+            ("N".to_string(), vec![1i64, 2]),
+            ("M".to_string(), vec![10i64, 20]),
+        ];
+        let b = expand_constants(&axes);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0][&"N".to_string()], 1);
+        assert_eq!(b[0][&"M".to_string()], 10);
+        assert_eq!(b[1][&"M".to_string()], 20);
+        assert_eq!(b[3][&"N".to_string()], 2);
+    }
+
+    #[test]
+    fn parallel_rows_equal_serial_rows() {
+        let ns: Vec<i64> = (10..18).map(|e| 1i64 << e).collect();
+        let jobs = triad_jobs(&ns, CachePredictorKind::Auto);
+        let serial = SweepEngine::serial().run(&jobs).unwrap();
+        let parallel = SweepEngine::with_threads(8).run(&jobs).unwrap();
+        assert_eq!(serial.rows, parallel.rows, "bit-identical rows required");
+        assert_eq!(serial.rows.len(), ns.len());
+    }
+
+    #[test]
+    fn memoization_counts() {
+        // one source, 4 sizes, evaluated under two predictors: the second
+        // predictor pass hits every per-(source,constants,machine) cache.
+        let ns = [4096i64, 8192, 16384, 32768];
+        let mut jobs = triad_jobs(&ns, CachePredictorKind::Offsets);
+        jobs.extend(triad_jobs(&ns, CachePredictorKind::Auto));
+        let out = SweepEngine::serial().run(&jobs).unwrap();
+        assert_eq!(out.rows.len(), 8);
+        assert_eq!(out.stats.program_misses, 1, "{:?}", out.stats);
+        assert_eq!(out.stats.program_hits, 7);
+        assert_eq!(out.stats.machine_misses, 1);
+        assert_eq!(out.stats.analysis_misses, 4);
+        assert_eq!(out.stats.analysis_hits, 4);
+        assert_eq!(out.stats.incore_misses, 4);
+        assert_eq!(out.stats.incore_hits, 4);
+        // and the two predictor passes agree point by point
+        for (a, b) in out.rows[..4].iter().zip(&out.rows[4..]) {
+            assert_eq!(a.t_ecm_mem, b.t_ecm_mem);
+            assert_eq!(a.links, b.links);
+        }
+    }
+
+    #[test]
+    fn sweep_rows_match_direct_pipeline() {
+        // engine output == running the stages by hand (the serial
+        // equivalence guarantee of the acceptance criteria)
+        use crate::machine::MachineModel;
+        let jobs = triad_jobs(&[1 << 20], CachePredictorKind::Offsets);
+        let out = SweepEngine::serial().run(&jobs).unwrap();
+        let row = &out.rows[0];
+
+        let m = MachineModel::snb();
+        let p = crate::kernel::parse(TRIAD).unwrap();
+        let consts: HashMap<String, i64> =
+            [("N".to_string(), 1i64 << 20)].into_iter().collect();
+        let a = KernelAnalysis::from_program(&p, &consts).unwrap();
+        let pm = PortModel::analyze(&a, &m, &CodegenPolicy::for_machine(&m)).unwrap();
+        let t = CachePredictor::new(&m).predict(&a).unwrap();
+        let e = EcmModel::build(&pm, &t, &m).unwrap();
+        assert_eq!(row.t_ol, e.t_ol);
+        assert_eq!(row.t_nol, e.t_nol);
+        assert_eq!(row.t_ecm_mem, e.t_mem());
+        for (l, c) in row.links.iter().zip(&e.contributions) {
+            assert_eq!(l.0, c.link);
+            assert_eq!(l.1, c.lines);
+            assert_eq!(l.2, c.cycles);
+        }
+    }
+
+    #[test]
+    fn failing_point_reports_its_context() {
+        let src: Arc<str> = Arc::from(TRIAD);
+        let jobs = vec![SweepJob {
+            label: "triad".into(),
+            source: src,
+            machine: "SNB".into(),
+            cores: 1,
+            constants: BTreeMap::new(), // N unbound
+            predictor: CachePredictorKind::Auto,
+        }];
+        let err = SweepEngine::serial().run(&jobs).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sweep point triad"), "{msg}");
+        assert!(msg.contains("unbound constant"), "{msg}");
+    }
+
+    #[test]
+    fn breakpoint_bands_cross_at_the_layer_condition() {
+        // jacobi: the j-band must sit at L1 for small N and move outward
+        // for large N (Fig. 3 bottom panel)
+        let src: Arc<str> = Arc::from(
+            "double a[M][N], b[M][N], s;\nfor (int j = 1; j < M - 1; j++)\n  for (int i = 1; i < N - 1; i++)\n    b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s;",
+        );
+        let jobs = vec![
+            SweepJob {
+                label: "2d-5pt".into(),
+                source: src.clone(),
+                machine: "SNB".into(),
+                cores: 1,
+                constants: [("N".to_string(), 256i64), ("M".to_string(), 4000i64)]
+                    .into_iter()
+                    .collect(),
+                predictor: CachePredictorKind::Auto,
+            },
+            SweepJob {
+                label: "2d-5pt".into(),
+                source: src,
+                machine: "SNB".into(),
+                cores: 1,
+                constants: [("N".to_string(), 6000i64), ("M".to_string(), 6000i64)]
+                    .into_iter()
+                    .collect(),
+                predictor: CachePredictorKind::Auto,
+            },
+        ];
+        let out = SweepEngine::new().run(&jobs).unwrap();
+        assert!(out.rows[0].lc_breakpoints.contains(&"j@L1".to_string()), "{:?}", out.rows[0]);
+        assert!(out.rows[1].lc_breakpoints.contains(&"j@L2".to_string()), "{:?}", out.rows[1]);
+        // the small-N point is fully decisive: no walk ran
+        assert_eq!(out.rows[0].walk_levels, 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Sweep subsystem integration: the CLI subcommand over the shipped
+//! kernel corpus, the serial-equals-parallel guarantee against plain
+//! `analyze`-style pipelines, and the layer-condition fast path
+//! observability (acceptance criteria of the sweep PR).
+
+use kerncraft::cache::{CachePredictor, CachePredictorKind};
+use kerncraft::cli;
+use kerncraft::incore::{CodegenPolicy, PortModel};
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::MachineModel;
+use kerncraft::models::EcmModel;
+use kerncraft::sweep::{build_jobs, SweepEngine};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(str::to_string).collect()
+}
+
+#[test]
+fn sweep_cli_csv_row_count_and_header() {
+    // 9 N-points x 2 machines = 18 rows + 1 header
+    let out = cli::run(&argv(
+        "sweep -m SNB,HSW kernels/2d-5pt.c -D N 128:32k:log2 -D M 4000 --threads 4",
+    ))
+    .unwrap();
+    let lines: Vec<&str> = out.lines().filter(|l| !l.starts_with('#')).collect();
+    assert_eq!(lines.len(), 1 + 9 * 2, "{out}");
+    assert!(lines[0].contains("kernel,machine,cores,predictor,M,N"), "{}", lines[0]);
+    assert!(lines[1].starts_with("2d-5pt,SNB,1,auto"), "{}", lines[1]);
+    assert!(out.contains("2d-5pt,HSW"), "{out}");
+}
+
+#[test]
+fn sweep_cli_json_format() {
+    let out = cli::run(&argv(
+        "sweep -m SNB kernels/triad.c -D N 1k:16k:log2 --format json",
+    ))
+    .unwrap();
+    assert!(out.contains("\"rows\": ["), "{out}");
+    assert!(out.contains("\"t_ecm_mem\""), "{out}");
+    assert!(out.contains("\"lc_fast_levels\""), "{out}");
+    assert_eq!(out.matches("\"kernel\": \"triad\"").count(), 5, "{out}");
+}
+
+#[test]
+fn sweep_cli_accepts_table5_tags() {
+    // a Table 5 tag instead of a file path resolves to the embedded source
+    let out = cli::run(&argv("sweep -m SNB 2D-5pt -D N 256:1k:log2 -D M 2000")).unwrap();
+    assert!(out.lines().count() >= 4, "{out}");
+}
+
+#[test]
+fn sweep_over_32_points_matches_serial_analyze_calls() {
+    // The acceptance criterion: >= 32 grid points, parallel+memoized
+    // engine output identical to one-by-one serial pipeline runs.
+    let src = kerncraft::models::reference::KERNEL_2D5PT;
+    let ns: Vec<i64> = (7..23).map(|e| 1i64 << e).collect(); // 16 sizes
+    let machines = ["SNB".to_string(), "HSW".to_string()];
+    let jobs = build_jobs(
+        "2d-5pt",
+        Arc::from(src),
+        &machines,
+        &[1],
+        &[("N".to_string(), ns.clone()), ("M".to_string(), vec![4000])],
+        CachePredictorKind::Auto,
+    );
+    assert_eq!(jobs.len(), 32);
+    let out = SweepEngine::new().run(&jobs).unwrap();
+
+    let program = parse(src).unwrap();
+    for (job, row) in jobs.iter().zip(&out.rows) {
+        let machine = MachineModel::builtin(&job.machine).unwrap();
+        let consts: HashMap<String, i64> =
+            job.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        let analysis = KernelAnalysis::from_program(&program, &consts).unwrap();
+        let pm =
+            PortModel::analyze(&analysis, &machine, &CodegenPolicy::for_machine(&machine))
+                .unwrap();
+        let traffic = CachePredictor::with_kind(&machine, job.cores, job.predictor)
+            .predict(&analysis)
+            .unwrap();
+        let ecm = EcmModel::build(&pm, &traffic, &machine).unwrap();
+        assert_eq!(row.t_ecm_mem, ecm.t_mem(), "{:?}", job.constants);
+        assert_eq!(row.t_ol, ecm.t_ol);
+        assert_eq!(row.t_nol, ecm.t_nol);
+        for (link, c) in row.links.iter().zip(&ecm.contributions) {
+            assert_eq!(link.1, c.lines, "{} at {:?}", link.0, job.constants);
+            assert_eq!(link.2, c.cycles);
+        }
+    }
+}
+
+#[test]
+fn auto_predictor_skips_the_walk_when_decisive() {
+    // Jacobi at a clearly-decisive size: all three levels answered by the
+    // layer conditions; the offset walk never runs (stage-counter hook).
+    let src = kerncraft::models::reference::KERNEL_2D5PT;
+    let jobs = build_jobs(
+        "2d-5pt",
+        Arc::from(src),
+        &["SNB".to_string()],
+        &[1],
+        &[("N".to_string(), vec![4000]), ("M".to_string(), vec![4000])],
+        CachePredictorKind::Auto,
+    );
+    let out = SweepEngine::serial().run(&jobs).unwrap();
+    assert_eq!(out.rows[0].walk_levels, 0, "{:?}", out.rows[0]);
+    assert_eq!(out.rows[0].lc_fast_levels, 3);
+
+    // same point with the offsets predictor: everything walks
+    let jobs = build_jobs(
+        "2d-5pt",
+        Arc::from(src),
+        &["SNB".to_string()],
+        &[1],
+        &[("N".to_string(), vec![4000]), ("M".to_string(), vec![4000])],
+        CachePredictorKind::Offsets,
+    );
+    let out_walk = SweepEngine::serial().run(&jobs).unwrap();
+    assert_eq!(out_walk.rows[0].lc_fast_levels, 0);
+    assert_eq!(out_walk.rows[0].walk_levels, 3);
+    // and the numbers agree
+    assert_eq!(out.rows[0].links, out_walk.rows[0].links);
+    assert_eq!(out.rows[0].t_ecm_mem, out_walk.rows[0].t_ecm_mem);
+}
+
+#[test]
+fn multi_core_sweep_partitions_shared_caches() {
+    let src = kerncraft::models::reference::KERNEL_2D5PT;
+    let jobs = build_jobs(
+        "2d-5pt",
+        Arc::from(src),
+        &["SNB".to_string()],
+        &[1, 8],
+        &[("N".to_string(), vec![6000]), ("M".to_string(), vec![6000])],
+        CachePredictorKind::Offsets,
+    );
+    // serial engine: memo counters are deterministic (no racing misses)
+    let out = SweepEngine::serial().run(&jobs).unwrap();
+    assert_eq!(out.rows.len(), 2);
+    assert_eq!(out.rows[0].cores, 1);
+    assert_eq!(out.rows[1].cores, 8);
+    // memory traffic can only grow when the L3 share shrinks
+    assert!(out.rows[1].memory_bytes_per_unit >= out.rows[0].memory_bytes_per_unit);
+    // the in-core product was shared: one incore miss for both points
+    assert_eq!(out.stats.incore_misses, 1, "{:?}", out.stats);
+    assert_eq!(out.stats.incore_hits, 1);
+}
