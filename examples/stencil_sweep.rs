@@ -1,6 +1,8 @@
 //! Figure 3-style sweep driver for ANY of the shipped kernels: ECM
-//! contributions and layer conditions as the problem size grows — now on
-//! the parallel memoizing [`kerncraft::sweep::SweepEngine`].
+//! contributions and layer conditions as the problem size grows — the
+//! parallel [`kerncraft::sweep::SweepEngine`] mapping requests through
+//! one shared [`kerncraft::session::Session`] (also used up front to
+//! screen out points whose halo does not fit).
 //!
 //! ```sh
 //! cargo run --release --example stencil_sweep -- [kernel-tag] [machine] [predictor]
@@ -8,10 +10,9 @@
 //! ```
 
 use kerncraft::cache::CachePredictorKind;
-use kerncraft::kernel::{parse, KernelAnalysis};
 use kerncraft::models::reference;
+use kerncraft::session::{KernelSpec, Session};
 use kerncraft::sweep::{SweepEngine, SweepJob};
-use std::collections::HashMap;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -46,17 +47,19 @@ fn main() -> anyhow::Result<()> {
 
     // Points whose halo does not fit are dropped up front (the engine
     // fails the whole batch on any error, by design): a point is viable
-    // iff the static analysis binds and every loop has iterations.
-    let program = parse(src)?;
+    // iff the static analysis binds and every loop has iterations. The
+    // screening session is reused by the engine run below, so the parse
+    // and every surviving analysis are already cached.
+    let session = Session::new();
+    let spec = KernelSpec::source(tag.as_str(), source.clone());
     jobs.retain(|j| {
-        let consts: HashMap<String, i64> =
-            j.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
-        KernelAnalysis::from_program(&program, &consts)
+        session
+            .kernel_analysis(&spec, &j.constants)
             .map(|a| a.loops.iter().all(|l| l.trip() > 0))
             .unwrap_or(false)
     });
 
-    let out = SweepEngine::new().run(&jobs)?;
+    let out = SweepEngine::new().run_with_session(&session, &jobs)?;
     println!("ECM sweep for {tag} on {arch} ({} predictor)", predictor.name());
     println!(
         "{:>7} | {:>7} {:>7} | {:>8} {:>8} {:>8} | {:>9} | sat | lc/walk | bands",

@@ -3,13 +3,14 @@
 //! EXPERIMENTS.md tracks these numbers.
 //!
 //! Hot paths: (1) the backward-window cache predictor, (2) the
-//! trace-driven virtual testbed, (3) full ECM analysis end to end.
+//! trace-driven virtual testbed, (3) full ECM analysis end to end through
+//! the `Session` API — cold (empty caches) and warm (memoized stages).
 
 use kerncraft::cache::CachePredictor;
-use kerncraft::incore::{CodegenPolicy, PortModel};
 use kerncraft::kernel::{parse, KernelAnalysis};
 use kerncraft::machine::MachineModel;
-use kerncraft::models::{reference, EcmModel};
+use kerncraft::models::reference;
+use kerncraft::session::{AnalysisRequest, KernelSpec, Session};
 use kerncraft::sim::VirtualTestbed;
 use kerncraft::util::{median, monotonic_ns};
 use std::collections::HashMap;
@@ -26,7 +27,6 @@ fn time_ms<F: FnMut()>(mut f: F, samples: usize) -> f64 {
 
 fn main() {
     let machine = MachineModel::snb();
-    let policy = CodegenPolicy::for_machine(&machine);
 
     // --- cache predictor on the three stencils ---
     println!("=== hotpath: analytic cache predictor ===");
@@ -65,16 +65,26 @@ fn main() {
     let mips = iters as f64 / ms / 1e3;
     println!("virtual_testbed jacobi {iters} iters -> {ms:>8.2} ms ({mips:.1} M it/s)");
 
-    // --- full ECM pipeline ---
-    println!("=== hotpath: full ECM analysis ===");
-    let ms = time_ms(
+    // --- full ECM pipeline through the session front end ---
+    println!("=== hotpath: full ECM analysis (Session) ===");
+    let req = AnalysisRequest::new(KernelSpec::named("2D-5pt"), "SNB")
+        .with_constant("N", 2000)
+        .with_constant("M", 600);
+    let cold_ms = time_ms(
         || {
-            let pm = PortModel::analyze(&analysis, &machine, &policy).unwrap();
-            let t = CachePredictor::new(&machine).predict(&analysis).unwrap();
-            let _ = EcmModel::build(&pm, &t, &machine).unwrap();
+            let _ = Session::new().evaluate(&req).unwrap();
         },
         5,
     );
-    println!("full_ecm jacobi -> {ms:>8.2} ms");
+    let warm = Session::new();
+    warm.evaluate(&req).unwrap();
+    let warm_ms = time_ms(
+        || {
+            let _ = warm.evaluate(&req).unwrap();
+        },
+        5,
+    );
+    println!("full_ecm jacobi cold session -> {cold_ms:>8.2} ms (parse + analyze + models)");
+    println!("full_ecm jacobi warm session -> {warm_ms:>8.2} ms (memoized parse/analysis/incore)");
     println!("hotpath bench OK");
 }

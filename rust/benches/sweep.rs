@@ -1,23 +1,22 @@
 //! Sweep-engine benchmark: a 64-point Fig.-3-style grid (2D-5pt Jacobi,
 //! 16 sizes × 2 machines × 2 core counts) evaluated three ways:
 //!
-//! 1. **serial baseline** — 64 independent pipeline runs, re-parsing and
-//!    re-analyzing every point (what a shell loop over `kerncraft -p ECM`
-//!    would do), offset-walk predictor;
-//! 2. **engine, 1 thread** — memoized stages, Auto predictor;
-//! 3. **engine, N threads** — memoized + parallel, Auto predictor.
+//! 1. **serial baseline** — 64 independent requests, each through a FRESH
+//!    `Session` (re-parsing and re-analyzing every point — what a shell
+//!    loop over `kerncraft -p ECM --format json` would pay), offset-walk
+//!    predictor;
+//! 2. **engine, 1 thread** — one shared session, Auto predictor;
+//! 3. **engine, N threads** — shared session + parallel, Auto predictor.
 //!
 //! Asserts that all three produce identical ECM numbers, then prints the
-//! timings (the PR's acceptance evidence: parallel+memoized beats the
-//! serial baseline on a multi-core runner).
+//! timings (the acceptance evidence: the shared-session engine beats the
+//! fresh-session baseline on a multi-core runner).
 
-use kerncraft::cache::{CachePredictor, CachePredictorKind};
-use kerncraft::incore::{CodegenPolicy, PortModel};
-use kerncraft::kernel::{parse, KernelAnalysis};
-use kerncraft::models::{reference, EcmModel};
+use kerncraft::cache::CachePredictorKind;
+use kerncraft::models::reference;
+use kerncraft::session::Session;
 use kerncraft::sweep::{build_jobs, SweepEngine};
 use kerncraft::util::{median, monotonic_ns};
-use std::collections::HashMap;
 use std::sync::Arc;
 
 fn main() {
@@ -35,25 +34,14 @@ fn main() {
     );
     assert_eq!(jobs.len(), 64);
 
-    // --- serial baseline: full pipeline per point, no memoization ---
+    // --- serial baseline: a fresh session per point, no memo reuse ---
     let serial_run = || -> Vec<f64> {
         let mut t_mems = Vec::with_capacity(jobs.len());
         for job in &jobs {
-            let machine = kerncraft::cli::load_machine(&job.machine).unwrap();
-            let program = parse(src).unwrap();
-            let consts: HashMap<String, i64> =
-                job.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
-            let analysis = KernelAnalysis::from_program(&program, &consts).unwrap();
-            let pm = PortModel::analyze(
-                &analysis,
-                &machine,
-                &CodegenPolicy::for_machine(&machine),
-            )
-            .unwrap();
-            let traffic =
-                CachePredictor::with_cores(&machine, job.cores).predict(&analysis).unwrap();
-            let ecm = EcmModel::build(&pm, &traffic, &machine).unwrap();
-            t_mems.push(ecm.t_mem());
+            let mut req = job.request();
+            req.predictor = CachePredictorKind::Offsets;
+            let report = Session::new().evaluate(&req).unwrap();
+            t_mems.push(report.ecm.expect("ECM model requested").t_mem);
         }
         t_mems
     };
@@ -96,7 +84,7 @@ fn main() {
     assert_eq!(engine1_rows, enginep_rows, "parallel rows must be bit-identical");
 
     println!("=== sweep bench: 64-point jacobi grid (16 N × 2 machines × 2 cores) ===");
-    println!("serial analyze calls : {serial_ms:>9.2} ms   (baseline)");
+    println!("fresh-session serial : {serial_ms:>9.2} ms   (baseline)");
     println!(
         "engine, 1 thread     : {engine1_ms:>9.2} ms   ({:.2}x vs serial)",
         serial_ms / engine1_ms

@@ -149,6 +149,26 @@ impl TrafficPrediction {
         self.levels.iter().find(|l| l.level == level).map(|l| l.total_lines())
     }
 
+    /// Fig. 3 breakpoint bands: per loop dimension of `analysis`, the
+    /// innermost cache level whose layer condition holds, rendered as
+    /// `"j@L2"` (`"j@MEM"` when none does).
+    pub fn lc_breakpoints(&self, analysis: &KernelAnalysis) -> Vec<String> {
+        analysis
+            .loops
+            .iter()
+            .enumerate()
+            .map(|(d, l)| {
+                let holds = self
+                    .layer_conditions
+                    .iter()
+                    .find(|e| e.dim_index == d && e.satisfied)
+                    .map(|e| e.level.clone())
+                    .unwrap_or_else(|| "MEM".to_string());
+                format!("{}@{}", l.index, holds)
+            })
+            .collect()
+    }
+
     /// Bytes per unit of work across the outermost link (memory traffic).
     pub fn memory_bytes_per_unit(&self) -> f64 {
         self.levels

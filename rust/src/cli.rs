@@ -1,37 +1,44 @@
-//! Command-line interface, mirroring the paper's tool invocation
-//! (Listing 5):
+//! Command-line front end — a thin shell over [`crate::session`],
+//! mirroring the paper's tool invocation (Listing 5):
 //!
 //! ```text
 //! kerncraft -p ECM --cores 1 -m machines/snb.yml kernels/2d-5pt.c \
-//!           -D N 6000 -D M 6000 [--unit cy/CL] [-v]
+//!           -D N 6000 -D M 6000 [--unit cy/CL] [--format json] [-v]
 //! ```
 //!
 //! Analysis modes (paper §4.6): `ECM`, `ECMData`, `ECMCPU`, `Roofline`,
-//! `RooflinePort` (the paper's RooflineIACA), `Benchmark`. Extras beyond
-//! the paper CLI: `--cache-viz` (Fig 2), `--machine-report` (Table 1),
-//! `--bench-path virtual|native|pjrt` for the three Benchmark backends,
-//! `--cache-predictor offsets|lc|auto` (upstream Kerncraft's knob), and
-//! the batched **sweep** subcommand:
+//! `RooflinePort` (the paper's RooflineIACA), `Benchmark`. Every analysis
+//! run builds one typed [`AnalysisRequest`], evaluates it through a
+//! [`Session`], and renders the resulting [`crate::session::AnalysisReport`]
+//! as text (default) or JSON (`--format json`).
+//!
+//! Batch subcommands:
 //!
 //! ```text
 //! kerncraft sweep -m SNB,HSW kernels/2d-5pt.c -D N 128:8M:log2 -D M 4000 \
 //!           [--cores 1,2] [--predictor auto] [--format csv|json] [--threads K]
+//! kerncraft serve [--input FILE] [-v]
 //! ```
 //!
-//! Grid axes use `START:END[:log2|*K|+K]` with binary magnitude suffixes
-//! (`8M` = 8·1024²); every combination of machine × cores × grid point is
-//! evaluated by [`crate::sweep::SweepEngine`] in parallel with
-//! stage memoization, and emitted as CSV or JSON rows.
+//! `sweep` expands grid axes (`START:END[:log2|*K|+K]`, binary magnitude
+//! suffixes) into jobs for [`crate::sweep::SweepEngine`]. `serve` reads
+//! JSON-lines [`AnalysisRequest`]s from stdin (or `--input FILE`) and
+//! streams one JSON [`crate::session::AnalysisReport`] per line back,
+//! amortizing machine/kernel parsing across requests through one shared
+//! session — each response carries its per-request cache-hit counters.
 
-use crate::cache::{CachePredictor, CachePredictorKind};
-use crate::incore::{CodegenPolicy, PortModel};
-use crate::kernel::{parse, KernelAnalysis};
+use crate::cache::CachePredictorKind;
+use crate::jsonio::{self, json_str};
 use crate::machine::MachineModel;
-use crate::models::{EcmModel, RooflineModel, ScalingModel, Unit};
+use crate::models::Unit;
 use crate::report;
+use crate::session::{
+    AnalysisRequest, CodegenSelection, KernelSpec, MemoStats, ModelKind, Session,
+};
 use crate::sweep;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, Write};
 use std::sync::Arc;
 
 /// Parsed command line.
@@ -50,37 +57,45 @@ pub struct Args {
     pub artifacts_dir: String,
     pub scalar_codegen: bool,
     pub cache_predictor: CachePredictorKind,
+    pub format: OutputFormat,
 }
 
-/// Analysis mode (paper §4.6).
+/// Single-run output format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    #[default]
+    Text,
+    Json,
+}
+
+/// Analysis mode (paper §4.6): one of the session model kinds, or the
+/// Benchmark mode that executes code instead of evaluating models.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
-    Ecm,
-    EcmData,
-    EcmCpu,
-    Roofline,
-    RooflinePort,
+    Model(ModelKind),
     Benchmark,
 }
 
 impl Mode {
     fn parse(s: &str) -> Option<Mode> {
-        Some(match s {
-            "ECM" => Mode::Ecm,
-            "ECMData" => Mode::EcmData,
-            "ECMCPU" => Mode::EcmCpu,
-            "Roofline" => Mode::Roofline,
-            "RooflinePort" | "RooflineIACA" => Mode::RooflinePort,
-            "Benchmark" => Mode::Benchmark,
-            _ => return None,
-        })
+        ModelKind::parse(s)
+            .map(Mode::Model)
+            .or_else(|| (s == "Benchmark").then_some(Mode::Benchmark))
+    }
+
+    /// The session model this mode maps to (None for Benchmark).
+    fn model(&self) -> Option<ModelKind> {
+        match self {
+            Mode::Model(m) => Some(*m),
+            Mode::Benchmark => None,
+        }
     }
 }
 
 /// Parse argv (without the program name).
 pub fn parse_args(argv: &[String]) -> Result<Args> {
     let mut args = Args {
-        mode: Mode::Ecm,
+        mode: Mode::Model(ModelKind::Ecm),
         machine: "SNB".to_string(),
         kernel_path: None,
         constants: HashMap::new(),
@@ -93,6 +108,7 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
         artifacts_dir: "artifacts".to_string(),
         scalar_codegen: false,
         cache_predictor: CachePredictorKind::Offsets,
+        format: OutputFormat::Text,
     };
     let mut it = argv.iter().peekable();
     let mut next_val = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
@@ -122,12 +138,21 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
             }
             "--unit" => {
                 let v = next_val(&mut it, "--unit")?;
-                args.unit = Unit::parse(&v).ok_or_else(|| anyhow!("unknown unit '{v}'"))?;
+                args.unit = Unit::parse(&v).ok_or_else(|| {
+                    anyhow!("unknown unit '{v}' (valid: {})", Unit::VALID_SPELLINGS)
+                })?;
             }
             "--cache-predictor" => {
                 let v = next_val(&mut it, "--cache-predictor")?;
                 args.cache_predictor = CachePredictorKind::parse(&v)
                     .ok_or_else(|| anyhow!("unknown cache predictor '{v}' (offsets|lc|auto)"))?;
+            }
+            "--format" => {
+                args.format = match next_val(&mut it, "--format")?.as_str() {
+                    "text" => OutputFormat::Text,
+                    "json" => OutputFormat::Json,
+                    other => bail!("unknown output format '{other}' (text|json)"),
+                };
             }
             "-v" | "--verbose" => args.verbose = true,
             "--cache-viz" => args.cache_viz = true,
@@ -155,7 +180,7 @@ pub fn usage() -> String {
     "usage: kerncraft -p MODE [-m MACHINE] kernel.c -D NAME VALUE ...\n\
      modes: ECM ECMData ECMCPU Roofline RooflinePort Benchmark\n\
      MACHINE: SNB | HSW | path/to/machine.yml\n\
-     options: --cores N  --unit {cy/CL,It/s,FLOP/s}  -v\n\
+     options: --cores N  --unit {cy/CL,It/s,FLOP/s}  --format {text,json}  -v\n\
               --cache-predictor {offsets,lc,auto}\n\
               --cache-viz  --machine-report  --scalar\n\
               --bench-path {virtual,native,pjrt}  --artifacts DIR\n\
@@ -164,139 +189,155 @@ pub fn usage() -> String {
      kerncraft sweep [-m M1,M2] kernel.c -D NAME GRID [-D NAME2 GRID2 ...]\n\
               GRID: VALUE | START:END[:log2|*K|+K]   (suffixes k/M/G, 1024-based)\n\
               --cores LIST  --predictor {offsets,lc,auto}  --threads K\n\
-              --format {csv,json}  --serial  -v"
+              --format {csv,json}  --serial  -v\n\
+     \n\
+     JSON-lines batch service (one AnalysisRequest per input line,\n\
+     one AnalysisReport per output line, shared session cache):\n\
+     kerncraft serve [--input FILE] [-v]"
         .to_string()
 }
 
 /// Load the machine model named by `-m` (builtin tag or file path).
 pub fn load_machine(name: &str) -> Result<MachineModel> {
-    if let Some(m) = MachineModel::builtin(name) {
-        return Ok(m);
-    }
-    MachineModel::from_file(name)
+    MachineModel::load(name)
+}
+
+/// Build the typed session request a single-run invocation maps to.
+/// Benchmark mode has no request (it executes code instead).
+pub fn request_from_args(args: &Args) -> Result<Option<AnalysisRequest>> {
+    let Some(model) = args.mode.model() else {
+        return Ok(None);
+    };
+    let Some(path) = &args.kernel_path else {
+        bail!("no kernel file given\n{}", usage());
+    };
+    Ok(Some(AnalysisRequest {
+        id: None,
+        kernel: KernelSpec::path(path),
+        constants: args.constants.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+        machine: args.machine.clone(),
+        cores: args.cores,
+        model,
+        predictor: args.cache_predictor,
+        codegen: if args.scalar_codegen {
+            CodegenSelection::Scalar
+        } else {
+            CodegenSelection::MachineDefault
+        },
+        unit: args.unit,
+    }))
 }
 
 /// Run the CLI; returns the report text.
 pub fn run(argv: &[String]) -> Result<String> {
-    if argv.first().map(String::as_str) == Some("sweep") {
-        return run_sweep(&argv[1..]);
+    match argv.first().map(String::as_str) {
+        Some("sweep") => return run_sweep(&argv[1..]),
+        Some("serve") => return run_serve(&argv[1..]),
+        _ => {}
     }
     let args = parse_args(argv)?;
-    let machine = load_machine(&args.machine)?;
+    if args.format == OutputFormat::Json {
+        // text-only output would be silently dropped from the single
+        // JSON document — refuse instead of losing requested output
+        if args.machine_report || args.cache_viz || args.verbose {
+            bail!(
+                "--format json cannot carry --machine-report/--cache-viz/-v \
+                 (text-only sections); drop the flag or use --format text"
+            );
+        }
+        if args.mode == Mode::Benchmark {
+            bail!("--format json is not supported in Benchmark mode (text output only)");
+        }
+    }
+    let session = Session::new();
     let mut out = String::new();
 
     if args.machine_report {
+        let machine = session.machine(&args.machine)?;
         out.push_str(&report::machine_report(&machine));
         if args.kernel_path.is_none() {
             return Ok(out);
         }
     }
 
-    let Some(path) = &args.kernel_path else {
-        bail!("no kernel file given\n{}", usage());
-    };
-    let source = std::fs::read_to_string(path)
-        .with_context(|| format!("reading kernel file {path}"))?;
-    let program = parse(&source)?;
-    let analysis = KernelAnalysis::from_program(&program, &args.constants)?;
+    if args.mode == Mode::Benchmark {
+        let Some(path) = &args.kernel_path else {
+            bail!("no kernel file given\n{}", usage());
+        };
+        out.push_str(&run_benchmark(&session, &args, path)?);
+        return Ok(out);
+    }
 
+    let request = request_from_args(&args)?.expect("non-benchmark mode has a request");
+    let ev = session.evaluate_full(&request)?;
+
+    if args.format == OutputFormat::Json {
+        // structured output: exactly one JSON document, no text extras
+        return Ok(format!("{}\n", ev.report.to_json()));
+    }
+
+    if args.verbose {
+        out.push_str(&report::analysis_report(&ev.analysis));
+        out.push('\n');
+    }
+    out.push_str(&report::render_report(&ev.report, args.verbose));
+    if args.cache_viz {
+        if let Some(traffic) = &ev.traffic {
+            out.push_str(&report::cache_viz(&ev.analysis, traffic));
+        }
+    }
+    Ok(out)
+}
+
+/// Benchmark mode (paper §4.6): execute the kernel on the virtual
+/// testbed, the native host, or a PJRT artifact.
+fn run_benchmark(session: &Session, args: &Args, path: &str) -> Result<String> {
+    let constants: BTreeMap<String, i64> =
+        args.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
+    let analysis = session.kernel_analysis(&KernelSpec::path(path), &constants)?;
+    let machine = session.machine(&args.machine)?;
+    let mut out = String::new();
     if args.verbose {
         out.push_str(&report::analysis_report(&analysis));
         out.push('\n');
     }
-
-    let policy = if args.scalar_codegen {
-        CodegenPolicy::scalar()
-    } else {
-        CodegenPolicy::for_machine(&machine)
-    };
-    let predictor =
-        |m: &MachineModel| CachePredictor::with_kind(m, args.cores, args.cache_predictor);
-
-    match args.mode {
-        Mode::EcmCpu => {
-            let pm = PortModel::analyze(&analysis, &machine, &policy)?;
-            out.push_str(&report::incore_report(&pm));
+    match args.bench_path.as_str() {
+        "virtual" => {
+            let r = crate::bench_mode::run_virtual(&analysis, &machine)?;
+            out.push_str(&format!(
+                "Benchmark (virtual testbed {}): {:.1} cy/CL ({:.3e} It/s)\n",
+                machine.arch, r.cy_per_cl, r.it_per_s
+            ));
         }
-        Mode::EcmData => {
-            let traffic = predictor(&machine).predict(&analysis)?;
-            let ecm = EcmModel::build_data_only(&traffic, &machine)?;
-            let sc = ScalingModel::build(&ecm, &machine);
-            out.push_str(&report::ecm_report(&ecm, &sc, args.unit, args.verbose));
-            if args.cache_viz {
-                out.push_str(&report::cache_viz(&analysis, &traffic));
-            }
+        "native" => {
+            // map the kernel file back to a Table 5 tag by structure
+            let tag = native_tag_for(path)
+                .ok_or_else(|| anyhow!("no native implementation for {path}"))?;
+            let consts: Vec<(&str, i64)> =
+                args.constants.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+            let r = crate::bench_mode::run_native(tag, &consts, 3)?;
+            out.push_str(&format!(
+                "Benchmark (native host): {:.1} host-cy/CL ({:.3e} It/s)\n",
+                r.cy_per_cl, r.it_per_s
+            ));
         }
-        Mode::Ecm => {
-            let pm = PortModel::analyze(&analysis, &machine, &policy)?;
-            let traffic = predictor(&machine).predict(&analysis)?;
-            let ecm = EcmModel::build(&pm, &traffic, &machine)?;
-            let sc = ScalingModel::build(&ecm, &machine);
-            if args.verbose {
-                out.push_str(&report::incore_report(&pm));
-            }
-            out.push_str(&report::ecm_report(&ecm, &sc, args.unit, args.verbose));
-            if args.cache_viz {
-                out.push_str(&report::cache_viz(&analysis, &traffic));
-            }
-        }
-        Mode::Roofline | Mode::RooflinePort => {
-            let traffic = predictor(&machine).predict(&analysis)?;
-            let pm = if args.mode == Mode::RooflinePort {
-                Some(PortModel::analyze(&analysis, &machine, &policy)?)
-            } else {
-                None
-            };
-            let roofline = RooflineModel::build_cores(
-                &analysis,
-                &traffic,
-                &machine,
-                pm.as_ref(),
-                args.cores,
+        "pjrt" => {
+            let name = pjrt_name_for(path)
+                .ok_or_else(|| anyhow!("no artifact mapping for {path}"))?;
+            let r = crate::bench_mode::run_pjrt(
+                std::path::Path::new(&args.artifacts_dir),
+                name,
+                3,
             )?;
-            out.push_str(&report::roofline_report(&roofline, args.unit));
-            if args.cache_viz {
-                out.push_str(&report::cache_viz(&analysis, &traffic));
-            }
+            out.push_str(&format!(
+                "Benchmark (PJRT artifact '{}'): {:.1} host-cy/CL ({:.3e} It/s, wall {:.3} ms)\n",
+                name,
+                r.cy_per_cl,
+                r.it_per_s,
+                r.wall_s * 1e3
+            ));
         }
-        Mode::Benchmark => match args.bench_path.as_str() {
-            "virtual" => {
-                let r = crate::bench_mode::run_virtual(&analysis, &machine)?;
-                out.push_str(&format!(
-                    "Benchmark (virtual testbed {}): {:.1} cy/CL ({:.3e} It/s)\n",
-                    machine.arch, r.cy_per_cl, r.it_per_s
-                ));
-            }
-            "native" => {
-                // map the kernel file back to a Table 5 tag by structure
-                let tag = native_tag_for(path)
-                    .ok_or_else(|| anyhow!("no native implementation for {path}"))?;
-                let consts: Vec<(&str, i64)> =
-                    args.constants.iter().map(|(k, v)| (k.as_str(), *v)).collect();
-                let r = crate::bench_mode::run_native(tag, &consts, 3)?;
-                out.push_str(&format!(
-                    "Benchmark (native host): {:.1} host-cy/CL ({:.3e} It/s)\n",
-                    r.cy_per_cl, r.it_per_s
-                ));
-            }
-            "pjrt" => {
-                let name = pjrt_name_for(path)
-                    .ok_or_else(|| anyhow!("no artifact mapping for {path}"))?;
-                let r = crate::bench_mode::run_pjrt(
-                    std::path::Path::new(&args.artifacts_dir),
-                    name,
-                    3,
-                )?;
-                out.push_str(&format!(
-                    "Benchmark (PJRT artifact '{}'): {:.1} host-cy/CL ({:.3e} It/s, wall {:.3} ms)\n",
-                    name,
-                    r.cy_per_cl,
-                    r.it_per_s,
-                    r.wall_s * 1e3
-                ));
-            }
-            other => bail!("unknown --bench-path '{other}'"),
-        },
+        other => bail!("unknown --bench-path '{other}'"),
     }
     Ok(out)
 }
@@ -457,6 +498,204 @@ pub fn run_sweep(argv: &[String]) -> Result<String> {
     Ok(text)
 }
 
+/// Parsed `serve` subcommand arguments.
+#[derive(Debug, Clone, Default)]
+pub struct ServeArgs {
+    /// Request file (JSON lines); None reads stdin.
+    pub input: Option<String>,
+    pub verbose: bool,
+}
+
+/// Parse `serve` subcommand argv (after the `serve` word).
+pub fn parse_serve_args(argv: &[String]) -> Result<ServeArgs> {
+    let mut args = ServeArgs::default();
+    let mut it = argv.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--input" | "-i" => {
+                args.input = Some(
+                    it.next()
+                        .cloned()
+                        .ok_or_else(|| anyhow!("missing value after --input"))?,
+                );
+            }
+            "-v" | "--verbose" => args.verbose = true,
+            "-h" | "--help" => bail!("{}", usage()),
+            other if !other.starts_with('-') => {
+                if args.input.is_some() {
+                    bail!("multiple request files given");
+                }
+                args.input = Some(other.to_string());
+            }
+            other => bail!("unknown serve flag '{other}'\n{}", usage()),
+        }
+    }
+    Ok(args)
+}
+
+/// Outcome of one `serve` run (for logging; responses went to the sink).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub errors: u64,
+    /// Session-wide memo counters accumulated over the whole run.
+    pub stats: MemoStats,
+}
+
+impl std::fmt::Display for ServeSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "# serve: {} requests ({} errors), memo {} hits / {} misses",
+            self.requests,
+            self.errors,
+            self.stats.hits(),
+            self.stats.misses()
+        )
+    }
+}
+
+/// The `serve` loop, I/O-parameterized so tests can drive it in-process:
+/// read one JSON [`AnalysisRequest`] per input line, stream one JSON
+/// [`crate::session::AnalysisReport`] (or `{"error": ...}`) per output
+/// line. Blank lines and `#` comments are skipped; a malformed or failing
+/// request produces an error line (echoing its `id` when present) without
+/// ending the stream. All requests share one [`Session`], so repeated
+/// (machine, kernel) pairs hit the cache — the per-request `session`
+/// counters in each response show it.
+///
+/// Caching caveat: machine models are cached by *key* (tag or path) for
+/// the lifetime of the serve process, while kernel `path` specs are
+/// re-read per request (parsing is content-keyed). Editing a machine
+/// YAML under a running server therefore has no effect until restart.
+/// Resource bounds: request lines are capped (oversized lines become
+/// error lines) and the session's stage caches are size-bounded, so a
+/// long-running server's memory stays flat under distinct-request
+/// traffic.
+/// Longest request line `serve` buffers; anything longer becomes an
+/// error line (the rest of the oversized line is drained and discarded)
+/// so one runaway client line cannot exhaust memory.
+const MAX_REQUEST_LINE_BYTES: usize = 4 << 20;
+
+/// Bounded line read: like `read_until(b'\n')` but stops storing at
+/// `cap` bytes while still consuming input through the newline. Returns
+/// (bytes consumed, truncated?).
+fn read_line_capped(
+    input: &mut dyn BufRead,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<(usize, bool)> {
+    let mut consumed_total = 0usize;
+    let mut truncated = false;
+    loop {
+        let (consume, done) = {
+            let chunk = input.fill_buf()?;
+            if chunk.is_empty() {
+                break;
+            }
+            let newline = chunk.iter().position(|&b| b == b'\n');
+            let end = newline.map(|ix| ix + 1).unwrap_or(chunk.len());
+            let want = newline.unwrap_or(chunk.len());
+            let take = cap.saturating_sub(buf.len()).min(want);
+            buf.extend_from_slice(&chunk[..take]);
+            if take < want {
+                truncated = true;
+            }
+            (end, newline.is_some())
+        };
+        input.consume(consume);
+        consumed_total += consume;
+        if done {
+            break;
+        }
+    }
+    Ok((consumed_total, truncated))
+}
+
+pub fn serve(input: &mut dyn BufRead, output: &mut dyn Write) -> Result<ServeSummary> {
+    let session = Session::new();
+    let mut summary = ServeSummary::default();
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        let (consumed, truncated) =
+            read_line_capped(input, &mut buf, MAX_REQUEST_LINE_BYTES)?;
+        if consumed == 0 {
+            break;
+        }
+        if truncated {
+            summary.requests += 1;
+            summary.errors += 1;
+            writeln!(
+                output,
+                "{{\"error\": \"request line exceeds {MAX_REQUEST_LINE_BYTES} bytes\"}}"
+            )?;
+            output.flush()?;
+            continue;
+        }
+        // lossy: a non-UTF-8 line must yield an error LINE, not kill the
+        // stream (the replacement characters fail the JSON parse below)
+        let line = String::from_utf8_lossy(&buf);
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        summary.requests += 1;
+        // parse ONCE; keep the parsed value so the error path can echo
+        // the request id without a second full parse of the line
+        let (id, result) = match jsonio::parse(trimmed).context("parsing analysis request") {
+            Ok(v) => {
+                let id = v.get("id").and_then(|x| x.as_str().map(str::to_string));
+                let r = AnalysisRequest::from_json_value(&v)
+                    .and_then(|req| session.evaluate(&req));
+                (id, r)
+            }
+            Err(e) => (None, Err(e)),
+        };
+        match result {
+            Ok(report) => writeln!(output, "{}", report.to_json())?,
+            Err(e) => {
+                summary.errors += 1;
+                let mut s = String::from("{");
+                if let Some(id) = id {
+                    s.push_str("\"id\": ");
+                    s.push_str(&json_str(&id));
+                    s.push_str(", ");
+                }
+                s.push_str("\"error\": ");
+                s.push_str(&json_str(&format!("{e:#}")));
+                s.push('}');
+                writeln!(output, "{s}")?;
+            }
+        }
+        // stream: one response per request, immediately
+        output.flush()?;
+    }
+    summary.stats = session.stats();
+    Ok(summary)
+}
+
+/// Run the `serve` subcommand against stdin/stdout (or `--input FILE`).
+/// Responses stream directly to stdout; the returned string is empty so
+/// the binary adds nothing after the JSON lines.
+pub fn run_serve(argv: &[String]) -> Result<String> {
+    let args = parse_serve_args(argv)?;
+    let stdout = std::io::stdout();
+    let mut output = stdout.lock();
+    let summary = match &args.input {
+        Some(path) => {
+            let file = std::fs::File::open(path)
+                .with_context(|| format!("opening request file {path}"))?;
+            serve(&mut std::io::BufReader::new(file), &mut output)?
+        }
+        None => serve(&mut std::io::stdin().lock(), &mut output)?,
+    };
+    if args.verbose {
+        eprintln!("{summary}");
+    }
+    Ok(String::new())
+}
+
 /// Map a kernel file path to the Table 5 tag used by the native bench.
 fn native_tag_for(path: &str) -> Option<&'static str> {
     let stem = std::path::Path::new(path).file_stem()?.to_str()?;
@@ -497,18 +736,19 @@ mod tests {
             "-p ECM --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000",
         ))
         .unwrap();
-        assert_eq!(a.mode, Mode::Ecm);
+        assert_eq!(a.mode, Mode::Model(ModelKind::Ecm));
         assert_eq!(a.machine, "SNB");
         assert_eq!(a.constants["N"], 6000);
         assert_eq!(a.cores, 1);
         assert_eq!(a.kernel_path.as_deref(), Some("kernels/2d-5pt.c"));
         assert_eq!(a.cache_predictor, CachePredictorKind::Offsets);
+        assert_eq!(a.format, OutputFormat::Text);
     }
 
     #[test]
     fn roofline_iaca_alias() {
         let a = parse_args(&argv("-p RooflineIACA k.c")).unwrap();
-        assert_eq!(a.mode, Mode::RooflinePort);
+        assert_eq!(a.mode, Mode::Model(ModelKind::RooflinePort));
     }
 
     #[test]
@@ -521,6 +761,19 @@ mod tests {
     fn unit_flag() {
         let a = parse_args(&argv("-p ECM --unit FLOP/s k.c")).unwrap();
         assert_eq!(a.unit, Unit::FlopPerS);
+        // case-insensitive spellings are accepted
+        let a = parse_args(&argv("-p ECM --unit it/S k.c")).unwrap();
+        assert_eq!(a.unit, Unit::ItPerS);
+    }
+
+    #[test]
+    fn unknown_unit_error_lists_valid_spellings() {
+        let err = parse_args(&argv("-p ECM --unit parsecs k.c")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("parsecs"), "{msg}");
+        assert!(msg.contains("cy/CL"), "{msg}");
+        assert!(msg.contains("It/s"), "{msg}");
+        assert!(msg.contains("FLOP/s"), "{msg}");
     }
 
     #[test]
@@ -528,6 +781,36 @@ mod tests {
         let a = parse_args(&argv("-p ECM --cache-predictor auto k.c")).unwrap();
         assert_eq!(a.cache_predictor, CachePredictorKind::Auto);
         assert!(parse_args(&argv("-p ECM --cache-predictor nope k.c")).is_err());
+    }
+
+    #[test]
+    fn format_flag() {
+        let a = parse_args(&argv("-p ECM --format json k.c")).unwrap();
+        assert_eq!(a.format, OutputFormat::Json);
+        assert!(parse_args(&argv("-p ECM --format xml k.c")).is_err());
+    }
+
+    #[test]
+    fn json_format_refuses_text_only_sections() {
+        for extra in ["--machine-report", "--cache-viz", "-v"] {
+            let err = run(&argv(&format!(
+                "-p ECM -m SNB kernels/triad.c -D N 1000 --format json {extra}"
+            )))
+            .unwrap_err();
+            assert!(format!("{err}").contains("--format json"), "{extra}: {err}");
+        }
+        let err = run(&argv(
+            "-p Benchmark -m SNB kernels/triad.c -D N 1000 --format json",
+        ))
+        .unwrap_err();
+        assert!(format!("{err}").contains("Benchmark"), "{err}");
+    }
+
+    #[test]
+    fn benchmark_verbose_shows_analysis_tables() {
+        let out = run(&argv("-p Benchmark -m SNB kernels/triad.c -D N 400000 -v")).unwrap();
+        assert!(out.contains("loop stack"), "{out}");
+        assert!(out.contains("virtual testbed"), "{out}");
     }
 
     #[test]
@@ -547,6 +830,36 @@ mod tests {
         let walk = run(&argv(base)).unwrap();
         let auto = run(&argv(&format!("{base} --cache-predictor auto"))).unwrap();
         assert_eq!(walk, auto, "auto predictor must not change the report");
+    }
+
+    #[test]
+    fn json_format_emits_one_parseable_report() {
+        let out = run(&argv(
+            "-p ECM --cores 1 -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000 --format json",
+        ))
+        .unwrap();
+        assert_eq!(out.lines().count(), 1, "{out}");
+        let report =
+            crate::session::AnalysisReport::from_json(out.trim()).unwrap();
+        assert_eq!(report.kernel, "2d-5pt");
+        assert_eq!(report.model, ModelKind::Ecm);
+        assert_eq!(report.constants["N"], 6000);
+        let ecm = report.ecm.expect("ECM section");
+        assert!((ecm.t_mem - 36.7).abs() < 0.8, "{}", ecm.t_mem);
+        assert_eq!(report.scaling.unwrap().saturation_cores, Some(3));
+    }
+
+    #[test]
+    fn json_format_roofline() {
+        let out = run(&argv(
+            "-p RooflinePort -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000 --format json",
+        ))
+        .unwrap();
+        let report =
+            crate::session::AnalysisReport::from_json(out.trim()).unwrap();
+        let rf = report.roofline.expect("roofline section");
+        assert!(rf.memory_bound);
+        assert_eq!(rf.ceilings[rf.bottleneck].level, "L3-MEM");
     }
 
     #[test]
@@ -605,5 +918,72 @@ mod tests {
         assert!(parse_sweep_args(&argv("k.c -D N 1 -D N 2")).is_err());
         assert!(parse_sweep_args(&argv("k.c --format xml")).is_err());
         assert!(run_sweep(&argv("kernels/triad.c")).is_err(), "missing -D axis");
+    }
+
+    #[test]
+    fn parses_serve_invocation() {
+        let a = parse_serve_args(&argv("--input reqs.jsonl -v")).unwrap();
+        assert_eq!(a.input.as_deref(), Some("reqs.jsonl"));
+        assert!(a.verbose);
+        let a = parse_serve_args(&argv("reqs.jsonl")).unwrap();
+        assert_eq!(a.input.as_deref(), Some("reqs.jsonl"));
+        assert!(parse_serve_args(&argv("--bogus")).is_err());
+        assert!(parse_serve_args(&argv("a.jsonl b.jsonl")).is_err());
+    }
+
+    #[test]
+    fn serve_streams_reports_and_error_lines() {
+        let input = "\n\
+            # comment line\n\
+            {\"id\": \"ok\", \"kernel\": {\"name\": \"triad\"}, \"machine\": \"SNB\", \"constants\": {\"N\": 100000}}\n\
+            {\"id\": \"bad\", \"kernel\": {\"name\": \"nope\"}, \"machine\": \"SNB\"}\n\
+            not json at all\n";
+        let mut output = Vec::new();
+        let summary = serve(&mut input.as_bytes(), &mut output).unwrap();
+        assert_eq!(summary.requests, 3);
+        assert_eq!(summary.errors, 2);
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        let ok = crate::session::AnalysisReport::from_json(lines[0]).unwrap();
+        assert_eq!(ok.id.as_deref(), Some("ok"));
+        assert!(lines[1].contains("\"id\": \"bad\""), "{}", lines[1]);
+        assert!(lines[1].contains("\"error\""), "{}", lines[1]);
+        assert!(lines[2].contains("\"error\""), "{}", lines[2]);
+    }
+
+    #[test]
+    fn capped_line_reader_truncates_and_drains() {
+        let data: &[u8] = b"short\nAAAAAAAAAAAAAAAAAAAA\nnext\n";
+        let mut r = data;
+        let mut buf = Vec::new();
+        let (n, t) = read_line_capped(&mut r, &mut buf, 8).unwrap();
+        assert_eq!((n, t), (6, false));
+        assert_eq!(buf, b"short");
+        buf.clear();
+        let (_, t) = read_line_capped(&mut r, &mut buf, 8).unwrap();
+        assert!(t, "20 As exceed the cap");
+        assert_eq!(buf.len(), 8, "stored bytes stay capped");
+        buf.clear();
+        let (_, t) = read_line_capped(&mut r, &mut buf, 8).unwrap();
+        assert!(!t, "the oversized line was fully drained");
+        assert_eq!(buf, b"next");
+        buf.clear();
+        let (n, _) = read_line_capped(&mut r, &mut buf, 8).unwrap();
+        assert_eq!(n, 0, "EOF");
+    }
+
+    #[test]
+    fn serve_survives_non_utf8_lines() {
+        // a non-UTF-8 byte line yields an error LINE, not a dead stream
+        let mut input: &[u8] = b"\xff\xfe not utf8\n{\"kernel\": {\"name\": \"triad\"}, \"machine\": \"SNB\", \"constants\": {\"N\": 4096}}\n";
+        let mut output = Vec::new();
+        let summary = serve(&mut input, &mut output).unwrap();
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.errors, 1);
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains("\"error\""), "{text}");
+        assert!(lines[1].contains("\"kernel\": \"triad\""), "{text}");
     }
 }

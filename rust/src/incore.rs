@@ -245,26 +245,11 @@ impl PortModel {
         })
     }
 
-    /// IACA-style text report.
+    /// IACA-style text report (delegates to the shared
+    /// [`crate::report::incore_report`] renderer so the model and the
+    /// serialized report always print identically).
     pub fn report(&self) -> String {
-        let mut s = String::new();
-        s.push_str(&format!(
-            "in-core (port model): T_OL = {:.1} cy/CL, T_nOL = {:.1} cy/CL\n",
-            self.t_ol, self.t_nol
-        ));
-        s.push_str(&format!(
-            "  TP = {:.1} cy/CL, CP(recurrence) = {:.1} cy/CL, {} (x{})\n",
-            self.tp,
-            self.cp,
-            if self.vectorized { "vectorized" } else { "scalar" },
-            self.vector_elems
-        ));
-        s.push_str("  port pressure (cy/CL):");
-        for p in &self.pressure {
-            s.push_str(&format!(" {}={:.1}", p.port, p.cycles));
-        }
-        s.push('\n');
-        s
+        crate::report::incore_report(&crate::session::IncoreReport::from_model(self))
     }
 }
 

@@ -1,0 +1,529 @@
+//! Minimal JSON reader/writer for the typed request/report API.
+//!
+//! The offline crate set has no serde, so the [`crate::session`] wire
+//! format is hand-rolled on this module: a strict RFC 8259 subset parser
+//! (objects, arrays, strings with escapes, numbers, booleans, null — no
+//! comments, no trailing commas) plus string/number writers shared with
+//! the report renderers.
+//!
+//! Numbers are kept as their source text ([`JsonValue::Num`] stores the
+//! literal): integers round-trip exactly at any magnitude, and floats
+//! written with Rust's shortest-roundtrip formatting parse back to the
+//! identical bit pattern — the property the `AnalysisReport` round-trip
+//! tests rely on.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    /// Number stored as its literal text (exact round-trips).
+    Num(String),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    /// Insertion-ordered key/value pairs.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(entries) => {
+                entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Object entries (empty for non-objects).
+    pub fn entries(&self) -> &[(String, JsonValue)] {
+        match self {
+            JsonValue::Obj(e) => e,
+            _ => &[],
+        }
+    }
+
+    /// Array items (empty for non-arrays).
+    pub fn items(&self) -> &[JsonValue] {
+        match self {
+            JsonValue::Arr(v) => v,
+            _ => &[],
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Parse as a finite float. Literals that overflow `f64` (e.g.
+    /// `1e400`) are rejected rather than saturated to infinity — a
+    /// non-finite value could not be re-serialized as a JSON number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(s) => s.parse::<f64>().ok().filter(|v| v.is_finite()),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            // integer literals parse directly; no float truncation
+            JsonValue::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, JsonValue::Null)
+    }
+}
+
+/// Nesting cap: callers feed the parser untrusted service input, so
+/// recursion must be bounded well below the thread stack.
+const MAX_DEPTH: usize = 128;
+
+/// Parse one JSON document; trailing non-whitespace is an error.
+pub fn parse(text: &str) -> Result<JsonValue> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        bail!("trailing characters after JSON value at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected '{}' at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH} levels");
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.pos
+            ),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut entries = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(entries));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            entries.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(entries));
+                }
+                other => bail!(
+                    "expected ',' or '}}' at byte {}, found {:?}",
+                    self.pos,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                other => bail!(
+                    "expected ',' or ']' at byte {}, found {:?}",
+                    self.pos,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("unterminated string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.pos) else {
+                        bail!("unterminated escape");
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                // a high surrogate must be followed by a
+                                // \u-escaped low surrogate — anything else
+                                // is malformed, not silently recombined
+                                if self.bytes.get(self.pos) == Some(&b'\\')
+                                    && self.bytes.get(self.pos + 1) == Some(&b'u')
+                                {
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if (0xDC00..0xE000).contains(&lo) {
+                                        let combined = 0x10000
+                                            + ((cp - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        char::from_u32(combined)
+                                    } else {
+                                        None
+                                    }
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            out.push(c.ok_or_else(|| {
+                                anyhow!("invalid \\u escape near byte {}", self.pos)
+                            })?);
+                        }
+                        other => bail!("bad escape '\\{}'", other as char),
+                    }
+                }
+                _ if b < 0x20 => bail!("unescaped control character in string"),
+                _ if b < 0x80 => out.push(b as char),
+                _ => {
+                    // multi-byte UTF-8: back up and take the full char
+                    self.pos -= 1;
+                    let width = match b {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let chunk = self
+                        .bytes
+                        .get(self.pos..self.pos + width)
+                        .and_then(|w| std::str::from_utf8(w).ok())
+                        .ok_or_else(|| anyhow!("invalid UTF-8 in string"))?;
+                    out.push(chunk.chars().next().unwrap());
+                    self.pos += width;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            bail!("truncated \\u escape");
+        }
+        let digits = &self.bytes[self.pos..self.pos + 4];
+        // from_str_radix alone would accept a leading '+': require hex digits
+        if !digits.iter().all(|b| b.is_ascii_hexdigit()) {
+            bail!("bad \\u escape at byte {}", self.pos);
+        }
+        let hex = std::str::from_utf8(digits).expect("hex digits are ASCII");
+        let v = u32::from_str_radix(hex, 16).map_err(|_| anyhow!("bad \\u escape '{hex}'"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while self
+            .peek()
+            .map(|b| b.is_ascii_digit() || b == b'.' || b == b'e' || b == b'E' || b == b'+' || b == b'-')
+            .unwrap_or(false)
+        {
+            self.pos += 1;
+        }
+        let lit = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        if !is_rfc8259_number(lit) {
+            bail!("bad number literal '{lit}'");
+        }
+        Ok(JsonValue::Num(lit.to_string()))
+    }
+}
+
+/// RFC 8259 number grammar: `[-] int [frac] [exp]` with `int` being `0`
+/// or a non-zero-led digit run — stricter than `str::parse::<f64>`,
+/// which tolerates `01`, `1.`, `.5`.
+fn is_rfc8259_number(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(c) if c.is_ascii_digit() => {
+            while b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        let frac_start = i;
+        while b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+            i += 1;
+        }
+        if i == frac_start {
+            return false;
+        }
+    }
+    if matches!(b.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        let exp_start = i;
+        while b.get(i).is_some_and(|c| c.is_ascii_digit()) {
+            i += 1;
+        }
+        if i == exp_start {
+            return false;
+        }
+    }
+    i == b.len()
+}
+
+/// Quote and escape a string as a JSON string literal.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a float as a JSON number. Rust's shortest-roundtrip formatting
+/// is valid JSON for finite values (bare integers included); non-finite
+/// values become `null`.
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), JsonValue::Null);
+        assert_eq!(parse("true").unwrap(), JsonValue::Bool(true));
+        assert_eq!(parse(" false ").unwrap(), JsonValue::Bool(false));
+        assert_eq!(parse("42").unwrap().as_i64(), Some(42));
+        assert_eq!(parse("-7.25e2").unwrap().as_f64(), Some(-725.0));
+        assert_eq!(parse("\"hi\\n\\\"there\\\"\"").unwrap().as_str(), Some("hi\n\"there\""));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": {"d": "e"}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().items().len(), 3);
+        assert!(v.get("a").unwrap().items()[2].get("b").unwrap().is_null());
+        assert_eq!(v.get("c").unwrap().get("d").unwrap().as_str(), Some("e"));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse("1 2").is_err(), "trailing garbage");
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn number_grammar_is_rfc8259_strict() {
+        for good in ["0", "-0", "7", "-120", "0.5", "1.25e-3", "1E+10", "5e-324"] {
+            assert!(parse(good).is_ok(), "{good}");
+        }
+        for bad in ["01", "1.", "-.5", "1e", "1e+", "0x1", "-", "1.e5"] {
+            assert!(parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(parse(r#""\u00e9""#).unwrap().as_str(), Some("é"));
+        // surrogate pair: U+1F600
+        assert_eq!(parse(r#""\ud83d\ude00""#).unwrap().as_str(), Some("\u{1F600}"));
+        assert!(parse(r#""\ud83d""#).is_err(), "lone surrogate");
+        assert!(parse(r#""\ud83dA""#).is_err(), "high surrogate + non-low escape");
+        assert!(parse(r#""\ud800\ud800""#).is_err(), "two high surrogates");
+        assert!(parse(r#""\udc00""#).is_err(), "lone low surrogate");
+        assert!(parse(r#""\u+041""#).is_err(), "sign is not a hex digit");
+        assert!(parse(r#""\u00 9""#).is_err(), "space is not a hex digit");
+    }
+
+    #[test]
+    fn overflowing_literals_are_not_saturated_to_infinity() {
+        let v = parse("1e400").unwrap();
+        assert_eq!(v.as_f64(), None, "non-finite values are rejected");
+        assert_eq!(parse("-1e999").unwrap().as_f64(), None);
+    }
+
+    #[test]
+    fn numbers_round_trip_exactly() {
+        for v in [0.1, 1.0 / 3.0, 12.7, f64::MAX, 5e-324] {
+            let lit = json_num(v);
+            let back = parse(&lit).unwrap().as_f64().unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{lit}");
+        }
+        let big = i64::MAX;
+        let lit = format!("{big}");
+        assert_eq!(parse(&lit).unwrap().as_i64(), Some(big));
+    }
+
+    #[test]
+    fn string_writer_escapes() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+        // writer output parses back to the original
+        let s = "weird \u{7} mix \t \"quoted\" \\ done";
+        assert_eq!(parse(&json_str(s)).unwrap().as_str(), Some(s));
+    }
+
+    #[test]
+    fn json_num_non_finite_is_null() {
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // service input: a pathological nesting bomb must error, not
+        // overflow the stack
+        let bomb = "[".repeat(100_000);
+        let err = parse(&bomb).unwrap_err();
+        assert!(format!("{err}").contains("nested deeper"), "{err}");
+        // ordinary nesting stays well within the cap
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(parse(&ok).is_ok());
+    }
+}

@@ -2,52 +2,63 @@
 //!
 //! A from-scratch reproduction of *"Automatic Loop Kernel Analysis and
 //! Performance Modeling With Kerncraft"* (Hammer, Hager, Eitzinger,
-//! Wellein; PMBS @ SC'15, DOI 10.1145/2832087.2832092).
+//! Wellein; PMBS @ SC'15, DOI 10.1145/2832087.2832092), grown into a
+//! service-shaped library with thin front ends.
 //!
-//! The pipeline mirrors the paper's Figure 1, with the batched sweep
-//! engine layered on top:
+//! The pipeline stages mirror the paper's Figure 1; the [`session`]
+//! module is the one front door every consumer goes through:
 //!
 //! ```text
-//!   kernel.c ──► kernel::parse ──► kernel::KernelAnalysis
-//!                                   │ loop stack (Table 2)
-//!                                   │ data accesses (Tables 3/4)
-//!                                   │ flop counts
-//!                    machine.yml ──►│
-//!                                   ▼
-//!            ┌──────────────┬────────────────────────┐
-//!            │ incore::     │ cache::                │
-//!            │ port model   │ layer-cond. fast path  │
-//!            │ (IACA subst.)│ ⇄ offset walk (Auto)   │
-//!            └──────┬───────┴─────────┬──────────────┘
-//!                   ▼                 ▼
-//!              models::ecm / models::roofline ──► report::
-//!                   ▲                                ▲
-//!      validation:  │            sweep:: ───────────┘
-//!        sim::      │  parallel grid evaluation over
-//!        bench_mode │  (source × constants × machine × cores),
-//!        runtime::  │  memoizing Program / KernelAnalysis /
-//!                   │  PortModel / MachineModel across points
-//!                   │  (CLI: `kerncraft sweep -D N 128:8M:log2`)
-//!                   │
-//!                   └─ trace-driven virtual testbed (SNB/HSW stand-in),
-//!                      native host loops, PJRT artifacts (JAX/Pallas
-//!                      kernels AOT-lowered to HLO text; `pjrt` feature)
+//!                        session::AnalysisRequest
+//!             {kernel, constants, machine, cores, model,
+//!              predictor, codegen, unit}   (JSON ⇄ typed)
+//!                               │
+//!                               ▼
+//!  ┌─────────────────────── session::Session ───────────────────────┐
+//!  │ cross-request caches:  source ──► kernel::Program              │
+//!  │   (MemoStats counters) (source, constants) ──► KernelAnalysis  │
+//!  │                        machine key ──► machine::MachineModel   │
+//!  │                        (…, machine, codegen) ──► incore::      │
+//!  │                                                  PortModel     │
+//!  │ per request:  cache:: traffic (layer-cond. fast path ⇄ offset  │
+//!  │               walk) ──► models::ecm / models::roofline /       │
+//!  │               models::scaling                                  │
+//!  └──────────────────────────────┬──────────────────────────────────┘
+//!                                 ▼
+//!                     session::AnalysisReport
+//!           (serde-style JSON ⇄ typed; every figure the text
+//!            reports show, plus per-request MemoStats)
+//!                                 │
+//!        ┌──────────────┬─────────┴───────┬──────────────────┐
+//!        ▼              ▼                 ▼                  ▼
+//!   cli:: single    cli:: serve      sweep::SweepEngine   report::
+//!   runs (`-p ECM`, (JSON-lines      (parallel map of     pure text
+//!   `--format       batch service    requests through     renderers of
+//!   json`)          over one warm    one shared session)  AnalysisReport
+//!                   session)
+//!
+//!   validation:  sim:: trace-driven virtual testbed (SNB/HSW),
+//!                bench_mode:: native host loops, runtime:: PJRT
+//!                artifacts (JAX/Pallas AOT; `pjrt` feature)
 //! ```
 //!
-//! Entry points: [`analyze`] for one-shot analysis, [`sweep::SweepEngine`]
-//! for batched grids, [`cli`] for the command-line front end, and the
-//! individual modules for programmatic use.
+//! Entry points: [`session::Session`] for programmatic use,
+//! [`sweep::SweepEngine`] for batched grids, [`cli`] for the command-line
+//! front ends (`kerncraft`, `kerncraft sweep`, `kerncraft serve`), and
+//! the individual stage modules for composing custom pipelines.
 
 pub mod bench_mode;
 pub mod cache;
 pub mod cli;
 pub mod incore;
+pub mod jsonio;
 pub mod kernel;
 pub mod machine;
 pub mod microbench;
 pub mod models;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod sweep;
 pub mod util;
@@ -55,21 +66,26 @@ pub mod util;
 use anyhow::Result;
 use std::collections::HashMap;
 
-/// One-shot convenience API: parse `source`, bind `constants`, and build
-/// the full ECM + Roofline analysis against `machine`.
-///
-/// (`no_run`: doctest binaries do not inherit the xla_extension rpath;
-/// the same flow is exercised by `cli::tests::end_to_end_ecm_run_...`.)
+/// One-shot convenience API, superseded by [`session::Session`] (which
+/// memoizes every stage across calls and returns the serializable
+/// [`session::AnalysisReport`]):
 ///
 /// ```no_run
-/// use kerncraft::machine::MachineModel;
-/// let src = "double a[N], b[N], c[N], d[N];\n\
-///            for (int i = 0; i < N; i++)\n  a[i] = b[i] + c[i] * d[i];";
-/// let machine = MachineModel::snb();
-/// let consts = [("N".to_string(), 10_000_000i64)].into_iter().collect();
-/// let out = kerncraft::analyze(src, &consts, &machine).unwrap();
-/// assert!(out.ecm.t_mem() > 0.0);
+/// use kerncraft::session::{AnalysisRequest, KernelSpec, Session};
+/// let session = Session::new();
+/// let req = AnalysisRequest::new(
+///     KernelSpec::source("triad", "double a[N], b[N], c[N], d[N];\n\
+///                                  for (int i = 0; i < N; i++)\n  a[i] = b[i] + c[i] * d[i];"),
+///     "SNB",
+/// )
+/// .with_constant("N", 10_000_000);
+/// let report = session.evaluate(&req).unwrap();
+/// assert!(report.ecm.unwrap().t_mem > 0.0);
 /// ```
+#[deprecated(
+    since = "0.3.0",
+    note = "use session::Session::evaluate with a session::AnalysisRequest"
+)]
 pub fn analyze(
     source: &str,
     constants: &HashMap<String, i64>,
@@ -85,7 +101,9 @@ pub fn analyze(
 }
 
 /// Bundled result of [`analyze`]: every intermediate product is exposed so
-/// callers (CLI, benches, examples) can drill into any stage.
+/// callers can drill into any stage. New code should use
+/// [`session::Session::evaluate_full`], which returns the same products
+/// plus the serializable report.
 pub struct AnalysisOutput {
     /// Static analysis of the kernel source (loop stack, accesses, flops).
     pub analysis: kernel::KernelAnalysis,

@@ -266,6 +266,15 @@ impl MachineModel {
         }
     }
 
+    /// Resolve a machine key — a builtin tag or a machine-file path — the
+    /// way every front end (CLI `-m`, sweep jobs, session requests) does.
+    pub fn load(key: &str) -> Result<Self> {
+        if let Some(m) = Self::builtin(key) {
+            return Ok(m);
+        }
+        Self::from_file(key)
+    }
+
     /// Memory level by name.
     pub fn level(&self, name: &str) -> Option<&MemLevel> {
         self.memory_hierarchy.iter().find(|l| l.name == name)

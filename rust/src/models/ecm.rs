@@ -13,7 +13,6 @@
 use crate::cache::TrafficPrediction;
 use crate::incore::PortModel;
 use crate::machine::MachineModel;
-use crate::util::fmt_cy;
 use anyhow::{bail, Result};
 
 /// One inter-level data transfer contribution.
@@ -170,19 +169,17 @@ impl EcmModel {
         scaled.max(self.t_l3mem())
     }
 
-    /// The compact model notation, e.g. `{9 ‖ 8 | 10 | 6 | 12.7} cy/CL`.
+    /// The compact model notation, e.g. `{9 ‖ 8 | 10 | 6 | 12.7} cy/CL`
+    /// (format shared with the report renderer via
+    /// [`crate::util::ecm_notation_str`]).
     pub fn notation(&self) -> String {
-        let mut parts = vec![format!("{} \u{2016} {}", fmt_cy(self.t_ol), fmt_cy(self.t_nol))];
-        for c in &self.contributions {
-            parts.push(fmt_cy(c.cycles));
-        }
-        format!("{{{}}} cy/CL", parts.join(" | "))
+        let cycles: Vec<f64> = self.contributions.iter().map(|c| c.cycles).collect();
+        crate::util::ecm_notation_str(self.t_ol, self.t_nol, &cycles)
     }
 
     /// The per-level prediction notation, e.g. `{9 \ 18 \ 24 \ 36.7} cy/CL`.
     pub fn prediction_notation(&self) -> String {
-        let preds: Vec<String> = self.level_predictions().iter().map(|p| fmt_cy(*p)).collect();
-        format!("{{{}}} cy/CL", preds.join(" \\ "))
+        crate::util::ecm_prediction_str(&self.level_predictions())
     }
 }
 

@@ -25,15 +25,19 @@ pub enum Unit {
 }
 
 impl Unit {
-    /// Parse a `--unit` argument.
+    /// Parse a `--unit` argument (case-insensitive: `cy/CL`, `It/s`,
+    /// `FLOP/s`, plus the `FLOPs` shorthand).
     pub fn parse(s: &str) -> Option<Unit> {
-        match s {
-            "cy/CL" | "cy/cl" => Some(Unit::CyPerCl),
-            "It/s" | "it/s" => Some(Unit::ItPerS),
-            "FLOP/s" | "flop/s" | "FLOPs" => Some(Unit::FlopPerS),
+        match s.to_ascii_lowercase().as_str() {
+            "cy/cl" => Some(Unit::CyPerCl),
+            "it/s" => Some(Unit::ItPerS),
+            "flop/s" | "flops" => Some(Unit::FlopPerS),
             _ => None,
         }
     }
+
+    /// The valid `--unit` spellings, for error messages.
+    pub const VALID_SPELLINGS: &'static str = "cy/CL, It/s, FLOP/s";
 
     /// Convert a cycles-per-cacheline figure into this unit.
     ///
@@ -73,6 +77,19 @@ mod tests {
         assert_eq!(Unit::parse("It/s"), Some(Unit::ItPerS));
         assert_eq!(Unit::parse("FLOP/s"), Some(Unit::FlopPerS));
         assert_eq!(Unit::parse("bogus"), None);
+    }
+
+    #[test]
+    fn unit_parsing_is_case_insensitive() {
+        assert_eq!(Unit::parse("CY/CL"), Some(Unit::CyPerCl));
+        assert_eq!(Unit::parse("Cy/Cl"), Some(Unit::CyPerCl));
+        assert_eq!(Unit::parse("IT/S"), Some(Unit::ItPerS));
+        assert_eq!(Unit::parse("flop/S"), Some(Unit::FlopPerS));
+        assert_eq!(Unit::parse("FLOPS"), Some(Unit::FlopPerS));
+        // every canonical suffix parses back to its own unit
+        for u in [Unit::CyPerCl, Unit::ItPerS, Unit::FlopPerS] {
+            assert_eq!(Unit::parse(u.suffix()), Some(u));
+        }
     }
 
     #[test]

@@ -175,12 +175,21 @@ impl RooflineModel {
         })
     }
 
-    /// The binding bottleneck (largest time bound).
-    pub fn bottleneck(&self) -> &RooflineBottleneck {
+    /// Index of the binding bottleneck in `bottlenecks` (largest time
+    /// bound; ties keep the last row) — the single source of the
+    /// tie-breaking rule, also used by the serializable report.
+    pub fn bottleneck_index(&self) -> usize {
         self.bottlenecks
             .iter()
-            .max_by(|a, b| a.cycles.partial_cmp(&b.cycles).unwrap())
+            .enumerate()
+            .max_by(|a, b| a.1.cycles.partial_cmp(&b.1.cycles).unwrap())
+            .map(|(ix, _)| ix)
             .expect("at least the CPU row exists")
+    }
+
+    /// The binding bottleneck (largest time bound).
+    pub fn bottleneck(&self) -> &RooflineBottleneck {
+        &self.bottlenecks[self.bottleneck_index()]
     }
 
     /// The Roofline prediction in cycles per cache line of work.

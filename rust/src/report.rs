@@ -1,45 +1,53 @@
 //! Report rendering: the CLI output formats of paper Listing 5 (ECM and
 //! Roofline reports), the Fig. 2 cache-usage visualization, the machine
 //! summary, and the CSV/JSON row formats of the `sweep` subcommand.
+//!
+//! The model renderers ([`ecm_report`], [`roofline_report`],
+//! [`incore_report`]) are pure functions of the serializable
+//! [`AnalysisReport`] — anything a remote consumer receives over the
+//! `kerncraft serve` wire can be rendered to the exact CLI text locally.
 
 use crate::cache::TrafficPrediction;
-use crate::incore::PortModel;
+use crate::jsonio::{json_num, json_str};
 use crate::kernel::KernelAnalysis;
 use crate::machine::MachineModel;
-use crate::models::{EcmModel, RooflineModel, ScalingModel, Unit};
+use crate::models::Unit;
+use crate::session::{AnalysisReport, EcmReport, IncoreReport};
 use crate::sweep::{MemoStats, SweepOutput, SweepRow};
 use crate::util::fmt_cy;
 
-/// Render the ECM analysis report (paper Listing 5, upper half).
-pub fn ecm_report(
-    ecm: &EcmModel,
-    scaling: &ScalingModel,
-    unit: Unit,
-    verbose: bool,
-) -> String {
+/// Render the ECM analysis report (paper Listing 5, upper half) from the
+/// `ecm` + `scaling` sections. Empty when the report has no ECM section.
+pub fn ecm_report(r: &AnalysisReport, verbose: bool) -> String {
+    let (Some(ecm), Some(scaling)) = (&r.ecm, &r.scaling) else {
+        return String::new();
+    };
     let mut s = String::new();
-    s.push_str(&format!("ECM model: {}\n", ecm.notation()));
-    s.push_str(&format!("ECM prediction: {}\n", ecm.prediction_notation()));
-    if unit != Unit::CyPerCl {
-        let preds = ecm.level_predictions();
-        let conv: Vec<String> = preds
+    s.push_str(&format!("ECM model: {}\n", ecm_notation(ecm)));
+    s.push_str(&format!("ECM prediction: {}\n", ecm_prediction_notation(ecm)));
+    if r.unit != Unit::CyPerCl {
+        let conv: Vec<String> = ecm
+            .level_predictions
             .iter()
             .map(|p| {
                 format!(
                     "{:.3e}",
-                    unit.convert(
+                    r.unit.convert(
                         *p,
-                        ecm.iterations_per_cl as f64,
-                        ecm.flops_per_cl,
-                        ecm.clock_hz
+                        r.unit_iterations as f64,
+                        r.flops_per_unit,
+                        r.clock_hz
                     )
                 )
             })
             .collect();
-        s.push_str(&format!("ECM prediction ({}): {{{}}}\n", unit.suffix(), conv.join(" \\ ")));
+        s.push_str(&format!("ECM prediction ({}): {{{}}}\n", r.unit.suffix(), conv.join(" \\ ")));
     }
     if scaling.t_mem_link > 0.0 {
-        s.push_str(&format!("saturating at {} cores\n", scaling.saturation));
+        s.push_str(&format!(
+            "saturating at {} cores\n",
+            scaling.saturation_cores.unwrap_or(u32::MAX)
+        ));
     } else {
         s.push_str("no bandwidth saturation (cache-resident working set)\n");
     }
@@ -60,14 +68,30 @@ pub fn ecm_report(
     s
 }
 
-/// Render the Roofline report (paper Listing 5, lower half).
-pub fn roofline_report(roofline: &RooflineModel, unit: Unit) -> String {
+/// The compact ECM notation of a report section (see
+/// [`crate::util::ecm_notation_str`] for the shared format).
+pub fn ecm_notation(e: &EcmReport) -> String {
+    let cycles: Vec<f64> = e.contributions.iter().map(|c| c.cycles).collect();
+    crate::util::ecm_notation_str(e.t_ol, e.t_nol, &cycles)
+}
+
+/// The per-level prediction notation of a report section.
+pub fn ecm_prediction_notation(e: &EcmReport) -> String {
+    crate::util::ecm_prediction_str(&e.level_predictions)
+}
+
+/// Render the Roofline report (paper Listing 5, lower half) from the
+/// `roofline` section. Empty when the report has no Roofline section.
+pub fn roofline_report(r: &AnalysisReport) -> String {
+    let Some(rf) = &r.roofline else {
+        return String::new();
+    };
     let mut s = String::new();
     s.push_str("Bottlenecks:\n");
     s.push_str("  level   | ar.int. |  perfor. |   bandw.  | bw kernel\n");
     s.push_str("          | FLOP/B  |  cy/CL   |   GB/s    |\n");
     s.push_str("  --------+---------+----------+-----------+----------\n");
-    for b in &roofline.bottlenecks {
+    for b in &rf.ceilings {
         s.push_str(&format!(
             "  {:<7} | {:>7} | {:>8} | {:>9} | {}\n",
             b.level,
@@ -77,8 +101,10 @@ pub fn roofline_report(roofline: &RooflineModel, unit: Unit) -> String {
             b.benchmark.clone().unwrap_or_else(|| "-".into()),
         ));
     }
-    let bn = roofline.bottleneck();
-    if roofline.is_memory_bound() {
+    let Some(bn) = rf.ceilings.get(rf.bottleneck) else {
+        return s;
+    };
+    if rf.memory_bound {
         s.push_str(&format!(
             "Cache or mem bound: {} ({} benchmark)\n",
             bn.level,
@@ -92,25 +118,64 @@ pub fn roofline_report(roofline: &RooflineModel, unit: Unit) -> String {
     }
     s.push_str(&format!(
         "Roofline prediction: {} {}\n",
-        format_value(bn.cycles, roofline, unit),
-        unit.suffix()
+        format_value(bn.cycles, r),
+        r.unit.suffix()
     ));
     s
 }
 
-fn format_value(cy: f64, r: &RooflineModel, unit: Unit) -> String {
-    match unit {
+fn format_value(cy: f64, r: &AnalysisReport) -> String {
+    match r.unit {
         Unit::CyPerCl => fmt_cy(cy),
         _ => format!(
             "{:.3e}",
-            unit.convert(cy, r.iterations_per_cl as f64, r.flops_per_cl, r.clock_hz)
+            r.unit.convert(cy, r.unit_iterations as f64, r.flops_per_unit, r.clock_hz)
         ),
     }
 }
 
-/// Render the in-core (ECMCPU) report.
-pub fn incore_report(pm: &PortModel) -> String {
-    pm.report()
+/// Render the in-core (ECMCPU) report from the `incore` section.
+pub fn incore_report(i: &IncoreReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "in-core (port model): T_OL = {:.1} cy/CL, T_nOL = {:.1} cy/CL\n",
+        i.t_ol, i.t_nol
+    ));
+    s.push_str(&format!(
+        "  TP = {:.1} cy/CL, CP(recurrence) = {:.1} cy/CL, {} (x{})\n",
+        i.tp,
+        i.cp,
+        if i.vectorized { "vectorized" } else { "scalar" },
+        i.vector_elems
+    ));
+    s.push_str("  port pressure (cy/CL):");
+    for (port, cycles) in &i.port_pressure {
+        s.push_str(&format!(" {port}={cycles:.1}"));
+    }
+    s.push('\n');
+    s
+}
+
+/// Render the model sections of a report the way the CLI mode for
+/// `report.model` would (the text twin of [`AnalysisReport::to_json`]).
+pub fn render_report(r: &AnalysisReport, verbose: bool) -> String {
+    let mut s = String::new();
+    if verbose {
+        if let Some(i) = &r.incore {
+            if r.ecm.is_some() {
+                s.push_str(&incore_report(i));
+            }
+        }
+    }
+    if r.ecm.is_some() {
+        s.push_str(&ecm_report(r, verbose));
+    } else if let Some(i) = &r.incore {
+        if r.roofline.is_none() {
+            s.push_str(&incore_report(i));
+        }
+    }
+    s.push_str(&roofline_report(r));
+    s
 }
 
 /// Render the static-analysis tables (paper Tables 2-4).
@@ -278,22 +343,12 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
     s
 }
 
-/// Render sweep rows plus memo statistics as a JSON document (hand-rolled:
-/// the offline crate set has no serde).
+/// Render sweep rows plus memo statistics as a JSON document (hand-rolled
+/// on [`crate::jsonio`]; the offline crate set has no serde).
 pub fn sweep_json(rows: &[SweepRow], stats: &MemoStats) -> String {
-    let mut s = String::from("{\n  \"stats\": {");
-    s.push_str(&format!(
-        "\"machine_hits\": {}, \"machine_misses\": {}, \"program_hits\": {}, \"program_misses\": {}, \"analysis_hits\": {}, \"analysis_misses\": {}, \"incore_hits\": {}, \"incore_misses\": {}",
-        stats.machine_hits,
-        stats.machine_misses,
-        stats.program_hits,
-        stats.program_misses,
-        stats.analysis_hits,
-        stats.analysis_misses,
-        stats.incore_hits,
-        stats.incore_misses
-    ));
-    s.push_str("},\n  \"rows\": [\n");
+    let mut s = String::from("{\n  \"stats\": ");
+    s.push_str(&stats.json_object());
+    s.push_str(",\n  \"rows\": [\n");
     for (ix, r) in rows.iter().enumerate() {
         s.push_str("    {");
         s.push_str(&format!(
@@ -378,34 +433,6 @@ fn csv_field(s: &str) -> String {
     }
 }
 
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
-}
-
-fn json_num(v: f64) -> String {
-    // Rust's shortest-roundtrip float formatting is valid JSON for finite
-    // values (bare integers included)
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".to_string()
-    }
-}
-
 fn indent(text: &str) -> String {
     text.lines().map(|l| format!("  {l}\n")).collect()
 }
@@ -424,28 +451,25 @@ fn human_bytes(b: u64) -> String {
 mod tests {
     use super::*;
     use crate::cache::CachePredictor;
-    use crate::incore::CodegenPolicy;
+    use crate::incore::{CodegenPolicy, PortModel};
     use crate::kernel::parse;
     use crate::models::reference::KERNEL_2D5PT;
+    use crate::session::{AnalysisRequest, KernelSpec, ModelKind, Session};
     use std::collections::HashMap;
 
-    fn jacobi_stack() -> (KernelAnalysis, PortModel, TrafficPrediction, MachineModel) {
-        let m = MachineModel::snb();
-        let p = parse(KERNEL_2D5PT).unwrap();
-        let c: HashMap<String, i64> =
-            [("N".to_string(), 6000i64), ("M".to_string(), 6000i64)].into_iter().collect();
-        let a = KernelAnalysis::from_program(&p, &c).unwrap();
-        let pm = PortModel::analyze(&a, &m, &CodegenPolicy::for_machine(&m)).unwrap();
-        let t = CachePredictor::new(&m).predict(&a).unwrap();
-        (a, pm, t, m)
+    fn jacobi_report(model: ModelKind, unit: Unit) -> AnalysisReport {
+        let session = Session::new();
+        let req = AnalysisRequest::new(KernelSpec::named("2D-5pt"), "SNB")
+            .with_constant("N", 6000)
+            .with_constant("M", 6000)
+            .with_model(model)
+            .with_unit(unit);
+        session.evaluate(&req).unwrap()
     }
 
     #[test]
     fn ecm_report_contains_notation_and_saturation() {
-        let (_, pm, t, m) = jacobi_stack();
-        let ecm = EcmModel::build(&pm, &t, &m).unwrap();
-        let sc = ScalingModel::build(&ecm, &m);
-        let rep = ecm_report(&ecm, &sc, Unit::CyPerCl, true);
+        let rep = ecm_report(&jacobi_report(ModelKind::Ecm, Unit::CyPerCl), true);
         assert!(rep.contains("ECM model: {"), "{rep}");
         assert!(rep.contains("saturating at 3 cores"), "{rep}");
         assert!(rep.contains("copy benchmark"), "{rep}");
@@ -453,9 +477,7 @@ mod tests {
 
     #[test]
     fn roofline_report_shows_bottleneck_table() {
-        let (a, pm, t, m) = jacobi_stack();
-        let r = RooflineModel::build(&a, &t, &m, Some(&pm)).unwrap();
-        let rep = roofline_report(&r, Unit::CyPerCl);
+        let rep = roofline_report(&jacobi_report(ModelKind::RooflinePort, Unit::CyPerCl));
         assert!(rep.contains("L3-MEM"), "{rep}");
         assert!(rep.contains("Cache or mem bound"), "{rep}");
         assert!(rep.contains("Arithmetic Intensity"), "{rep}");
@@ -463,29 +485,57 @@ mod tests {
 
     #[test]
     fn unit_conversion_appears_in_reports() {
-        let (a, pm, t, m) = jacobi_stack();
-        let ecm = EcmModel::build(&pm, &t, &m).unwrap();
-        let sc = ScalingModel::build(&ecm, &m);
-        let rep = ecm_report(&ecm, &sc, Unit::FlopPerS, false);
+        let rep = ecm_report(&jacobi_report(ModelKind::Ecm, Unit::FlopPerS), false);
         assert!(rep.contains("FLOP/s"), "{rep}");
-        let r = RooflineModel::build(&a, &t, &m, Some(&pm)).unwrap();
-        let rep = roofline_report(&r, Unit::ItPerS);
+        let rep = roofline_report(&jacobi_report(ModelKind::RooflinePort, Unit::ItPerS));
         assert!(rep.contains("It/s"), "{rep}");
     }
 
     #[test]
+    fn renderers_are_pure_functions_of_serialized_reports() {
+        // the defining property of the redesign: serialize, deserialize,
+        // render — the text must be identical to rendering the original
+        for model in [ModelKind::Ecm, ModelKind::RooflinePort, ModelKind::EcmCpu] {
+            let r = jacobi_report(model, Unit::CyPerCl);
+            let wire = AnalysisReport::from_json(&r.to_json()).unwrap();
+            assert_eq!(render_report(&r, true), render_report(&wire, true), "{model:?}");
+            assert!(!render_report(&r, false).is_empty(), "{model:?}");
+        }
+    }
+
+    #[test]
+    fn incore_report_renders_pressure_table() {
+        let r = jacobi_report(ModelKind::EcmCpu, Unit::CyPerCl);
+        let rep = incore_report(r.incore.as_ref().unwrap());
+        assert!(rep.contains("T_OL"), "{rep}");
+        assert!(rep.contains("port pressure"), "{rep}");
+        assert!(rep.contains("vectorized"), "{rep}");
+    }
+
+    #[test]
     fn cache_viz_lists_all_accesses() {
-        let (a, _, t, _) = jacobi_stack();
+        let m = MachineModel::snb();
+        let p = parse(KERNEL_2D5PT).unwrap();
+        let c: HashMap<String, i64> =
+            [("N".to_string(), 6000i64), ("M".to_string(), 6000i64)].into_iter().collect();
+        let a = KernelAnalysis::from_program(&p, &c).unwrap();
+        let t = CachePredictor::new(&m).predict(&a).unwrap();
         let viz = cache_viz(&a, &t);
         assert!(viz.contains("a[relative j][relative i-1]"), "{viz}");
         assert!(viz.contains("store (write-allocate + evict)"), "{viz}");
         assert!(viz.contains("layer conditions"), "{viz}");
         assert!(viz.contains("NO"), "L1 layer condition must fail:\n{viz}");
+        // the in-core analysis of the same stack still works standalone
+        let pm = PortModel::analyze(&a, &m, &CodegenPolicy::for_machine(&m)).unwrap();
+        assert!(pm.t_nol > 0.0);
     }
 
     #[test]
     fn analysis_report_contains_tables() {
-        let (a, _, _, _) = jacobi_stack();
+        let p = parse(KERNEL_2D5PT).unwrap();
+        let c: HashMap<String, i64> =
+            [("N".to_string(), 6000i64), ("M".to_string(), 6000i64)].into_iter().collect();
+        let a = KernelAnalysis::from_program(&p, &c).unwrap();
         let rep = analysis_report(&a);
         assert!(rep.contains("loop stack"));
         assert!(rep.contains("FLOPs per iteration: 4"));

@@ -1,0 +1,1710 @@
+//! The unified analysis front end: a [`Session`] owns every cross-request
+//! cache (parsed [`Program`]s, [`KernelAnalysis`] bindings, [`PortModel`]
+//! in-core predictions, loaded [`MachineModel`]s) and evaluates typed
+//! [`AnalysisRequest`]s into serializable [`AnalysisReport`]s.
+//!
+//! Every consumer goes through this API: the CLI single-run modes, the
+//! batched [`crate::sweep::SweepEngine`] (a parallel map of requests over
+//! one shared session), the `kerncraft serve` JSON-lines front end, the
+//! benches and the examples. The pipeline stages stay independent,
+//! composable components — the session only routes, memoizes and
+//! assembles them:
+//!
+//! * machine key → [`MachineModel`] (builtin tag or YAML file),
+//! * kernel source → [`Program`] (parse),
+//! * (source, constants) → [`KernelAnalysis`] (static analysis),
+//! * (source, constants, machine, codegen) → [`PortModel`] (in-core),
+//! * per request: cache prediction, ECM / Roofline assembly, scaling.
+//!
+//! Memoization is observable: [`MemoStats`] counts hits and misses both
+//! per session ([`Session::stats`]) and per request (the `session` field
+//! of every [`AnalysisReport`]) — the acceptance hook for batch front
+//! ends amortizing parse/analysis work across requests.
+//!
+//! ```no_run
+//! use kerncraft::session::{AnalysisRequest, KernelSpec, Session};
+//!
+//! let session = Session::new();
+//! let req = AnalysisRequest::new(KernelSpec::named("triad"), "SNB")
+//!     .with_constant("N", 8_000_000);
+//! let report = session.evaluate(&req).unwrap();
+//! println!("{}", report.to_json());
+//! ```
+//!
+//! Requests and reports round-trip through JSON (hand-rolled on
+//! [`crate::jsonio`]; the offline crate set has no serde), which is the
+//! wire format of `kerncraft serve`.
+
+use crate::cache::{CachePredictor, CachePredictorKind, TrafficPrediction};
+use crate::incore::{CodegenPolicy, PortModel};
+use crate::jsonio::{self, json_num, json_str, JsonValue};
+use crate::kernel::{KernelAnalysis, Program};
+use crate::machine::MachineModel;
+use crate::models::{reference, EcmModel, RooflineModel, ScalingModel, Unit};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------------------
+// request types
+// ---------------------------------------------------------------------------
+
+/// Which kernel a request analyzes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelSpec {
+    /// Inline source text with a display label.
+    Source {
+        label: String,
+        source: Arc<str>,
+    },
+    /// A shipped reference kernel (Table 5 tag, e.g. `"2D-5pt"`).
+    Named(String),
+    /// A kernel file on disk.
+    Path(String),
+}
+
+impl KernelSpec {
+    /// Inline source with a label.
+    pub fn source(label: impl Into<String>, source: impl Into<Arc<str>>) -> KernelSpec {
+        KernelSpec::Source { label: label.into(), source: source.into() }
+    }
+
+    /// A Table 5 reference kernel by tag.
+    pub fn named(tag: impl Into<String>) -> KernelSpec {
+        KernelSpec::Named(tag.into())
+    }
+
+    /// A kernel file path.
+    pub fn path(path: impl Into<String>) -> KernelSpec {
+        KernelSpec::Path(path.into())
+    }
+
+    /// Resolve to (label, source text).
+    fn resolve(&self) -> Result<(String, Arc<str>)> {
+        match self {
+            KernelSpec::Source { label, source } => Ok((label.clone(), source.clone())),
+            KernelSpec::Named(tag) => reference::kernel_source(tag)
+                .map(|s| (tag.clone(), Arc::from(s)))
+                .ok_or_else(|| anyhow!("unknown reference kernel '{tag}' (use a Table 5 tag)")),
+            KernelSpec::Path(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading kernel file {path}"))?;
+                let label = std::path::Path::new(path)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or(path)
+                    .to_string();
+                Ok((label, Arc::from(text.as_str())))
+            }
+        }
+    }
+}
+
+/// Which performance model(s) a request asks for (paper §4.6 modes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ModelKind {
+    /// Full ECM: in-core + data transfers + scaling.
+    #[default]
+    Ecm,
+    /// Data transfers only (no in-core model).
+    EcmData,
+    /// In-core model only (no cache prediction).
+    EcmCpu,
+    /// Roofline with the arithmetic-peak in-core bound.
+    Roofline,
+    /// Roofline with the port-model in-core bound (paper RooflineIACA).
+    RooflinePort,
+}
+
+impl ModelKind {
+    /// Parse a model name (the CLI `-p` spellings).
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        Some(match s {
+            "ECM" => ModelKind::Ecm,
+            "ECMData" => ModelKind::EcmData,
+            "ECMCPU" => ModelKind::EcmCpu,
+            "Roofline" => ModelKind::Roofline,
+            "RooflinePort" | "RooflineIACA" => ModelKind::RooflinePort,
+            _ => return None,
+        })
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Ecm => "ECM",
+            ModelKind::EcmData => "ECMData",
+            ModelKind::EcmCpu => "ECMCPU",
+            ModelKind::Roofline => "Roofline",
+            ModelKind::RooflinePort => "RooflinePort",
+        }
+    }
+
+    fn needs_incore(&self) -> bool {
+        matches!(self, ModelKind::Ecm | ModelKind::EcmCpu | ModelKind::RooflinePort)
+    }
+
+    fn needs_traffic(&self) -> bool {
+        !matches!(self, ModelKind::EcmCpu)
+    }
+}
+
+/// Which codegen policy the in-core model assumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodegenSelection {
+    /// [`CodegenPolicy::for_machine`] — the paper's icc 15 `-xAVX` model.
+    #[default]
+    MachineDefault,
+    /// [`CodegenPolicy::scalar`] — no SIMD, no FMA.
+    Scalar,
+}
+
+impl CodegenSelection {
+    /// Parse `machine` / `scalar` (case-insensitive).
+    pub fn parse(s: &str) -> Option<CodegenSelection> {
+        match s.to_ascii_lowercase().as_str() {
+            "machine" | "default" => Some(CodegenSelection::MachineDefault),
+            "scalar" => Some(CodegenSelection::Scalar),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodegenSelection::MachineDefault => "machine",
+            CodegenSelection::Scalar => "scalar",
+        }
+    }
+
+    fn policy(&self, machine: &MachineModel) -> CodegenPolicy {
+        match self {
+            CodegenSelection::MachineDefault => CodegenPolicy::for_machine(machine),
+            CodegenSelection::Scalar => CodegenPolicy::scalar(),
+        }
+    }
+}
+
+/// One typed analysis request — everything the pipeline needs to turn a
+/// (kernel, problem size, machine) triple into a prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisRequest {
+    /// Optional caller-assigned id, echoed in the report (batch fronts).
+    pub id: Option<String>,
+    pub kernel: KernelSpec,
+    /// Constant bindings (ordered, so memo keys are stable).
+    pub constants: BTreeMap<String, i64>,
+    /// Machine key: builtin tag ("SNB"/"HSW") or machine-file path.
+    pub machine: String,
+    /// Active cores (shared caches are partitioned accordingly).
+    pub cores: u32,
+    pub model: ModelKind,
+    pub predictor: CachePredictorKind,
+    pub codegen: CodegenSelection,
+    /// Output unit the consumer intends to render in (carried through to
+    /// the report; the report always stores cycles natively).
+    pub unit: Unit,
+}
+
+impl AnalysisRequest {
+    /// Request with defaults: 1 core, full ECM, offset-walk predictor,
+    /// machine codegen policy, cy/CL.
+    pub fn new(kernel: KernelSpec, machine: impl Into<String>) -> AnalysisRequest {
+        AnalysisRequest {
+            id: None,
+            kernel,
+            constants: BTreeMap::new(),
+            machine: machine.into(),
+            cores: 1,
+            model: ModelKind::Ecm,
+            predictor: CachePredictorKind::Offsets,
+            codegen: CodegenSelection::MachineDefault,
+            unit: Unit::CyPerCl,
+        }
+    }
+
+    /// Bind one constant (builder style).
+    pub fn with_constant(mut self, name: impl Into<String>, value: i64) -> Self {
+        self.constants.insert(name.into(), value);
+        self
+    }
+
+    /// Set the active core count.
+    pub fn with_cores(mut self, cores: u32) -> Self {
+        self.cores = cores;
+        self
+    }
+
+    /// Select the model.
+    pub fn with_model(mut self, model: ModelKind) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Select the cache predictor back end.
+    pub fn with_predictor(mut self, predictor: CachePredictorKind) -> Self {
+        self.predictor = predictor;
+        self
+    }
+
+    /// Select the codegen policy.
+    pub fn with_codegen(mut self, codegen: CodegenSelection) -> Self {
+        self.codegen = codegen;
+        self
+    }
+
+    /// Select the report unit.
+    pub fn with_unit(mut self, unit: Unit) -> Self {
+        self.unit = unit;
+        self
+    }
+
+    /// Attach a caller id (echoed in the report).
+    pub fn with_id(mut self, id: impl Into<String>) -> Self {
+        self.id = Some(id.into());
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// report types
+// ---------------------------------------------------------------------------
+
+/// Memoization counters — per session ([`Session::stats`]) or per request
+/// (the `session` field of [`AnalysisReport`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    pub machine_hits: u64,
+    pub machine_misses: u64,
+    pub program_hits: u64,
+    pub program_misses: u64,
+    pub analysis_hits: u64,
+    pub analysis_misses: u64,
+    pub incore_hits: u64,
+    pub incore_misses: u64,
+}
+
+impl MemoStats {
+    /// Total hits across all stages.
+    pub fn hits(&self) -> u64 {
+        self.machine_hits + self.program_hits + self.analysis_hits + self.incore_hits
+    }
+
+    /// Total misses across all stages.
+    pub fn misses(&self) -> u64 {
+        self.machine_misses + self.program_misses + self.analysis_misses + self.incore_misses
+    }
+
+    /// Render as a JSON object (shared by report and sweep writers).
+    pub fn json_object(&self) -> String {
+        format!(
+            "{{\"machine_hits\": {}, \"machine_misses\": {}, \"program_hits\": {}, \"program_misses\": {}, \"analysis_hits\": {}, \"analysis_misses\": {}, \"incore_hits\": {}, \"incore_misses\": {}}}",
+            self.machine_hits,
+            self.machine_misses,
+            self.program_hits,
+            self.program_misses,
+            self.analysis_hits,
+            self.analysis_misses,
+            self.incore_hits,
+            self.incore_misses
+        )
+    }
+
+    /// Accumulate another snapshot (used to sum per-request deltas).
+    pub fn absorb(&mut self, o: MemoStats) {
+        self.machine_hits += o.machine_hits;
+        self.machine_misses += o.machine_misses;
+        self.program_hits += o.program_hits;
+        self.program_misses += o.program_misses;
+        self.analysis_hits += o.analysis_hits;
+        self.analysis_misses += o.analysis_misses;
+        self.incore_hits += o.incore_hits;
+        self.incore_misses += o.incore_misses;
+    }
+
+    fn from_json_value(v: &JsonValue) -> Result<MemoStats> {
+        Ok(MemoStats {
+            machine_hits: get_u64(v, "machine_hits")?,
+            machine_misses: get_u64(v, "machine_misses")?,
+            program_hits: get_u64(v, "program_hits")?,
+            program_misses: get_u64(v, "program_misses")?,
+            analysis_hits: get_u64(v, "analysis_hits")?,
+            analysis_misses: get_u64(v, "analysis_misses")?,
+            incore_hits: get_u64(v, "incore_hits")?,
+            incore_misses: get_u64(v, "incore_misses")?,
+        })
+    }
+}
+
+/// In-core section (port model) of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IncoreReport {
+    pub t_ol: f64,
+    pub t_nol: f64,
+    /// Pure throughput bound (IACA "TP").
+    pub tp: f64,
+    /// Recurrence critical path per unit of work (0 when none).
+    pub cp: f64,
+    pub vectorized: bool,
+    pub vector_elems: u32,
+    /// (port name, cycles per unit) pressure table.
+    pub port_pressure: Vec<(String, f64)>,
+}
+
+impl IncoreReport {
+    pub(crate) fn from_model(pm: &PortModel) -> IncoreReport {
+        IncoreReport {
+            t_ol: pm.t_ol,
+            t_nol: pm.t_nol,
+            tp: pm.tp,
+            cp: pm.cp,
+            vectorized: pm.vectorized,
+            vector_elems: pm.vector_elems,
+            port_pressure: pm.pressure.iter().map(|p| (p.port.clone(), p.cycles)).collect(),
+        }
+    }
+}
+
+/// One cache-level traffic row of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelTrafficReport {
+    pub level: String,
+    pub read_miss_lines: f64,
+    pub write_allocate_lines: f64,
+    pub evict_lines: f64,
+    pub hit_lines: f64,
+    pub total_lines: f64,
+}
+
+/// Traffic section of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficReport {
+    pub cacheline_bytes: u64,
+    /// Inner to outer, one row per cache level.
+    pub levels: Vec<LevelTrafficReport>,
+    pub memory_bytes_per_unit: f64,
+    /// Cache levels answered by the layer-condition fast path.
+    pub lc_fast_levels: u32,
+    /// Cache levels that ran the backward offset walk.
+    pub walk_levels: u32,
+    /// Per loop dimension: innermost level whose layer condition holds
+    /// (`"j@L2"`, `"j@MEM"` when none does).
+    pub lc_breakpoints: Vec<String>,
+}
+
+impl TrafficReport {
+    fn from_prediction(t: &TrafficPrediction, analysis: &KernelAnalysis) -> TrafficReport {
+        TrafficReport {
+            cacheline_bytes: t.cacheline_bytes,
+            levels: t
+                .levels
+                .iter()
+                .map(|l| LevelTrafficReport {
+                    level: l.level.clone(),
+                    read_miss_lines: l.read_miss_lines,
+                    write_allocate_lines: l.write_allocate_lines,
+                    evict_lines: l.evict_lines,
+                    hit_lines: l.hit_lines,
+                    total_lines: l.total_lines(),
+                })
+                .collect(),
+            memory_bytes_per_unit: t.memory_bytes_per_unit(),
+            lc_fast_levels: t.stats.lc_fast_levels,
+            walk_levels: t.stats.walk_levels,
+            lc_breakpoints: t.lc_breakpoints(analysis),
+        }
+    }
+}
+
+/// One inter-level transfer contribution of the ECM section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EcmContributionReport {
+    /// Link label, e.g. `"L1L2"`, `"L3Mem"`.
+    pub link: String,
+    /// Cache lines crossing this link per unit of work.
+    pub lines: f64,
+    /// Cycles per unit of work.
+    pub cycles: f64,
+    /// Microbenchmark the bandwidth came from (memory link only).
+    pub benchmark: Option<String>,
+}
+
+/// ECM section of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EcmReport {
+    pub t_ol: f64,
+    pub t_nol: f64,
+    /// Data-transfer contributions, inner link first.
+    pub contributions: Vec<EcmContributionReport>,
+    /// In-memory prediction `max(T_OL, T_nOL + ΣT_data)`.
+    pub t_mem: f64,
+    /// Per-level predictions `{ECM_L1 \ ECM_L2 \ ... \ ECM_Mem}`.
+    pub level_predictions: Vec<f64>,
+    /// Saturation core count (None: never saturates, cache-resident).
+    pub saturation_cores: Option<u32>,
+    /// Saturated memory bandwidth used for the outermost link (bytes/s).
+    pub mem_bandwidth_bs: f64,
+}
+
+impl EcmReport {
+    fn from_model(e: &EcmModel) -> EcmReport {
+        let sat = e.saturation_cores();
+        EcmReport {
+            t_ol: e.t_ol,
+            t_nol: e.t_nol,
+            contributions: e
+                .contributions
+                .iter()
+                .map(|c| EcmContributionReport {
+                    link: c.link.clone(),
+                    lines: c.lines,
+                    cycles: c.cycles,
+                    benchmark: c.benchmark.clone(),
+                })
+                .collect(),
+            t_mem: e.t_mem(),
+            level_predictions: e.level_predictions(),
+            saturation_cores: (sat != u32::MAX).then_some(sat),
+            mem_bandwidth_bs: e.mem_bandwidth_bs,
+        }
+    }
+}
+
+/// Multicore scaling section of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingReport {
+    /// Single-core in-memory time (cy per unit).
+    pub t_single: f64,
+    /// Memory-link time (cy per unit) — the plateau (0: cache-resident).
+    pub t_mem_link: f64,
+    /// Saturation core count (None: never saturates).
+    pub saturation_cores: Option<u32>,
+    /// Cores in one memory domain.
+    pub domain_cores: u32,
+}
+
+impl ScalingReport {
+    fn from_model(s: &ScalingModel) -> ScalingReport {
+        ScalingReport {
+            t_single: s.t_single,
+            t_mem_link: s.t_mem_link,
+            saturation_cores: (s.saturation != u32::MAX).then_some(s.saturation),
+            domain_cores: s.domain_cores,
+        }
+    }
+}
+
+/// One candidate bottleneck (ceiling) of the Roofline section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflineCeilingReport {
+    /// `"CPU"`, `"L1"`, `"L1-L2"`, ..., `"L3-MEM"`.
+    pub level: String,
+    /// Predicted time bound (cy per unit).
+    pub cycles: f64,
+    /// Bandwidth assumed (bytes/s), None for the CPU row.
+    pub bandwidth_bs: Option<f64>,
+    /// Matched microbenchmark, None for the CPU row.
+    pub benchmark: Option<String>,
+    /// Arithmetic intensity at this level (flop/byte), None for CPU.
+    pub arith_intensity: Option<f64>,
+}
+
+/// Roofline section of a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflineReport {
+    /// True for the port-model in-core variant (RooflinePort).
+    pub port_model: bool,
+    pub ceilings: Vec<RooflineCeilingReport>,
+    /// Index of the binding bottleneck in `ceilings`.
+    pub bottleneck: usize,
+    /// The prediction (cy per unit) — the bottleneck's bound.
+    pub prediction_cycles: f64,
+    /// Bound by data transfers rather than compute.
+    pub memory_bound: bool,
+}
+
+impl RooflineReport {
+    fn from_model(r: &RooflineModel) -> RooflineReport {
+        let bottleneck = r.bottleneck_index();
+        RooflineReport {
+            port_model: r.mode == crate::models::RooflineMode::PortModel,
+            ceilings: r
+                .bottlenecks
+                .iter()
+                .map(|b| RooflineCeilingReport {
+                    level: b.level.clone(),
+                    cycles: b.cycles,
+                    bandwidth_bs: b.bandwidth_bs,
+                    benchmark: b.benchmark.clone(),
+                    arith_intensity: b.arith_intensity,
+                })
+                .collect(),
+            bottleneck,
+            prediction_cycles: r.prediction(),
+            memory_bound: r.is_memory_bound(),
+        }
+    }
+}
+
+/// The complete, serializable result of one [`AnalysisRequest`]: every
+/// figure the text reports render, as structured data. Sections absent
+/// from the requested model are `None`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisReport {
+    /// Caller id echoed from the request.
+    pub id: Option<String>,
+    /// Kernel display label.
+    pub kernel: String,
+    /// Machine key as requested.
+    pub machine: String,
+    /// Resolved microarchitecture tag.
+    pub arch: String,
+    pub cores: u32,
+    pub constants: BTreeMap<String, i64>,
+    pub model: ModelKind,
+    pub predictor: CachePredictorKind,
+    /// Unit the consumer asked to render in (data is stored in cycles).
+    pub unit: Unit,
+    pub clock_hz: f64,
+    /// Inner iterations per unit of work (one cache line).
+    pub unit_iterations: u64,
+    /// Source flops per unit of work.
+    pub flops_per_unit: f64,
+    pub incore: Option<IncoreReport>,
+    pub traffic: Option<TrafficReport>,
+    pub ecm: Option<EcmReport>,
+    pub scaling: Option<ScalingReport>,
+    pub roofline: Option<RooflineReport>,
+    /// Memo hits/misses this request saw in the session caches.
+    pub session: MemoStats,
+}
+
+/// A report plus the intermediate stage products it was assembled from —
+/// for consumers that drill deeper than the serialized data (CLI verbose
+/// tables, cache visualization, sweep rows).
+pub struct Evaluation {
+    pub report: AnalysisReport,
+    pub machine: Arc<MachineModel>,
+    pub analysis: Arc<KernelAnalysis>,
+    pub incore: Option<Arc<PortModel>>,
+    pub traffic: Option<TrafficPrediction>,
+}
+
+// ---------------------------------------------------------------------------
+// the session
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Counters {
+    machine_hits: AtomicU64,
+    machine_misses: AtomicU64,
+    program_hits: AtomicU64,
+    program_misses: AtomicU64,
+    analysis_hits: AtomicU64,
+    analysis_misses: AtomicU64,
+    incore_hits: AtomicU64,
+    incore_misses: AtomicU64,
+}
+
+/// Per-stage cache bound: a long-running session (`kerncraft serve`)
+/// must not grow without limit under distinct-request traffic. When a
+/// stage cache reaches this many entries it is cleared wholesale — the
+/// stages are pure, so rebuilds are exact and only the hit rate suffers.
+const MAX_CACHE_ENTRIES: usize = 4096;
+
+/// The analysis session: owns the cross-request caches and evaluates
+/// typed requests. Cheap to share across threads (`&self` API, internal
+/// locking) — [`crate::sweep::SweepEngine`] maps a whole job grid through
+/// one session from its worker pool. Every stage cache is bounded by
+/// [`MAX_CACHE_ENTRIES`].
+#[derive(Default)]
+pub struct Session {
+    /// Source-text interning: requests share kernels, so downstream memo
+    /// keys carry a small id instead of the whole source string. Ids are
+    /// allocated monotonically so clearing the intern table can never
+    /// alias old downstream keys.
+    sources: Mutex<HashMap<String, usize>>,
+    next_source_id: std::sync::atomic::AtomicUsize,
+    machines: Mutex<HashMap<String, Arc<MachineModel>>>,
+    programs: Mutex<HashMap<String, Arc<Program>>>,
+    analyses: Mutex<HashMap<String, Arc<KernelAnalysis>>>,
+    incore: Mutex<HashMap<String, Arc<PortModel>>>,
+    counters: Counters,
+}
+
+/// Memo lookup helper: double-checked get-or-insert through a mutexed
+/// map. The builder runs OUTSIDE the lock so concurrent requests don't
+/// serialize on each other's parse/analyze work; on a race the first
+/// insert wins (both values are equal — the stages are pure). Returns
+/// the product and whether it was a hit.
+fn memoize<T>(
+    map: &Mutex<HashMap<String, Arc<T>>>,
+    key: &str,
+    build: impl FnOnce() -> Result<T>,
+) -> Result<(Arc<T>, bool)> {
+    if let Some(v) = map.lock().unwrap().get(key) {
+        return Ok((v.clone(), true));
+    }
+    let built = Arc::new(build()?);
+    let mut guard = map.lock().unwrap();
+    if guard.len() >= MAX_CACHE_ENTRIES && !guard.contains_key(key) {
+        // bound the stage cache (outstanding Arcs stay alive; rebuilds
+        // of cleared entries are bit-identical)
+        guard.clear();
+    }
+    Ok((guard.entry(key.to_string()).or_insert(built).clone(), false))
+}
+
+fn consts_key(constants: &BTreeMap<String, i64>) -> String {
+    let mut s = String::new();
+    for (k, v) in constants {
+        s.push_str(k);
+        s.push('=');
+        s.push_str(&v.to_string());
+        s.push(';');
+    }
+    s
+}
+
+impl Session {
+    /// Fresh session with empty caches.
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    /// Snapshot of the session-wide memoization counters.
+    pub fn stats(&self) -> MemoStats {
+        let c = &self.counters;
+        MemoStats {
+            machine_hits: c.machine_hits.load(Ordering::Relaxed),
+            machine_misses: c.machine_misses.load(Ordering::Relaxed),
+            program_hits: c.program_hits.load(Ordering::Relaxed),
+            program_misses: c.program_misses.load(Ordering::Relaxed),
+            analysis_hits: c.analysis_hits.load(Ordering::Relaxed),
+            analysis_misses: c.analysis_misses.load(Ordering::Relaxed),
+            incore_hits: c.incore_hits.load(Ordering::Relaxed),
+            incore_misses: c.incore_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Evaluate a request into a serializable report.
+    pub fn evaluate(&self, req: &AnalysisRequest) -> Result<AnalysisReport> {
+        Ok(self.evaluate_full(req)?.report)
+    }
+
+    /// Evaluate a request, also returning the intermediate stage products.
+    pub fn evaluate_full(&self, req: &AnalysisRequest) -> Result<Evaluation> {
+        if req.cores == 0 {
+            bail!("request needs at least one core");
+        }
+        let (label, source) = req.kernel.resolve()?;
+        let mut local = MemoStats::default();
+
+        // --- memoized stages (same key scheme the sweep engine used) ---
+        let (machine, hit) = memoize(&self.machines, &req.machine, || {
+            MachineModel::load(&req.machine)
+        })?;
+        note(hit, &mut local.machine_hits, &mut local.machine_misses);
+        note_global(hit, &self.counters.machine_hits, &self.counters.machine_misses);
+
+        let (analysis, akey, program_hit, analysis_hit) =
+            self.memoized_analysis(&source, &req.constants)?;
+        note(program_hit, &mut local.program_hits, &mut local.program_misses);
+        note(analysis_hit, &mut local.analysis_hits, &mut local.analysis_misses);
+
+        let incore = if req.model.needs_incore() {
+            let ikey =
+                format!("{akey}\u{1}{}\u{1}{}", req.machine, req.codegen.name());
+            let (pm, hit) = memoize(&self.incore, &ikey, || {
+                PortModel::analyze(&analysis, &machine, &req.codegen.policy(&machine))
+            })?;
+            note(hit, &mut local.incore_hits, &mut local.incore_misses);
+            note_global(hit, &self.counters.incore_hits, &self.counters.incore_misses);
+            Some(pm)
+        } else {
+            None
+        };
+
+        // --- per-request stages ---
+        let traffic = if req.model.needs_traffic() {
+            Some(
+                CachePredictor::with_kind(&machine, req.cores, req.predictor)
+                    .predict(&analysis)?,
+            )
+        } else {
+            None
+        };
+
+        let (ecm, scaling) = match req.model {
+            ModelKind::Ecm => {
+                let t = traffic.as_ref().unwrap();
+                let e = EcmModel::build(incore.as_ref().unwrap(), t, &machine)?;
+                let s = ScalingModel::build(&e, &machine);
+                (Some(e), Some(s))
+            }
+            ModelKind::EcmData => {
+                let t = traffic.as_ref().unwrap();
+                let e = EcmModel::build_data_only(t, &machine)?;
+                let s = ScalingModel::build(&e, &machine);
+                (Some(e), Some(s))
+            }
+            _ => (None, None),
+        };
+
+        let roofline = match req.model {
+            ModelKind::Roofline | ModelKind::RooflinePort => Some(RooflineModel::build_cores(
+                &analysis,
+                traffic.as_ref().unwrap(),
+                &machine,
+                incore.as_deref(),
+                req.cores,
+            )?),
+            _ => None,
+        };
+
+        // --- assemble the report ---
+        let unit_iterations = match (&traffic, &incore) {
+            (Some(t), _) => t.unit_iterations,
+            (None, Some(pm)) => pm.iterations_per_cl,
+            (None, None) => unreachable!("every model needs traffic or incore"),
+        };
+        let flops_per_unit = match req.model {
+            ModelKind::Ecm | ModelKind::EcmData => ecm.as_ref().unwrap().flops_per_cl,
+            ModelKind::EcmCpu => incore.as_ref().unwrap().flops_per_cl,
+            ModelKind::Roofline | ModelKind::RooflinePort => {
+                roofline.as_ref().unwrap().flops_per_cl
+            }
+        };
+
+        let report = AnalysisReport {
+            id: req.id.clone(),
+            kernel: label,
+            machine: req.machine.clone(),
+            arch: machine.arch.clone(),
+            cores: req.cores,
+            constants: req.constants.clone(),
+            model: req.model,
+            predictor: req.predictor,
+            unit: req.unit,
+            clock_hz: machine.clock_hz,
+            unit_iterations,
+            flops_per_unit,
+            incore: incore.as_deref().map(IncoreReport::from_model),
+            traffic: traffic
+                .as_ref()
+                .map(|t| TrafficReport::from_prediction(t, &analysis)),
+            ecm: ecm.as_ref().map(EcmReport::from_model),
+            scaling: scaling.as_ref().map(ScalingReport::from_model),
+            roofline: roofline.as_ref().map(RooflineReport::from_model),
+            session: local,
+        };
+
+        Ok(Evaluation { report, machine, analysis, incore, traffic })
+    }
+
+    /// Memoized machine lookup — for consumers needing the model itself
+    /// (machine reports, benchmark modes).
+    pub fn machine(&self, key: &str) -> Result<Arc<MachineModel>> {
+        let (m, hit) = memoize(&self.machines, key, || MachineModel::load(key))?;
+        note_global(hit, &self.counters.machine_hits, &self.counters.machine_misses);
+        Ok(m)
+    }
+
+    /// Memoized static analysis of a kernel under constant bindings —
+    /// for consumers that stop before the performance models (benchmark
+    /// modes, visualizations).
+    pub fn kernel_analysis(
+        &self,
+        kernel: &KernelSpec,
+        constants: &BTreeMap<String, i64>,
+    ) -> Result<Arc<KernelAnalysis>> {
+        let (_, source) = kernel.resolve()?;
+        let (analysis, _, _, _) = self.memoized_analysis(&source, constants)?;
+        Ok(analysis)
+    }
+
+    /// Shared program + analysis memoization (one key scheme for every
+    /// entry point). Returns the analysis, its memo key, and the
+    /// (program, analysis) hit flags; session-wide counters are recorded
+    /// here, per-request counters by the caller.
+    fn memoized_analysis(
+        &self,
+        source: &str,
+        constants: &BTreeMap<String, i64>,
+    ) -> Result<(Arc<KernelAnalysis>, String, bool, bool)> {
+        let source_id = self.intern_source(source);
+        let (program, program_hit) = memoize(&self.programs, &source_id.to_string(), || {
+            crate::kernel::parse(source).map_err(anyhow::Error::from)
+        })?;
+        note_global(
+            program_hit,
+            &self.counters.program_hits,
+            &self.counters.program_misses,
+        );
+        let akey = format!("{source_id}\u{1}{}", consts_key(constants));
+        let (analysis, analysis_hit) = memoize(&self.analyses, &akey, || {
+            let consts: HashMap<String, i64> =
+                constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
+            KernelAnalysis::from_program(&program, &consts).map_err(anyhow::Error::from)
+        })?;
+        note_global(
+            analysis_hit,
+            &self.counters.analysis_hits,
+            &self.counters.analysis_misses,
+        );
+        Ok((analysis, akey, program_hit, analysis_hit))
+    }
+
+    fn intern_source(&self, source: &str) -> usize {
+        let mut guard = self.sources.lock().unwrap();
+        // hit path: no allocation, no clone of the (possibly large) source
+        if let Some(&id) = guard.get(source) {
+            return id;
+        }
+        if guard.len() >= MAX_CACHE_ENTRIES {
+            // ids are monotonic, so dropping old interns cannot alias the
+            // downstream program/analysis keys they minted
+            guard.clear();
+        }
+        let id = self.next_source_id.fetch_add(1, Ordering::Relaxed);
+        guard.insert(source.to_string(), id);
+        id
+    }
+}
+
+fn note(hit: bool, hits: &mut u64, misses: &mut u64) {
+    if hit {
+        *hits += 1;
+    } else {
+        *misses += 1;
+    }
+}
+
+fn note_global(hit: bool, hits: &AtomicU64, misses: &AtomicU64) {
+    if hit {
+        hits.fetch_add(1, Ordering::Relaxed);
+    } else {
+        misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON wire format
+// ---------------------------------------------------------------------------
+
+fn get_str(v: &JsonValue, k: &str) -> Result<String> {
+    v.get(k)
+        .and_then(|x| x.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing or non-string field '{k}'"))
+}
+
+fn get_f64(v: &JsonValue, k: &str) -> Result<f64> {
+    v.get(k)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{k}'"))
+}
+
+fn get_u64(v: &JsonValue, k: &str) -> Result<u64> {
+    v.get(k)
+        .and_then(|x| x.as_u64())
+        .ok_or_else(|| anyhow!("missing or non-integer field '{k}'"))
+}
+
+fn get_u32(v: &JsonValue, k: &str) -> Result<u32> {
+    u32::try_from(get_u64(v, k)?).map_err(|_| anyhow!("field '{k}' exceeds u32"))
+}
+
+fn get_bool(v: &JsonValue, k: &str) -> Result<bool> {
+    v.get(k)
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| anyhow!("missing or non-boolean field '{k}'"))
+}
+
+/// Missing and `null` both map to `None`.
+fn opt_str(v: &JsonValue, k: &str) -> Option<String> {
+    v.get(k).and_then(|x| x.as_str()).map(str::to_string)
+}
+
+fn opt_f64(v: &JsonValue, k: &str) -> Option<f64> {
+    v.get(k).and_then(|x| x.as_f64())
+}
+
+fn opt_u32(v: &JsonValue, k: &str) -> Option<u32> {
+    v.get(k).and_then(|x| x.as_u64()).and_then(|x| u32::try_from(x).ok())
+}
+
+fn json_opt_str(v: &Option<String>) -> String {
+    match v {
+        Some(s) => json_str(s),
+        None => "null".to_string(),
+    }
+}
+
+fn json_opt_num(v: Option<f64>) -> String {
+    match v {
+        Some(x) => json_num(x),
+        None => "null".to_string(),
+    }
+}
+
+fn json_opt_u32(v: Option<u32>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+fn json_constants(constants: &BTreeMap<String, i64>) -> String {
+    let mut s = String::from("{");
+    for (ix, (k, v)) in constants.iter().enumerate() {
+        if ix > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&json_str(k));
+        s.push_str(": ");
+        s.push_str(&v.to_string());
+    }
+    s.push('}');
+    s
+}
+
+fn constants_from_json(v: &JsonValue) -> Result<BTreeMap<String, i64>> {
+    let mut out = BTreeMap::new();
+    match v {
+        JsonValue::Obj(entries) => {
+            for (k, val) in entries {
+                out.insert(
+                    k.clone(),
+                    val.as_i64()
+                        .ok_or_else(|| anyhow!("constant '{k}' must be an integer"))?,
+                );
+            }
+            Ok(out)
+        }
+        JsonValue::Null => Ok(out),
+        _ => bail!("'constants' must be an object of integers"),
+    }
+}
+
+impl AnalysisRequest {
+    /// Serialize to a single-line JSON object (the `serve` wire format).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        if let Some(id) = &self.id {
+            s.push_str("\"id\": ");
+            s.push_str(&json_str(id));
+            s.push_str(", ");
+        }
+        s.push_str("\"kernel\": ");
+        match &self.kernel {
+            KernelSpec::Source { label, source } => {
+                s.push_str("{\"label\": ");
+                s.push_str(&json_str(label));
+                s.push_str(", \"source\": ");
+                s.push_str(&json_str(source));
+                s.push('}');
+            }
+            KernelSpec::Named(tag) => {
+                s.push_str("{\"name\": ");
+                s.push_str(&json_str(tag));
+                s.push('}');
+            }
+            KernelSpec::Path(path) => {
+                s.push_str("{\"path\": ");
+                s.push_str(&json_str(path));
+                s.push('}');
+            }
+        }
+        s.push_str(", \"machine\": ");
+        s.push_str(&json_str(&self.machine));
+        s.push_str(", \"constants\": ");
+        s.push_str(&json_constants(&self.constants));
+        s.push_str(&format!(", \"cores\": {}", self.cores));
+        s.push_str(", \"model\": ");
+        s.push_str(&json_str(self.model.name()));
+        s.push_str(", \"predictor\": ");
+        s.push_str(&json_str(self.predictor.name()));
+        s.push_str(", \"codegen\": ");
+        s.push_str(&json_str(self.codegen.name()));
+        s.push_str(", \"unit\": ");
+        s.push_str(&json_str(self.unit.suffix()));
+        s.push('}');
+        s
+    }
+
+    /// Parse a request from JSON text. Only `kernel` and `machine` are
+    /// required; everything else takes the [`AnalysisRequest::new`]
+    /// defaults.
+    pub fn from_json(text: &str) -> Result<AnalysisRequest> {
+        let v = jsonio::parse(text).context("parsing analysis request")?;
+        Self::from_json_value(&v)
+    }
+
+    /// Parse a request from an already-parsed JSON value.
+    pub fn from_json_value(v: &JsonValue) -> Result<AnalysisRequest> {
+        let kv = v
+            .get("kernel")
+            .ok_or_else(|| anyhow!("request missing 'kernel'"))?;
+        let kernel = if let Some(src) = kv.get("source") {
+            let source = src
+                .as_str()
+                .ok_or_else(|| anyhow!("'kernel.source' must be a string"))?;
+            let label = kv.get("label").and_then(|l| l.as_str()).unwrap_or("kernel");
+            KernelSpec::source(label, source)
+        } else if let Some(name) = kv.get("name") {
+            KernelSpec::named(
+                name.as_str()
+                    .ok_or_else(|| anyhow!("'kernel.name' must be a string"))?,
+            )
+        } else if let Some(path) = kv.get("path") {
+            KernelSpec::path(
+                path.as_str()
+                    .ok_or_else(|| anyhow!("'kernel.path' must be a string"))?,
+            )
+        } else {
+            bail!("'kernel' needs one of 'source', 'name', 'path'");
+        };
+        let mut req = AnalysisRequest::new(kernel, get_str(v, "machine")?);
+        if let Some(id) = v.get("id").filter(|x| !x.is_null()) {
+            // a wrong-typed id would silently break response correlation
+            req.id = Some(
+                id.as_str()
+                    .ok_or_else(|| anyhow!("'id' must be a string"))?
+                    .to_string(),
+            );
+        }
+        if let Some(c) = v.get("constants") {
+            req.constants = constants_from_json(c)?;
+        }
+        if let Some(c) = v.get("cores") {
+            req.cores = c
+                .as_u64()
+                .and_then(|x| u32::try_from(x).ok())
+                .ok_or_else(|| anyhow!("'cores' must be a positive integer"))?;
+        }
+        if let Some(m) = v.get("model") {
+            let name = m.as_str().ok_or_else(|| anyhow!("'model' must be a string"))?;
+            req.model = ModelKind::parse(name).ok_or_else(|| {
+                anyhow!("unknown model '{name}' (ECM, ECMData, ECMCPU, Roofline, RooflinePort)")
+            })?;
+        }
+        if let Some(p) = v.get("predictor") {
+            let name = p
+                .as_str()
+                .ok_or_else(|| anyhow!("'predictor' must be a string"))?;
+            req.predictor = CachePredictorKind::parse(name)
+                .ok_or_else(|| anyhow!("unknown cache predictor '{name}' (offsets|lc|auto)"))?;
+        }
+        if let Some(c) = v.get("codegen") {
+            let name = c
+                .as_str()
+                .ok_or_else(|| anyhow!("'codegen' must be a string"))?;
+            req.codegen = CodegenSelection::parse(name)
+                .ok_or_else(|| anyhow!("unknown codegen '{name}' (machine|scalar)"))?;
+        }
+        if let Some(u) = v.get("unit") {
+            let name = u.as_str().ok_or_else(|| anyhow!("'unit' must be a string"))?;
+            req.unit = Unit::parse(name).ok_or_else(|| {
+                anyhow!("unknown unit '{name}' (valid: {})", Unit::VALID_SPELLINGS)
+            })?;
+        }
+        Ok(req)
+    }
+}
+
+impl IncoreReport {
+    fn json(&self) -> String {
+        let mut s = format!(
+            "{{\"t_ol\": {}, \"t_nol\": {}, \"tp\": {}, \"cp\": {}, \"vectorized\": {}, \"vector_elems\": {}, \"port_pressure\": [",
+            json_num(self.t_ol),
+            json_num(self.t_nol),
+            json_num(self.tp),
+            json_num(self.cp),
+            self.vectorized,
+            self.vector_elems
+        );
+        for (ix, (port, cycles)) in self.port_pressure.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"port\": {}, \"cycles\": {}}}",
+                json_str(port),
+                json_num(*cycles)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    fn from_json_value(v: &JsonValue) -> Result<IncoreReport> {
+        let mut port_pressure = Vec::new();
+        for p in v
+            .get("port_pressure")
+            .ok_or_else(|| anyhow!("incore missing 'port_pressure'"))?
+            .items()
+        {
+            port_pressure.push((get_str(p, "port")?, get_f64(p, "cycles")?));
+        }
+        Ok(IncoreReport {
+            t_ol: get_f64(v, "t_ol")?,
+            t_nol: get_f64(v, "t_nol")?,
+            tp: get_f64(v, "tp")?,
+            cp: get_f64(v, "cp")?,
+            vectorized: get_bool(v, "vectorized")?,
+            vector_elems: get_u32(v, "vector_elems")?,
+            port_pressure,
+        })
+    }
+}
+
+impl TrafficReport {
+    fn json(&self) -> String {
+        let mut s = format!("{{\"cacheline_bytes\": {}, \"levels\": [", self.cacheline_bytes);
+        for (ix, l) in self.levels.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"level\": {}, \"read_miss_lines\": {}, \"write_allocate_lines\": {}, \"evict_lines\": {}, \"hit_lines\": {}, \"total_lines\": {}}}",
+                json_str(&l.level),
+                json_num(l.read_miss_lines),
+                json_num(l.write_allocate_lines),
+                json_num(l.evict_lines),
+                json_num(l.hit_lines),
+                json_num(l.total_lines)
+            ));
+        }
+        s.push_str(&format!(
+            "], \"memory_bytes_per_unit\": {}, \"lc_fast_levels\": {}, \"walk_levels\": {}, \"lc_breakpoints\": [",
+            json_num(self.memory_bytes_per_unit),
+            self.lc_fast_levels,
+            self.walk_levels
+        ));
+        for (ix, b) in self.lc_breakpoints.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&json_str(b));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    fn from_json_value(v: &JsonValue) -> Result<TrafficReport> {
+        let mut levels = Vec::new();
+        for l in v
+            .get("levels")
+            .ok_or_else(|| anyhow!("traffic missing 'levels'"))?
+            .items()
+        {
+            levels.push(LevelTrafficReport {
+                level: get_str(l, "level")?,
+                read_miss_lines: get_f64(l, "read_miss_lines")?,
+                write_allocate_lines: get_f64(l, "write_allocate_lines")?,
+                evict_lines: get_f64(l, "evict_lines")?,
+                hit_lines: get_f64(l, "hit_lines")?,
+                total_lines: get_f64(l, "total_lines")?,
+            });
+        }
+        let lc_breakpoints = v
+            .get("lc_breakpoints")
+            .ok_or_else(|| anyhow!("traffic missing 'lc_breakpoints'"))?
+            .items()
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("lc_breakpoints entries must be strings"))
+            })
+            .collect::<Result<Vec<String>>>()?;
+        Ok(TrafficReport {
+            cacheline_bytes: get_u64(v, "cacheline_bytes")?,
+            levels,
+            memory_bytes_per_unit: get_f64(v, "memory_bytes_per_unit")?,
+            lc_fast_levels: get_u32(v, "lc_fast_levels")?,
+            walk_levels: get_u32(v, "walk_levels")?,
+            lc_breakpoints,
+        })
+    }
+}
+
+impl EcmReport {
+    fn json(&self) -> String {
+        let mut s = format!(
+            "{{\"t_ol\": {}, \"t_nol\": {}, \"contributions\": [",
+            json_num(self.t_ol),
+            json_num(self.t_nol)
+        );
+        for (ix, c) in self.contributions.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"link\": {}, \"lines\": {}, \"cycles\": {}, \"benchmark\": {}}}",
+                json_str(&c.link),
+                json_num(c.lines),
+                json_num(c.cycles),
+                json_opt_str(&c.benchmark)
+            ));
+        }
+        s.push_str(&format!("], \"t_mem\": {}, \"level_predictions\": [", json_num(self.t_mem)));
+        for (ix, p) in self.level_predictions.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&json_num(*p));
+        }
+        s.push_str(&format!(
+            "], \"saturation_cores\": {}, \"mem_bandwidth_bs\": {}}}",
+            json_opt_u32(self.saturation_cores),
+            json_num(self.mem_bandwidth_bs)
+        ));
+        s
+    }
+
+    fn from_json_value(v: &JsonValue) -> Result<EcmReport> {
+        let mut contributions = Vec::new();
+        for c in v
+            .get("contributions")
+            .ok_or_else(|| anyhow!("ecm missing 'contributions'"))?
+            .items()
+        {
+            contributions.push(EcmContributionReport {
+                link: get_str(c, "link")?,
+                lines: get_f64(c, "lines")?,
+                cycles: get_f64(c, "cycles")?,
+                benchmark: opt_str(c, "benchmark"),
+            });
+        }
+        let level_predictions = v
+            .get("level_predictions")
+            .ok_or_else(|| anyhow!("ecm missing 'level_predictions'"))?
+            .items()
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad level prediction")))
+            .collect::<Result<Vec<f64>>>()?;
+        Ok(EcmReport {
+            t_ol: get_f64(v, "t_ol")?,
+            t_nol: get_f64(v, "t_nol")?,
+            contributions,
+            t_mem: get_f64(v, "t_mem")?,
+            level_predictions,
+            saturation_cores: opt_u32(v, "saturation_cores"),
+            mem_bandwidth_bs: get_f64(v, "mem_bandwidth_bs")?,
+        })
+    }
+}
+
+impl ScalingReport {
+    fn json(&self) -> String {
+        format!(
+            "{{\"t_single\": {}, \"t_mem_link\": {}, \"saturation_cores\": {}, \"domain_cores\": {}}}",
+            json_num(self.t_single),
+            json_num(self.t_mem_link),
+            json_opt_u32(self.saturation_cores),
+            self.domain_cores
+        )
+    }
+
+    fn from_json_value(v: &JsonValue) -> Result<ScalingReport> {
+        Ok(ScalingReport {
+            t_single: get_f64(v, "t_single")?,
+            t_mem_link: get_f64(v, "t_mem_link")?,
+            saturation_cores: opt_u32(v, "saturation_cores"),
+            domain_cores: get_u32(v, "domain_cores")?,
+        })
+    }
+}
+
+impl RooflineReport {
+    fn json(&self) -> String {
+        let mut s = format!("{{\"port_model\": {}, \"ceilings\": [", self.port_model);
+        for (ix, c) in self.ceilings.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"level\": {}, \"cycles\": {}, \"bandwidth_bs\": {}, \"benchmark\": {}, \"arith_intensity\": {}}}",
+                json_str(&c.level),
+                json_num(c.cycles),
+                json_opt_num(c.bandwidth_bs),
+                json_opt_str(&c.benchmark),
+                json_opt_num(c.arith_intensity)
+            ));
+        }
+        s.push_str(&format!(
+            "], \"bottleneck\": {}, \"prediction_cycles\": {}, \"memory_bound\": {}}}",
+            self.bottleneck,
+            json_num(self.prediction_cycles),
+            self.memory_bound
+        ));
+        s
+    }
+
+    fn from_json_value(v: &JsonValue) -> Result<RooflineReport> {
+        let mut ceilings = Vec::new();
+        for c in v
+            .get("ceilings")
+            .ok_or_else(|| anyhow!("roofline missing 'ceilings'"))?
+            .items()
+        {
+            ceilings.push(RooflineCeilingReport {
+                level: get_str(c, "level")?,
+                cycles: get_f64(c, "cycles")?,
+                bandwidth_bs: opt_f64(c, "bandwidth_bs"),
+                benchmark: opt_str(c, "benchmark"),
+                arith_intensity: opt_f64(c, "arith_intensity"),
+            });
+        }
+        let bottleneck = get_u64(v, "bottleneck")? as usize;
+        if bottleneck >= ceilings.len() {
+            bail!(
+                "roofline 'bottleneck' index {bottleneck} out of range ({} ceilings)",
+                ceilings.len()
+            );
+        }
+        Ok(RooflineReport {
+            port_model: get_bool(v, "port_model")?,
+            ceilings,
+            bottleneck,
+            prediction_cycles: get_f64(v, "prediction_cycles")?,
+            memory_bound: get_bool(v, "memory_bound")?,
+        })
+    }
+}
+
+impl AnalysisReport {
+    /// Serialize to a single-line JSON object (the `serve` wire format).
+    /// Finite floats round-trip exactly; absent sections are omitted.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        if let Some(id) = &self.id {
+            s.push_str("\"id\": ");
+            s.push_str(&json_str(id));
+            s.push_str(", ");
+        }
+        s.push_str("\"kernel\": ");
+        s.push_str(&json_str(&self.kernel));
+        s.push_str(", \"machine\": ");
+        s.push_str(&json_str(&self.machine));
+        s.push_str(", \"arch\": ");
+        s.push_str(&json_str(&self.arch));
+        s.push_str(&format!(", \"cores\": {}", self.cores));
+        s.push_str(", \"constants\": ");
+        s.push_str(&json_constants(&self.constants));
+        s.push_str(", \"model\": ");
+        s.push_str(&json_str(self.model.name()));
+        s.push_str(", \"predictor\": ");
+        s.push_str(&json_str(self.predictor.name()));
+        s.push_str(", \"unit\": ");
+        s.push_str(&json_str(self.unit.suffix()));
+        s.push_str(&format!(
+            ", \"clock_hz\": {}, \"unit_iterations\": {}, \"flops_per_unit\": {}",
+            json_num(self.clock_hz),
+            self.unit_iterations,
+            json_num(self.flops_per_unit)
+        ));
+        if let Some(i) = &self.incore {
+            s.push_str(", \"incore\": ");
+            s.push_str(&i.json());
+        }
+        if let Some(t) = &self.traffic {
+            s.push_str(", \"traffic\": ");
+            s.push_str(&t.json());
+        }
+        if let Some(e) = &self.ecm {
+            s.push_str(", \"ecm\": ");
+            s.push_str(&e.json());
+        }
+        if let Some(sc) = &self.scaling {
+            s.push_str(", \"scaling\": ");
+            s.push_str(&sc.json());
+        }
+        if let Some(r) = &self.roofline {
+            s.push_str(", \"roofline\": ");
+            s.push_str(&r.json());
+        }
+        s.push_str(", \"session\": ");
+        s.push_str(&self.session.json_object());
+        s.push('}');
+        s
+    }
+
+    /// Parse a report back from JSON text (the round-trip inverse of
+    /// [`AnalysisReport::to_json`]).
+    pub fn from_json(text: &str) -> Result<AnalysisReport> {
+        let v = jsonio::parse(text).context("parsing analysis report")?;
+        Self::from_json_value(&v)
+    }
+
+    /// Parse a report from an already-parsed JSON value.
+    pub fn from_json_value(v: &JsonValue) -> Result<AnalysisReport> {
+        let section = |k: &str| v.get(k).filter(|x| !x.is_null());
+        let model_name = get_str(v, "model")?;
+        let predictor_name = get_str(v, "predictor")?;
+        let unit_name = get_str(v, "unit")?;
+        Ok(AnalysisReport {
+            id: opt_str(v, "id"),
+            kernel: get_str(v, "kernel")?,
+            machine: get_str(v, "machine")?,
+            arch: get_str(v, "arch")?,
+            cores: get_u32(v, "cores")?,
+            constants: v
+                .get("constants")
+                .map(constants_from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            model: ModelKind::parse(&model_name)
+                .ok_or_else(|| anyhow!("unknown model '{model_name}'"))?,
+            predictor: CachePredictorKind::parse(&predictor_name)
+                .ok_or_else(|| anyhow!("unknown predictor '{predictor_name}'"))?,
+            unit: Unit::parse(&unit_name)
+                .ok_or_else(|| anyhow!("unknown unit '{unit_name}'"))?,
+            clock_hz: get_f64(v, "clock_hz")?,
+            unit_iterations: get_u64(v, "unit_iterations")?,
+            flops_per_unit: get_f64(v, "flops_per_unit")?,
+            incore: section("incore").map(IncoreReport::from_json_value).transpose()?,
+            traffic: section("traffic").map(TrafficReport::from_json_value).transpose()?,
+            ecm: section("ecm").map(EcmReport::from_json_value).transpose()?,
+            scaling: section("scaling").map(ScalingReport::from_json_value).transpose()?,
+            roofline: section("roofline")
+                .map(RooflineReport::from_json_value)
+                .transpose()?,
+            session: v
+                .get("session")
+                .map(MemoStats::from_json_value)
+                .transpose()?
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TRIAD: &str =
+        "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+
+    fn triad_request() -> AnalysisRequest {
+        AnalysisRequest::new(KernelSpec::source("triad", TRIAD), "SNB")
+            .with_constant("N", 8_000_000)
+    }
+
+    #[test]
+    fn request_json_round_trip_all_kernel_specs() {
+        let reqs = [
+            triad_request()
+                .with_cores(4)
+                .with_model(ModelKind::RooflinePort)
+                .with_predictor(CachePredictorKind::Auto)
+                .with_codegen(CodegenSelection::Scalar)
+                .with_unit(Unit::FlopPerS)
+                .with_id("req-1"),
+            AnalysisRequest::new(KernelSpec::named("2D-5pt"), "HSW")
+                .with_constant("N", 6000)
+                .with_constant("M", 6000),
+            AnalysisRequest::new(KernelSpec::path("kernels/triad.c"), "machines/snb.yml"),
+        ];
+        for req in reqs {
+            let json = req.to_json();
+            let back = AnalysisRequest::from_json(&json).unwrap();
+            assert_eq!(req, back, "{json}");
+        }
+    }
+
+    #[test]
+    fn request_json_defaults_apply() {
+        let req =
+            AnalysisRequest::from_json(r#"{"kernel": {"name": "triad"}, "machine": "SNB"}"#)
+                .unwrap();
+        assert_eq!(req.cores, 1);
+        assert_eq!(req.model, ModelKind::Ecm);
+        assert_eq!(req.predictor, CachePredictorKind::Offsets);
+        assert_eq!(req.codegen, CodegenSelection::MachineDefault);
+        assert_eq!(req.unit, Unit::CyPerCl);
+        assert!(req.constants.is_empty());
+        assert!(req.id.is_none());
+    }
+
+    #[test]
+    fn request_json_rejects_bad_fields() {
+        assert!(AnalysisRequest::from_json(r#"{"machine": "SNB"}"#).is_err(), "no kernel");
+        assert!(
+            AnalysisRequest::from_json(r#"{"kernel": {"name": "t"}}"#).is_err(),
+            "no machine"
+        );
+        assert!(AnalysisRequest::from_json(
+            r#"{"kernel": {"name": "t"}, "machine": "SNB", "model": "Nope"}"#
+        )
+        .is_err());
+        assert!(AnalysisRequest::from_json(
+            r#"{"kernel": {"name": "t"}, "machine": "SNB", "unit": "parsecs"}"#
+        )
+        .is_err());
+        assert!(AnalysisRequest::from_json(
+            r#"{"kernel": {"name": "t"}, "machine": "SNB", "constants": {"N": 1.5}}"#
+        )
+        .is_err());
+        assert!(
+            AnalysisRequest::from_json(
+                r#"{"kernel": {"name": "t"}, "machine": "SNB", "id": 7}"#
+            )
+            .is_err(),
+            "non-string id must be rejected, not dropped"
+        );
+    }
+
+    #[test]
+    fn evaluate_matches_direct_pipeline() {
+        use crate::kernel::parse;
+        let session = Session::new();
+        let report = session.evaluate(&triad_request()).unwrap();
+
+        let m = MachineModel::snb();
+        let p = parse(TRIAD).unwrap();
+        let consts: HashMap<String, i64> =
+            [("N".to_string(), 8_000_000i64)].into_iter().collect();
+        let a = KernelAnalysis::from_program(&p, &consts).unwrap();
+        let pm = PortModel::analyze(&a, &m, &CodegenPolicy::for_machine(&m)).unwrap();
+        let t = CachePredictor::new(&m).predict(&a).unwrap();
+        let e = EcmModel::build(&pm, &t, &m).unwrap();
+
+        let ecm = report.ecm.as_ref().unwrap();
+        assert_eq!(ecm.t_mem, e.t_mem());
+        assert_eq!(ecm.t_ol, e.t_ol);
+        assert_eq!(ecm.t_nol, e.t_nol);
+        assert_eq!(ecm.contributions.len(), e.contributions.len());
+        for (cr, c) in ecm.contributions.iter().zip(&e.contributions) {
+            assert_eq!(cr.link, c.link);
+            assert_eq!(cr.lines, c.lines);
+            assert_eq!(cr.cycles, c.cycles);
+        }
+        assert_eq!(report.arch, "SNB");
+        assert_eq!(report.unit_iterations, t.unit_iterations);
+    }
+
+    #[test]
+    fn second_request_hits_every_cache() {
+        let session = Session::new();
+        let req = triad_request();
+        let first = session.evaluate(&req).unwrap();
+        assert_eq!(first.session.misses(), 4, "{:?}", first.session);
+        assert_eq!(first.session.hits(), 0);
+        let second = session.evaluate(&req).unwrap();
+        assert_eq!(second.session.hits(), 4, "{:?}", second.session);
+        assert_eq!(second.session.misses(), 0);
+        assert_eq!(second.session.program_hits, 1);
+        assert_eq!(second.session.analysis_hits, 1);
+        assert_eq!(second.session.incore_hits, 1);
+        assert_eq!(second.session.machine_hits, 1);
+        // session-wide counters aggregate both requests
+        let total = session.stats();
+        assert_eq!(total.hits(), 4);
+        assert_eq!(total.misses(), 4);
+        // the models themselves are identical
+        assert_eq!(first.ecm, second.ecm);
+    }
+
+    #[test]
+    fn report_json_round_trip_every_model() {
+        let session = Session::new();
+        for model in [
+            ModelKind::Ecm,
+            ModelKind::EcmData,
+            ModelKind::EcmCpu,
+            ModelKind::Roofline,
+            ModelKind::RooflinePort,
+        ] {
+            let req = triad_request().with_model(model).with_id(model.name());
+            let report = session.evaluate(&req).unwrap();
+            let json = report.to_json();
+            let back = AnalysisReport::from_json(&json).unwrap();
+            assert_eq!(report, back, "{}:\n{json}", model.name());
+            // JSON is a single line (the serve framing requirement)
+            assert!(!json.contains('\n'), "{json}");
+        }
+    }
+
+    #[test]
+    fn model_sections_match_the_request() {
+        let session = Session::new();
+        let r = session
+            .evaluate(&triad_request().with_model(ModelKind::EcmCpu))
+            .unwrap();
+        assert!(r.incore.is_some() && r.traffic.is_none() && r.ecm.is_none());
+        let r = session
+            .evaluate(&triad_request().with_model(ModelKind::EcmData))
+            .unwrap();
+        assert!(r.incore.is_none() && r.ecm.is_some() && r.scaling.is_some());
+        let r = session
+            .evaluate(&triad_request().with_model(ModelKind::Roofline))
+            .unwrap();
+        assert!(r.roofline.is_some() && r.incore.is_none());
+        assert!(!r.roofline.as_ref().unwrap().port_model);
+        let r = session
+            .evaluate(&triad_request().with_model(ModelKind::RooflinePort))
+            .unwrap();
+        let rf = r.roofline.as_ref().unwrap();
+        assert!(rf.port_model);
+        assert_eq!(rf.prediction_cycles, rf.ceilings[rf.bottleneck].cycles);
+        assert!(rf.memory_bound, "in-memory triad is bandwidth bound");
+    }
+
+    #[test]
+    fn named_and_path_kernels_resolve() {
+        let session = Session::new();
+        let named = AnalysisRequest::new(KernelSpec::named("triad"), "SNB")
+            .with_constant("N", 100_000);
+        let r = session.evaluate(&named).unwrap();
+        assert_eq!(r.kernel, "triad");
+        let err = session
+            .evaluate(&AnalysisRequest::new(KernelSpec::named("nope"), "SNB"))
+            .unwrap_err();
+        assert!(format!("{err}").contains("unknown reference kernel"), "{err}");
+    }
+
+    #[test]
+    fn scalar_codegen_is_cached_separately() {
+        let session = Session::new();
+        let vec_req = triad_request();
+        let sc_req = triad_request().with_codegen(CodegenSelection::Scalar);
+        let vec_rep = session.evaluate(&vec_req).unwrap();
+        let sc_rep = session.evaluate(&sc_req).unwrap();
+        // different policies must not share the in-core memo slot
+        assert_eq!(sc_rep.session.incore_misses, 1, "{:?}", sc_rep.session);
+        let v = vec_rep.incore.as_ref().unwrap();
+        let s = sc_rep.incore.as_ref().unwrap();
+        assert!(v.vectorized && !s.vectorized);
+        assert!(s.t_ol > v.t_ol, "scalar code is slower in-core");
+    }
+
+    #[test]
+    fn zero_cores_is_a_clean_error() {
+        let session = Session::new();
+        let err = session.evaluate(&triad_request().with_cores(0)).unwrap_err();
+        assert!(format!("{err}").contains("at least one core"), "{err}");
+    }
+
+    #[test]
+    fn intern_table_stays_bounded_with_unique_ids() {
+        let session = Session::new();
+        // far more distinct sources than the cap: the table must stay
+        // bounded and ids must never repeat (or downstream program keys
+        // minted before a clear could alias new ones)
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..(2 * MAX_CACHE_ENTRIES + 10) {
+            let id = session.intern_source(&format!("kernel {i}"));
+            assert!(seen.insert(id), "source id {id} reused");
+        }
+        assert!(session.sources.lock().unwrap().len() <= MAX_CACHE_ENTRIES);
+        // re-interning a live entry is a stable hit
+        let a = session.intern_source("stable");
+        let b = session.intern_source("stable");
+        assert_eq!(a, b);
+    }
+}
+

@@ -1,33 +1,31 @@
 //! Batched sweep engine — the paper's headline use case ("quickly gain
 //! insights by accelerated analytic modeling") industrialized: evaluate a
-//! whole grid of (kernel source × constants × machine × cores) points
-//! through the full pipeline, in parallel, with memoization of every
-//! stage product that is invariant across points:
+//! whole grid of (kernel source × constants × machine × cores) points,
+//! in parallel, as a map of typed [`AnalysisRequest`]s through one shared
+//! [`Session`].
 //!
-//! * parsed [`Program`] per kernel source,
-//! * [`KernelAnalysis`] per (source, constants) binding,
-//! * [`PortModel`] per (source, constants, machine) — the in-core model
-//!   does not depend on the cache predictor or core count,
-//! * [`MachineModel`] per machine key (builtin tag or file path).
-//!
-//! Per-point work then reduces to the cache prediction (which the
-//! layer-condition fast path of [`crate::cache`] answers analytically for
-//! decisive levels) and the ECM assembly. Results are bit-identical to
-//! running [`crate::analyze`]-style serial calls point by point: every
-//! stage is a pure function of its inputs, memoized or not.
+//! The session owns every stage cache (parsed programs, kernel analyses,
+//! in-core models, machine files — see [`crate::session`]), so per-point
+//! work reduces to the cache prediction (which the layer-condition fast
+//! path of [`crate::cache`] answers analytically for decisive levels) and
+//! the ECM assembly. Results are bit-identical to evaluating the requests
+//! one by one against a fresh session: every stage is a pure function of
+//! its inputs, memoized or not.
 //!
 //! Grid axes use the CLI syntax `start:end:spec` (`-D N 128:8M:log2`),
 //! see [`parse_grid`].
 
-use crate::cache::{CachePredictor, CachePredictorKind};
-use crate::incore::{CodegenPolicy, PortModel};
-use crate::kernel::{KernelAnalysis, Program};
-use crate::machine::MachineModel;
-use crate::models::EcmModel;
+use crate::cache::CachePredictorKind;
+use crate::models::Unit;
+use crate::session::{
+    AnalysisReport, AnalysisRequest, CodegenSelection, KernelSpec, ModelKind, Session,
+};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+pub use crate::session::MemoStats;
 
 /// One point of a sweep: a kernel source at one constants binding on one
 /// machine with one core count.
@@ -45,6 +43,27 @@ pub struct SweepJob {
     pub constants: BTreeMap<String, i64>,
     /// Cache predictor back end for this point.
     pub predictor: CachePredictorKind,
+}
+
+impl SweepJob {
+    /// The typed session request this point maps to (full ECM model,
+    /// machine-default codegen — the sweep contract).
+    pub fn request(&self) -> AnalysisRequest {
+        AnalysisRequest {
+            id: None,
+            kernel: KernelSpec::Source {
+                label: self.label.clone(),
+                source: self.source.clone(),
+            },
+            constants: self.constants.clone(),
+            machine: self.machine.clone(),
+            cores: self.cores,
+            model: ModelKind::Ecm,
+            predictor: self.predictor,
+            codegen: CodegenSelection::MachineDefault,
+            unit: Unit::CyPerCl,
+        }
+    }
 }
 
 /// One evaluated sweep point.
@@ -77,19 +96,6 @@ pub struct SweepRow {
     pub lc_breakpoints: Vec<String>,
 }
 
-/// Memoization counters of one engine run.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct MemoStats {
-    pub machine_hits: u64,
-    pub machine_misses: u64,
-    pub program_hits: u64,
-    pub program_misses: u64,
-    pub analysis_hits: u64,
-    pub analysis_misses: u64,
-    pub incore_hits: u64,
-    pub incore_misses: u64,
-}
-
 /// Result of an engine run.
 #[derive(Debug, Clone)]
 pub struct SweepOutput {
@@ -100,40 +106,10 @@ pub struct SweepOutput {
     pub threads_used: usize,
 }
 
-/// The parallel, memoizing sweep engine.
+/// The parallel sweep engine: a thread pool mapping jobs through one
+/// shared [`Session`].
 pub struct SweepEngine {
     threads: usize,
-}
-
-#[derive(Default)]
-struct Caches {
-    /// Source-text interning: grid points share kernels, so downstream
-    /// memo keys carry a small id instead of the whole source string.
-    sources: Mutex<HashMap<String, usize>>,
-    machines: Mutex<HashMap<String, Arc<MachineModel>>>,
-    programs: Mutex<HashMap<String, Arc<Program>>>,
-    analyses: Mutex<HashMap<String, Arc<KernelAnalysis>>>,
-    incore: Mutex<HashMap<String, Arc<PortModel>>>,
-}
-
-impl Caches {
-    fn intern_source(&self, source: &str) -> usize {
-        let mut guard = self.sources.lock().unwrap();
-        let next = guard.len();
-        *guard.entry(source.to_string()).or_insert(next)
-    }
-}
-
-#[derive(Default)]
-struct Counters {
-    machine_hits: AtomicU64,
-    machine_misses: AtomicU64,
-    program_hits: AtomicU64,
-    program_misses: AtomicU64,
-    analysis_hits: AtomicU64,
-    analysis_misses: AtomicU64,
-    incore_hits: AtomicU64,
-    incore_misses: AtomicU64,
 }
 
 impl SweepEngine {
@@ -154,13 +130,19 @@ impl SweepEngine {
         SweepEngine { threads: threads.max(1) }
     }
 
-    /// Evaluate all jobs; rows come back in job order. Any failing point
-    /// fails the sweep with its job context attached.
+    /// Evaluate all jobs through a fresh [`Session`]; rows come back in
+    /// job order. Any failing point fails the sweep with its job context
+    /// attached.
     pub fn run(&self, jobs: &[SweepJob]) -> Result<SweepOutput> {
-        let caches = Caches::default();
-        let counters = Counters::default();
+        self.run_with_session(&Session::new(), jobs)
+    }
+
+    /// Evaluate all jobs through an existing (possibly warm) session.
+    /// `SweepOutput::stats` reports only this run's hits and misses (the
+    /// sum of per-request deltas), regardless of session warmth.
+    pub fn run_with_session(&self, session: &Session, jobs: &[SweepJob]) -> Result<SweepOutput> {
         let next = AtomicUsize::new(0);
-        let results: Vec<Mutex<Option<Result<SweepRow>>>> =
+        let results: Vec<Mutex<Option<Result<AnalysisReport>>>> =
             jobs.iter().map(|_| Mutex::new(None)).collect();
         let threads = self.threads.min(jobs.len()).max(1);
 
@@ -171,36 +153,29 @@ impl SweepEngine {
                     if ix >= jobs.len() {
                         break;
                     }
-                    let row = evaluate_job(&jobs[ix], &caches, &counters);
-                    *results[ix].lock().unwrap() = Some(row);
+                    let report = session.evaluate(&jobs[ix].request());
+                    *results[ix].lock().unwrap() = Some(report);
                 });
             }
         });
 
         let mut rows = Vec::with_capacity(jobs.len());
+        let mut stats = MemoStats::default();
         for (ix, slot) in results.into_iter().enumerate() {
             let r = slot
                 .into_inner()
                 .unwrap()
                 .unwrap_or_else(|| Err(anyhow!("job was never evaluated")));
             let job = &jobs[ix];
-            rows.push(r.with_context(|| {
+            let report = r.with_context(|| {
                 format!(
                     "sweep point {} on {} ({} cores, {:?})",
                     job.label, job.machine, job.cores, job.constants
                 )
-            })?);
+            })?;
+            stats.absorb(report.session);
+            rows.push(row_from_report(job, &report));
         }
-        let stats = MemoStats {
-            machine_hits: counters.machine_hits.load(Ordering::Relaxed),
-            machine_misses: counters.machine_misses.load(Ordering::Relaxed),
-            program_hits: counters.program_hits.load(Ordering::Relaxed),
-            program_misses: counters.program_misses.load(Ordering::Relaxed),
-            analysis_hits: counters.analysis_hits.load(Ordering::Relaxed),
-            analysis_misses: counters.analysis_misses.load(Ordering::Relaxed),
-            incore_hits: counters.incore_hits.load(Ordering::Relaxed),
-            incore_misses: counters.incore_misses.load(Ordering::Relaxed),
-        };
         Ok(SweepOutput { rows, stats, threads_used: threads })
     }
 }
@@ -211,95 +186,17 @@ impl Default for SweepEngine {
     }
 }
 
-/// Memo lookup helper: double-checked get-or-insert through a mutexed
-/// map. The builder runs OUTSIDE the lock so concurrent points don't
-/// serialize on each other's parse/analyze work; on a race the first
-/// insert wins (both values are equal — the stages are pure).
-fn memoize<T>(
-    map: &Mutex<HashMap<String, Arc<T>>>,
-    key: &str,
-    hits: &AtomicU64,
-    misses: &AtomicU64,
-    build: impl FnOnce() -> Result<T>,
-) -> Result<Arc<T>> {
-    if let Some(v) = map.lock().unwrap().get(key) {
-        hits.fetch_add(1, Ordering::Relaxed);
-        return Ok(v.clone());
-    }
-    misses.fetch_add(1, Ordering::Relaxed);
-    let built = Arc::new(build()?);
-    let mut guard = map.lock().unwrap();
-    Ok(guard.entry(key.to_string()).or_insert(built).clone())
-}
-
-fn consts_key(constants: &BTreeMap<String, i64>) -> String {
-    let mut s = String::new();
-    for (k, v) in constants {
-        s.push_str(k);
-        s.push('=');
-        s.push_str(&v.to_string());
-        s.push(';');
-    }
-    s
-}
-
-fn evaluate_job(job: &SweepJob, caches: &Caches, c: &Counters) -> Result<SweepRow> {
-    let machine = memoize(
-        &caches.machines,
-        &job.machine,
-        &c.machine_hits,
-        &c.machine_misses,
-        || crate::cli::load_machine(&job.machine),
-    )?;
-    let source_id = caches.intern_source(&job.source);
-    let program = memoize(
-        &caches.programs,
-        &source_id.to_string(),
-        &c.program_hits,
-        &c.program_misses,
-        || crate::kernel::parse(&job.source).map_err(anyhow::Error::from),
-    )?;
-    let ckey = consts_key(&job.constants);
-    let akey = format!("{source_id}\u{1}{ckey}");
-    let analysis = memoize(
-        &caches.analyses,
-        &akey,
-        &c.analysis_hits,
-        &c.analysis_misses,
-        || {
-            let consts: HashMap<String, i64> =
-                job.constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
-            KernelAnalysis::from_program(&program, &consts).map_err(anyhow::Error::from)
-        },
-    )?;
-    let ikey = format!("{}\u{1}{}", akey, job.machine);
-    let incore = memoize(&caches.incore, &ikey, &c.incore_hits, &c.incore_misses, || {
-        PortModel::analyze(&analysis, &machine, &CodegenPolicy::for_machine(&machine))
-    })?;
-
-    let traffic = CachePredictor::with_kind(&machine, job.cores, job.predictor)
-        .predict(&analysis)?;
-    let ecm = EcmModel::build(&incore, &traffic, &machine)?;
-
-    // Fig. 3 breakpoint bands: per dim, innermost level satisfying the LC
-    let mut lc_breakpoints = Vec::new();
-    for (d, l) in analysis.loops.iter().enumerate() {
-        let holds = traffic
-            .layer_conditions
-            .iter()
-            .find(|e| e.dim_index == d && e.satisfied)
-            .map(|e| e.level.clone())
-            .unwrap_or_else(|| "MEM".to_string());
-        lc_breakpoints.push(format!("{}@{}", l.index, holds));
-    }
-
-    Ok(SweepRow {
+/// Project one evaluated report onto the flat sweep-row shape.
+fn row_from_report(job: &SweepJob, r: &AnalysisReport) -> SweepRow {
+    let ecm = r.ecm.as_ref().expect("sweep requests the full ECM model");
+    let traffic = r.traffic.as_ref().expect("the ECM model carries traffic");
+    SweepRow {
         label: job.label.clone(),
         machine: job.machine.clone(),
         cores: job.cores,
         constants: job.constants.clone(),
         predictor: job.predictor,
-        unit_iterations: traffic.unit_iterations,
+        unit_iterations: r.unit_iterations,
         t_ol: ecm.t_ol,
         t_nol: ecm.t_nol,
         links: ecm
@@ -307,13 +204,13 @@ fn evaluate_job(job: &SweepJob, caches: &Caches, c: &Counters) -> Result<SweepRo
             .iter()
             .map(|ct| (ct.link.clone(), ct.lines, ct.cycles))
             .collect(),
-        t_ecm_mem: ecm.t_mem(),
-        saturation_cores: ecm.saturation_cores(),
-        memory_bytes_per_unit: traffic.memory_bytes_per_unit(),
-        lc_fast_levels: traffic.stats.lc_fast_levels,
-        walk_levels: traffic.stats.walk_levels,
-        lc_breakpoints,
-    })
+        t_ecm_mem: ecm.t_mem,
+        saturation_cores: ecm.saturation_cores.unwrap_or(u32::MAX),
+        memory_bytes_per_unit: traffic.memory_bytes_per_unit,
+        lc_fast_levels: traffic.lc_fast_levels,
+        walk_levels: traffic.walk_levels,
+        lc_breakpoints: traffic.lc_breakpoints.clone(),
+    }
 }
 
 /// Parse one grid axis:
@@ -538,7 +435,12 @@ mod tests {
     fn sweep_rows_match_direct_pipeline() {
         // engine output == running the stages by hand (the serial
         // equivalence guarantee of the acceptance criteria)
+        use crate::cache::CachePredictor;
+        use crate::incore::{CodegenPolicy, PortModel};
+        use crate::kernel::KernelAnalysis;
         use crate::machine::MachineModel;
+        use crate::models::EcmModel;
+        use std::collections::HashMap;
         let jobs = triad_jobs(&[1 << 20], CachePredictorKind::Offsets);
         let out = SweepEngine::serial().run(&jobs).unwrap();
         let row = &out.rows[0];

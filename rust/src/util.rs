@@ -125,6 +125,23 @@ pub fn fmt_cy(x: f64) -> String {
     }
 }
 
+/// The compact Listing-5 ECM notation, e.g. `{9 ‖ 8 | 10 | 6 | 12.7} cy/CL`
+/// — the single source of this format, shared by `EcmModel` and the
+/// report renderer so the model and the wire-report render identically.
+pub fn ecm_notation_str(t_ol: f64, t_nol: f64, link_cycles: &[f64]) -> String {
+    let mut parts = vec![format!("{} \u{2016} {}", fmt_cy(t_ol), fmt_cy(t_nol))];
+    for c in link_cycles {
+        parts.push(fmt_cy(*c));
+    }
+    format!("{{{}}} cy/CL", parts.join(" | "))
+}
+
+/// The per-level ECM prediction notation, e.g. `{9 \ 18 \ 24 \ 36.7} cy/CL`.
+pub fn ecm_prediction_str(level_predictions: &[f64]) -> String {
+    let preds: Vec<String> = level_predictions.iter().map(|p| fmt_cy(*p)).collect();
+    format!("{{{}}} cy/CL", preds.join(" \\ "))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

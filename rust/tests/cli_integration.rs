@@ -127,3 +127,32 @@ fn units_flow_through() {
         assert!(!out.is_empty(), "{unit}");
     }
 }
+
+#[test]
+fn unit_spellings_are_case_insensitive_and_errors_list_them() {
+    let lower = run(&argv("-p ECM -m SNB kernels/triad.c -D N 4000000 --unit flop/s")).unwrap();
+    let canon = run(&argv("-p ECM -m SNB kernels/triad.c -D N 4000000 --unit FLOP/s")).unwrap();
+    assert_eq!(lower, canon);
+    let err =
+        run(&argv("-p ECM -m SNB kernels/triad.c -D N 4000000 --unit bogons")).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("cy/CL") && msg.contains("It/s") && msg.contains("FLOP/s"), "{msg}");
+}
+
+#[test]
+fn json_format_across_model_modes() {
+    use kerncraft::session::AnalysisReport;
+    for mode in ["ECM", "ECMData", "ECMCPU", "Roofline", "RooflinePort"] {
+        let cmd = format!(
+            "-p {mode} -m SNB kernels/2d-5pt.c -D N 6000 -D M 6000 --format json"
+        );
+        let out = run(&argv(&cmd)).unwrap_or_else(|e| panic!("{mode}: {e:#}"));
+        assert_eq!(out.lines().count(), 1, "{mode}: one JSON line\n{out}");
+        let report = AnalysisReport::from_json(out.trim())
+            .unwrap_or_else(|e| panic!("{mode}: {e:#}\n{out}"));
+        assert_eq!(report.model.name(), mode, "{mode}");
+        assert_eq!(report.kernel, "2d-5pt");
+        // round-trip stability: re-serializing yields the same document
+        assert_eq!(report.to_json(), out.trim(), "{mode}");
+    }
+}

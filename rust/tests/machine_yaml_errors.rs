@@ -1,0 +1,49 @@
+//! Golden-file tests for the machine-YAML loader error paths: the full
+//! error text — context chain included — is pinned by `.expected` files
+//! next to the fixtures under `rust/tests/fixtures/`. Update the golden
+//! file deliberately when an error message changes; these strings are
+//! what operators act on.
+
+use kerncraft::machine::MachineModel;
+
+fn golden_error(fixture: &str) -> (String, String) {
+    let yml = format!("rust/tests/fixtures/{fixture}.yml");
+    let expected = format!("rust/tests/fixtures/{fixture}.expected");
+    let err = MachineModel::from_file(&yml)
+        .map(|_| ())
+        .expect_err("fixture must fail to load");
+    let got = format!("{err:#}");
+    let want = std::fs::read_to_string(&expected)
+        .unwrap_or_else(|e| panic!("reading {expected}: {e}"))
+        .trim_end()
+        .to_string();
+    (got, want)
+}
+
+#[test]
+fn missing_field_error_is_stable() {
+    let (got, want) = golden_error("missing_clock");
+    assert_eq!(got, want);
+}
+
+#[test]
+fn todo_marker_is_rejected_with_its_field_path() {
+    let (got, want) = golden_error("todo_marker");
+    assert_eq!(got, want);
+    // the path pinpoints the exact unresolved field, list index included
+    assert!(got.contains("'memory hierarchy[0].size per group'"), "{got}");
+}
+
+#[test]
+fn missing_file_error_names_the_path() {
+    let err = MachineModel::from_file("rust/tests/fixtures/does_not_exist.yml").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("does_not_exist.yml"), "{msg}");
+}
+
+#[test]
+fn builtin_machines_carry_no_todo_markers() {
+    // the shipped calibrated files must always pass the marker scan
+    MachineModel::snb();
+    MachineModel::hsw();
+}
