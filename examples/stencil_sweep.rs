@@ -11,7 +11,7 @@
 
 use kerncraft::cache::CachePredictorKind;
 use kerncraft::models::reference;
-use kerncraft::session::{KernelSpec, Session};
+use kerncraft::session::{KernelSpec, ModelKind, Session};
 use kerncraft::sweep::{SweepEngine, SweepJob};
 use std::sync::Arc;
 
@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
                 .into_iter()
                 .collect(),
             predictor,
+            model: ModelKind::Ecm,
         });
     }
 

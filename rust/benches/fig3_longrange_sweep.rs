@@ -9,6 +9,7 @@
 
 use kerncraft::cache::CachePredictorKind;
 use kerncraft::models::reference;
+use kerncraft::session::ModelKind;
 use kerncraft::sweep::{SweepEngine, SweepJob};
 use std::sync::Arc;
 
@@ -30,6 +31,7 @@ fn main() {
                 .into_iter()
                 .collect(),
             predictor: CachePredictorKind::Auto,
+            model: ModelKind::Ecm,
         })
         .collect();
 

@@ -51,9 +51,15 @@ pub enum CachePredictorKind {
 
 impl CachePredictorKind {
     /// Parse a CLI spelling: `offsets`, `lc`/`layer-conditions`, `auto`.
+    ///
+    /// `sim` is deliberately NOT accepted: it used to alias `Offsets`,
+    /// which became actively misleading once a real simulator-backed
+    /// analysis existed — the trace-driven cache simulator is reached
+    /// through `ModelKind::Validate` (`-p Validate`), not through the
+    /// analytic predictor selection.
     pub fn parse(s: &str) -> Option<CachePredictorKind> {
         match s.to_ascii_lowercase().as_str() {
-            "offsets" | "sim" => Some(CachePredictorKind::Offsets),
+            "offsets" => Some(CachePredictorKind::Offsets),
             "lc" | "layerconditions" | "layer-conditions" => {
                 Some(CachePredictorKind::LayerConditions)
             }
@@ -1333,6 +1339,8 @@ mod tests {
         );
         assert_eq!(CachePredictorKind::parse("auto"), Some(CachePredictorKind::Auto));
         assert_eq!(CachePredictorKind::parse("bogus"), None);
+        // 'sim' used to alias Offsets; the simulator is -p Validate now
+        assert_eq!(CachePredictorKind::parse("sim"), None);
     }
 
     // --- degenerate inputs ---

@@ -17,7 +17,8 @@
 //! ```text
 //! kerncraft sweep -m SNB,HSW kernels/2d-5pt.c -D N 128:8M:log2 -D M 4000 \
 //!           [--cores 1,2] [--predictor auto] [--format csv|json] [--threads K]
-//! kerncraft serve [--input FILE] [-v]
+//!           [--validate]
+//! kerncraft serve [--input FILE] [--threads K] [--unordered] [-v]
 //! ```
 //!
 //! `sweep` expands grid axes (`START:END[:log2|*K|+K]`, binary magnitude
@@ -26,6 +27,10 @@
 //! streams one JSON [`crate::session::AnalysisReport`] per line back,
 //! amortizing machine/kernel parsing across requests through one shared
 //! session — each response carries its per-request cache-hit counters.
+//! With `--threads K` a worker pool evaluates requests concurrently over
+//! the shared session, delivering responses in request order (default)
+//! or as completed (`--unordered`); the full wire protocol lives in
+//! docs/SERVE.md.
 
 use crate::cache::CachePredictorKind;
 use crate::jsonio::{self, json_str};
@@ -39,7 +44,7 @@ use crate::sweep;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, Write};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -178,7 +183,10 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
 /// CLI usage text.
 pub fn usage() -> String {
     "usage: kerncraft -p MODE [-m MACHINE] kernel.c -D NAME VALUE ...\n\
-     modes: ECM ECMData ECMCPU Roofline RooflinePort Benchmark\n\
+     modes: ECM ECMData ECMCPU Roofline RooflinePort Validate Benchmark\n\
+            (Validate = full ECM plus a virtual-testbed run with the\n\
+             simulated-vs-analytic comparison; the cache simulator is\n\
+             reached through this mode, not via --cache-predictor)\n\
      MACHINE: SNB | HSW | path/to/machine.yml\n\
      options: --cores N  --unit {cy/CL,It/s,FLOP/s}  --format {text,json}  -v\n\
               --cache-predictor {offsets,lc,auto}\n\
@@ -189,11 +197,12 @@ pub fn usage() -> String {
      kerncraft sweep [-m M1,M2] kernel.c -D NAME GRID [-D NAME2 GRID2 ...]\n\
               GRID: VALUE | START:END[:log2|*K|+K]   (suffixes k/M/G, 1024-based)\n\
               --cores LIST  --predictor {offsets,lc,auto}  --threads K\n\
-              --format {csv,json}  --serial  -v\n\
+              --format {csv,json}  --serial  --validate  -v\n\
      \n\
      JSON-lines batch service (one AnalysisRequest per input line,\n\
-     one AnalysisReport per output line, shared session cache):\n\
-     kerncraft serve [--input FILE] [-v]"
+     one AnalysisReport per output line, shared session cache; see\n\
+     docs/SERVE.md for the wire protocol):\n\
+     kerncraft serve [--input FILE] [--threads K] [--unordered] [-v]"
         .to_string()
 }
 
@@ -354,6 +363,9 @@ pub struct SweepArgs {
     pub threads: Option<usize>,
     pub format: SweepFormat,
     pub verbose: bool,
+    /// Evaluate every point as [`ModelKind::Validate`]: rows gain the
+    /// simulated cy/CL and model-error columns.
+    pub validate: bool,
 }
 
 /// Sweep output format.
@@ -374,6 +386,7 @@ pub fn parse_sweep_args(argv: &[String]) -> Result<SweepArgs> {
         threads: None,
         format: SweepFormat::Csv,
         verbose: false,
+        validate: false,
     };
     let mut it = argv.iter().peekable();
     let mut next_val = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
@@ -423,6 +436,7 @@ pub fn parse_sweep_args(argv: &[String]) -> Result<SweepArgs> {
                     Some(next_val(&mut it, "--threads")?.parse().context("--threads")?);
             }
             "--serial" => args.threads = Some(1),
+            "--validate" => args.validate = true,
             "--format" => {
                 args.format = match next_val(&mut it, "--format")?.as_str() {
                     "csv" => SweepFormat::Csv,
@@ -472,7 +486,7 @@ pub fn run_sweep(argv: &[String]) -> Result<String> {
         },
     };
     let source: Arc<str> = Arc::from(source.as_str());
-    let jobs = sweep::build_jobs(
+    let mut jobs = sweep::build_jobs(
         &label,
         source,
         &args.machines,
@@ -480,6 +494,11 @@ pub fn run_sweep(argv: &[String]) -> Result<String> {
         &args.axes,
         args.predictor,
     );
+    if args.validate {
+        for job in &mut jobs {
+            job.model = ModelKind::Validate;
+        }
+    }
     if jobs.is_empty() {
         bail!("sweep grid is empty");
     }
@@ -499,11 +518,21 @@ pub fn run_sweep(argv: &[String]) -> Result<String> {
 }
 
 /// Parsed `serve` subcommand arguments.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ServeArgs {
     /// Request file (JSON lines); None reads stdin.
     pub input: Option<String>,
     pub verbose: bool,
+    /// Worker threads evaluating requests (1 = the serial loop).
+    pub threads: usize,
+    /// Deliver responses as they finish instead of in request order.
+    pub unordered: bool,
+}
+
+impl Default for ServeArgs {
+    fn default() -> ServeArgs {
+        ServeArgs { input: None, verbose: false, threads: 1, unordered: false }
+    }
 }
 
 /// Parse `serve` subcommand argv (after the `serve` word).
@@ -519,6 +548,17 @@ pub fn parse_serve_args(argv: &[String]) -> Result<ServeArgs> {
                         .ok_or_else(|| anyhow!("missing value after --input"))?,
                 );
             }
+            "--threads" => {
+                args.threads = it
+                    .next()
+                    .ok_or_else(|| anyhow!("missing value after --threads"))?
+                    .parse()
+                    .context("--threads")?;
+                if args.threads == 0 {
+                    bail!("--threads needs at least one worker");
+                }
+            }
+            "--unordered" => args.unordered = true,
             "-v" | "--verbose" => args.verbose = true,
             "-h" | "--help" => bail!("{}", usage()),
             other if !other.starts_with('-') => {
@@ -555,23 +595,6 @@ impl std::fmt::Display for ServeSummary {
     }
 }
 
-/// The `serve` loop, I/O-parameterized so tests can drive it in-process:
-/// read one JSON [`AnalysisRequest`] per input line, stream one JSON
-/// [`crate::session::AnalysisReport`] (or `{"error": ...}`) per output
-/// line. Blank lines and `#` comments are skipped; a malformed or failing
-/// request produces an error line (echoing its `id` when present) without
-/// ending the stream. All requests share one [`Session`], so repeated
-/// (machine, kernel) pairs hit the cache — the per-request `session`
-/// counters in each response show it.
-///
-/// Caching caveat: machine models are cached by *key* (tag or path) for
-/// the lifetime of the serve process, while kernel `path` specs are
-/// re-read per request (parsing is content-keyed). Editing a machine
-/// YAML under a running server therefore has no effect until restart.
-/// Resource bounds: request lines are capped (oversized lines become
-/// error lines) and the session's stage caches are size-bounded, so a
-/// long-running server's memory stays flat under distinct-request
-/// traffic.
 /// Longest request line `serve` buffers; anything longer becomes an
 /// error line (the rest of the oversized line is drained and discarded)
 /// so one runaway client line cannot exhaust memory.
@@ -612,7 +635,114 @@ fn read_line_capped(
     Ok((consumed_total, truncated))
 }
 
-pub fn serve(input: &mut dyn BufRead, output: &mut dyn Write) -> Result<ServeSummary> {
+/// Delivery and concurrency options of the serve loop.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads evaluating requests over one shared [`Session`]
+    /// (1 = the serial loop, no pipeline).
+    pub threads: usize,
+    /// Emit responses in request order (true, the default) or as soon as
+    /// each one finishes (false — lowest latency under mixed workloads).
+    pub ordered: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { threads: 1, ordered: true }
+    }
+}
+
+/// Evaluate one raw request line into a single-line JSON response.
+/// `None` marks an oversized (truncated) line. Returns the response
+/// line and whether it is an error line.
+fn respond(session: &Session, payload: Option<&[u8]>) -> (String, bool) {
+    let Some(buf) = payload else {
+        return (
+            format!("{{\"error\": \"request line exceeds {MAX_REQUEST_LINE_BYTES} bytes\"}}"),
+            true,
+        );
+    };
+    // lossy: a non-UTF-8 line must yield an error LINE, not kill the
+    // stream (the replacement characters fail the JSON parse below)
+    let line = String::from_utf8_lossy(buf);
+    let trimmed = line.trim();
+    // parse ONCE; keep the parsed value so the error path can echo the
+    // request id without a second full parse of the line
+    let (id, result) = match jsonio::parse(trimmed).context("parsing analysis request") {
+        Ok(v) => {
+            let id = v.get("id").and_then(|x| x.as_str().map(str::to_string));
+            let r = AnalysisRequest::from_json_value(&v).and_then(|req| session.evaluate(&req));
+            (id, r)
+        }
+        Err(e) => (None, Err(e)),
+    };
+    match result {
+        Ok(report) => (report.to_json(), false),
+        Err(e) => {
+            let mut s = String::from("{");
+            if let Some(id) = id {
+                s.push_str("\"id\": ");
+                s.push_str(&json_str(&id));
+                s.push_str(", ");
+            }
+            s.push_str("\"error\": ");
+            s.push_str(&json_str(&format!("{e:#}")));
+            s.push('}');
+            (s, true)
+        }
+    }
+}
+
+/// The `serve` loop with default options (serial, ordered) — see
+/// [`serve_with`] for the full contract and docs/SERVE.md for the wire
+/// protocol.
+pub fn serve(input: &mut dyn BufRead, output: &mut (dyn Write + Send)) -> Result<ServeSummary> {
+    serve_with(input, output, &ServeOptions::default())
+}
+
+/// The `serve` loop, I/O-parameterized so tests can drive it in-process:
+/// read one JSON [`AnalysisRequest`] per input line, stream one JSON
+/// [`crate::session::AnalysisReport`] (or `{"error": ...}`) per output
+/// line. Blank lines and `#` comments are skipped; a malformed or failing
+/// request produces an error line (echoing its `id` when present) without
+/// ending the stream. All requests share one [`Session`], so repeated
+/// (machine, kernel) pairs hit the cache — the per-request `session`
+/// counters in each response show it. The wire protocol is documented
+/// end to end in docs/SERVE.md.
+///
+/// With `opts.threads > 1` requests are evaluated by a worker pool over
+/// the shared session (its stage caches sit behind sharded locks): a
+/// reader frames and numbers request lines into a *bounded* in-flight
+/// queue, workers evaluate them in parallel, and a writer emits
+/// responses — in request order by default, or as completed when
+/// `opts.ordered` is false (`--unordered`). Either way every request
+/// produces exactly one response line carrying its `id`.
+///
+/// Caching caveat: machine models are cached by *key* (tag or path) for
+/// the lifetime of the serve process, while kernel `path` specs are
+/// re-read per request (parsing is content-keyed). Editing a machine
+/// YAML under a running server therefore has no effect until restart.
+/// Resource bounds: request lines are capped (oversized lines become
+/// error lines), the session's stage caches are size-bounded, and the
+/// in-flight queue is bounded, so a long-running server's memory stays
+/// flat under distinct-request traffic.
+pub fn serve_with(
+    input: &mut dyn BufRead,
+    output: &mut (dyn Write + Send),
+    opts: &ServeOptions,
+) -> Result<ServeSummary> {
+    if opts.threads > 1 {
+        serve_parallel(input, output, opts)
+    } else {
+        serve_serial(input, output)
+    }
+}
+
+/// Single-threaded serve loop: read, evaluate, respond, flush.
+fn serve_serial(
+    input: &mut dyn BufRead,
+    output: &mut (dyn Write + Send),
+) -> Result<ServeSummary> {
     let session = Session::new();
     let mut summary = ServeSummary::default();
     let mut buf = Vec::new();
@@ -623,51 +753,22 @@ pub fn serve(input: &mut dyn BufRead, output: &mut dyn Write) -> Result<ServeSum
         if consumed == 0 {
             break;
         }
-        if truncated {
-            summary.requests += 1;
-            summary.errors += 1;
-            writeln!(
-                output,
-                "{{\"error\": \"request line exceeds {MAX_REQUEST_LINE_BYTES} bytes\"}}"
-            )?;
-            output.flush()?;
-            continue;
-        }
-        // lossy: a non-UTF-8 line must yield an error LINE, not kill the
-        // stream (the replacement characters fail the JSON parse below)
-        let line = String::from_utf8_lossy(&buf);
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
-            continue;
-        }
-        summary.requests += 1;
-        // parse ONCE; keep the parsed value so the error path can echo
-        // the request id without a second full parse of the line
-        let (id, result) = match jsonio::parse(trimmed).context("parsing analysis request") {
-            Ok(v) => {
-                let id = v.get("id").and_then(|x| x.as_str().map(str::to_string));
-                let r = AnalysisRequest::from_json_value(&v)
-                    .and_then(|req| session.evaluate(&req));
-                (id, r)
+        let payload = if truncated {
+            None
+        } else {
+            let line = String::from_utf8_lossy(&buf);
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
             }
-            Err(e) => (None, Err(e)),
+            Some(buf.as_slice())
         };
-        match result {
-            Ok(report) => writeln!(output, "{}", report.to_json())?,
-            Err(e) => {
-                summary.errors += 1;
-                let mut s = String::from("{");
-                if let Some(id) = id {
-                    s.push_str("\"id\": ");
-                    s.push_str(&json_str(&id));
-                    s.push_str(", ");
-                }
-                s.push_str("\"error\": ");
-                s.push_str(&json_str(&format!("{e:#}")));
-                s.push('}');
-                writeln!(output, "{s}")?;
-            }
+        summary.requests += 1;
+        let (line, is_err) = respond(&session, payload);
+        if is_err {
+            summary.errors += 1;
         }
+        writeln!(output, "{line}")?;
         // stream: one response per request, immediately
         output.flush()?;
     }
@@ -675,20 +776,207 @@ pub fn serve(input: &mut dyn BufRead, output: &mut dyn Write) -> Result<ServeSum
     Ok(summary)
 }
 
+/// The writer stage of the parallel serve pipeline: drain completed
+/// responses, count error lines, and emit them — immediately when
+/// unordered, or reassembled by sequence number when ordered. After each
+/// ordered write the shared `written` watermark advances (under its
+/// mutex, with a condvar notify), which is what lets the reader bound
+/// the reorder buffer.
+fn writer_loop(
+    res_rx: &std::sync::mpsc::Receiver<(u64, String, bool)>,
+    output: &mut (dyn Write + Send),
+    ordered: bool,
+    written: &(Mutex<u64>, std::sync::Condvar),
+) -> std::io::Result<u64> {
+    let mut errors = 0u64;
+    let mut next = 0u64;
+    let mut pending: BTreeMap<u64, String> = BTreeMap::new();
+    for (seq, line, is_err) in res_rx.iter() {
+        if is_err {
+            errors += 1;
+        }
+        if !ordered {
+            writeln!(output, "{line}")?;
+            output.flush()?;
+            continue;
+        }
+        // ordered delivery: hold completed responses until every earlier
+        // sequence number has been written. The reader throttles itself
+        // against the `written` watermark, so this buffer stays bounded
+        // even when one slow request holds the head of the line.
+        pending.insert(seq, line);
+        let mut wrote = false;
+        while let Some(line) = pending.remove(&next) {
+            writeln!(output, "{line}")?;
+            output.flush()?;
+            next += 1;
+            wrote = true;
+        }
+        if wrote {
+            *written.0.lock().unwrap() = next;
+            written.1.notify_all();
+        }
+    }
+    Ok(errors)
+}
+
+/// Parallel serve pipeline: reader (this thread) → bounded job queue →
+/// worker pool over one shared session → writer thread (ordered
+/// reassembly or immediate streaming).
+fn serve_parallel(
+    input: &mut dyn BufRead,
+    output: &mut (dyn Write + Send),
+    opts: &ServeOptions,
+) -> Result<ServeSummary> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{mpsc, Condvar};
+
+    let session = Session::new();
+    let threads = opts.threads;
+    let ordered = opts.ordered;
+    // bounded in-flight queue: the reader blocks once workers fall this
+    // far behind, so a fast client cannot queue unbounded memory
+    let cap = threads * 4;
+    let (job_tx, job_rx) = mpsc::sync_channel::<(u64, Option<Vec<u8>>)>(cap);
+    let job_rx = Mutex::new(job_rx);
+    let (res_tx, res_rx) = mpsc::channel::<(u64, String, bool)>();
+    // ordered mode: count of responses written so far (u64::MAX once the
+    // writer exits, so nobody waits on progress that cannot come)
+    let written = (Mutex::new(0u64), Condvar::new());
+    // set when the writer hit an I/O error: the reader stops consuming
+    // input instead of silently draining an unbounded stream to EOF
+    let writer_dead = AtomicBool::new(false);
+
+    let mut requests = 0u64;
+    let mut read_error: Option<std::io::Error> = None;
+
+    let writer_outcome = std::thread::scope(|scope| {
+        // writer: owns the output for the whole run
+        let writer = {
+            let written = &written;
+            let writer_dead = &writer_dead;
+            scope.spawn(move || {
+                let res = writer_loop(&res_rx, output, ordered, written);
+                if res.is_err() {
+                    writer_dead.store(true, Ordering::Relaxed);
+                }
+                // wake the reader whatever happened: a finished writer
+                // must not leave it waiting on the watermark
+                *written.0.lock().unwrap() = u64::MAX;
+                written.1.notify_all();
+                res
+            })
+        };
+
+        // workers: evaluate requests through the shared session
+        for _ in 0..threads {
+            let res_tx = res_tx.clone();
+            let job_rx = &job_rx;
+            let session = &session;
+            scope.spawn(move || {
+                let mut writer_gone = false;
+                loop {
+                    let job = job_rx.lock().unwrap().recv();
+                    let Ok((seq, payload)) = job else { break };
+                    if writer_gone {
+                        // writer hit an I/O error: keep draining the job
+                        // queue (so the reader never blocks on a full
+                        // channel) without evaluating anything
+                        continue;
+                    }
+                    // a panicking evaluation must cost one error line,
+                    // not a worker — a shrinking pool would eventually
+                    // leave the reader blocked on a full job queue with
+                    // nobody draining it
+                    let (line, is_err) =
+                        catch_unwind(AssertUnwindSafe(|| respond(session, payload.as_deref())))
+                            .unwrap_or_else(|_| {
+                                (
+                                    "{\"error\": \"internal panic evaluating request\"}"
+                                        .to_string(),
+                                    true,
+                                )
+                            });
+                    if res_tx.send((seq, line, is_err)).is_err() {
+                        writer_gone = true;
+                    }
+                }
+            });
+        }
+        drop(res_tx);
+
+        // reader (this thread): frame lines, skip blanks and comments,
+        // assign sequence numbers
+        let max_ahead = (cap + threads) as u64;
+        let mut seq = 0u64;
+        let mut buf = Vec::new();
+        loop {
+            if writer_dead.load(Ordering::Relaxed) {
+                break; // responses can no longer be delivered
+            }
+            buf.clear();
+            match read_line_capped(input, &mut buf, MAX_REQUEST_LINE_BYTES) {
+                Ok((0, _)) => break,
+                Ok((_, truncated)) => {
+                    let payload = if truncated {
+                        None
+                    } else {
+                        let line = String::from_utf8_lossy(&buf);
+                        let trimmed = line.trim();
+                        if trimmed.is_empty() || trimmed.starts_with('#') {
+                            continue;
+                        }
+                        Some(buf.clone())
+                    };
+                    requests += 1;
+                    if ordered {
+                        // bound the writer's reorder buffer: run at most
+                        // max_ahead requests past the last response
+                        // written, however fast the input arrives
+                        let mut w = written.0.lock().unwrap();
+                        while *w != u64::MAX && seq >= *w + max_ahead {
+                            w = written.1.wait(w).unwrap();
+                        }
+                    }
+                    if job_tx.send((seq, payload)).is_err() {
+                        break; // every worker exited; nothing can respond
+                    }
+                    seq += 1;
+                }
+                Err(e) => {
+                    read_error = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(job_tx);
+        writer.join().expect("serve writer panicked")
+    });
+
+    let errors = writer_outcome?;
+    if let Some(e) = read_error {
+        return Err(anyhow::Error::from(e).context("reading request stream"));
+    }
+    Ok(ServeSummary { requests, errors, stats: session.stats() })
+}
+
 /// Run the `serve` subcommand against stdin/stdout (or `--input FILE`).
 /// Responses stream directly to stdout; the returned string is empty so
 /// the binary adds nothing after the JSON lines.
 pub fn run_serve(argv: &[String]) -> Result<String> {
     let args = parse_serve_args(argv)?;
-    let stdout = std::io::stdout();
-    let mut output = stdout.lock();
+    let opts = ServeOptions { threads: args.threads, ordered: !args.unordered };
+    let mut output = std::io::stdout();
     let summary = match &args.input {
         Some(path) => {
             let file = std::fs::File::open(path)
                 .with_context(|| format!("opening request file {path}"))?;
-            serve(&mut std::io::BufReader::new(file), &mut output)?
+            serve_with(&mut std::io::BufReader::new(file), &mut output, &opts)?
         }
-        None => serve(&mut std::io::stdin().lock(), &mut output)?,
+        None => {
+            serve_with(&mut std::io::BufReader::new(std::io::stdin()), &mut output, &opts)?
+        }
     };
     if args.verbose {
         eprintln!("{summary}");
@@ -749,6 +1037,14 @@ mod tests {
     fn roofline_iaca_alias() {
         let a = parse_args(&argv("-p RooflineIACA k.c")).unwrap();
         assert_eq!(a.mode, Mode::Model(ModelKind::RooflinePort));
+    }
+
+    #[test]
+    fn validate_mode_runs_end_to_end() {
+        let out = run(&argv("-p Validate -m SNB kernels/triad.c -D N 400000")).unwrap();
+        assert!(out.contains("ECM model: {"), "{out}");
+        assert!(out.contains("model validation (virtual testbed vs analytic ECM)"), "{out}");
+        assert!(out.contains("model error:"), "{out}");
     }
 
     #[test]
@@ -910,6 +1206,9 @@ mod tests {
         assert_eq!(a.predictor, CachePredictorKind::LayerConditions);
         assert_eq!(a.format, SweepFormat::Json);
         assert_eq!(a.threads, Some(3));
+        assert!(!a.validate);
+        let a = parse_sweep_args(&argv("k.c -D N 1 --validate")).unwrap();
+        assert!(a.validate);
     }
 
     #[test]
@@ -925,8 +1224,15 @@ mod tests {
         let a = parse_serve_args(&argv("--input reqs.jsonl -v")).unwrap();
         assert_eq!(a.input.as_deref(), Some("reqs.jsonl"));
         assert!(a.verbose);
+        assert_eq!(a.threads, 1, "serial by default");
+        assert!(!a.unordered, "ordered by default");
         let a = parse_serve_args(&argv("reqs.jsonl")).unwrap();
         assert_eq!(a.input.as_deref(), Some("reqs.jsonl"));
+        let a = parse_serve_args(&argv("--threads 4 --unordered")).unwrap();
+        assert_eq!(a.threads, 4);
+        assert!(a.unordered);
+        assert!(parse_serve_args(&argv("--threads 0")).is_err());
+        assert!(parse_serve_args(&argv("--threads")).is_err());
         assert!(parse_serve_args(&argv("--bogus")).is_err());
         assert!(parse_serve_args(&argv("a.jsonl b.jsonl")).is_err());
     }

@@ -4,7 +4,10 @@
 //! format is hand-rolled on this module: a strict RFC 8259 subset parser
 //! (objects, arrays, strings with escapes, numbers, booleans, null — no
 //! comments, no trailing commas) plus string/number writers shared with
-//! the report renderers.
+//! the report renderers. Every report section — including the
+//! `validation` section of [`crate::session::ModelKind::Validate`]
+//! responses — round-trips through here, which is what lets the serve
+//! wire format (docs/SERVE.md) stay lossless without serde.
 //!
 //! Numbers are kept as their source text ([`JsonValue::Num`] stores the
 //! literal): integers round-trip exactly at any magnitude, and floats

@@ -33,19 +33,25 @@
 //!        ▼              ▼                 ▼                  ▼
 //!   cli:: single    cli:: serve      sweep::SweepEngine   report::
 //!   runs (`-p ECM`, (JSON-lines      (parallel map of     pure text
-//!   `--format       batch service    requests through     renderers of
-//!   json`)          over one warm    one shared session)  AnalysisReport
-//!                   session)
+//!   `--format       service; worker  requests through     renderers of
+//!   json`)          pool with        one shared session;  AnalysisReport
+//!                   `--threads K`,   `--validate` rows)
+//!                   ordered or
+//!                   `--unordered`)
 //!
-//!   validation:  sim:: trace-driven virtual testbed (SNB/HSW),
-//!                bench_mode:: native host loops, runtime:: PJRT
-//!                artifacts (JAX/Pallas AOT; `pjrt` feature)
+//!   validation:  `-p Validate` runs sim:: (trace-driven SNB/HSW
+//!                testbed) next to the analytic ECM and reports the
+//!                relative model error; bench_mode:: native host loops,
+//!                runtime:: PJRT artifacts (JAX/Pallas AOT; `pjrt`
+//!                feature)
 //! ```
 //!
 //! Entry points: [`session::Session`] for programmatic use,
 //! [`sweep::SweepEngine`] for batched grids, [`cli`] for the command-line
 //! front ends (`kerncraft`, `kerncraft sweep`, `kerncraft serve`), and
-//! the individual stage modules for composing custom pipelines.
+//! the individual stage modules for composing custom pipelines. The
+//! design rationale (measurement substitution, session architecture)
+//! lives in DESIGN.md; the serve wire protocol in docs/SERVE.md.
 
 pub mod bench_mode;
 pub mod cache;

@@ -6,9 +6,9 @@
 //! Sandy Bridge-EP) and `machines/hsw.yml` (Xeon E5-2695 v3, Haswell-EP in
 //! Cluster-on-Die mode) — reproducing the paper's Table 1 testbed. The
 //! measured-bandwidth sections hold values consistent with the published
-//! ECM reference results (see DESIGN.md §1 on substitutions: we cannot run
-//! likwid-bench on the authors' Xeons, so the shipped numbers are
-//! calibrated to the publicly documented measurements).
+//! ECM reference results (DESIGN.md §1 documents the substitution: we
+//! cannot run likwid-bench on the authors' Xeons, so the shipped numbers
+//! are calibrated to the publicly documented measurements).
 
 pub mod topology;
 pub mod yaml;

@@ -3,6 +3,12 @@
 //! port-model in-core prediction or the arithmetic-peak in-core
 //! prediction), multicore scaling, and the paper's published reference
 //! values for Table 5.
+//!
+//! The models here are *analytic*; the paper stresses they are only
+//! trustworthy once validated against measurement. The
+//! [`crate::session::ModelKind::Validate`] request mode closes that loop
+//! by running the trace-driven testbed ([`crate::sim`]) next to the ECM
+//! assembly built from this module (see DESIGN.md §1).
 
 pub mod ecm;
 pub mod reference;

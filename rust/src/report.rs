@@ -156,6 +156,41 @@ pub fn incore_report(i: &IncoreReport) -> String {
     s
 }
 
+/// Render the `validation` section ([`crate::session::ModelKind::Validate`]):
+/// the virtual testbed's simulated cy/CL next to the analytic ECM
+/// prediction, the relative model error, and the per-level cache
+/// statistics of the simulated run. Empty when the report has no
+/// validation section.
+///
+/// The numeric fields use fixed one-decimal formatting (not [`fmt_cy`])
+/// so the golden test normalization stays shape-stable.
+pub fn validation_report(r: &AnalysisReport) -> String {
+    let Some(v) = &r.validation else {
+        return String::new();
+    };
+    let mut s = String::new();
+    s.push_str("model validation (virtual testbed vs analytic ECM):\n");
+    s.push_str(&format!(
+        "  simulated: {:.1} cy/CL over {} iterations{}\n",
+        v.sim_cy_per_cl,
+        v.iterations,
+        if v.truncated { " (truncated steady state window)" } else { "" }
+    ));
+    s.push_str(&format!(
+        "  analytic:  {:.1} cy/CL (ECM memory level prediction)\n",
+        v.analytic_cy_per_cl
+    ));
+    s.push_str(&format!("  model error: {:+.1}% of simulated\n", v.model_error_pct));
+    s.push_str("  level | hits       | misses     | writebacks\n");
+    for l in &v.levels {
+        s.push_str(&format!(
+            "  {:<5} | {:>10} | {:>10} | {:>10}\n",
+            l.level, l.hits, l.misses, l.writebacks
+        ));
+    }
+    s
+}
+
 /// Render the model sections of a report the way the CLI mode for
 /// `report.model` would (the text twin of [`AnalysisReport::to_json`]).
 pub fn render_report(r: &AnalysisReport, verbose: bool) -> String {
@@ -175,6 +210,7 @@ pub fn render_report(r: &AnalysisReport, verbose: bool) -> String {
         }
     }
     s.push_str(&roofline_report(r));
+    s.push_str(&validation_report(r));
     s
 }
 
@@ -302,7 +338,9 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
         s.push_str(",T_");
         s.push_str(l);
     }
-    s.push_str(",T_ECM_Mem,sat_cores,mem_B_per_unit,lc_fast_levels,walk_levels,lc_bands\n");
+    s.push_str(
+        ",T_ECM_Mem,sat_cores,mem_B_per_unit,lc_fast_levels,walk_levels,sim_cy_per_cl,model_error_pct,lc_bands\n",
+    );
 
     for r in rows {
         s.push_str(&format!(
@@ -331,12 +369,14 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
             r.saturation_cores.to_string()
         };
         s.push_str(&format!(
-            ",{},{},{},{},{},{}\n",
+            ",{},{},{},{},{},{},{},{}\n",
             fmt_cy(r.t_ecm_mem),
             sat,
             r.memory_bytes_per_unit,
             r.lc_fast_levels,
             r.walk_levels,
+            r.sim_cy_per_cl.map(|v| format!("{v:.3}")).unwrap_or_default(),
+            r.model_error_pct.map(|v| format!("{v:.2}")).unwrap_or_default(),
             r.lc_breakpoints.join(" ")
         ));
     }
@@ -384,12 +424,14 @@ pub fn sweep_json(rows: &[SweepRow], stats: &MemoStats) -> String {
             ));
         }
         s.push_str(&format!(
-            "], \"t_ecm_mem\": {}, \"saturation_cores\": {}, \"memory_bytes_per_unit\": {}, \"lc_fast_levels\": {}, \"walk_levels\": {}",
+            "], \"t_ecm_mem\": {}, \"saturation_cores\": {}, \"memory_bytes_per_unit\": {}, \"lc_fast_levels\": {}, \"walk_levels\": {}, \"sim_cy_per_cl\": {}, \"model_error_pct\": {}",
             json_num(r.t_ecm_mem),
             if r.saturation_cores == u32::MAX { "null".to_string() } else { r.saturation_cores.to_string() },
             json_num(r.memory_bytes_per_unit),
             r.lc_fast_levels,
-            r.walk_levels
+            r.walk_levels,
+            r.sim_cy_per_cl.map(json_num).unwrap_or_else(|| "null".to_string()),
+            r.model_error_pct.map(json_num).unwrap_or_else(|| "null".to_string())
         ));
         s.push_str(", \"lc_bands\": [");
         for (bx, b) in r.lc_breakpoints.iter().enumerate() {

@@ -14,7 +14,14 @@
 //! * kernel source → [`Program`] (parse),
 //! * (source, constants) → [`KernelAnalysis`] (static analysis),
 //! * (source, constants, machine, codegen) → [`PortModel`] (in-core),
-//! * per request: cache prediction, ECM / Roofline assembly, scaling.
+//! * per request: cache prediction, ECM / Roofline assembly, scaling,
+//!   and (for [`ModelKind::Validate`]) a virtual-testbed run compared
+//!   against the analytic prediction.
+//!
+//! The caches sit behind sharded locks and the memo counters are atomic,
+//! so one session serves many threads at once — the sweep engine's worker
+//! pool and `kerncraft serve --threads K` both lean on this. The overall
+//! architecture is mapped in DESIGN.md §2.
 //!
 //! Memoization is observable: [`MemoStats`] counts hits and misses both
 //! per session ([`Session::stats`]) and per request (the `session` field
@@ -115,6 +122,11 @@ pub enum ModelKind {
     Roofline,
     /// Roofline with the port-model in-core bound (paper RooflineIACA).
     RooflinePort,
+    /// Full ECM plus a virtual-testbed run (see [`crate::sim`]): the
+    /// report gains a `validation` section comparing the simulated
+    /// "measurement" against the analytic prediction — the paper's
+    /// model-vs-benchmark loop (Table 5, Fig. 4) as one request.
+    Validate,
 }
 
 impl ModelKind {
@@ -126,6 +138,7 @@ impl ModelKind {
             "ECMCPU" => ModelKind::EcmCpu,
             "Roofline" => ModelKind::Roofline,
             "RooflinePort" | "RooflineIACA" => ModelKind::RooflinePort,
+            "Validate" => ModelKind::Validate,
             _ => return None,
         })
     }
@@ -138,11 +151,15 @@ impl ModelKind {
             ModelKind::EcmCpu => "ECMCPU",
             ModelKind::Roofline => "Roofline",
             ModelKind::RooflinePort => "RooflinePort",
+            ModelKind::Validate => "Validate",
         }
     }
 
     fn needs_incore(&self) -> bool {
-        matches!(self, ModelKind::Ecm | ModelKind::EcmCpu | ModelKind::RooflinePort)
+        matches!(
+            self,
+            ModelKind::Ecm | ModelKind::EcmCpu | ModelKind::RooflinePort | ModelKind::Validate
+        )
     }
 
     fn needs_traffic(&self) -> bool {
@@ -547,6 +564,67 @@ impl RooflineReport {
     }
 }
 
+/// Per-cache-level statistics of a virtual-testbed run, as reported in
+/// the `validation` section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidationLevelReport {
+    pub level: String,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+/// Validation section of a report ([`ModelKind::Validate`]): the virtual
+/// testbed's simulated "measurement" next to the analytic ECM in-memory
+/// prediction, with the relative model error between them. This is the
+/// paper's model-vs-benchmark comparison (Table 5, Fig. 4) with the
+/// trace-driven simulator standing in for the SNB/HSW hardware (see
+/// DESIGN.md §1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValidationReport {
+    /// Simulated cycles per cache line of work (the "measurement").
+    pub sim_cy_per_cl: f64,
+    /// Analytic ECM in-memory prediction (cy per CL).
+    pub analytic_cy_per_cl: f64,
+    /// Relative model error in percent, with the simulation as ground
+    /// truth: `(analytic − simulated) / simulated · 100`.
+    pub model_error_pct: f64,
+    /// Inner iterations the testbed executed.
+    pub iterations: u64,
+    /// Whether the iteration space was truncated for tractability (the
+    /// reported cy/CL is then a steady-state mean over the window).
+    pub truncated: bool,
+    /// Per-level hit/miss/writeback counts, inner to outer.
+    pub levels: Vec<ValidationLevelReport>,
+}
+
+impl ValidationReport {
+    pub(crate) fn build(sim: &crate::sim::SimResult, analytic_cy_per_cl: f64) -> ValidationReport {
+        let model_error_pct = if sim.cy_per_cl > 0.0 {
+            (analytic_cy_per_cl - sim.cy_per_cl) / sim.cy_per_cl * 100.0
+        } else {
+            0.0
+        };
+        ValidationReport {
+            sim_cy_per_cl: sim.cy_per_cl,
+            analytic_cy_per_cl,
+            model_error_pct,
+            iterations: sim.iterations,
+            truncated: sim.truncated,
+            levels: sim
+                .levels
+                .iter()
+                .map(|l| ValidationLevelReport {
+                    level: l.level.clone(),
+                    hits: l.hits,
+                    misses: l.misses,
+                    writebacks: l.writebacks,
+                })
+                .collect(),
+        }
+    }
+}
+
 /// The complete, serializable result of one [`AnalysisRequest`]: every
 /// figure the text reports render, as structured data. Sections absent
 /// from the requested model are `None`.
@@ -576,6 +654,7 @@ pub struct AnalysisReport {
     pub ecm: Option<EcmReport>,
     pub scaling: Option<ScalingReport>,
     pub roofline: Option<RooflineReport>,
+    pub validation: Option<ValidationReport>,
     /// Memo hits/misses this request saw in the session caches.
     pub session: MemoStats,
 }
@@ -608,52 +687,103 @@ struct Counters {
 }
 
 /// Per-stage cache bound: a long-running session (`kerncraft serve`)
-/// must not grow without limit under distinct-request traffic. When a
-/// stage cache reaches this many entries it is cleared wholesale — the
-/// stages are pure, so rebuilds are exact and only the hit rate suffers.
+/// must not grow without limit under distinct-request traffic. The bound
+/// is enforced per shard ([`MAX_SHARD_ENTRIES`]); a full shard is cleared
+/// wholesale — the stages are pure, so rebuilds are exact and only the
+/// hit rate suffers.
 const MAX_CACHE_ENTRIES: usize = 4096;
 
+/// Lock shards per stage cache: concurrent `serve` / sweep workers hash
+/// to different shards, so memo lookups rarely contend on one mutex.
+const CACHE_SHARDS: usize = 8;
+
+/// Entry bound per shard (the per-stage total stays [`MAX_CACHE_ENTRIES`]).
+const MAX_SHARD_ENTRIES: usize = MAX_CACHE_ENTRIES / CACHE_SHARDS;
+
+/// A string-keyed map behind sharded locks: the backing store of every
+/// stage cache. Keys are hashed to one of [`CACHE_SHARDS`] independent
+/// mutexes, so parallel front ends (`serve --threads`, the sweep engine)
+/// mostly take disjoint locks. Each shard is bounded by
+/// [`MAX_SHARD_ENTRIES`] and cleared wholesale when full.
+struct ShardedMap<V> {
+    shards: Vec<Mutex<HashMap<String, V>>>,
+}
+
+impl<V> Default for ShardedMap<V> {
+    fn default() -> Self {
+        ShardedMap {
+            shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+}
+
+impl<V: Clone> ShardedMap<V> {
+    fn shard(&self, key: &str) -> &Mutex<HashMap<String, V>> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % CACHE_SHARDS]
+    }
+
+    fn get(&self, key: &str) -> Option<V> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Get-or-insert: on a race the first insert wins (stage products are
+    /// pure, so racing values are equal). A full shard is cleared before
+    /// inserting a new key.
+    fn get_or_insert(&self, key: &str, value: V) -> V {
+        let mut guard = self.shard(key).lock().unwrap();
+        if guard.len() >= MAX_SHARD_ENTRIES && !guard.contains_key(key) {
+            // bound the shard (outstanding Arcs stay alive; rebuilds of
+            // cleared entries are bit-identical)
+            guard.clear();
+        }
+        guard.entry(key.to_string()).or_insert(value).clone()
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
 /// The analysis session: owns the cross-request caches and evaluates
-/// typed requests. Cheap to share across threads (`&self` API, internal
-/// locking) — [`crate::sweep::SweepEngine`] maps a whole job grid through
-/// one session from its worker pool. Every stage cache is bounded by
-/// [`MAX_CACHE_ENTRIES`].
+/// typed requests. Cheap to share across threads (`&self` API, sharded
+/// internal locking, atomic memo counters) — [`crate::sweep::SweepEngine`]
+/// maps a whole job grid through one session from its worker pool, and
+/// `kerncraft serve --threads K` shares one session across its request
+/// workers. Every stage cache is bounded (see [`MAX_CACHE_ENTRIES`]).
 #[derive(Default)]
 pub struct Session {
     /// Source-text interning: requests share kernels, so downstream memo
     /// keys carry a small id instead of the whole source string. Ids are
     /// allocated monotonically so clearing the intern table can never
     /// alias old downstream keys.
-    sources: Mutex<HashMap<String, usize>>,
+    sources: ShardedMap<usize>,
     next_source_id: std::sync::atomic::AtomicUsize,
-    machines: Mutex<HashMap<String, Arc<MachineModel>>>,
-    programs: Mutex<HashMap<String, Arc<Program>>>,
-    analyses: Mutex<HashMap<String, Arc<KernelAnalysis>>>,
-    incore: Mutex<HashMap<String, Arc<PortModel>>>,
+    machines: ShardedMap<Arc<MachineModel>>,
+    programs: ShardedMap<Arc<Program>>,
+    analyses: ShardedMap<Arc<KernelAnalysis>>,
+    incore: ShardedMap<Arc<PortModel>>,
     counters: Counters,
 }
 
-/// Memo lookup helper: double-checked get-or-insert through a mutexed
-/// map. The builder runs OUTSIDE the lock so concurrent requests don't
+/// Memo lookup helper: double-checked get-or-insert through a sharded
+/// map. The builder runs OUTSIDE any lock so concurrent requests don't
 /// serialize on each other's parse/analyze work; on a race the first
 /// insert wins (both values are equal — the stages are pure). Returns
 /// the product and whether it was a hit.
 fn memoize<T>(
-    map: &Mutex<HashMap<String, Arc<T>>>,
+    map: &ShardedMap<Arc<T>>,
     key: &str,
     build: impl FnOnce() -> Result<T>,
 ) -> Result<(Arc<T>, bool)> {
-    if let Some(v) = map.lock().unwrap().get(key) {
-        return Ok((v.clone(), true));
+    if let Some(v) = map.get(key) {
+        return Ok((v, true));
     }
     let built = Arc::new(build()?);
-    let mut guard = map.lock().unwrap();
-    if guard.len() >= MAX_CACHE_ENTRIES && !guard.contains_key(key) {
-        // bound the stage cache (outstanding Arcs stay alive; rebuilds
-        // of cleared entries are bit-identical)
-        guard.clear();
-    }
-    Ok((guard.entry(key.to_string()).or_insert(built).clone(), false))
+    Ok((map.get_or_insert(key, built), false))
 }
 
 fn consts_key(constants: &BTreeMap<String, i64>) -> String {
@@ -737,7 +867,7 @@ impl Session {
         };
 
         let (ecm, scaling) = match req.model {
-            ModelKind::Ecm => {
+            ModelKind::Ecm | ModelKind::Validate => {
                 let t = traffic.as_ref().unwrap();
                 let e = EcmModel::build(incore.as_ref().unwrap(), t, &machine)?;
                 let s = ScalingModel::build(&e, &machine);
@@ -763,6 +893,16 @@ impl Session {
             _ => None,
         };
 
+        // Validate: run the virtual testbed with the memoized in-core
+        // model and compare against the analytic in-memory prediction.
+        let validation = if req.model == ModelKind::Validate {
+            let pm = incore.as_deref().expect("Validate needs the in-core model");
+            let sim = crate::sim::VirtualTestbed::new(&machine).run_with_incore(&analysis, pm)?;
+            Some(ValidationReport::build(&sim, ecm.as_ref().unwrap().t_mem()))
+        } else {
+            None
+        };
+
         // --- assemble the report ---
         let unit_iterations = match (&traffic, &incore) {
             (Some(t), _) => t.unit_iterations,
@@ -770,7 +910,9 @@ impl Session {
             (None, None) => unreachable!("every model needs traffic or incore"),
         };
         let flops_per_unit = match req.model {
-            ModelKind::Ecm | ModelKind::EcmData => ecm.as_ref().unwrap().flops_per_cl,
+            ModelKind::Ecm | ModelKind::EcmData | ModelKind::Validate => {
+                ecm.as_ref().unwrap().flops_per_cl
+            }
             ModelKind::EcmCpu => incore.as_ref().unwrap().flops_per_cl,
             ModelKind::Roofline | ModelKind::RooflinePort => {
                 roofline.as_ref().unwrap().flops_per_cl
@@ -797,6 +939,7 @@ impl Session {
             ecm: ecm.as_ref().map(EcmReport::from_model),
             scaling: scaling.as_ref().map(ScalingReport::from_model),
             roofline: roofline.as_ref().map(RooflineReport::from_model),
+            validation,
             session: local,
         };
 
@@ -857,19 +1000,15 @@ impl Session {
     }
 
     fn intern_source(&self, source: &str) -> usize {
-        let mut guard = self.sources.lock().unwrap();
         // hit path: no allocation, no clone of the (possibly large) source
-        if let Some(&id) = guard.get(source) {
+        if let Some(id) = self.sources.get(source) {
             return id;
         }
-        if guard.len() >= MAX_CACHE_ENTRIES {
-            // ids are monotonic, so dropping old interns cannot alias the
-            // downstream program/analysis keys they minted
-            guard.clear();
-        }
+        // ids are monotonic, so dropping old interns (a full shard being
+        // cleared) cannot alias the downstream program/analysis keys they
+        // minted; on a race the first insert wins and both callers use it
         let id = self.next_source_id.fetch_add(1, Ordering::Relaxed);
-        guard.insert(source.to_string(), id);
-        id
+        self.sources.get_or_insert(source, id)
     }
 }
 
@@ -1087,7 +1226,9 @@ impl AnalysisRequest {
         if let Some(m) = v.get("model") {
             let name = m.as_str().ok_or_else(|| anyhow!("'model' must be a string"))?;
             req.model = ModelKind::parse(name).ok_or_else(|| {
-                anyhow!("unknown model '{name}' (ECM, ECMData, ECMCPU, Roofline, RooflinePort)")
+                anyhow!(
+                    "unknown model '{name}' (ECM, ECMData, ECMCPU, Roofline, RooflinePort, Validate)"
+                )
             })?;
         }
         if let Some(p) = v.get("predictor") {
@@ -1376,6 +1517,57 @@ impl RooflineReport {
     }
 }
 
+impl ValidationReport {
+    fn json(&self) -> String {
+        let mut s = format!(
+            "{{\"sim_cy_per_cl\": {}, \"analytic_cy_per_cl\": {}, \"model_error_pct\": {}, \"iterations\": {}, \"truncated\": {}, \"levels\": [",
+            json_num(self.sim_cy_per_cl),
+            json_num(self.analytic_cy_per_cl),
+            json_num(self.model_error_pct),
+            self.iterations,
+            self.truncated
+        );
+        for (ix, l) in self.levels.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"level\": {}, \"hits\": {}, \"misses\": {}, \"writebacks\": {}}}",
+                json_str(&l.level),
+                l.hits,
+                l.misses,
+                l.writebacks
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    fn from_json_value(v: &JsonValue) -> Result<ValidationReport> {
+        let mut levels = Vec::new();
+        for l in v
+            .get("levels")
+            .ok_or_else(|| anyhow!("validation missing 'levels'"))?
+            .items()
+        {
+            levels.push(ValidationLevelReport {
+                level: get_str(l, "level")?,
+                hits: get_u64(l, "hits")?,
+                misses: get_u64(l, "misses")?,
+                writebacks: get_u64(l, "writebacks")?,
+            });
+        }
+        Ok(ValidationReport {
+            sim_cy_per_cl: get_f64(v, "sim_cy_per_cl")?,
+            analytic_cy_per_cl: get_f64(v, "analytic_cy_per_cl")?,
+            model_error_pct: get_f64(v, "model_error_pct")?,
+            iterations: get_u64(v, "iterations")?,
+            truncated: get_bool(v, "truncated")?,
+            levels,
+        })
+    }
+}
+
 impl AnalysisReport {
     /// Serialize to a single-line JSON object (the `serve` wire format).
     /// Finite floats round-trip exactly; absent sections are omitted.
@@ -1427,6 +1619,10 @@ impl AnalysisReport {
             s.push_str(", \"roofline\": ");
             s.push_str(&r.json());
         }
+        if let Some(v) = &self.validation {
+            s.push_str(", \"validation\": ");
+            s.push_str(&v.json());
+        }
         s.push_str(", \"session\": ");
         s.push_str(&self.session.json_object());
         s.push('}');
@@ -1472,6 +1668,9 @@ impl AnalysisReport {
             scaling: section("scaling").map(ScalingReport::from_json_value).transpose()?,
             roofline: section("roofline")
                 .map(RooflineReport::from_json_value)
+                .transpose()?,
+            validation: section("validation")
+                .map(ValidationReport::from_json_value)
                 .transpose()?,
             session: v
                 .get("session")
@@ -1655,6 +1854,34 @@ mod tests {
     }
 
     #[test]
+    fn validate_mode_produces_validation_section() {
+        assert_eq!(ModelKind::parse("Validate"), Some(ModelKind::Validate));
+        let session = Session::new();
+        let req = AnalysisRequest::new(KernelSpec::source("triad", TRIAD), "SNB")
+            .with_constant("N", 400_000)
+            .with_model(ModelKind::Validate);
+        let r = session.evaluate(&req).unwrap();
+        // Validate carries the full ECM report plus the validation section
+        assert!(r.incore.is_some() && r.traffic.is_some());
+        assert!(r.ecm.is_some() && r.scaling.is_some());
+        let v = r.validation.as_ref().expect("validation section");
+        assert_eq!(v.analytic_cy_per_cl, r.ecm.as_ref().unwrap().t_mem);
+        assert!(v.sim_cy_per_cl > 0.0, "{v:?}");
+        assert!(v.iterations > 0);
+        assert_eq!(v.levels.len(), 3, "SNB has three cache levels: {:?}", v.levels);
+        // the documented error definition: (analytic − sim) / sim · 100
+        let expect = (v.analytic_cy_per_cl - v.sim_cy_per_cl) / v.sim_cy_per_cl * 100.0;
+        assert!((v.model_error_pct - expect).abs() < 1e-9, "{v:?}");
+        // streaming triad: testbed and analytic model agree closely
+        assert!(v.model_error_pct.abs() < 20.0, "{v:?}");
+        // JSON round trip preserves the section bit for bit
+        let json = r.to_json();
+        let back = AnalysisReport::from_json(&json).unwrap();
+        assert_eq!(r, back, "{json}");
+        assert!(!json.contains('\n'), "{json}");
+    }
+
+    #[test]
     fn named_and_path_kernels_resolve() {
         let session = Session::new();
         let named = AnalysisRequest::new(KernelSpec::named("triad"), "SNB")
@@ -1700,7 +1927,7 @@ mod tests {
             let id = session.intern_source(&format!("kernel {i}"));
             assert!(seen.insert(id), "source id {id} reused");
         }
-        assert!(session.sources.lock().unwrap().len() <= MAX_CACHE_ENTRIES);
+        assert!(session.sources.len() <= MAX_CACHE_ENTRIES);
         // re-interning a live entry is a stable hit
         let a = session.intern_source("stable");
         let b = session.intern_source("stable");

@@ -1,5 +1,12 @@
 //! Trace-driven virtual testbed — the stand-in for running the kernel on
-//! the paper's Sandy Bridge / Haswell machines (see DESIGN.md §1).
+//! the paper's Sandy Bridge / Haswell machines (DESIGN.md §1 documents
+//! the measurement-substitution strategy and how the knobs below were
+//! calibrated against the paper's Tables 1 and 5).
+//!
+//! Front doors: `-p Benchmark --bench-path virtual` measures alone;
+//! `-p Validate` ([`crate::session::ModelKind::Validate`]) runs the
+//! testbed next to the analytic ECM prediction and reports both plus the
+//! relative model error — the paper's model-vs-measurement loop.
 //!
 //! Where the analytic predictor (`cache::CachePredictor`) reasons about a
 //! steady-state unit of work, this module *executes* the kernel's memory

@@ -43,11 +43,15 @@ pub struct SweepJob {
     pub constants: BTreeMap<String, i64>,
     /// Cache predictor back end for this point.
     pub predictor: CachePredictorKind,
+    /// Model evaluated per point: [`ModelKind::Ecm`] (the default sweep
+    /// contract) or [`ModelKind::Validate`] to also run the virtual
+    /// testbed and carry the simulated-vs-analytic comparison in the row.
+    pub model: ModelKind,
 }
 
 impl SweepJob {
-    /// The typed session request this point maps to (full ECM model,
-    /// machine-default codegen — the sweep contract).
+    /// The typed session request this point maps to (ECM or Validate
+    /// model, machine-default codegen — the sweep contract).
     pub fn request(&self) -> AnalysisRequest {
         AnalysisRequest {
             id: None,
@@ -58,7 +62,7 @@ impl SweepJob {
             constants: self.constants.clone(),
             machine: self.machine.clone(),
             cores: self.cores,
-            model: ModelKind::Ecm,
+            model: self.model,
             predictor: self.predictor,
             codegen: CodegenSelection::MachineDefault,
             unit: Unit::CyPerCl,
@@ -94,6 +98,10 @@ pub struct SweepRow {
     /// holds, e.g. `"j@L2"` (`"j@MEM"` when none does) — the Fig. 3
     /// breakpoint bands.
     pub lc_breakpoints: Vec<String>,
+    /// Simulated cy/CL from the virtual testbed (Validate points only).
+    pub sim_cy_per_cl: Option<f64>,
+    /// Relative model error % vs the simulation (Validate points only).
+    pub model_error_pct: Option<f64>,
 }
 
 /// Result of an engine run.
@@ -210,6 +218,8 @@ fn row_from_report(job: &SweepJob, r: &AnalysisReport) -> SweepRow {
         lc_fast_levels: traffic.lc_fast_levels,
         walk_levels: traffic.walk_levels,
         lc_breakpoints: traffic.lc_breakpoints.clone(),
+        sim_cy_per_cl: r.validation.as_ref().map(|v| v.sim_cy_per_cl),
+        model_error_pct: r.validation.as_ref().map(|v| v.model_error_pct),
     }
 }
 
@@ -316,7 +326,10 @@ pub fn expand_constants(axes: &[(String, Vec<i64>)]) -> Vec<BTreeMap<String, i64
 }
 
 /// Build the job list for a full sweep: every machine × core count ×
-/// constants-grid point of one kernel source.
+/// constants-grid point of one kernel source. Jobs default to the ECM
+/// model; set [`SweepJob::model`] to [`ModelKind::Validate`] per job (or
+/// pass `--validate` to the CLI subcommand) for simulated-vs-analytic
+/// rows.
 pub fn build_jobs(
     label: &str,
     source: Arc<str>,
@@ -337,6 +350,7 @@ pub fn build_jobs(
                     cores: c,
                     constants: b.clone(),
                     predictor,
+                    model: ModelKind::Ecm,
                 });
             }
         }
@@ -473,11 +487,28 @@ mod tests {
             cores: 1,
             constants: BTreeMap::new(), // N unbound
             predictor: CachePredictorKind::Auto,
+            model: ModelKind::Ecm,
         }];
         let err = SweepEngine::serial().run(&jobs).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("sweep point triad"), "{msg}");
         assert!(msg.contains("unbound constant"), "{msg}");
+    }
+
+    #[test]
+    fn validate_jobs_carry_sim_columns() {
+        let mut jobs = triad_jobs(&[262144], CachePredictorKind::Auto);
+        jobs.extend(triad_jobs(&[262144], CachePredictorKind::Auto));
+        jobs[1].model = ModelKind::Validate;
+        let out = SweepEngine::serial().run(&jobs).unwrap();
+        // the plain ECM point has no simulation columns
+        assert_eq!(out.rows[0].sim_cy_per_cl, None);
+        assert_eq!(out.rows[0].model_error_pct, None);
+        // the Validate point carries both, and the analytic figures agree
+        let sim = out.rows[1].sim_cy_per_cl.expect("sim column");
+        assert!(sim > 0.0);
+        assert!(out.rows[1].model_error_pct.is_some());
+        assert_eq!(out.rows[0].t_ecm_mem, out.rows[1].t_ecm_mem);
     }
 
     #[test]
@@ -497,6 +528,7 @@ mod tests {
                     .into_iter()
                     .collect(),
                 predictor: CachePredictorKind::Auto,
+                model: ModelKind::Ecm,
             },
             SweepJob {
                 label: "2d-5pt".into(),
@@ -507,6 +539,7 @@ mod tests {
                     .into_iter()
                     .collect(),
                 predictor: CachePredictorKind::Auto,
+                model: ModelKind::Ecm,
             },
         ];
         let out = SweepEngine::new().run(&jobs).unwrap();

@@ -139,6 +139,73 @@ fn unit_spellings_are_case_insensitive_and_errors_list_them() {
     assert!(msg.contains("cy/CL") && msg.contains("It/s") && msg.contains("FLOP/s"), "{msg}");
 }
 
+/// Golden-test normalization: numeric text (digits, sign, decimal point)
+/// collapses to a single `#`, runs of spaces to a single space. The
+/// fixture pins the report *shape* exactly while the simulated figures —
+/// deterministic but not hand-derivable — are pinned by the tolerance
+/// asserts below.
+fn normalize_numbers(s: &str) -> String {
+    let mut out = String::new();
+    let mut last_hash = false;
+    let mut last_space = false;
+    for c in s.chars() {
+        if c.is_ascii_digit() || c == '+' || c == '-' || c == '.' {
+            if !last_hash {
+                out.push('#');
+            }
+            last_hash = true;
+            last_space = false;
+        } else if c == ' ' {
+            if !last_space {
+                out.push(' ');
+            }
+            last_space = true;
+            last_hash = false;
+        } else {
+            out.push(c);
+            last_hash = false;
+            last_space = false;
+        }
+    }
+    out
+}
+
+#[test]
+fn validate_golden_2d5pt_snb() {
+    // the paper's headline validation case: 2D 5-point Jacobi on the SNB
+    // machine file, Table 5 sizes. The rendered report shape is pinned by
+    // a golden fixture; the figures by the paper's published tolerances.
+    let out = run(&argv(
+        "-p Validate -m machines/snb.yml kernels/2d-5pt.c -D N 6000 -D M 6000",
+    ))
+    .unwrap();
+    let expected =
+        std::fs::read_to_string("rust/tests/fixtures/validate_2d5pt_snb.expected").unwrap();
+    assert_eq!(normalize_numbers(&out), expected, "raw output:\n{out}");
+
+    // the same run as JSON: round-trip stable, figures near Table 5
+    // (model 36.7 cy/CL, measured 36.4 cy/CL on SNB)
+    let json = run(&argv(
+        "-p Validate -m machines/snb.yml kernels/2d-5pt.c -D N 6000 -D M 6000 --format json",
+    ))
+    .unwrap();
+    let report = kerncraft::session::AnalysisReport::from_json(json.trim()).unwrap();
+    assert_eq!(report.to_json(), json.trim());
+    let ecm = report.ecm.as_ref().expect("ECM section");
+    assert!((ecm.t_mem - 36.7).abs() < 0.8, "{}", ecm.t_mem);
+    let v = report.validation.expect("validation section");
+    assert_eq!(v.analytic_cy_per_cl, ecm.t_mem);
+    assert!((v.sim_cy_per_cl - 36.4).abs() / 36.4 < 0.2, "{}", v.sim_cy_per_cl);
+    // implied by the two pins above (sim within 20%, t_mem within 0.8):
+    // never assert tighter than their composition
+    assert!(v.model_error_pct.abs() < 30.0, "{}", v.model_error_pct);
+    assert!(v.truncated, "36M iterations exceed the testbed window");
+    assert_eq!(v.levels.len(), 3);
+    for l in &v.levels {
+        assert!(l.hits + l.misses > 0, "{l:?}");
+    }
+}
+
 #[test]
 fn json_format_across_model_modes() {
     use kerncraft::session::AnalysisReport;

@@ -1,14 +1,167 @@
 //! End-to-end `kerncraft serve`: pipe JSON-lines requests through the
 //! in-process serve loop (the same function the binary wires to stdin /
 //! stdout) and verify the streamed reports, the shared-session cache
-//! hits, and that a served report renders to the exact CLI text.
+//! hits, that a served report renders to the exact CLI text, and that
+//! the `--threads K` worker-pool pipeline answers interleaved request
+//! streams with every `id` echoed exactly once.
 
-use kerncraft::cli::{run, serve};
+use kerncraft::cli::{run, serve, serve_with, ServeOptions};
 use kerncraft::report::render_report;
 use kerncraft::session::AnalysisReport;
 
 fn argv(s: &str) -> Vec<String> {
     s.split_whitespace().map(str::to_string).collect()
+}
+
+/// An interleaved request stream: mixed machines and kernels, duplicates
+/// for cache warmth, malformed lines, a Validate request, blanks and
+/// comments. Returns (input text, ids of the lines that get responses,
+/// ids whose responses must be error lines).
+fn interleaved_stream() -> (String, Vec<String>, Vec<String>) {
+    let mut input = String::from("# interleaved request stream\n\n");
+    let mut ids = Vec::new();
+    let mut error_ids = Vec::new();
+    let mut push = |input: &mut String, id: String, line: String| {
+        input.push_str(&line);
+        input.push('\n');
+        ids.push(id);
+    };
+    // 25 identical requests: with 4 workers, pigeonhole guarantees some
+    // worker evaluates at least two of them back to back, so the session
+    // caches MUST register hits regardless of scheduling
+    for i in 0..25 {
+        push(
+            &mut input,
+            format!("warm{i}"),
+            format!(
+                r#"{{"id": "warm{i}", "kernel": {{"path": "kernels/triad.c"}}, "machine": "SNB", "constants": {{"N": 100000}}}}"#
+            ),
+        );
+    }
+    // mixed machines/kernels/models
+    push(
+        &mut input,
+        "jacobi-hsw".into(),
+        r#"{"id": "jacobi-hsw", "kernel": {"name": "2D-5pt"}, "machine": "HSW", "constants": {"N": 2000, "M": 2000}, "model": "RooflinePort", "predictor": "auto"}"#.into(),
+    );
+    push(
+        &mut input,
+        "val".into(),
+        r#"{"id": "val", "kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}, "model": "Validate"}"#.into(),
+    );
+    // malformed requests: unknown kernel, unknown model — the stream must
+    // answer each with an error line carrying the id
+    push(
+        &mut input,
+        "bad-kernel".into(),
+        r#"{"id": "bad-kernel", "kernel": {"name": "nope"}, "machine": "SNB"}"#.into(),
+    );
+    error_ids.push("bad-kernel".to_string());
+    push(
+        &mut input,
+        "bad-model".into(),
+        r#"{"id": "bad-model", "kernel": {"name": "triad"}, "machine": "SNB", "model": "Nope"}"#.into(),
+    );
+    error_ids.push("bad-model".to_string());
+    // a line that is not JSON at all: an error response without an id
+    input.push_str("this is not json\n");
+    ids.push(String::new());
+    input.push_str("# trailing comment\n");
+    (input, ids, error_ids)
+}
+
+/// The id of a response line: reports and error lines both echo it as a
+/// leading `"id"` field; an idless error line maps to "".
+fn response_id(line: &str) -> String {
+    match AnalysisReport::from_json(line) {
+        Ok(r) => r.id.unwrap_or_default(),
+        Err(_) => {
+            assert!(line.contains("\"error\""), "neither report nor error: {line}");
+            match line.find("\"id\": \"") {
+                Some(ix) => {
+                    let rest = &line[ix + 7..];
+                    rest[..rest.find('"').unwrap()].to_string()
+                }
+                None => String::new(),
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_serve_answers_interleaved_stream_in_order() {
+    let (input, ids, error_ids) = interleaved_stream();
+    let mut output = Vec::new();
+    let opts = ServeOptions { threads: 4, ordered: true };
+    let summary = serve_with(&mut input.as_bytes(), &mut output, &opts).unwrap();
+    assert_eq!(summary.requests, ids.len() as u64);
+    assert_eq!(summary.errors, error_ids.len() as u64 + 1, "two bad ids + the non-JSON line");
+
+    let text = String::from_utf8(output).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), ids.len(), "one response per request\n{text}");
+    // ordered delivery: the i-th response echoes the i-th request id —
+    // which also proves every id is echoed exactly once
+    let got: Vec<String> = lines.iter().map(|l| response_id(l)).collect();
+    assert_eq!(got, ids, "{text}");
+    // error lines carry their ids and do not kill the stream
+    for id in &error_ids {
+        let line = lines[ids.iter().position(|x| x == id).unwrap()];
+        assert!(line.contains("\"error\""), "{line}");
+    }
+    // warm-cache hit counters rose: 25 identical requests through 4
+    // workers cannot all miss
+    assert!(summary.stats.hits() > 0, "{:?}", summary.stats);
+    assert!(summary.stats.program_hits > 0, "{:?}", summary.stats);
+    // the Validate response carries a JSON-round-trippable section
+    let val = AnalysisReport::from_json(lines[ids.iter().position(|x| x == "val").unwrap()])
+        .unwrap();
+    let v = val.validation.expect("validation section over the wire");
+    assert!(v.sim_cy_per_cl > 0.0);
+}
+
+#[test]
+fn concurrent_serve_unordered_delivers_every_response() {
+    let (input, ids, _) = interleaved_stream();
+    let mut output = Vec::new();
+    let opts = ServeOptions { threads: 4, ordered: false };
+    let summary = serve_with(&mut input.as_bytes(), &mut output, &opts).unwrap();
+    assert_eq!(summary.requests, ids.len() as u64);
+    let text = String::from_utf8(output).unwrap();
+    let mut got: Vec<String> = text.lines().map(response_id).collect();
+    let mut want = ids.clone();
+    got.sort();
+    want.sort();
+    // unordered delivery still answers every request exactly once
+    assert_eq!(got, want, "{text}");
+}
+
+#[test]
+fn concurrent_serve_matches_serial_responses() {
+    // the worker pool must not change any response payload: run the same
+    // stream serially and with 4 ordered workers and compare the lines
+    // (memo counters differ by schedule, so compare id + model figures)
+    let (input, _, _) = interleaved_stream();
+    let mut serial_out = Vec::new();
+    serve(&mut input.as_bytes(), &mut serial_out).unwrap();
+    let mut par_out = Vec::new();
+    let opts = ServeOptions { threads: 4, ordered: true };
+    serve_with(&mut input.as_bytes(), &mut par_out, &opts).unwrap();
+    let serial_text = String::from_utf8(serial_out).unwrap();
+    let par_text = String::from_utf8(par_out).unwrap();
+    for (s, p) in serial_text.lines().zip(par_text.lines()) {
+        match (AnalysisReport::from_json(s), AnalysisReport::from_json(p)) {
+            (Ok(sr), Ok(pr)) => {
+                assert_eq!(sr.id, pr.id);
+                assert_eq!(sr.ecm, pr.ecm, "{s}\n{p}");
+                assert_eq!(sr.roofline, pr.roofline);
+                assert_eq!(sr.validation, pr.validation);
+            }
+            (Err(_), Err(_)) => assert_eq!(s.contains("\"error\""), p.contains("\"error\"")),
+            (a, b) => panic!("serial/parallel disagree:\n{s} ({a:?})\n{p} ({b:?})"),
+        }
+    }
+    assert_eq!(serial_text.lines().count(), par_text.lines().count());
 }
 
 #[test]
