@@ -29,8 +29,13 @@
 //! session — each response carries its per-request cache-hit counters.
 //! With `--threads K` a worker pool evaluates requests concurrently over
 //! the shared session, delivering responses in request order (default)
-//! or as completed (`--unordered`); the full wire protocol lives in
-//! docs/SERVE.md.
+//! or as completed (`--unordered`). With `--listen ADDR` the same
+//! pipeline is served over HTTP instead ([`crate::server`]: `/analyze`,
+//! `/batch`, `/stream`, `/healthz`, `/metrics`), and `--cache-dir DIR`
+//! attaches the persistent cross-process report cache
+//! ([`crate::server::cache::DiskCache`]) in either mode. The full wire
+//! protocol lives in docs/SERVE.md, operational guidance in
+//! docs/OPERATIONS.md.
 
 use crate::cache::CachePredictorKind;
 use crate::jsonio::{self, json_str};
@@ -199,10 +204,14 @@ pub fn usage() -> String {
               --cores LIST  --predictor {offsets,lc,auto}  --threads K\n\
               --format {csv,json}  --serial  --validate  -v\n\
      \n\
-     JSON-lines batch service (one AnalysisRequest per input line,\n\
-     one AnalysisReport per output line, shared session cache; see\n\
-     docs/SERVE.md for the wire protocol):\n\
-     kerncraft serve [--input FILE] [--threads K] [--unordered] [-v]"
+     batch service (JSON lines over stdin/stdout, or HTTP with\n\
+     --listen; see docs/SERVE.md for the wire protocol and\n\
+     docs/OPERATIONS.md for operations):\n\
+     kerncraft serve [--input FILE] [--threads K] [--unordered]\n\
+              [--listen ADDR] [--cache-dir DIR] [-v]\n\
+              --listen ADDR     HTTP mode: POST /analyze | /batch | /stream,\n\
+                                GET /healthz | /metrics\n\
+              --cache-dir DIR   persistent cross-process report cache"
         .to_string()
 }
 
@@ -523,16 +532,38 @@ pub struct ServeArgs {
     /// Request file (JSON lines); None reads stdin.
     pub input: Option<String>,
     pub verbose: bool,
-    /// Worker threads evaluating requests (1 = the serial loop).
-    pub threads: usize,
+    /// Worker threads evaluating requests. None picks the mode default:
+    /// 1 (serial) for the JSON-lines stream, the core count for
+    /// `--listen` (one slow HTTP connection must not starve the rest).
+    pub threads: Option<usize>,
     /// Deliver responses as they finish instead of in request order.
     pub unordered: bool,
+    /// HTTP mode: listen address (e.g. `127.0.0.1:8157`); None keeps
+    /// the JSON-lines stdin/stdout transport.
+    pub listen: Option<String>,
+    /// Persistent cross-process report cache directory (both modes).
+    pub cache_dir: Option<String>,
 }
 
 impl Default for ServeArgs {
     fn default() -> ServeArgs {
-        ServeArgs { input: None, verbose: false, threads: 1, unordered: false }
+        ServeArgs {
+            input: None,
+            verbose: false,
+            threads: None,
+            unordered: false,
+            listen: None,
+            cache_dir: None,
+        }
     }
+}
+
+/// HTTP-mode worker default when `--threads` is not given: enough
+/// parallelism that one keep-alive or slow connection cannot pin the
+/// whole pool and starve `/healthz` (the stream transport keeps its
+/// serial default — a single pipe has no second client to starve).
+fn default_http_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8)
 }
 
 /// Parse `serve` subcommand argv (after the `serve` word).
@@ -549,16 +580,31 @@ pub fn parse_serve_args(argv: &[String]) -> Result<ServeArgs> {
                 );
             }
             "--threads" => {
-                args.threads = it
+                let n: usize = it
                     .next()
                     .ok_or_else(|| anyhow!("missing value after --threads"))?
                     .parse()
                     .context("--threads")?;
-                if args.threads == 0 {
+                if n == 0 {
                     bail!("--threads needs at least one worker");
                 }
+                args.threads = Some(n);
             }
             "--unordered" => args.unordered = true,
+            "--listen" => {
+                args.listen = Some(
+                    it.next()
+                        .cloned()
+                        .ok_or_else(|| anyhow!("missing value after --listen"))?,
+                );
+            }
+            "--cache-dir" => {
+                args.cache_dir = Some(
+                    it.next()
+                        .cloned()
+                        .ok_or_else(|| anyhow!("missing value after --cache-dir"))?,
+                );
+            }
             "-v" | "--verbose" => args.verbose = true,
             "-h" | "--help" => bail!("{}", usage()),
             other if !other.starts_with('-') => {
@@ -653,12 +699,17 @@ impl Default for ServeOptions {
 }
 
 /// Evaluate one raw request line into a single-line JSON response.
-/// `None` marks an oversized (truncated) line. Returns the response
-/// line and whether it is an error line.
-fn respond(session: &Session, payload: Option<&[u8]>) -> (String, bool) {
+/// `None` marks an oversized (truncated) line. `line_no` is the
+/// 1-based *physical* input line (blank and comment lines count), so an
+/// operator can jump straight to the offending line of a request file;
+/// error lines carry it as `"line"`. Returns the response line and
+/// whether it is an error line.
+fn respond(session: &Session, payload: Option<&[u8]>, line_no: u64) -> (String, bool) {
     let Some(buf) = payload else {
         return (
-            format!("{{\"error\": \"request line exceeds {MAX_REQUEST_LINE_BYTES} bytes\"}}"),
+            format!(
+                "{{\"line\": {line_no}, \"error\": \"request line exceeds {MAX_REQUEST_LINE_BYTES} bytes\"}}"
+            ),
             true,
         );
     };
@@ -685,6 +736,7 @@ fn respond(session: &Session, payload: Option<&[u8]>) -> (String, bool) {
                 s.push_str(&json_str(&id));
                 s.push_str(", ");
             }
+            s.push_str(&format!("\"line\": {line_no}, "));
             s.push_str("\"error\": ");
             s.push_str(&json_str(&format!("{e:#}")));
             s.push('}');
@@ -731,21 +783,37 @@ pub fn serve_with(
     output: &mut (dyn Write + Send),
     opts: &ServeOptions,
 ) -> Result<ServeSummary> {
+    serve_with_session(&Session::new(), input, output, opts)
+}
+
+/// The serve loop over a caller-owned [`Session`] — the seam that lets
+/// the HTTP front end ([`crate::server`], `POST /stream`) and a
+/// `--cache-dir`-backed stdin serve share one session (and therefore
+/// one set of stage caches and one persistent report cache) across
+/// streams. The returned summary's `stats` snapshot covers the whole
+/// session lifetime, not just this stream.
+pub fn serve_with_session(
+    session: &Session,
+    input: &mut dyn BufRead,
+    output: &mut (dyn Write + Send),
+    opts: &ServeOptions,
+) -> Result<ServeSummary> {
     if opts.threads > 1 {
-        serve_parallel(input, output, opts)
+        serve_parallel(session, input, output, opts)
     } else {
-        serve_serial(input, output)
+        serve_serial(session, input, output)
     }
 }
 
 /// Single-threaded serve loop: read, evaluate, respond, flush.
 fn serve_serial(
+    session: &Session,
     input: &mut dyn BufRead,
     output: &mut (dyn Write + Send),
 ) -> Result<ServeSummary> {
-    let session = Session::new();
     let mut summary = ServeSummary::default();
     let mut buf = Vec::new();
+    let mut line_no = 0u64;
     loop {
         buf.clear();
         let (consumed, truncated) =
@@ -753,6 +821,7 @@ fn serve_serial(
         if consumed == 0 {
             break;
         }
+        line_no += 1;
         let payload = if truncated {
             None
         } else {
@@ -764,7 +833,7 @@ fn serve_serial(
             Some(buf.as_slice())
         };
         summary.requests += 1;
-        let (line, is_err) = respond(&session, payload);
+        let (line, is_err) = respond(session, payload, line_no);
         if is_err {
             summary.errors += 1;
         }
@@ -824,6 +893,7 @@ fn writer_loop(
 /// worker pool over one shared session → writer thread (ordered
 /// reassembly or immediate streaming).
 fn serve_parallel(
+    session: &Session,
     input: &mut dyn BufRead,
     output: &mut (dyn Write + Send),
     opts: &ServeOptions,
@@ -832,13 +902,13 @@ fn serve_parallel(
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::{mpsc, Condvar};
 
-    let session = Session::new();
     let threads = opts.threads;
     let ordered = opts.ordered;
     // bounded in-flight queue: the reader blocks once workers fall this
     // far behind, so a fast client cannot queue unbounded memory
     let cap = threads * 4;
-    let (job_tx, job_rx) = mpsc::sync_channel::<(u64, Option<Vec<u8>>)>(cap);
+    // jobs are (sequence, physical input line, payload)
+    let (job_tx, job_rx) = mpsc::sync_channel::<(u64, u64, Option<Vec<u8>>)>(cap);
     let job_rx = Mutex::new(job_rx);
     let (res_tx, res_rx) = mpsc::channel::<(u64, String, bool)>();
     // ordered mode: count of responses written so far (u64::MAX once the
@@ -873,12 +943,11 @@ fn serve_parallel(
         for _ in 0..threads {
             let res_tx = res_tx.clone();
             let job_rx = &job_rx;
-            let session = &session;
             scope.spawn(move || {
                 let mut writer_gone = false;
                 loop {
                     let job = job_rx.lock().unwrap().recv();
-                    let Ok((seq, payload)) = job else { break };
+                    let Ok((seq, line_no, payload)) = job else { break };
                     if writer_gone {
                         // writer hit an I/O error: keep draining the job
                         // queue (so the reader never blocks on a full
@@ -889,15 +958,17 @@ fn serve_parallel(
                     // not a worker — a shrinking pool would eventually
                     // leave the reader blocked on a full job queue with
                     // nobody draining it
-                    let (line, is_err) =
-                        catch_unwind(AssertUnwindSafe(|| respond(session, payload.as_deref())))
-                            .unwrap_or_else(|_| {
-                                (
-                                    "{\"error\": \"internal panic evaluating request\"}"
-                                        .to_string(),
-                                    true,
-                                )
-                            });
+                    let (line, is_err) = catch_unwind(AssertUnwindSafe(|| {
+                        respond(session, payload.as_deref(), line_no)
+                    }))
+                    .unwrap_or_else(|_| {
+                        (
+                            format!(
+                                "{{\"line\": {line_no}, \"error\": \"internal panic evaluating request\"}}"
+                            ),
+                            true,
+                        )
+                    });
                     if res_tx.send((seq, line, is_err)).is_err() {
                         writer_gone = true;
                     }
@@ -910,6 +981,7 @@ fn serve_parallel(
         // assign sequence numbers
         let max_ahead = (cap + threads) as u64;
         let mut seq = 0u64;
+        let mut line_no = 0u64;
         let mut buf = Vec::new();
         loop {
             if writer_dead.load(Ordering::Relaxed) {
@@ -919,6 +991,7 @@ fn serve_parallel(
             match read_line_capped(input, &mut buf, MAX_REQUEST_LINE_BYTES) {
                 Ok((0, _)) => break,
                 Ok((_, truncated)) => {
+                    line_no += 1;
                     let payload = if truncated {
                         None
                     } else {
@@ -939,7 +1012,7 @@ fn serve_parallel(
                             w = written.1.wait(w).unwrap();
                         }
                     }
-                    if job_tx.send((seq, payload)).is_err() {
+                    if job_tx.send((seq, line_no, payload)).is_err() {
                         break; // every worker exited; nothing can respond
                     }
                     seq += 1;
@@ -961,22 +1034,57 @@ fn serve_parallel(
     Ok(ServeSummary { requests, errors, stats: session.stats() })
 }
 
-/// Run the `serve` subcommand against stdin/stdout (or `--input FILE`).
-/// Responses stream directly to stdout; the returned string is empty so
-/// the binary adds nothing after the JSON lines.
+/// Run the `serve` subcommand: JSON lines against stdin/stdout (or
+/// `--input FILE`), or — with `--listen ADDR` — the HTTP front end of
+/// [`crate::server`]. Responses stream directly to stdout / the
+/// sockets; the returned string is empty so the binary adds nothing
+/// after them.
 pub fn run_serve(argv: &[String]) -> Result<String> {
     let args = parse_serve_args(argv)?;
-    let opts = ServeOptions { threads: args.threads, ordered: !args.unordered };
+    if let Some(addr) = &args.listen {
+        if args.input.is_some() {
+            bail!("--listen serves HTTP; --input does not apply (POST the file to /stream)");
+        }
+        if args.unordered {
+            bail!("--unordered applies to the JSON-lines stream, not --listen (HTTP responses are per-request)");
+        }
+        let server = crate::server::Server::bind(crate::server::ServerOptions {
+            listen: addr.clone(),
+            threads: args.threads.unwrap_or_else(default_http_threads),
+            cache_dir: args.cache_dir.as_ref().map(std::path::PathBuf::from),
+            max_body_bytes: crate::server::DEFAULT_MAX_BODY_BYTES,
+            verbose: args.verbose,
+        })?;
+        eprintln!("# kerncraft serve: listening on http://{}", server.local_addr());
+        server.run()?;
+        return Ok(String::new());
+    }
+    let session = match &args.cache_dir {
+        Some(dir) => Session::with_report_cache(Arc::new(
+            crate::server::cache::DiskCache::open(dir)?,
+        )),
+        None => Session::new(),
+    };
+    let opts =
+        ServeOptions { threads: args.threads.unwrap_or(1), ordered: !args.unordered };
     let mut output = std::io::stdout();
     let summary = match &args.input {
         Some(path) => {
             let file = std::fs::File::open(path)
                 .with_context(|| format!("opening request file {path}"))?;
-            serve_with(&mut std::io::BufReader::new(file), &mut output, &opts)?
+            serve_with_session(
+                &session,
+                &mut std::io::BufReader::new(file),
+                &mut output,
+                &opts,
+            )?
         }
-        None => {
-            serve_with(&mut std::io::BufReader::new(std::io::stdin()), &mut output, &opts)?
-        }
+        None => serve_with_session(
+            &session,
+            &mut std::io::BufReader::new(std::io::stdin()),
+            &mut output,
+            &opts,
+        )?,
     };
     if args.verbose {
         eprintln!("{summary}");
@@ -1224,13 +1332,21 @@ mod tests {
         let a = parse_serve_args(&argv("--input reqs.jsonl -v")).unwrap();
         assert_eq!(a.input.as_deref(), Some("reqs.jsonl"));
         assert!(a.verbose);
-        assert_eq!(a.threads, 1, "serial by default");
+        assert_eq!(a.threads, None, "mode default: serial stream, multi-worker HTTP");
         assert!(!a.unordered, "ordered by default");
         let a = parse_serve_args(&argv("reqs.jsonl")).unwrap();
         assert_eq!(a.input.as_deref(), Some("reqs.jsonl"));
         let a = parse_serve_args(&argv("--threads 4 --unordered")).unwrap();
-        assert_eq!(a.threads, 4);
+        assert_eq!(a.threads, Some(4));
         assert!(a.unordered);
+        assert!(default_http_threads() >= 2, "HTTP default leaves headroom for /healthz");
+        assert!(a.listen.is_none() && a.cache_dir.is_none());
+        let a = parse_serve_args(&argv("--listen 127.0.0.1:9000 --cache-dir /tmp/kc --threads 4"))
+            .unwrap();
+        assert_eq!(a.listen.as_deref(), Some("127.0.0.1:9000"));
+        assert_eq!(a.cache_dir.as_deref(), Some("/tmp/kc"));
+        assert!(parse_serve_args(&argv("--listen")).is_err());
+        assert!(parse_serve_args(&argv("--cache-dir")).is_err());
         assert!(parse_serve_args(&argv("--threads 0")).is_err());
         assert!(parse_serve_args(&argv("--threads")).is_err());
         assert!(parse_serve_args(&argv("--bogus")).is_err());
@@ -1256,6 +1372,33 @@ mod tests {
         assert!(lines[1].contains("\"id\": \"bad\""), "{}", lines[1]);
         assert!(lines[1].contains("\"error\""), "{}", lines[1]);
         assert!(lines[2].contains("\"error\""), "{}", lines[2]);
+        // error lines name the offending PHYSICAL input line (blanks and
+        // comments count), so operators can jump straight to it
+        assert!(lines[1].contains("\"line\": 4"), "{}", lines[1]);
+        assert!(lines[2].contains("\"line\": 5"), "{}", lines[2]);
+    }
+
+    #[test]
+    fn serve_reports_line_numbers_for_oversized_lines() {
+        let mut input = Vec::new();
+        input.extend_from_slice(b"# header comment\n");
+        input.extend_from_slice(&vec![b'A'; MAX_REQUEST_LINE_BYTES + 10]);
+        input.push(b'\n');
+        let mut output = Vec::new();
+        let summary = serve(&mut input.as_slice(), &mut output).unwrap();
+        assert_eq!(summary.requests, 1);
+        assert_eq!(summary.errors, 1);
+        let text = String::from_utf8(output).unwrap();
+        assert!(text.contains("\"line\": 2"), "{text}");
+        assert!(text.contains("exceeds"), "{text}");
+    }
+
+    #[test]
+    fn serve_rejects_conflicting_listen_flags() {
+        let err = run_serve(&argv("--listen 127.0.0.1:0 --input reqs.jsonl")).unwrap_err();
+        assert!(format!("{err}").contains("--listen"), "{err}");
+        let err = run_serve(&argv("--listen 127.0.0.1:0 --unordered")).unwrap_err();
+        assert!(format!("{err}").contains("--unordered"), "{err}");
     }
 
     #[test]

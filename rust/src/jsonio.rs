@@ -397,6 +397,85 @@ fn is_rfc8259_number(s: &str) -> bool {
     i == b.len()
 }
 
+/// Canonical serialization: a deterministic single-line rendering with
+/// object keys sorted and numeric literals normalized, so two documents
+/// that differ only in key order or number spelling (`6e3` vs `6000`)
+/// canonicalize to the same bytes. This is the hashing input of the
+/// persistent report cache (`kerncraft serve --cache-dir`, see
+/// docs/OPERATIONS.md): cache keys are [`content_hash`]es of canonical
+/// text, never of raw wire bytes.
+pub fn canonical(v: &JsonValue) -> String {
+    let mut out = String::new();
+    write_canonical(v, &mut out);
+    out
+}
+
+fn write_canonical(v: &JsonValue, out: &mut String) {
+    match v {
+        JsonValue::Null => out.push_str("null"),
+        JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        JsonValue::Num(lit) => out.push_str(&canonical_number(lit)),
+        JsonValue::Str(s) => out.push_str(&json_str(s)),
+        JsonValue::Arr(items) => {
+            out.push('[');
+            for (ix, item) in items.iter().enumerate() {
+                if ix > 0 {
+                    out.push(',');
+                }
+                write_canonical(item, out);
+            }
+            out.push(']');
+        }
+        JsonValue::Obj(entries) => {
+            let mut sorted: Vec<&(String, JsonValue)> = entries.iter().collect();
+            sorted.sort_by(|a, b| a.0.cmp(&b.0));
+            out.push('{');
+            for (ix, (k, val)) in sorted.iter().enumerate() {
+                if ix > 0 {
+                    out.push(',');
+                }
+                out.push_str(&json_str(k));
+                out.push(':');
+                write_canonical(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Normalize a number literal: integers render via `i64`/`u64`, floats
+/// via Rust's shortest-roundtrip formatting. Literals outside both
+/// ranges (overflowing exponents) keep their source text.
+fn canonical_number(lit: &str) -> String {
+    if let Ok(i) = lit.parse::<i64>() {
+        return i.to_string();
+    }
+    if let Ok(u) = lit.parse::<u64>() {
+        return u.to_string();
+    }
+    match lit.parse::<f64>() {
+        Ok(f) if f.is_finite() => format!("{f}"),
+        _ => lit.to_string(),
+    }
+}
+
+/// 128-bit FNV-1a digest as 32 lowercase hex characters. Not
+/// cryptographic — it keys the persistent report cache, where a
+/// collision costs a wrong cache answer only if an adversary controls
+/// the inputs *and* the operator shares one cache dir with them; the
+/// offline crate set has no hash crates, and 128 bits keep accidental
+/// collisions out of reach for any realistic request corpus.
+pub fn content_hash(bytes: &[u8]) -> String {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013b;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(PRIME);
+    }
+    format!("{h:032x}")
+}
+
 /// Quote and escape a string as a JSON string literal.
 pub fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -516,6 +595,28 @@ mod tests {
     fn json_num_non_finite_is_null() {
         assert_eq!(json_num(f64::NAN), "null");
         assert_eq!(json_num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn canonical_is_key_order_and_spelling_independent() {
+        let a = parse(r#"{"b": 1, "a": {"y": 6e3, "x": [1, 2.50]}}"#).unwrap();
+        let b = parse(r#"{"a": {"x": [1, 2.5], "y": 6000}, "b": 1}"#).unwrap();
+        assert_eq!(canonical(&a), canonical(&b));
+        assert_eq!(canonical(&a), r#"{"a":{"x":[1,2.5],"y":6000},"b":1}"#);
+        // canonical text is itself valid JSON
+        assert_eq!(parse(&canonical(&a)).unwrap(), parse(&canonical(&b)).unwrap());
+        // large integers canonicalize without float truncation
+        let big = parse(&format!("{}", i64::MAX)).unwrap();
+        assert_eq!(canonical(&big), format!("{}", i64::MAX));
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_spreads() {
+        // pinned digest: a silent hash change would orphan every
+        // persistent cache entry ever written
+        assert_eq!(content_hash(b""), "6c62272e07bb014262b821756295c58d");
+        assert_eq!(content_hash(b"a"), "d228cb696f1a8caf78912b704e4a8964");
+        assert_ne!(content_hash(b"request-1"), content_hash(b"request-2"));
     }
 
     #[test]

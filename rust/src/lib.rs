@@ -38,6 +38,14 @@
 //!                   `--threads K`,   `--validate` rows)
 //!                   ordered or
 //!                   `--unordered`)
+//!                        │
+//!                        ▼
+//!                   server:: HTTP front end (`serve --listen`):
+//!                   /analyze /batch /stream /healthz /metrics over
+//!                   hand-rolled HTTP/1.1, plus the persistent
+//!                   cross-process report cache (`--cache-dir`,
+//!                   server::cache::DiskCache behind the
+//!                   session::ReportCache seam)
 //!
 //!   validation:  `-p Validate` runs sim:: (trace-driven SNB/HSW
 //!                testbed) next to the analytic ECM and reports the
@@ -48,10 +56,12 @@
 //!
 //! Entry points: [`session::Session`] for programmatic use,
 //! [`sweep::SweepEngine`] for batched grids, [`cli`] for the command-line
-//! front ends (`kerncraft`, `kerncraft sweep`, `kerncraft serve`), and
-//! the individual stage modules for composing custom pipelines. The
-//! design rationale (measurement substitution, session architecture)
-//! lives in DESIGN.md; the serve wire protocol in docs/SERVE.md.
+//! front ends (`kerncraft`, `kerncraft sweep`, `kerncraft serve`),
+//! [`server::Server`] for the embedded HTTP service, and the individual
+//! stage modules for composing custom pipelines. The design rationale
+//! (measurement substitution, session architecture) lives in DESIGN.md;
+//! the serve wire protocol in docs/SERVE.md and the operator guide in
+//! docs/OPERATIONS.md.
 
 pub mod bench_mode;
 pub mod cache;
@@ -64,6 +74,7 @@ pub mod microbench;
 pub mod models;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod session;
 pub mod sim;
 pub mod sweep;

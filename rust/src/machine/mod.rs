@@ -242,9 +242,20 @@ impl MachineModel {
 
     /// Load a machine description from a file path.
     pub fn from_file(path: &str) -> Result<Self> {
+        Ok(Self::from_file_with_digest(path)?.0)
+    }
+
+    /// Load a machine description from a file path together with the
+    /// [`crate::jsonio::content_hash`] of the text the model was parsed
+    /// from. One read serves both, so the model and the digest can
+    /// never describe different versions of a concurrently edited file
+    /// — the invariant the persistent report cache keys rely on.
+    pub fn from_file_with_digest(path: &str) -> Result<(Self, String)> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading machine file {path}"))?;
-        Self::from_yaml(&text).with_context(|| format!("parsing machine file {path}"))
+        let model = Self::from_yaml(&text)
+            .with_context(|| format!("parsing machine file {path}"))?;
+        Ok((model, crate::jsonio::content_hash(text.as_bytes())))
     }
 
     /// Built-in Sandy Bridge-EP (Xeon E5-2680) description — paper Table 1.
@@ -257,13 +268,22 @@ impl MachineModel {
         Self::from_yaml(HSW_YML).expect("builtin hsw.yml must parse")
     }
 
-    /// Look up a built-in machine by tag ("SNB"/"HSW", case-insensitive).
-    pub fn builtin(tag: &str) -> Option<Self> {
+    /// Embedded YAML text of a built-in machine, or None for keys that
+    /// are not builtin tags. Cheap (no parse) — the persistent report
+    /// cache digests this to key builtin machines by *content*, with
+    /// the same tag resolution order as [`MachineModel::load`].
+    pub fn builtin_yaml(tag: &str) -> Option<&'static str> {
         match tag.to_ascii_uppercase().as_str() {
-            "SNB" | "SANDYBRIDGE" => Some(Self::snb()),
-            "HSW" | "HASWELL" => Some(Self::hsw()),
+            "SNB" | "SANDYBRIDGE" => Some(SNB_YML),
+            "HSW" | "HASWELL" => Some(HSW_YML),
             _ => None,
         }
+    }
+
+    /// Look up a built-in machine by tag ("SNB"/"HSW", case-insensitive).
+    pub fn builtin(tag: &str) -> Option<Self> {
+        Self::builtin_yaml(tag)
+            .map(|yml| Self::from_yaml(yml).expect("builtin machine yml must parse"))
     }
 
     /// Resolve a machine key — a builtin tag or a machine-file path — the
@@ -273,6 +293,17 @@ impl MachineModel {
             return Ok(m);
         }
         Self::from_file(key)
+    }
+
+    /// [`MachineModel::load`] plus the content digest of the
+    /// description actually parsed (the embedded YAML for builtin tags,
+    /// the file text for paths — same resolution order as `load`).
+    pub fn load_with_digest(key: &str) -> Result<(Self, String)> {
+        if let Some(yml) = Self::builtin_yaml(key) {
+            let model = Self::from_yaml(yml).expect("builtin machine yml must parse");
+            return Ok((model, crate::jsonio::content_hash(yml.as_bytes())));
+        }
+        Self::from_file_with_digest(key)
     }
 
     /// Memory level by name.

@@ -1,0 +1,220 @@
+//! Persistent, cross-process report cache (`kerncraft serve
+//! --cache-dir`).
+//!
+//! A [`DiskCache`] stores one evaluated [`AnalysisReport`] per file,
+//! keyed by [`crate::session::AnalysisRequest::cache_key`] — the
+//! canonical hash of the normalized request plus content digests of the
+//! kernel source and machine file. Because the key is pure content, two
+//! sibling server processes (or one server across restarts) sharing a
+//! directory answer repeated requests byte-identically without
+//! re-evaluating, and editing a kernel or machine file invalidates its
+//! entries with no bookkeeping.
+//!
+//! Durability rules:
+//!
+//! * **Atomic writes.** Entries are written to a temp file in the cache
+//!   root and `rename(2)`d into place, so a concurrent reader (or a
+//!   crash mid-write) sees either the whole entry or none of it — never
+//!   a torn file.
+//! * **Validated loads.** Every entry read from disk is round-tripped
+//!   through [`crate::jsonio`] (`AnalysisReport::from_json` then
+//!   `to_json`) and must reproduce the stored bytes exactly; anything
+//!   else — truncation, corruption, a foreign file — counts as
+//!   `invalid`, is deleted, and falls back to re-evaluation.
+//! * **Failures degrade, never fail.** A read-only directory or a full
+//!   disk silently turns the cache off for the affected entries; the
+//!   request is still answered by the pipeline.
+//!
+//! The directory layout and operational guidance live in
+//! docs/OPERATIONS.md; the counters surface on `GET /metrics`.
+
+use crate::session::{AnalysisReport, ReportCache};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Persistent-cache counters, as exposed on `GET /metrics`. Lookups
+/// satisfy `hits + misses = gets`; `invalid` entries also count as
+/// misses (the request re-evaluates).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from disk with a validated entry.
+    pub hits: u64,
+    /// Lookups that found no usable entry.
+    pub misses: u64,
+    /// Entries written (atomically) to disk.
+    pub stores: u64,
+    /// Entries that failed the round-trip validation and were deleted.
+    pub invalid: u64,
+}
+
+/// The disk-backed [`ReportCache`] implementation behind `--cache-dir`.
+pub struct DiskCache {
+    dir: PathBuf,
+    /// Temp-file disambiguator within this process (the pid separates
+    /// sibling processes sharing one directory).
+    seq: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    invalid: AtomicU64,
+}
+
+impl DiskCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<DiskCache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache directory {}", dir.display()))?;
+        Ok(DiskCache {
+            dir,
+            seq: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            invalid: AtomicU64::new(0),
+        })
+    }
+
+    /// Snapshot of the cache counters (this process only — the
+    /// directory itself carries no counters).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            invalid: self.invalid.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Entry path: a two-hex-character fan-out directory keeps any
+    /// single directory from accumulating every entry.
+    fn entry_path(&self, key: &str) -> PathBuf {
+        let shard = if key.len() >= 2 && key.is_char_boundary(2) { &key[..2] } else { "xx" };
+        self.dir.join(shard).join(format!("{key}.json"))
+    }
+}
+
+impl ReportCache for DiskCache {
+    fn get(&self, key: &str) -> Option<AnalysisReport> {
+        let path = self.entry_path(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        // validate by round-tripping through jsonio: the parsed report
+        // must re-serialize to the stored bytes exactly, or the entry is
+        // corrupt (or written by an incompatible build) and is dropped
+        match AnalysisReport::from_json(&text) {
+            Ok(report) if report.to_json() == text => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(report)
+            }
+            _ => {
+                self.invalid.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    fn put(&self, key: &str, report: &AnalysisReport) {
+        let path = self.entry_path(key);
+        let Some(parent) = path.parent() else { return };
+        if std::fs::create_dir_all(parent).is_err() {
+            return; // degraded cache, not a failed request
+        }
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        if std::fs::write(&tmp, report.to_json()).is_err() {
+            let _ = std::fs::remove_file(&tmp);
+            return;
+        }
+        // rename within one filesystem is atomic: readers see the old
+        // entry or the new one, never a torn file
+        if std::fs::rename(&tmp, &path).is_ok() {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{AnalysisRequest, KernelSpec, Session};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("kerncraft_diskcache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_report() -> AnalysisReport {
+        let session = Session::new();
+        session
+            .evaluate(
+                &AnalysisRequest::new(KernelSpec::named("triad"), "SNB")
+                    .with_constant("N", 65536),
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn put_then_get_round_trips_across_instances() {
+        let dir = tmp_dir("roundtrip");
+        let report = sample_report();
+        let key = "00ff00ff00ff00ff00ff00ff00ff00ff";
+        let a = DiskCache::open(&dir).unwrap();
+        assert!(a.get(key).is_none(), "cold cache misses");
+        a.put(key, &report);
+        assert_eq!(a.stats(), CacheStats { hits: 0, misses: 1, stores: 1, invalid: 0 });
+        let back = a.get(key).unwrap();
+        assert_eq!(back, report);
+        // a second instance over the same directory (the warm-restart /
+        // sibling-process case) sees the entry too
+        let b = DiskCache::open(&dir).unwrap();
+        let again = b.get(key).unwrap();
+        assert_eq!(again.to_json(), report.to_json(), "byte-identical re-serialization");
+        assert_eq!(b.stats().hits, 1);
+        // no temp files survive an atomic store
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entries_are_invalidated_and_deleted() {
+        let dir = tmp_dir("corrupt");
+        let cache = DiskCache::open(&dir).unwrap();
+        let report = sample_report();
+        let key = "abababababababababababababababab";
+        cache.put(key, &report);
+        let path = cache.entry_path(key);
+        // truncation
+        std::fs::write(&path, &report.to_json()[..40]).unwrap();
+        assert!(cache.get(key).is_none());
+        assert!(!path.exists(), "corrupt entry was deleted");
+        // valid JSON that is not a report round-trip
+        cache.put(key, &report);
+        std::fs::write(&path, "{\"kernel\": \"x\"}").unwrap();
+        assert!(cache.get(key).is_none());
+        let stats = cache.stats();
+        assert_eq!(stats.invalid, 2, "{stats:?}");
+        assert_eq!(stats.hits, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,412 @@
+//! Minimal HTTP/1.1 framing for `kerncraft serve --listen`.
+//!
+//! Hand-rolled on [`std::io`] for the same reason [`crate::jsonio`]
+//! exists: the offline crate set has no hyper/axum, and the server needs
+//! only a strict, bounded subset — request line, headers, and a
+//! `Content-Length` body. Chunked transfer encoding is answered with
+//! `501`, oversized declarations with `413`, and every limit is enforced
+//! *before* the offending bytes are buffered, so one hostile connection
+//! cannot exhaust server memory. The endpoint semantics on top of this
+//! framing live in [`crate::server`] and docs/SERVE.md.
+
+use std::io::{BufRead, Write};
+
+/// Longest accepted request/header line.
+pub const MAX_HEADER_LINE_BYTES: usize = 8 << 10;
+
+/// Most headers accepted on one request.
+pub const MAX_HEADERS: usize = 100;
+
+/// Blank lines tolerated before the request line (robust clients may
+/// send a stray CRLF after a previous body).
+const MAX_LEADING_BLANKS: usize = 8;
+
+/// One parsed request: method, path, lower-cased headers, body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header (name, value) pairs; names are lower-cased on read.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection may serve another request after this one
+    /// (HTTP/1.1 default true, `Connection: close` or HTTP/1.0 false).
+    pub keep_alive: bool,
+}
+
+/// Why a request could not be read. Every variant except [`Io`] maps to
+/// a response status via [`HttpError::status`]; `Io` (including read
+/// timeouts on idle keep-alive connections) closes the connection
+/// silently.
+///
+/// [`Io`]: HttpError::Io
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line, header, or framing.
+    BadRequest(String),
+    /// `POST` without a `Content-Length`.
+    LengthRequired,
+    /// Declared body length exceeds the server's cap.
+    TooLarge { declared: usize, cap: usize },
+    /// A protocol feature this server does not speak (chunked bodies).
+    NotImplemented(String),
+    /// The socket failed or timed out mid-request.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// Status code and error message for the client, or `None` when the
+    /// connection should just be closed (I/O failure — nobody is
+    /// listening for a status).
+    pub fn status(&self) -> Option<(u16, String)> {
+        match self {
+            HttpError::BadRequest(msg) => Some((400, msg.clone())),
+            HttpError::LengthRequired => {
+                Some((411, "POST requires a Content-Length header".to_string()))
+            }
+            HttpError::TooLarge { declared, cap } => Some((
+                413,
+                format!("request body of {declared} bytes exceeds the {cap} byte cap"),
+            )),
+            HttpError::NotImplemented(msg) => Some((501, msg.clone())),
+            HttpError::Io(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            HttpError::LengthRequired => write!(f, "length required"),
+            HttpError::TooLarge { declared, cap } => {
+                write!(f, "body of {declared} bytes exceeds {cap} byte cap")
+            }
+            HttpError::NotImplemented(msg) => write!(f, "not implemented: {msg}"),
+            HttpError::Io(e) => write!(f, "i/o: {e}"),
+        }
+    }
+}
+
+/// Read one line (LF-terminated, trailing CR stripped), erroring instead
+/// of buffering past `cap`. `Ok(None)` is clean EOF before any byte.
+fn read_line_limited(
+    input: &mut dyn BufRead,
+    cap: usize,
+) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    loop {
+        let (consume, done) = {
+            let chunk = input.fill_buf().map_err(HttpError::Io)?;
+            if chunk.is_empty() {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                break;
+            }
+            let newline = chunk.iter().position(|&b| b == b'\n');
+            let want = newline.unwrap_or(chunk.len());
+            if buf.len() + want > cap {
+                return Err(HttpError::BadRequest(format!(
+                    "header line exceeds {cap} bytes"
+                )));
+            }
+            buf.extend_from_slice(&chunk[..want]);
+            (newline.map(|ix| ix + 1).unwrap_or(chunk.len()), newline.is_some())
+        };
+        input.consume(consume);
+        if done {
+            break;
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| HttpError::BadRequest("non-UTF-8 header line".to_string()))
+}
+
+/// Read one request from the connection. `Ok(None)` means the client
+/// closed cleanly between requests (normal keep-alive teardown). The
+/// writer is only touched for `Expect: 100-continue` interim responses
+/// (curl sends the header for bodies over 1 KiB and would otherwise
+/// stall a full second before transmitting the body).
+pub fn read_request(
+    reader: &mut dyn BufRead,
+    writer: &mut dyn Write,
+    max_body: usize,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let mut blanks = 0usize;
+    let line = loop {
+        match read_line_limited(reader, MAX_HEADER_LINE_BYTES)? {
+            None => return Ok(None),
+            Some(l) if l.is_empty() => {
+                blanks += 1;
+                if blanks > MAX_LEADING_BLANKS {
+                    return Err(HttpError::BadRequest(
+                        "blank lines before request line".to_string(),
+                    ));
+                }
+            }
+            Some(l) => break l,
+        }
+    };
+
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(path), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(HttpError::BadRequest(format!("malformed request line '{line}'")));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest(format!("unsupported version '{version}'")));
+    }
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut headers = Vec::new();
+    let mut content_length: Option<usize> = None;
+    let mut expect_continue = false;
+    let mut chunked = false;
+    loop {
+        let Some(h) = read_line_limited(reader, MAX_HEADER_LINE_BYTES)? else {
+            return Err(HttpError::BadRequest("connection closed inside headers".to_string()));
+        };
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::BadRequest(format!("more than {MAX_HEADERS} headers")));
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            return Err(HttpError::BadRequest(format!("malformed header line '{h}'")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim().to_string();
+        match name.as_str() {
+            "content-length" => {
+                let parsed: usize = value.parse().map_err(|_| {
+                    HttpError::BadRequest(format!("bad content-length '{value}'"))
+                })?;
+                // conflicting lengths desynchronize keep-alive framing
+                // between this parser and any front proxy (request
+                // smuggling); RFC 7230 §3.3.3 says reject
+                if content_length.is_some_and(|prev| prev != parsed) {
+                    return Err(HttpError::BadRequest(
+                        "conflicting content-length headers".to_string(),
+                    ));
+                }
+                content_length = Some(parsed);
+            }
+            "transfer-encoding" => {
+                if !value.eq_ignore_ascii_case("identity") {
+                    chunked = true;
+                }
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.split(',').any(|t| t.trim() == "close") {
+                    keep_alive = false;
+                } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "expect" => expect_continue = value.eq_ignore_ascii_case("100-continue"),
+            _ => {}
+        }
+        headers.push((name, value));
+    }
+    if chunked {
+        return Err(HttpError::NotImplemented(
+            "chunked transfer encoding is not supported; send Content-Length".to_string(),
+        ));
+    }
+    if method == "POST" && content_length.is_none() {
+        return Err(HttpError::LengthRequired);
+    }
+    let len = content_length.unwrap_or(0);
+    if len > max_body {
+        return Err(HttpError::TooLarge { declared: len, cap: max_body });
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        if expect_continue {
+            writer
+                .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .and_then(|()| writer.flush())
+                .map_err(HttpError::Io)?;
+        }
+        reader.read_exact(&mut body).map_err(HttpError::Io)?;
+    }
+    Ok(Some(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+        keep_alive,
+    }))
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete response (status line, headers, body) and flush.
+pub fn write_response(
+    w: &mut dyn Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read(input: &str, max_body: usize) -> Result<Option<HttpRequest>, HttpError> {
+        let mut sink = Vec::new();
+        read_request(&mut input.as_bytes(), &mut sink, max_body)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = read(
+            "POST /analyze HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello",
+            1024,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/analyze");
+        assert_eq!(req.body, b"hello");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        // header names are lower-cased
+        assert!(req.headers.iter().any(|(n, v)| n == "host" && v == "x"));
+    }
+
+    #[test]
+    fn parses_get_without_body_and_connection_close() {
+        let req = read("GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n", 1024)
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert!(!req.keep_alive);
+        // HTTP/1.0 defaults to close
+        let req = read("GET / HTTP/1.0\r\n\r\n", 1024).unwrap().unwrap();
+        assert!(!req.keep_alive);
+        let req = read("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", 1024)
+            .unwrap()
+            .unwrap();
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_an_error() {
+        assert!(read("", 1024).unwrap().is_none());
+        // a stray blank line then EOF is also a clean close
+        assert!(read("\r\n", 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn expect_continue_gets_an_interim_response() {
+        let input = "POST /analyze HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nok";
+        let mut sink = Vec::new();
+        let req = read_request(&mut input.as_bytes(), &mut sink, 1024).unwrap().unwrap();
+        assert_eq!(req.body, b"ok");
+        assert_eq!(sink, b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(matches!(read("NOPE\r\n\r\n", 1024), Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            read("GET / SPDY/3\r\n\r\n", 1024),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            read("GET / HTTP/1.1\r\nbad header line\r\n\r\n", 1024),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            read("POST / HTTP/1.1\r\n\r\n", 1024),
+            Err(HttpError::LengthRequired)
+        ));
+        assert!(matches!(
+            read(
+                "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 2\r\n\r\nok",
+                1024
+            ),
+            Err(HttpError::NotImplemented(_))
+        ));
+        // conflicting content-length headers are a smuggling vector
+        assert!(matches!(
+            read(
+                "POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 50\r\n\r\nhello",
+                1024
+            ),
+            Err(HttpError::BadRequest(_))
+        ));
+        // repeated IDENTICAL lengths are harmless and accepted
+        let req = read(
+            "POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok",
+            1024,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body, b"ok");
+    }
+
+    #[test]
+    fn oversized_declarations_are_rejected_before_buffering() {
+        let err = read("POST / HTTP/1.1\r\nContent-Length: 9999\r\n\r\n", 16).unwrap_err();
+        match err {
+            HttpError::TooLarge { declared, cap } => {
+                assert_eq!((declared, cap), (9999, 16));
+                assert_eq!(err.status().unwrap().0, 413);
+            }
+            other => panic!("{other}"),
+        }
+        // an over-long header line errors instead of buffering
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_HEADER_LINE_BYTES));
+        assert!(matches!(read(&long, 1024), Err(HttpError::BadRequest(_))));
+    }
+
+    #[test]
+    fn response_writer_frames_correctly() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 2\r\n"), "{text}");
+        assert!(text.contains("connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+        let mut out = Vec::new();
+        write_response(&mut out, 404, "application/json", b"x", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
+    }
+}

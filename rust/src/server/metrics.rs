@@ -1,0 +1,194 @@
+//! Request metrics for `kerncraft serve --listen`, exposed as a plain
+//! text exposition on `GET /metrics`.
+//!
+//! All counters are atomic and monotonic since process start; the
+//! exposition format is the Prometheus text convention (one
+//! `name{labels} value` sample per line) so any scraper — or `grep` —
+//! can consume it. The field-by-field reference for operators lives in
+//! docs/OPERATIONS.md.
+
+use crate::server::cache::CacheStats;
+use crate::session::MemoStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The served endpoints, as a metrics label. `Other` covers unknown
+/// paths (404s) and disallowed methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    Analyze,
+    Batch,
+    Stream,
+    Healthz,
+    Metrics,
+    Other,
+}
+
+impl Endpoint {
+    /// Every endpoint, in exposition order.
+    pub const ALL: [Endpoint; 6] = [
+        Endpoint::Analyze,
+        Endpoint::Batch,
+        Endpoint::Stream,
+        Endpoint::Healthz,
+        Endpoint::Metrics,
+        Endpoint::Other,
+    ];
+
+    /// Label value in the exposition.
+    pub fn name(self) -> &'static str {
+        match self {
+            Endpoint::Analyze => "analyze",
+            Endpoint::Batch => "batch",
+            Endpoint::Stream => "stream",
+            Endpoint::Healthz => "healthz",
+            Endpoint::Metrics => "metrics",
+            Endpoint::Other => "other",
+        }
+    }
+
+    /// Route a request path to its endpoint label.
+    pub fn of_path(path: &str) -> Endpoint {
+        match path {
+            "/analyze" => Endpoint::Analyze,
+            "/batch" => Endpoint::Batch,
+            "/stream" => Endpoint::Stream,
+            "/healthz" => Endpoint::Healthz,
+            "/metrics" => Endpoint::Metrics,
+            _ => Endpoint::Other,
+        }
+    }
+
+    fn ix(self) -> usize {
+        match self {
+            Endpoint::Analyze => 0,
+            Endpoint::Batch => 1,
+            Endpoint::Stream => 2,
+            Endpoint::Healthz => 3,
+            Endpoint::Metrics => 4,
+            Endpoint::Other => 5,
+        }
+    }
+}
+
+/// Per-endpoint request/error counters plus connection gauges.
+#[derive(Default)]
+pub struct Metrics {
+    requests: [AtomicU64; 6],
+    errors: [AtomicU64; 6],
+    /// Connections accepted over the process lifetime.
+    pub connections: AtomicU64,
+    /// Connections accepted but not yet picked up by a worker.
+    pub queue_depth: AtomicU64,
+}
+
+impl Metrics {
+    /// Count one request against an endpoint.
+    pub fn request(&self, ep: Endpoint) {
+        self.requests[ep.ix()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` errors against an endpoint (batch responses carry one
+    /// error per failed element).
+    pub fn errors_add(&self, ep: Endpoint, n: u64) {
+        if n > 0 {
+            self.errors[ep.ix()].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Requests counted so far for one endpoint.
+    pub fn requests_for(&self, ep: Endpoint) -> u64 {
+        self.requests[ep.ix()].load(Ordering::Relaxed)
+    }
+
+    /// Errors counted so far for one endpoint.
+    pub fn errors_for(&self, ep: Endpoint) -> u64 {
+        self.errors[ep.ix()].load(Ordering::Relaxed)
+    }
+
+    /// Render the text exposition: per-endpoint request/error totals,
+    /// connection counters, the session's per-stage memo counters, and —
+    /// when a persistent cache is attached — its hit/miss/store/invalid
+    /// counters.
+    pub fn render(&self, memo: &MemoStats, cache: Option<CacheStats>) -> String {
+        let mut s = String::new();
+        s.push_str("# kerncraft serve metrics (counters monotonic since process start)\n");
+        for ep in Endpoint::ALL {
+            s.push_str(&format!(
+                "kerncraft_requests_total{{endpoint=\"{}\"}} {}\n",
+                ep.name(),
+                self.requests_for(ep)
+            ));
+        }
+        for ep in Endpoint::ALL {
+            s.push_str(&format!(
+                "kerncraft_errors_total{{endpoint=\"{}\"}} {}\n",
+                ep.name(),
+                self.errors_for(ep)
+            ));
+        }
+        s.push_str(&format!(
+            "kerncraft_connections_total {}\n",
+            self.connections.load(Ordering::Relaxed)
+        ));
+        s.push_str(&format!(
+            "kerncraft_queue_depth {}\n",
+            self.queue_depth.load(Ordering::Relaxed)
+        ));
+        for (stage, hits, misses) in [
+            ("machine", memo.machine_hits, memo.machine_misses),
+            ("program", memo.program_hits, memo.program_misses),
+            ("analysis", memo.analysis_hits, memo.analysis_misses),
+            ("incore", memo.incore_hits, memo.incore_misses),
+        ] {
+            s.push_str(&format!(
+                "kerncraft_memo_hits_total{{stage=\"{stage}\"}} {hits}\n"
+            ));
+            s.push_str(&format!(
+                "kerncraft_memo_misses_total{{stage=\"{stage}\"}} {misses}\n"
+            ));
+        }
+        if let Some(c) = cache {
+            s.push_str(&format!("kerncraft_report_cache_hits_total {}\n", c.hits));
+            s.push_str(&format!("kerncraft_report_cache_misses_total {}\n", c.misses));
+            s.push_str(&format!("kerncraft_report_cache_stores_total {}\n", c.stores));
+            s.push_str(&format!("kerncraft_report_cache_invalid_total {}\n", c.invalid));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_carries_every_counter_family() {
+        let m = Metrics::default();
+        m.request(Endpoint::Analyze);
+        m.request(Endpoint::Analyze);
+        m.request(Endpoint::Batch);
+        m.errors_add(Endpoint::Batch, 3);
+        m.connections.fetch_add(1, Ordering::Relaxed);
+        let memo = MemoStats { program_hits: 7, ..MemoStats::default() };
+        let cache = CacheStats { hits: 1, misses: 2, stores: 2, invalid: 0 };
+        let text = m.render(&memo, Some(cache));
+        assert!(text.contains("kerncraft_requests_total{endpoint=\"analyze\"} 2"), "{text}");
+        assert!(text.contains("kerncraft_requests_total{endpoint=\"batch\"} 1"), "{text}");
+        assert!(text.contains("kerncraft_errors_total{endpoint=\"batch\"} 3"), "{text}");
+        assert!(text.contains("kerncraft_connections_total 1"), "{text}");
+        assert!(text.contains("kerncraft_queue_depth 0"), "{text}");
+        assert!(text.contains("kerncraft_memo_hits_total{stage=\"program\"} 7"), "{text}");
+        assert!(text.contains("kerncraft_report_cache_hits_total 1"), "{text}");
+        assert!(text.contains("kerncraft_report_cache_invalid_total 0"), "{text}");
+        // without a cache, the persistent-cache family is absent
+        let text = m.render(&memo, None);
+        assert!(!text.contains("report_cache"), "{text}");
+    }
+
+    #[test]
+    fn paths_route_to_endpoints() {
+        assert_eq!(Endpoint::of_path("/analyze"), Endpoint::Analyze);
+        assert_eq!(Endpoint::of_path("/metrics"), Endpoint::Metrics);
+        assert_eq!(Endpoint::of_path("/nope"), Endpoint::Other);
+    }
+}

@@ -1,0 +1,617 @@
+//! `kerncraft serve --listen` — the network front end.
+//!
+//! A hand-rolled HTTP/1.1 server over [`std::net::TcpListener`] (the
+//! offline crate set has no async runtime or HTTP stack; see
+//! [`http`]) multiplexing concurrent connections onto the shared
+//! [`Session`] pipeline of DESIGN.md §2. Endpoints:
+//!
+//! * `POST /analyze` — one JSON [`AnalysisRequest`] body, one JSON
+//!   report (or error object) back.
+//! * `POST /batch` — a JSON array of requests, evaluated in parallel
+//!   through the shared session; one response array back, failed
+//!   elements carrying their `index`.
+//! * `POST /stream` — a JSON-lines body, answered with JSON-lines: the
+//!   exact stdin/stdout wire protocol of `kerncraft serve`, over HTTP.
+//! * `GET /healthz` — liveness.
+//! * `GET /metrics` — text exposition of per-endpoint request/error
+//!   totals, connection/queue gauges, the session's [`MemoStats`], and
+//!   the persistent-cache counters (see [`metrics`]).
+//!
+//! With `--cache-dir` the session consults a persistent, cross-process
+//! [`cache::DiskCache`]: a restarted or sibling server answers repeated
+//! requests byte-identically without re-evaluating. The wire contract is
+//! documented in docs/SERVE.md, operational guidance (thread sizing,
+//! cache layout, metrics reference) in docs/OPERATIONS.md.
+//!
+//! Concurrency model: a fixed pool of `--threads` connection workers
+//! pulls accepted sockets from a bounded queue (backpressure: the
+//! acceptor blocks when every worker is busy and the queue is full
+//! rather than buffering unbounded connections). Keep-alive connections
+//! are served until close or a 30 s idle timeout.
+//!
+//! [`MemoStats`]: crate::session::MemoStats
+
+pub mod cache;
+pub mod http;
+pub mod metrics;
+
+use crate::jsonio::{self, json_str, JsonValue};
+use crate::session::{AnalysisRequest, Session};
+use anyhow::{Context, Result};
+use cache::DiskCache;
+use metrics::{Endpoint, Metrics};
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+const JSON: &str = "application/json";
+const TEXT: &str = "text/plain; charset=utf-8";
+const NDJSON: &str = "application/x-ndjson";
+
+/// Default cap on one request body (`/batch` arrays included).
+pub const DEFAULT_MAX_BODY_BYTES: usize = 16 << 20;
+
+/// Most requests accepted in one `/batch` array or `/stream` body.
+/// The body-size cap alone does not bound the *response*: report lines
+/// are ~50× larger than minimal request lines, so an uncapped 16 MiB
+/// body could balloon into a ~1 GB buffered response (and hours of
+/// evaluation). Split larger workloads across calls — the shared
+/// session keeps the cache warmth.
+pub const MAX_REQUESTS_PER_CALL: usize = 10_000;
+
+/// Reads time out after this much socket inactivity, so an *idle*
+/// keep-alive connection releases its worker. A deliberately slow
+/// client can still hold one worker by trickling bytes — which is why
+/// the CLI defaults `--listen` to a multi-worker pool and
+/// docs/OPERATIONS.md says to size `--threads` at the expected
+/// concurrent connections.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Configuration of [`Server::bind`].
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Listen address, e.g. `127.0.0.1:8157` (`:0` picks a free port).
+    pub listen: String,
+    /// Connection workers (each batch request additionally fans its
+    /// elements out over up to this many evaluation threads).
+    pub threads: usize,
+    /// Directory of the persistent report cache; None disables it.
+    pub cache_dir: Option<PathBuf>,
+    /// Largest accepted request body.
+    pub max_body_bytes: usize,
+    /// Log one `# method path -> status` line per request to stderr
+    /// (the HTTP counterpart of the stream mode's `-v` summary).
+    pub verbose: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            listen: "127.0.0.1:8157".to_string(),
+            threads: 1,
+            cache_dir: None,
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+            verbose: false,
+        }
+    }
+}
+
+/// Everything a connection worker needs, shared behind one `Arc`.
+struct ServerState {
+    session: Session,
+    /// Held concretely (not as the trait object the session owns) so
+    /// `/metrics` can read the counters.
+    cache: Option<Arc<DiskCache>>,
+    metrics: Metrics,
+    threads: usize,
+    max_body: usize,
+    verbose: bool,
+}
+
+/// A bound (but not yet running) server. [`Server::run`] blocks the
+/// calling thread until [`ServerHandle::stop`] is invoked.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    shutdown: Arc<AtomicBool>,
+    threads: usize,
+}
+
+/// Clonable stop trigger for a running [`Server`] (tests, signal
+/// handlers).
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Ask the accept loop to exit. In-flight connections finish; the
+    /// blocked `accept` is woken by a throwaway local connection.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Server {
+    /// Bind the listen address and open the cache directory (when
+    /// configured). No traffic is served until [`Server::run`].
+    pub fn bind(opts: ServerOptions) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.listen)
+            .with_context(|| format!("binding listen address {}", opts.listen))?;
+        let (session, cache) = match &opts.cache_dir {
+            Some(dir) => {
+                let cache = Arc::new(DiskCache::open(dir)?);
+                (Session::with_report_cache(cache.clone()), Some(cache))
+            }
+            None => (Session::new(), None),
+        };
+        let threads = opts.threads.max(1);
+        Ok(Server {
+            listener,
+            state: Arc::new(ServerState {
+                session,
+                cache,
+                metrics: Metrics::default(),
+                threads,
+                max_body: opts.max_body_bytes,
+                verbose: opts.verbose,
+            }),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            threads,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Stop trigger usable from another thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { addr: self.local_addr(), shutdown: self.shutdown.clone() }
+    }
+
+    /// Accept loop: distribute connections over the worker pool. Blocks
+    /// until [`ServerHandle::stop`]; returns after in-flight
+    /// connections drain.
+    pub fn run(self) -> Result<()> {
+        let state = &self.state;
+        let shutdown = &self.shutdown;
+        // bounded hand-off: an acceptor that outruns the workers blocks
+        // here instead of buffering unbounded sockets
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(self.threads * 4);
+        let conn_rx = Mutex::new(conn_rx);
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads {
+                let conn_rx = &conn_rx;
+                scope.spawn(move || loop {
+                    let conn = conn_rx.lock().unwrap().recv();
+                    let Ok(stream) = conn else { break };
+                    state.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    handle_connection(state, stream);
+                });
+            }
+            for conn in self.listener.incoming() {
+                if shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                state.metrics.connections.fetch_add(1, Ordering::Relaxed);
+                state.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                if conn_tx.send(stream).is_err() {
+                    break;
+                }
+            }
+            drop(conn_tx);
+        });
+        Ok(())
+    }
+}
+
+/// Serve one connection until close, error, or idle timeout.
+fn handle_connection(state: &ServerState, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    let mut writer = BufWriter::new(write_half);
+    loop {
+        match http::read_request(&mut reader, &mut writer, state.max_body) {
+            Ok(None) => break, // clean close between requests
+            Ok(Some(req)) => {
+                let ep = Endpoint::of_path(route(&req.path));
+                state.metrics.request(ep);
+                // a panicking evaluation must cost one 500, not a pool
+                // worker — a shrinking pool would strand queued sockets
+                let (status, ctype, body) =
+                    match catch_unwind(AssertUnwindSafe(|| dispatch(state, &req))) {
+                        Ok(r) => r,
+                        Err(_) => (
+                            500,
+                            JSON,
+                            error_body(None, None, "internal panic handling request"),
+                        ),
+                    };
+                if status >= 400 {
+                    state.metrics.errors_add(ep, 1);
+                }
+                if state.verbose {
+                    eprintln!("# serve: {} {} -> {status}", req.method, req.path);
+                }
+                let keep = req.keep_alive && status != 500;
+                if http::write_response(&mut writer, status, ctype, body.as_bytes(), keep)
+                    .is_err()
+                {
+                    break;
+                }
+                if !keep {
+                    break;
+                }
+            }
+            Err(e) => {
+                // framing errors answer with a status when the protocol
+                // still allows one, then always close
+                if let Some((status, msg)) = e.status() {
+                    state.metrics.request(Endpoint::Other);
+                    state.metrics.errors_add(Endpoint::Other, 1);
+                    let _ = http::write_response(
+                        &mut writer,
+                        status,
+                        JSON,
+                        error_body(None, None, &msg).as_bytes(),
+                        false,
+                    );
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Route component of a request-target: the path with any query string
+/// stripped, so `GET /healthz?probe=1` (load balancers love query
+/// markers) routes like `/healthz`.
+fn route(path: &str) -> &str {
+    match path.split_once('?') {
+        Some((p, _)) => p,
+        None => path,
+    }
+}
+
+/// Route one parsed request to its handler.
+fn dispatch(state: &ServerState, req: &http::HttpRequest) -> (u16, &'static str, String) {
+    match (req.method.as_str(), route(&req.path)) {
+        ("GET", "/healthz") => (200, JSON, "{\"status\": \"ok\"}".to_string()),
+        ("GET", "/metrics") => (
+            200,
+            TEXT,
+            state.metrics.render(
+                &state.session.stats(),
+                state.cache.as_ref().map(|c| c.stats()),
+            ),
+        ),
+        ("POST", "/analyze") => handle_analyze(state, &req.body),
+        ("POST", "/batch") => handle_batch(state, &req.body),
+        ("POST", "/stream") => handle_stream(state, &req.body),
+        (_, "/healthz" | "/metrics" | "/analyze" | "/batch" | "/stream") => (
+            405,
+            JSON,
+            error_body(
+                None,
+                None,
+                &format!("method {} not allowed on {}", req.method, req.path),
+            ),
+        ),
+        (_, path) => (404, JSON, error_body(None, None, &format!("no such endpoint {path}"))),
+    }
+}
+
+/// `POST /analyze`: one request in, one report (or error object) out.
+fn handle_analyze(state: &ServerState, body: &[u8]) -> (u16, &'static str, String) {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return (400, JSON, error_body(None, None, "request body is not UTF-8"));
+    };
+    let v = match jsonio::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return (
+                400,
+                JSON,
+                error_body(None, None, &format!("parsing analysis request: {e:#}")),
+            )
+        }
+    };
+    let id = v.get("id").and_then(|x| x.as_str().map(str::to_string));
+    let req = match AnalysisRequest::from_json_value(&v) {
+        Ok(r) => r,
+        Err(e) => return (400, JSON, error_body(id.as_deref(), None, &format!("{e:#}"))),
+    };
+    match state.session.evaluate(&req) {
+        Ok(report) => (200, JSON, report.to_json()),
+        Err(e) => (422, JSON, error_body(req.id.as_deref(), None, &format!("{e:#}"))),
+    }
+}
+
+/// `POST /batch`: a JSON array of requests, evaluated in parallel over
+/// the shared session; element `i` of the response array is either a
+/// report or an error object carrying `"index": i`.
+fn handle_batch(state: &ServerState, body: &[u8]) -> (u16, &'static str, String) {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return (400, JSON, error_body(None, None, "request body is not UTF-8"));
+    };
+    let v = match jsonio::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return (400, JSON, error_body(None, None, &format!("parsing batch body: {e:#}")))
+        }
+    };
+    let JsonValue::Arr(items) = v else {
+        return (
+            400,
+            JSON,
+            error_body(None, None, "batch body must be a JSON array of analysis requests"),
+        );
+    };
+    if items.len() > MAX_REQUESTS_PER_CALL {
+        return (
+            400,
+            JSON,
+            error_body(
+                None,
+                None,
+                &format!(
+                    "batch of {} elements exceeds the {MAX_REQUESTS_PER_CALL} element cap (split the batch)",
+                    items.len()
+                ),
+            ),
+        );
+    }
+    // one slot per element: (response JSON, is_error), filled in parallel
+    type BatchSlot = Mutex<Option<(String, bool)>>;
+    let n = items.len();
+    let results: Vec<BatchSlot> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = state.threads.min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let ix = next.fetch_add(1, Ordering::Relaxed);
+                if ix >= n {
+                    break;
+                }
+                let out = evaluate_batch_item(state, &items[ix], ix);
+                *results[ix].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    let mut failed = 0u64;
+    let mut s = String::from("[");
+    for (ix, slot) in results.iter().enumerate() {
+        let (line, is_err) =
+            slot.lock().unwrap().take().expect("every batch element was evaluated");
+        if is_err {
+            failed += 1;
+        }
+        if ix > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&line);
+    }
+    s.push(']');
+    state.metrics.errors_add(Endpoint::Batch, failed);
+    (200, JSON, s)
+}
+
+/// Evaluate one batch element; errors echo the element's `id` (when one
+/// parses) and always its array `index`.
+fn evaluate_batch_item(
+    state: &ServerState,
+    item: &JsonValue,
+    ix: usize,
+) -> (String, bool) {
+    let id = item.get("id").and_then(|x| x.as_str().map(str::to_string));
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        AnalysisRequest::from_json_value(item).and_then(|req| state.session.evaluate(&req))
+    }));
+    match outcome {
+        Ok(Ok(report)) => (report.to_json(), false),
+        Ok(Err(e)) => (error_body(id.as_deref(), Some(ix), &format!("{e:#}")), true),
+        Err(_) => (
+            error_body(id.as_deref(), Some(ix), "internal panic evaluating request"),
+            true,
+        ),
+    }
+}
+
+/// `POST /stream`: the JSON-lines wire protocol of stdin-mode serve,
+/// carried in an HTTP body — one response line per request line, same
+/// framing, comments, and error-line rules (docs/SERVE.md).
+fn handle_stream(state: &ServerState, body: &[u8]) -> (u16, &'static str, String) {
+    // responses are buffered before the status line goes out, so bound
+    // the request count — report lines amplify small request lines ~50×
+    let lines = body.iter().filter(|&&b| b == b'\n').count()
+        + usize::from(!body.is_empty() && body.last() != Some(&b'\n'));
+    if lines > MAX_REQUESTS_PER_CALL {
+        return (
+            400,
+            JSON,
+            error_body(
+                None,
+                None,
+                &format!(
+                    "stream body of {lines} lines exceeds the {MAX_REQUESTS_PER_CALL} line cap (split the stream)"
+                ),
+            ),
+        );
+    }
+    let mut input: &[u8] = body;
+    let mut output: Vec<u8> = Vec::new();
+    let opts = crate::cli::ServeOptions { threads: state.threads, ordered: true };
+    match crate::cli::serve_with_session(&state.session, &mut input, &mut output, &opts) {
+        Ok(summary) => {
+            state.metrics.errors_add(Endpoint::Stream, summary.errors);
+            let text = String::from_utf8(output).expect("response lines are UTF-8");
+            (200, NDJSON, text)
+        }
+        Err(e) => (500, JSON, error_body(None, None, &format!("{e:#}"))),
+    }
+}
+
+/// The error-object shape shared by every endpoint:
+/// `{"id"?, "index"?, "error"}` — the HTTP counterpart of the JSON-lines
+/// error line (which carries `"line"` instead of `"index"`).
+fn error_body(id: Option<&str>, index: Option<usize>, msg: &str) -> String {
+    let mut s = String::from("{");
+    if let Some(id) = id {
+        s.push_str("\"id\": ");
+        s.push_str(&json_str(id));
+        s.push_str(", ");
+    }
+    if let Some(ix) = index {
+        s.push_str(&format!("\"index\": {ix}, "));
+    }
+    s.push_str("\"error\": ");
+    s.push_str(&json_str(msg));
+    s.push('}');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_state() -> ServerState {
+        ServerState {
+            session: Session::new(),
+            cache: None,
+            metrics: Metrics::default(),
+            threads: 2,
+            max_body: DEFAULT_MAX_BODY_BYTES,
+            verbose: false,
+        }
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> http::HttpRequest {
+        http::HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+            keep_alive: true,
+        }
+    }
+
+    #[test]
+    fn dispatch_routes_and_statuses() {
+        let state = test_state();
+        let (status, _, body) = dispatch(&state, &req("GET", "/healthz", ""));
+        assert_eq!(status, 200);
+        assert!(body.contains("ok"), "{body}");
+        let (status, _, body) = dispatch(&state, &req("GET", "/nope", ""));
+        assert_eq!(status, 404);
+        assert!(body.contains("\"error\""), "{body}");
+        let (status, _, _) = dispatch(&state, &req("GET", "/analyze", ""));
+        assert_eq!(status, 405);
+        let (status, _, _) = dispatch(&state, &req("POST", "/healthz", "x"));
+        assert_eq!(status, 405);
+        let (status, ctype, body) = dispatch(&state, &req("GET", "/metrics", ""));
+        assert_eq!(status, 200);
+        assert!(ctype.starts_with("text/plain"));
+        assert!(body.contains("kerncraft_requests_total"), "{body}");
+        assert!(!body.contains("report_cache"), "no cache configured: {body}");
+    }
+
+    #[test]
+    fn analyze_statuses_split_parse_and_evaluation_errors() {
+        let state = test_state();
+        let good = r#"{"kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}"#;
+        let (status, _, body) = dispatch(&state, &req("POST", "/analyze", good));
+        assert_eq!(status, 200, "{body}");
+        assert!(body.contains("\"kernel\": \"triad\""), "{body}");
+        let (status, _, body) = dispatch(&state, &req("POST", "/analyze", "not json"));
+        assert_eq!(status, 400);
+        assert!(body.contains("\"error\""), "{body}");
+        let bad = r#"{"id": "r9", "kernel": {"name": "nope"}, "machine": "SNB"}"#;
+        let (status, _, body) = dispatch(&state, &req("POST", "/analyze", bad));
+        assert_eq!(status, 422);
+        assert!(body.contains("\"id\": \"r9\""), "{body}");
+        assert!(body.contains("unknown reference kernel"), "{body}");
+    }
+
+    #[test]
+    fn batch_indexes_errors_and_answers_every_element() {
+        let state = test_state();
+        let body = concat!(
+            "[",
+            r#"{"kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}, "#,
+            r#"{"id": "bad", "kernel": {"name": "nope"}, "machine": "SNB"}, "#,
+            r#"{"kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}"#,
+            "]"
+        );
+        let (status, _, text) = dispatch(&state, &req("POST", "/batch", body));
+        assert_eq!(status, 200, "{text}");
+        let v = jsonio::parse(&text).unwrap();
+        let items = v.items();
+        assert_eq!(items.len(), 3, "{text}");
+        assert!(items[0].get("ecm").is_some(), "{text}");
+        assert_eq!(items[1].get("index").and_then(|x| x.as_u64()), Some(1), "{text}");
+        assert_eq!(items[1].get("id").and_then(|x| x.as_str()), Some("bad"));
+        assert!(items[1].get("error").is_some());
+        assert!(items[2].get("ecm").is_some());
+        assert_eq!(state.metrics.errors_for(Endpoint::Batch), 1);
+        // non-array bodies are rejected up front
+        let (status, _, text) = dispatch(&state, &req("POST", "/batch", "{}"));
+        assert_eq!(status, 400, "{text}");
+    }
+
+    #[test]
+    fn query_strings_do_not_change_routing() {
+        let state = test_state();
+        let (status, _, body) = dispatch(&state, &req("GET", "/healthz?probe=1", ""));
+        assert_eq!(status, 200, "{body}");
+        let (status, _, _) = dispatch(&state, &req("GET", "/metrics?format=text", ""));
+        assert_eq!(status, 200);
+        let (status, _, _) = dispatch(&state, &req("GET", "/nope?x", ""));
+        assert_eq!(status, 404);
+        assert_eq!(route("/analyze?pretty"), "/analyze");
+        assert_eq!(route("/analyze"), "/analyze");
+    }
+
+    #[test]
+    fn oversized_batches_and_streams_are_rejected_up_front() {
+        let state = test_state();
+        // a batch over the element cap is refused before any evaluation
+        let mut batch = String::from("[");
+        for ix in 0..(MAX_REQUESTS_PER_CALL + 1) {
+            if ix > 0 {
+                batch.push(',');
+            }
+            batch.push_str("{}");
+        }
+        batch.push(']');
+        let (status, _, body) = dispatch(&state, &req("POST", "/batch", &batch));
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("element cap"), "{body}");
+        // a stream body over the line cap is refused the same way
+        let stream = "x\n".repeat(MAX_REQUESTS_PER_CALL + 1);
+        let (status, _, body) = dispatch(&state, &req("POST", "/stream", &stream));
+        assert_eq!(status, 400, "{body}");
+        assert!(body.contains("line cap"), "{body}");
+        // no evaluation ran for either
+        assert_eq!(state.session.stats().misses(), 0);
+    }
+
+    #[test]
+    fn error_body_shapes() {
+        assert_eq!(error_body(None, None, "x"), "{\"error\": \"x\"}");
+        assert_eq!(
+            error_body(Some("a"), Some(3), "boom"),
+            "{\"id\": \"a\", \"index\": 3, \"error\": \"boom\"}"
+        );
+    }
+}

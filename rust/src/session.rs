@@ -282,6 +282,77 @@ impl AnalysisRequest {
         self.id = Some(id.into());
         self
     }
+
+    /// Canonical persistent-cache key: a [`crate::jsonio::content_hash`]
+    /// over the canonicalized request (id stripped — correlation ids must
+    /// not fragment the cache) plus content digests of the resolved
+    /// kernel source and the machine description (builtin tags digest
+    /// their embedded YAML, paths the file bytes — the same resolution
+    /// order as [`MachineModel::load`]). Two processes computing the
+    /// same key therefore agree byte for byte, and editing a kernel file
+    /// or machine YAML orphans old entries without any bookkeeping — the
+    /// digest simply changes. The report format itself is pinned by the
+    /// crate version, so an upgraded binary never serves a stale layout.
+    /// Errors only when the kernel spec or machine cannot be resolved
+    /// (missing file, unknown tag) — exactly the requests the pipeline
+    /// would reject anyway, so nothing unkeyable is ever cached.
+    ///
+    /// Note: [`Session::evaluate`] does not call this directly — it
+    /// resolves the kernel once and keys through the session's memoized
+    /// (model, digest) machine entry, so the bytes a key describes are
+    /// exactly the bytes the evaluation consumes even while the files
+    /// are being edited.
+    pub fn cache_key(&self) -> Result<String> {
+        let machine_digest = match MachineModel::builtin_yaml(&self.machine) {
+            Some(yml) => jsonio::content_hash(yml.as_bytes()),
+            None => {
+                let bytes = std::fs::read(&self.machine).with_context(|| {
+                    format!("reading machine file {}", self.machine)
+                })?;
+                jsonio::content_hash(&bytes)
+            }
+        };
+        let (label, source) = self.kernel.resolve()?;
+        Ok(self.cache_key_resolved(&machine_digest, &label, &source))
+    }
+
+    /// Compose the cache key from externally resolved inputs (the
+    /// session passes the kernel source it will evaluate and the digest
+    /// memoized with the machine model).
+    fn cache_key_resolved(&self, machine_digest: &str, label: &str, source: &str) -> String {
+        let mut normalized = self.clone();
+        normalized.id = None;
+        let wire = jsonio::parse(&normalized.to_json())
+            .expect("request serialization is well-formed JSON");
+        let mut canon = jsonio::canonical(&wire);
+        canon.push_str("\u{1}label=");
+        canon.push_str(label);
+        canon.push_str("\u{1}kernel-digest=");
+        canon.push_str(&jsonio::content_hash(source.as_bytes()));
+        canon.push_str("\u{1}machine-digest=");
+        canon.push_str(machine_digest);
+        canon.push_str("\u{1}format=");
+        canon.push_str(env!("CARGO_PKG_VERSION"));
+        jsonio::content_hash(canon.as_bytes())
+    }
+}
+
+/// Plug-in seam for a report-level cache consulted by
+/// [`Session::evaluate`] before any pipeline stage runs: `get` answers a
+/// [`AnalysisRequest::cache_key`] with a previously evaluated report,
+/// `put` records a fresh one (its `id` already stripped, so one cached
+/// entry serves every correlation id). Implementations must be safe to
+/// share across the serve worker pool. The shipped implementation is the
+/// disk-backed [`crate::server::cache::DiskCache`] behind
+/// `kerncraft serve --cache-dir`; see docs/OPERATIONS.md for its layout
+/// and invalidation rules.
+pub trait ReportCache: Send + Sync {
+    /// Look up a cached report by key (None on miss or invalid entry).
+    fn get(&self, key: &str) -> Option<AnalysisReport>;
+    /// Store an evaluated report under its key. Failures must be
+    /// swallowed — a broken cache degrades to re-evaluation, never to a
+    /// failed request.
+    fn put(&self, key: &str, report: &AnalysisReport);
 }
 
 // ---------------------------------------------------------------------------
@@ -762,11 +833,21 @@ pub struct Session {
     /// alias old downstream keys.
     sources: ShardedMap<usize>,
     next_source_id: std::sync::atomic::AtomicUsize,
-    machines: ShardedMap<Arc<MachineModel>>,
+    /// Machine key → (model, content digest). The pair is built from
+    /// ONE file read and lives in one memo entry, so the model served
+    /// and the persistent-cache key can never describe different
+    /// versions of a concurrently edited machine file — old-model
+    /// reports stored under new-content keys would permanently poison
+    /// a shared `--cache-dir`.
+    machines: ShardedMap<(Arc<MachineModel>, Arc<str>)>,
     programs: ShardedMap<Arc<Program>>,
     analyses: ShardedMap<Arc<KernelAnalysis>>,
     incore: ShardedMap<Arc<PortModel>>,
     counters: Counters,
+    /// Optional report-level cache consulted before any stage runs (the
+    /// persistent `--cache-dir` seam); None means every request
+    /// evaluates.
+    report_cache: Option<Arc<dyn ReportCache>>,
 }
 
 /// Memo lookup helper: double-checked get-or-insert through a sharded
@@ -803,6 +884,17 @@ impl Session {
         Session::default()
     }
 
+    /// Fresh session whose [`Session::evaluate`] consults (and fills) a
+    /// report-level cache before running any pipeline stage — the seam
+    /// `kerncraft serve --cache-dir` plugs its persistent
+    /// [`crate::server::cache::DiskCache`] into. Cached answers are
+    /// byte-identical re-serializations of the original report (the
+    /// `session` memo counters included), so a warm restart repeats its
+    /// own responses exactly.
+    pub fn with_report_cache(cache: Arc<dyn ReportCache>) -> Session {
+        Session { report_cache: Some(cache), ..Session::default() }
+    }
+
     /// Snapshot of the session-wide memoization counters.
     pub fn stats(&self) -> MemoStats {
         let c = &self.counters;
@@ -818,23 +910,68 @@ impl Session {
         }
     }
 
-    /// Evaluate a request into a serializable report.
+    /// Evaluate a request into a serializable report. With a report
+    /// cache attached ([`Session::with_report_cache`]), a repeated
+    /// request is answered from the cache without running any pipeline
+    /// stage; the cached report's `id` is replaced by this request's.
+    /// Only successful evaluations are cached — errors always re-run.
     pub fn evaluate(&self, req: &AnalysisRequest) -> Result<AnalysisReport> {
-        Ok(self.evaluate_full(req)?.report)
+        let Some(cache) = &self.report_cache else {
+            return Ok(self.evaluate_full(req)?.report);
+        };
+        // key resolution reads each input ONCE and the evaluation below
+        // reuses exactly those bytes: the kernel source resolved here is
+        // threaded into evaluate_resolved, and the machine digest comes
+        // from the same memo entry the model is served from — so a
+        // kernel or machine file edited mid-request can never store a
+        // new-content report under an old-content key (or vice versa),
+        // which would permanently poison a shared cache directory. Key
+        // resolution is not a pipeline stage, so it is deliberately NOT
+        // counted in the memo stats — a request answered from the
+        // persistent cache reports zero stage activity. An unresolvable
+        // kernel or machine cannot be keyed; fall through so the
+        // pipeline produces its real error (nothing unkeyable is ever
+        // cached).
+        let Ok((label, source)) = req.kernel.resolve() else {
+            return Ok(self.evaluate_full(req)?.report);
+        };
+        let Ok((_, machine_digest, _)) = self.memoized_machine(&req.machine) else {
+            return Ok(self.evaluate_resolved(req, label, source)?.report);
+        };
+        let key = req.cache_key_resolved(&machine_digest, &label, &source);
+        if let Some(mut report) = cache.get(&key) {
+            report.id = req.id.clone();
+            return Ok(report);
+        }
+        let report = self.evaluate_resolved(req, label, source)?.report;
+        let mut stored = report.clone();
+        stored.id = None;
+        cache.put(&key, &stored);
+        Ok(report)
     }
 
     /// Evaluate a request, also returning the intermediate stage products.
     pub fn evaluate_full(&self, req: &AnalysisRequest) -> Result<Evaluation> {
+        let (label, source) = req.kernel.resolve()?;
+        self.evaluate_resolved(req, label, source)
+    }
+
+    /// [`Session::evaluate_full`] with the kernel already resolved —
+    /// the seam that lets the persistent-cache path key and evaluate
+    /// one single read of a kernel file.
+    fn evaluate_resolved(
+        &self,
+        req: &AnalysisRequest,
+        label: String,
+        source: Arc<str>,
+    ) -> Result<Evaluation> {
         if req.cores == 0 {
             bail!("request needs at least one core");
         }
-        let (label, source) = req.kernel.resolve()?;
         let mut local = MemoStats::default();
 
         // --- memoized stages (same key scheme the sweep engine used) ---
-        let (machine, hit) = memoize(&self.machines, &req.machine, || {
-            MachineModel::load(&req.machine)
-        })?;
+        let (machine, _digest, hit) = self.memoized_machine(&req.machine)?;
         note(hit, &mut local.machine_hits, &mut local.machine_misses);
         note_global(hit, &self.counters.machine_hits, &self.counters.machine_misses);
 
@@ -949,9 +1086,28 @@ impl Session {
     /// Memoized machine lookup — for consumers needing the model itself
     /// (machine reports, benchmark modes).
     pub fn machine(&self, key: &str) -> Result<Arc<MachineModel>> {
-        let (m, hit) = memoize(&self.machines, key, || MachineModel::load(key))?;
+        let (m, _digest, hit) = self.memoized_machine(key)?;
         note_global(hit, &self.counters.machine_hits, &self.counters.machine_misses);
         Ok(m)
+    }
+
+    /// Machine model + content digest, memoized as one entry built from
+    /// one file read ([`MachineModel::load_with_digest`]): the model a
+    /// request is evaluated with and the digest its persistent-cache
+    /// key carries are created, shared, and evicted together, so they
+    /// can never describe different versions of an edited machine file.
+    /// Callers record the returned hit flag in the memo counters where
+    /// the lookup is a pipeline stage (evaluation), and drop it where
+    /// it is not (cache-key resolution).
+    fn memoized_machine(&self, key: &str) -> Result<(Arc<MachineModel>, Arc<str>, bool)> {
+        if let Some((m, d)) = self.machines.get(key) {
+            return Ok((m, d, true));
+        }
+        let (model, digest) = MachineModel::load_with_digest(key)?;
+        let (m, d) = self
+            .machines
+            .get_or_insert(key, (Arc::new(model), Arc::from(digest.as_str())));
+        Ok((m, d, false))
     }
 
     /// Memoized static analysis of a kernel under constant bindings —
@@ -1914,6 +2070,117 @@ mod tests {
         let session = Session::new();
         let err = session.evaluate(&triad_request().with_cores(0)).unwrap_err();
         assert!(format!("{err}").contains("at least one core"), "{err}");
+    }
+
+    #[test]
+    fn cache_key_ignores_id_and_tracks_content() {
+        let base = triad_request();
+        let k1 = base.cache_key().unwrap();
+        assert_eq!(k1.len(), 32, "{k1}");
+        assert!(k1.bytes().all(|b| b.is_ascii_hexdigit()));
+        assert_eq!(
+            base.clone().with_id("x").cache_key().unwrap(),
+            k1,
+            "correlation ids must not fragment the cache"
+        );
+        // every analysis-relevant field lands in the key
+        assert_ne!(base.clone().with_constant("N", 1).cache_key().unwrap(), k1);
+        assert_ne!(base.clone().with_cores(2).cache_key().unwrap(), k1);
+        assert_ne!(base.clone().with_model(ModelKind::Roofline).cache_key().unwrap(), k1);
+        assert_ne!(
+            base.clone().with_predictor(CachePredictorKind::LayerConditions).cache_key().unwrap(),
+            k1
+        );
+        assert_ne!(
+            base.clone().with_codegen(CodegenSelection::Scalar).cache_key().unwrap(),
+            k1
+        );
+        let hsw = AnalysisRequest::new(KernelSpec::source("triad", TRIAD), "HSW")
+            .with_constant("N", 8_000_000);
+        assert_ne!(hsw.cache_key().unwrap(), k1);
+        // an unresolvable kernel cannot be keyed
+        assert!(AnalysisRequest::new(KernelSpec::named("nope"), "SNB").cache_key().is_err());
+    }
+
+    #[test]
+    fn machine_model_and_digest_are_memoized_together() {
+        let session = Session::new();
+        // builtin tags digest the embedded YAML (same resolution order
+        // as MachineModel::load: a stray file named SNB in the working
+        // directory must not leak into the keys)
+        let (m1, d1, hit1) = session.memoized_machine("SNB").unwrap();
+        assert!(!hit1);
+        assert_eq!(
+            &*d1,
+            jsonio::content_hash(crate::machine::SNB_YML.as_bytes()).as_str()
+        );
+        // the second lookup shares the exact entry — model and digest
+        // can only ever be replaced together
+        let (m2, d2, hit2) = session.memoized_machine("SNB").unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert!(Arc::ptr_eq(&d1, &d2));
+        // file paths digest the text the model was parsed from
+        let (_, df, _) = session.memoized_machine("machines/snb.yml").unwrap();
+        assert_eq!(
+            &*df,
+            jsonio::content_hash(&std::fs::read("machines/snb.yml").unwrap()).as_str()
+        );
+        // an unresolvable machine is an error, never a sentinel key
+        assert!(session.memoized_machine("no/such/machine.yml").is_err());
+        assert!(AnalysisRequest::new(KernelSpec::source("t", TRIAD), "no/such.yml")
+            .cache_key()
+            .is_err());
+    }
+
+    /// In-memory [`ReportCache`] double: stores wire JSON, counts hits.
+    #[derive(Default)]
+    struct MemCache {
+        map: Mutex<HashMap<String, String>>,
+        hits: AtomicU64,
+        misses: AtomicU64,
+    }
+
+    impl ReportCache for MemCache {
+        fn get(&self, key: &str) -> Option<AnalysisReport> {
+            match self.map.lock().unwrap().get(key) {
+                Some(json) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    Some(AnalysisReport::from_json(json).unwrap())
+                }
+                None => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
+            }
+        }
+
+        fn put(&self, key: &str, report: &AnalysisReport) {
+            self.map.lock().unwrap().insert(key.to_string(), report.to_json());
+        }
+    }
+
+    #[test]
+    fn report_cache_seam_short_circuits_second_evaluation() {
+        let cache = Arc::new(MemCache::default());
+        let session = Session::with_report_cache(cache.clone());
+        let first = session.evaluate(&triad_request().with_id("a")).unwrap();
+        assert_eq!(cache.misses.load(Ordering::Relaxed), 1);
+        let after_first = session.stats();
+        assert!(after_first.misses() > 0, "first request ran the pipeline");
+        let second = session.evaluate(&triad_request().with_id("b")).unwrap();
+        assert_eq!(cache.hits.load(Ordering::Relaxed), 1);
+        // the cached answer ran no stage: session-wide counters unchanged
+        assert_eq!(session.stats(), after_first);
+        assert_eq!(second.id.as_deref(), Some("b"), "cached answers echo the new id");
+        let mut expect = first.clone();
+        expect.id = Some("b".to_string());
+        assert_eq!(second, expect, "cached answer matches the original bit for bit");
+        // failing requests are never cached (and still fail cleanly)
+        assert!(session
+            .evaluate(&AnalysisRequest::new(KernelSpec::named("nope"), "SNB"))
+            .is_err());
+        assert!(cache.map.lock().unwrap().len() == 1);
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! End-to-end `kerncraft serve --listen`: real TCP connections against
+//! a bound [`kerncraft::server::Server`] — endpoint routing and status
+//! codes, two concurrent keep-alive connections through a 4-worker
+//! pool, the `/batch` index-carrying error shape, the `/stream`
+//! JSON-lines pass-through, and the warm-restart contract of
+//! `--cache-dir`: a fresh process answers a repeated request
+//! byte-identically from disk without re-running any pipeline stage.
+
+use kerncraft::server::{Server, ServerHandle, ServerOptions};
+use kerncraft::session::AnalysisReport;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+fn start(threads: usize, cache_dir: Option<PathBuf>) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let server = Server::bind(ServerOptions {
+        listen: "127.0.0.1:0".to_string(),
+        threads,
+        cache_dir,
+        max_body_bytes: 1 << 20,
+        verbose: false,
+    })
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle, join)
+}
+
+/// One full request on a fresh connection (`Connection: close`).
+fn send(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").unwrap_or_else(|| panic!("{text}"));
+    let status: u16 = head
+        .lines()
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    (status, body.to_string())
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    send(addr, &format!("GET {path} HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    send(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+/// Read one response from a persistent (keep-alive) connection.
+fn read_response(r: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+const TRIAD: &str =
+    r#"{"kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}"#;
+
+#[test]
+fn endpoints_route_and_report_statuses() {
+    let (addr, handle, join) = start(2, None);
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("ok"), "{body}");
+
+    let (status, body) = post(addr, "/analyze", TRIAD);
+    assert_eq!(status, 200, "{body}");
+    let report = AnalysisReport::from_json(&body).unwrap();
+    assert_eq!(report.kernel, "triad");
+    assert!(report.ecm.is_some());
+
+    // malformed JSON → 400; valid request that fails evaluation → 422
+    let (status, body) = post(addr, "/analyze", "not json");
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("\"error\""), "{body}");
+    let (status, body) = post(
+        addr,
+        "/analyze",
+        r#"{"id": "r1", "kernel": {"name": "nope"}, "machine": "SNB"}"#,
+    );
+    assert_eq!(status, 422, "{body}");
+    assert!(body.contains("\"id\": \"r1\""), "{body}");
+
+    // routing: unknown path, disallowed method, oversized declaration
+    let (status, _) = get(addr, "/nope");
+    assert_eq!(status, 404);
+    let (status, _) = get(addr, "/analyze");
+    assert_eq!(status, 405);
+    let (status, body) = send(
+        addr,
+        "POST /analyze HTTP/1.1\r\nhost: t\r\ncontent-length: 99999999\r\nconnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 413, "{body}");
+
+    let (status, metrics) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    // four hits on /analyze: 200, 400, 422, and the 405 (wrong method
+    // on a known path still counts against that endpoint)
+    assert!(
+        metrics.contains("kerncraft_requests_total{endpoint=\"analyze\"} 4"),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains("kerncraft_errors_total{endpoint=\"analyze\"} 3"),
+        "{metrics}"
+    );
+    assert!(metrics.contains("kerncraft_memo_misses_total{stage=\"program\"}"), "{metrics}");
+    assert!(!metrics.contains("report_cache"), "no cache configured: {metrics}");
+
+    handle.stop();
+    join.join().unwrap();
+}
+
+#[test]
+fn two_concurrent_keepalive_connections_share_the_pool() {
+    let (addr, handle, join) = start(4, None);
+
+    let client = |tag: &'static str| {
+        std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            for i in 0..5 {
+                // vary N so both cold and warm session paths are hit
+                let body = format!(
+                    r#"{{"id": "{tag}-{i}", "kernel": {{"name": "triad"}}, "machine": "SNB", "constants": {{"N": {}}}}}"#,
+                    65536 + i
+                );
+                let raw = format!(
+                    "POST /analyze HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+                    body.len()
+                );
+                stream.write_all(raw.as_bytes()).unwrap();
+                let (status, resp) = read_response(&mut reader);
+                assert_eq!(status, 200, "{resp}");
+                let report = AnalysisReport::from_json(&resp).unwrap();
+                assert_eq!(report.id.as_deref(), Some(format!("{tag}-{i}").as_str()));
+                assert_eq!(report.kernel, "triad");
+            }
+        })
+    };
+    let a = client("a");
+    let b = client("b");
+    a.join().unwrap();
+    b.join().unwrap();
+
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(
+        metrics.contains("kerncraft_requests_total{endpoint=\"analyze\"} 10"),
+        "{metrics}"
+    );
+    // both clients talked over their own accepted connection
+    let conns: u64 = metrics
+        .lines()
+        .find_map(|l| l.strip_prefix("kerncraft_connections_total "))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(conns >= 2, "{metrics}");
+
+    handle.stop();
+    join.join().unwrap();
+}
+
+#[test]
+fn batch_answers_every_element_and_indexes_errors() {
+    let (addr, handle, join) = start(4, None);
+    let body = format!(
+        r#"[{TRIAD}, {{"id": "bad", "kernel": {{"name": "nope"}}, "machine": "SNB"}}, {TRIAD}]"#
+    );
+    let (status, text) = post(addr, "/batch", &body);
+    assert_eq!(status, 200, "{text}");
+    let v = kerncraft::jsonio::parse(&text).unwrap();
+    let items = v.items();
+    assert_eq!(items.len(), 3, "{text}");
+    assert!(items[0].get("ecm").is_some(), "{text}");
+    assert_eq!(items[1].get("index").and_then(|x| x.as_u64()), Some(1), "{text}");
+    assert_eq!(items[1].get("id").and_then(|x| x.as_str()), Some("bad"), "{text}");
+    assert!(items[1].get("error").is_some(), "{text}");
+    assert!(items[2].get("ecm").is_some(), "{text}");
+
+    let (status, text) = post(addr, "/batch", "{}");
+    assert_eq!(status, 400, "{text}");
+
+    handle.stop();
+    join.join().unwrap();
+}
+
+#[test]
+fn stream_endpoint_carries_the_json_lines_protocol() {
+    let (addr, handle, join) = start(2, None);
+    // three physical lines: comment, good request, malformed request
+    let body = concat!(
+        "# comment\n",
+        r#"{"id": "s1", "kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}"#,
+        "\n",
+        "not json\n"
+    );
+    let (status, text) = post(addr, "/stream", body);
+    assert_eq!(status, 200, "{text}");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "{text}");
+    let report = AnalysisReport::from_json(lines[0]).unwrap();
+    assert_eq!(report.id.as_deref(), Some("s1"));
+    // the error line names the offending physical line of the body
+    assert!(lines[1].contains("\"line\": 3"), "{}", lines[1]);
+    assert!(lines[1].contains("\"error\""), "{}", lines[1]);
+
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(
+        metrics.contains("kerncraft_requests_total{endpoint=\"stream\"} 1"),
+        "{metrics}"
+    );
+    assert!(metrics.contains("kerncraft_errors_total{endpoint=\"stream\"} 1"), "{metrics}");
+
+    handle.stop();
+    join.join().unwrap();
+}
+
+#[test]
+fn warm_restart_serves_byte_identical_reports_from_cache_dir() {
+    let dir = std::env::temp_dir()
+        .join(format!("kerncraft_http_e2e_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let request = r#"{"id": "w", "kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}"#;
+
+    // first server: cold cache — evaluates and stores
+    let (addr_a, handle_a, join_a) = start(2, Some(dir.clone()));
+    let (status, body_first) = post(addr_a, "/analyze", request);
+    assert_eq!(status, 200, "{body_first}");
+    let (_, metrics) = get(addr_a, "/metrics");
+    assert!(metrics.contains("kerncraft_report_cache_hits_total 0"), "{metrics}");
+    assert!(metrics.contains("kerncraft_report_cache_misses_total 1"), "{metrics}");
+    assert!(metrics.contains("kerncraft_report_cache_stores_total 1"), "{metrics}");
+    // kill the server
+    handle_a.stop();
+    join_a.join().unwrap();
+
+    // fresh process stand-in: a brand-new server (new Session, new
+    // caches) over the same directory answers from disk
+    let (addr_b, handle_b, join_b) = start(2, Some(dir.clone()));
+    let (status, body_again) = post(addr_b, "/analyze", request);
+    assert_eq!(status, 200, "{body_again}");
+    assert_eq!(body_again, body_first, "cached answer must be byte-identical");
+    let (_, metrics) = get(addr_b, "/metrics");
+    assert!(metrics.contains("kerncraft_report_cache_hits_total 1"), "{metrics}");
+    assert!(metrics.contains("kerncraft_report_cache_misses_total 0"), "{metrics}");
+    // no pipeline stage ran in the fresh process: every memo counter is
+    // still zero — the MemoStats proof that the analysis was not re-run
+    assert!(
+        metrics.contains("kerncraft_memo_misses_total{stage=\"program\"} 0"),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains("kerncraft_memo_misses_total{stage=\"machine\"} 0"),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains("kerncraft_memo_misses_total{stage=\"incore\"} 0"),
+        "{metrics}"
+    );
+
+    // a different request still evaluates (and seeds the cache for it)
+    let other = r#"{"kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 131072}}"#;
+    let (status, _) = post(addr_b, "/analyze", other);
+    assert_eq!(status, 200);
+    let (_, metrics) = get(addr_b, "/metrics");
+    assert!(metrics.contains("kerncraft_report_cache_stores_total 1"), "{metrics}");
+
+    handle_b.stop();
+    join_b.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

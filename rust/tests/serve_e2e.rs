@@ -109,6 +109,14 @@ fn concurrent_serve_answers_interleaved_stream_in_order() {
         let line = lines[ids.iter().position(|x| x == id).unwrap()];
         assert!(line.contains("\"error\""), "{line}");
     }
+    // error lines name the offending PHYSICAL input line, parallel
+    // pipeline included: the stream opens with a comment and a blank
+    // line, then 25 warm requests, jacobi-hsw, val — putting bad-kernel
+    // on line 30 and bad-model on line 31
+    let bad_kernel = lines[ids.iter().position(|x| x == "bad-kernel").unwrap()];
+    assert!(bad_kernel.contains("\"line\": 30"), "{bad_kernel}");
+    let bad_model = lines[ids.iter().position(|x| x == "bad-model").unwrap()];
+    assert!(bad_model.contains("\"line\": 31"), "{bad_model}");
     // warm-cache hit counters rose: 25 identical requests through 4
     // workers cannot all miss
     assert!(summary.stats.hits() > 0, "{:?}", summary.stats);
