@@ -1,0 +1,5 @@
+double a[N];
+float b[N];
+
+for (int i = 0; i < N; ++i)
+    a[i] = (double)b[i] * 0.5;

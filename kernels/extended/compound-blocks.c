@@ -1,0 +1,6 @@
+double a[N], b[N], c[N];
+
+for (int i = 0; i < N; ++i) {
+    { a[i] = b[i] + 1.0; }
+    { c[i] = b[i] - 1.0; }
+}

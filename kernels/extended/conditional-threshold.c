@@ -1,0 +1,8 @@
+double a[N], b[N], t;
+
+for (int i = 0; i < N; ++i) {
+    if (b[i] > 0.0)
+        a[i] = b[i] * t;
+    else
+        a[i] = 0.0;
+}

@@ -1,0 +1,8 @@
+#define ROWS 512
+#define COLS 512
+
+double a[ROWS][COLS], b[ROWS][COLS];
+
+for (int j = 1; j < ROWS - 1; ++j)
+    for (int i = 1; i < COLS - 1; ++i)
+        b[j][i] = a[j][i] * 0.5;

@@ -1,0 +1,4 @@
+double a[N], b[N], s;
+
+for (int i = 0; N > i; ++i)
+    a[i] = s * b[i];

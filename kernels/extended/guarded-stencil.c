@@ -1,0 +1,6 @@
+double a[N][N], b[N][N], lo, hi;
+
+for (int j = 1; j < N - 1; ++j)
+    for (int i = 1; i < N - 1; ++i)
+        if (a[j][i] > lo && a[j][i] < hi)
+            b[j][i] = a[j][i];

@@ -1,0 +1,5 @@
+double a[N][N], b[N][N];
+
+for (int j = 1; j <= N - 2; j++)
+    for (int i = 1; i <= N - 2; i++)
+        b[j][i] = 0.25 * (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]);

@@ -1,0 +1,6 @@
+double a[N], b[N], c[N], d[N], s, t;
+
+for (int i = 0; i < N; ++i) {
+    a[i] = s * c[i] + d[i];
+    b[i] = t * c[i] - d[i];
+}

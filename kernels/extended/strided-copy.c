@@ -1,0 +1,4 @@
+double a[N], b[N];
+
+for (int i = 0; i < N; i += 2)
+    a[i] = b[i];

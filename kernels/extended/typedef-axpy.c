@@ -1,0 +1,7 @@
+typedef double real;
+
+real x[N], y[N];
+real alpha;
+
+for (int i = 0; i < N; ++i)
+    y[i] = alpha * x[i] + y[i];

@@ -1,0 +1,8 @@
+typedef double real;
+typedef real scalar;
+
+scalar a[N], b[N];
+scalar q;
+
+for (size_t i = 0; i < N; ++i)
+    a[i] = q * b[i];

@@ -1,0 +1,4 @@
+double a[N], b[N];
+
+for (int i = 0; i < N; i = i + 4)
+    a[i] = 2.0 * b[i];

@@ -198,6 +198,9 @@ pub fn usage() -> String {
               --cache-viz  --machine-report  --scalar\n\
               --bench-path {virtual,native,pjrt}  --artifacts DIR\n\
      \n\
+     parse-only lint (exit code = number of failing files):\n\
+     kerncraft check FILE...\n\
+     \n\
      batched sweeps over problem-size grids:\n\
      kerncraft sweep [-m M1,M2] kernel.c -D NAME GRID [-D NAME2 GRID2 ...]\n\
               GRID: VALUE | START:END[:log2|*K|+K]   (suffixes k/M/G, 1024-based)\n\
@@ -251,6 +254,9 @@ pub fn run(argv: &[String]) -> Result<String> {
     match argv.first().map(String::as_str) {
         Some("sweep") => return run_sweep(&argv[1..]),
         Some("serve") => return run_serve(&argv[1..]),
+        // main.rs dispatches `check` itself to map the failure count to
+        // the exit code; this arm serves library callers of `run`
+        Some("check") => return run_check(&argv[1..]).map(|(report, _)| report),
         _ => {}
     }
     let args = parse_args(argv)?;
@@ -287,7 +293,7 @@ pub fn run(argv: &[String]) -> Result<String> {
     }
 
     let request = request_from_args(&args)?.expect("non-benchmark mode has a request");
-    let ev = session.evaluate_full(&request)?;
+    let ev = session.evaluate_full(&request).map_err(render_frontend_error)?;
 
     if args.format == OutputFormat::Json {
         // structured output: exactly one JSON document, no text extras
@@ -305,6 +311,41 @@ pub fn run(argv: &[String]) -> Result<String> {
         }
     }
     Ok(out)
+}
+
+/// Swap a kernel-frontend failure's single-line message for the
+/// caret-rendered diagnostic block — the terminal front door of the
+/// structured diagnostics (serve tiers embed the JSON form instead).
+fn render_frontend_error(e: anyhow::Error) -> anyhow::Error {
+    match e.downcast_ref::<crate::kernel::KernelError>() {
+        Some(ke) => anyhow!("{}", ke.diag.render()),
+        None => e,
+    }
+}
+
+/// `kerncraft check FILE...` — the parse-only lint: run every file
+/// through the full frontend pipeline (lex, parse, lower — no constant
+/// binding, so unbound symbolic sizes are fine) and report `ok` or the
+/// caret-rendered diagnostic per file. Returns the report text and the
+/// number of failing files; `main` uses the count as the exit code.
+pub fn run_check(argv: &[String]) -> Result<(String, usize)> {
+    if argv.is_empty() || argv.iter().any(|a| a == "-h" || a == "--help") {
+        bail!("check needs at least one kernel file\n{}", usage());
+    }
+    let mut out = String::new();
+    let mut failed = 0usize;
+    for path in argv {
+        let source = std::fs::read_to_string(path)
+            .with_context(|| format!("reading kernel file {path}"))?;
+        match crate::kernel::parser::parse(&source) {
+            Ok(_) => out.push_str(&format!("{path}: ok\n")),
+            Err(e) => {
+                failed += 1;
+                out.push_str(&format!("{path}: {}\n", e.diag.render()));
+            }
+        }
+    }
+    Ok((out, failed))
 }
 
 /// Benchmark mode (paper §4.6): execute the kernel on the virtual
@@ -739,6 +780,12 @@ fn respond(session: &Session, payload: Option<&[u8]>, line_no: u64) -> (String, 
             s.push_str(&format!("\"line\": {line_no}, "));
             s.push_str("\"error\": ");
             s.push_str(&json_str(&format!("{e:#}")));
+            // frontend rejections additionally carry the structured
+            // diagnostic (code, span, snippet, hint — docs/SERVE.md)
+            if let Some(ke) = e.downcast_ref::<crate::kernel::KernelError>() {
+                s.push_str(", \"diagnostic\": ");
+                s.push_str(&ke.diag.to_json());
+            }
             s.push('}');
             (s, true)
         }

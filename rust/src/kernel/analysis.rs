@@ -179,13 +179,13 @@ pub type AccessPattern = (Vec<LinearAccess>, Vec<LinearAccess>);
 fn eval_int(e: &Expr, consts: &HashMap<String, i64>) -> Result<i64, KernelError> {
     match e {
         Expr::Int(v) => Ok(*v),
-        Expr::Float(_) => Err(KernelError::Restriction(
+        Expr::Float(_) => Err(KernelError::restriction(
             "float literal where an integer is required".into(),
         )),
         Expr::Var(name) => consts
             .get(name)
             .copied()
-            .ok_or_else(|| KernelError::UnboundConstant(name.clone())),
+            .ok_or_else(|| KernelError::unbound_constant(name)),
         Expr::Neg(inner) => Ok(-eval_int(inner, consts)?),
         Expr::Binary { op, lhs, rhs } => {
             let l = eval_int(lhs, consts)?;
@@ -196,13 +196,13 @@ fn eval_int(e: &Expr, consts: &HashMap<String, i64>) -> Result<i64, KernelError>
                 BinOp::Mul => l * r,
                 BinOp::Div => {
                     if r == 0 {
-                        return Err(KernelError::Semantic("division by zero in size expression".into()));
+                        return Err(KernelError::semantic("division by zero in size expression".into()));
                     }
                     l / r
                 }
             })
         }
-        Expr::Index { .. } => Err(KernelError::Restriction(
+        Expr::Index { .. } => Err(KernelError::restriction(
             "array access inside a size/bound expression".into(),
         )),
     }
@@ -229,12 +229,12 @@ fn classify_index(
             Expr::Var(name) => consts
                 .get(name)
                 .map(|v| (None, *v))
-                .ok_or_else(|| KernelError::UnboundConstant(name.clone())),
+                .ok_or_else(|| KernelError::unbound_constant(name)),
             Expr::Int(v) => Ok((None, *v)),
             Expr::Neg(inner) => {
                 let (v, o) = split(inner, loop_vars, consts)?;
                 if v.is_some() {
-                    return Err(KernelError::Restriction(
+                    return Err(KernelError::restriction(
                         "negated loop index in array subscript".into(),
                     ));
                 }
@@ -246,7 +246,7 @@ fn classify_index(
                 match (lv, rv) {
                     (Some(v), None) | (None, Some(v)) => Ok((Some(v), lo + ro)),
                     (None, None) => Ok((None, lo + ro)),
-                    (Some(_), Some(_)) => Err(KernelError::Restriction(
+                    (Some(_), Some(_)) => Err(KernelError::restriction(
                         "sum of two loop indices in array subscript".into(),
                     )),
                 }
@@ -257,14 +257,14 @@ fn classify_index(
                 match (lv, rv) {
                     (Some(v), None) => Ok((Some(v), lo - ro)),
                     (None, None) => Ok((None, lo - ro)),
-                    _ => Err(KernelError::Restriction(
+                    _ => Err(KernelError::restriction(
                         "loop index on the right of a subtraction in subscript".into(),
                     )),
                 }
             }
-            other => Err(KernelError::Restriction(format!(
-                "array subscript must be `loop_var ± const` or a constant, found {other:?}"
-            ))),
+            _ => Err(KernelError::restriction(
+                "array subscript must be `loop_var ± const` or a constant expression",
+            )),
         }
     }
     let (var, off) = split(e, loop_vars, consts)?;
@@ -285,10 +285,14 @@ impl KernelAnalysis {
         for l in program.loops() {
             let start = eval_int(&l.start, constants)?;
             let end = eval_int(&l.end, constants)?;
-            if l.step <= 0 {
-                return Err(KernelError::Restriction("non-positive loop step".into()));
+            let step = eval_int(&l.step, constants)?;
+            if step <= 0 {
+                return Err(KernelError::restriction(format!(
+                    "loop step over '{}' must be positive, got {step}",
+                    l.index
+                )));
             }
-            loops.push(LoopInfo { index: l.index.clone(), start, end, step: l.step });
+            loops.push(LoopInfo { index: l.index.clone(), start, end, step });
         }
         let loop_vars: Vec<String> = loops.iter().map(|l| l.index.clone()).collect();
         {
@@ -296,7 +300,7 @@ impl KernelAnalysis {
             sorted.sort();
             sorted.dedup();
             if sorted.len() != loop_vars.len() {
-                return Err(KernelError::Semantic("duplicate loop index variable".into()));
+                return Err(KernelError::semantic("duplicate loop index variable".into()));
             }
         }
 
@@ -380,16 +384,16 @@ impl KernelAnalysis {
                 continue;
             }
             let decl = program.decl(&r.name).ok_or_else(|| {
-                KernelError::Semantic(format!("array '{}' used but not declared", r.name))
+                KernelError::semantic(format!("array '{}' used but not declared", r.name))
             })?;
             if !decl.is_array() {
-                return Err(KernelError::Semantic(format!(
+                return Err(KernelError::semantic(format!(
                     "'{}' is declared scalar but indexed as array",
                     r.name
                 )));
             }
             if decl.dims.len() != r.dims_expr.len() {
-                return Err(KernelError::Semantic(format!(
+                return Err(KernelError::semantic(format!(
                     "array '{}' declared with {} dims but accessed with {}",
                     r.name,
                     decl.dims.len(),
@@ -407,7 +411,7 @@ impl KernelAnalysis {
                     other => {
                         let v = eval_int(other, constants)?;
                         if v <= 0 {
-                            return Err(KernelError::Semantic(format!(
+                            return Err(KernelError::semantic(format!(
                                 "array '{}' dimension {k} resolves to non-positive {v}",
                                 r.name
                             )));
@@ -445,7 +449,7 @@ impl KernelAnalysis {
                     }
                     DimAccess::Relative { var, offset: o } => {
                         let li = loop_vars.iter().position(|v| v == var).ok_or_else(|| {
-                            KernelError::Semantic(format!("index var '{var}' is not a loop index"))
+                            KernelError::semantic(format!("index var '{var}' is not a loop index"))
                         })?;
                         coeffs[li] += info.strides[k] as i64;
                         offset += o * info.strides[k] as i64;
@@ -623,7 +627,7 @@ fn infer_unbounded_extent(
             }
         }
     }
-    Err(KernelError::Semantic(format!(
+    Err(KernelError::semantic(format!(
         "cannot infer extent of unbounded dimension {dim} of '{name}'"
     )))
 }
@@ -777,7 +781,8 @@ mod tests {
     fn unbound_constant_reported() {
         let p = parse(JACOBI).unwrap();
         let err = KernelAnalysis::from_program(&p, &consts(&[("N", 100)])).unwrap_err();
-        assert!(matches!(err, KernelError::UnboundConstant(ref v) if v == "M"));
+        assert_eq!(err.code(), "E201");
+        assert!(err.to_string().contains("unbound constant 'M'"), "{err}");
     }
 
     #[test]

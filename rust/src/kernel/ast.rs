@@ -135,8 +135,10 @@ pub struct Loop {
     pub start: Expr,
     /// Exclusive end expression.
     pub end: Expr,
-    /// Step (positive integer; `++i`/`i++` is 1, `i += k` is `k`).
-    pub step: i64,
+    /// Step expression (`++i`/`i++` lower to `1`, `i += k` to `k`).
+    /// Must evaluate to a positive integer once constants are bound —
+    /// checked by the analysis, which also does the evaluation.
+    pub step: Expr,
     /// Body: either exactly one nested loop or the innermost statements.
     pub body: LoopBody,
 }

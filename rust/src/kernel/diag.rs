@@ -1,0 +1,253 @@
+//! Structured frontend diagnostics (DESIGN.md §3).
+//!
+//! Every stage of the kernel frontend — lexer, parser, lowering,
+//! analysis — reports failures as a [`Diagnostic`]: a stable error
+//! code, a severity, a human message, and (when the failing construct
+//! can be located) a byte-span into the original source plus the
+//! source line it sits on. The one struct feeds all three front doors:
+//! the CLI renders the caret snippet ([`Diagnostic::render`]), the
+//! serve tiers embed the machine-readable form ([`Diagnostic::to_json`])
+//! in their error objects, and `/metrics` counts rejections per code.
+//!
+//! ## Error codes
+//!
+//! Codes are stable API: tooling may match on them, so they are never
+//! renumbered. Lexical errors are `E0xx`, syntactic errors `E1xx`,
+//! lowering/semantic restrictions `E2xx`.
+//!
+//! | code | meaning |
+//! |------|---------|
+//! | E001 | unexpected character |
+//! | E002 | malformed numeric literal |
+//! | E003 | unterminated block comment |
+//! | E100 | unexpected token |
+//! | E101 | unexpected end of input |
+//! | E102 | malformed loop header |
+//! | E103 | malformed declaration |
+//! | E110 | trailing tokens after the loop nest |
+//! | E120 | imperfect loop nest |
+//! | E121 | unsupported construct |
+//! | E200 | language restriction violated |
+//! | E201 | unbound constant |
+//! | E202 | semantic error |
+
+use crate::jsonio::json_str;
+use std::fmt;
+
+/// A half-open byte range `[start, end)` into the kernel source, plus
+/// the 1-based line/column of `start` (columns count characters, so
+/// caret rendering lines up with what an editor shows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Byte offset of the first byte of the spanned text.
+    pub start: usize,
+    /// Byte offset one past the last byte of the spanned text.
+    pub end: usize,
+    /// 1-based source line of `start`.
+    pub line: usize,
+    /// 1-based character column of `start` within its line.
+    pub col: usize,
+}
+
+impl Span {
+    /// A zero-width span at a point (used for end-of-input positions).
+    pub fn point(offset: usize, line: usize, col: usize) -> Span {
+        Span { start: offset, end: offset, line, col }
+    }
+}
+
+/// Diagnostic severity. The frontend currently only emits errors, but
+/// the wire format carries the field so warnings can be added without
+/// breaking consumers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// A structured frontend diagnostic. Construct with
+/// [`Diagnostic::error`] and the `with_*` builders; `snippet` is
+/// captured from the source at construction time (via
+/// [`Diagnostic::with_snippet`]) so rendering never needs the source
+/// again — the source string does not survive past the frontend in
+/// the session pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable error code (`E001`…`E202`, see module docs).
+    pub code: &'static str,
+    pub severity: Severity,
+    /// One-line human message, no trailing punctuation.
+    pub message: String,
+    /// Location of the offending construct, when known.
+    pub span: Option<Span>,
+    /// The full source line containing `span.start`, tabs expanded to
+    /// single spaces so the caret column stays aligned.
+    pub snippet: Option<String>,
+    /// Optional remedy ("pass -D N <value>", …).
+    pub hint: Option<String>,
+}
+
+impl Diagnostic {
+    /// A new error diagnostic with no location attached yet.
+    pub fn error(code: &'static str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Error,
+            message: message.into(),
+            span: None,
+            snippet: None,
+            hint: None,
+        }
+    }
+
+    pub fn with_span(mut self, span: Span) -> Diagnostic {
+        self.span = Some(span);
+        self
+    }
+
+    pub fn with_hint(mut self, hint: impl Into<String>) -> Diagnostic {
+        self.hint = Some(hint.into());
+        self
+    }
+
+    /// Capture the source line under `self.span` so the diagnostic can
+    /// be caret-rendered later without the source text.
+    pub fn with_snippet(mut self, source: &str) -> Diagnostic {
+        if let Some(span) = self.span {
+            let line = source.lines().nth(span.line.saturating_sub(1)).unwrap_or("");
+            self.snippet = Some(line.replace('\t', " "));
+        }
+        self
+    }
+
+    /// Multi-line human rendering with a caret marking the span:
+    ///
+    /// ```text
+    /// error[E100]: expected ';', found '}'
+    ///   --> line 4, col 12
+    ///    |
+    ///  4 | y[i] = a * x[i] + y[i]
+    ///    |            ^
+    ///    = hint: terminate the statement with ';'
+    /// ```
+    pub fn render(&self) -> String {
+        let mut s = format!("{}[{}]: {}", self.severity.as_str(), self.code, self.message);
+        if let Some(span) = self.span {
+            s.push_str(&format!("\n  --> line {}, col {}", span.line, span.col));
+            if let Some(snippet) = &self.snippet {
+                let gutter = span.line.to_string().len().max(2);
+                // clamp the caret run to what is left of the line so a
+                // span ending past it (e.g. end-of-input) stays inside
+                let remaining = snippet.chars().count().saturating_sub(span.col - 1).max(1);
+                let carets = "^".repeat((span.end - span.start).clamp(1, remaining));
+                s.push_str(&format!("\n {:gutter$} |", ""));
+                s.push_str(&format!("\n {:>gutter$} | {}", span.line, snippet));
+                s.push_str(&format!("\n {:gutter$} | {}{}", "", " ".repeat(span.col.saturating_sub(1)), carets));
+            }
+        }
+        if let Some(hint) = &self.hint {
+            s.push_str(&format!("\n   = hint: {hint}"));
+        }
+        s
+    }
+
+    /// Machine-readable JSON object, embedded by the serve tiers in
+    /// their error bodies (docs/SERVE.md):
+    /// `{"code", "severity", "message", "span"?: {"line","col","start","end"},
+    ///   "snippet"?, "hint"?}`.
+    pub fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"code\": {}, \"severity\": {}, \"message\": {}",
+            json_str(self.code),
+            json_str(self.severity.as_str()),
+            json_str(&self.message)
+        );
+        if let Some(span) = self.span {
+            s.push_str(&format!(
+                ", \"span\": {{\"line\": {}, \"col\": {}, \"start\": {}, \"end\": {}}}",
+                span.line, span.col, span.start, span.end
+            ));
+        }
+        if let Some(snippet) = &self.snippet {
+            s.push_str(&format!(", \"snippet\": {}", json_str(snippet)));
+        }
+        if let Some(hint) = &self.hint {
+            s.push_str(&format!(", \"hint\": {}", json_str(hint)));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// One-line form: `error[E100] at 4:12: expected ';', found '}'`.
+/// This is what `{e:#}` prints through the anyhow chain, so it stays
+/// single-line for the JSON-lines serve tier.
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.severity.as_str(), self.code)?;
+        if let Some(span) = self.span {
+            write!(f, " at {}:{}", span.line, span.col)?;
+        }
+        write!(f, ": {}", self.message)?;
+        if let Some(hint) = &self.hint {
+            write!(f, " (hint: {hint})")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_places_caret_under_span() {
+        let src = "double a[8];\nfor (int i = 0; i < 8 ++i)\n";
+        let d = Diagnostic::error("E100", "expected ';', found '++'")
+            .with_span(Span { start: 35, end: 37, line: 2, col: 23 })
+            .with_snippet(src)
+            .with_hint("separate the loop header clauses with ';'");
+        let r = d.render();
+        assert!(r.starts_with("error[E100]: expected ';', found '++'"), "{r}");
+        assert!(r.contains("--> line 2, col 23"), "{r}");
+        assert!(r.contains(" 2 | for (int i = 0; i < 8 ++i)"), "{r}");
+        let caret_line = r.lines().nth(4).unwrap();
+        assert_eq!(caret_line.find('^'), caret_line.find("^^"), "span width renders two carets: {r}");
+        // caret column lines up with the '+' in the snippet line
+        let snippet_line = r.lines().nth(3).unwrap();
+        assert_eq!(snippet_line.find("++"), caret_line.find("^^"), "{r}");
+        assert!(r.ends_with("= hint: separate the loop header clauses with ';'"), "{r}");
+    }
+
+    #[test]
+    fn display_is_single_line() {
+        let d = Diagnostic::error("E201", "unbound constant 'M'")
+            .with_hint("pass -D M <value>");
+        let line = d.to_string();
+        assert_eq!(line, "error[E201]: unbound constant 'M' (hint: pass -D M <value>)");
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn json_carries_span_and_hint() {
+        let d = Diagnostic::error("E001", "unexpected character '@'")
+            .with_span(Span { start: 3, end: 4, line: 1, col: 4 });
+        let v = crate::jsonio::parse(&d.to_json()).unwrap();
+        assert_eq!(v.get("code").and_then(|c| c.as_str()), Some("E001"));
+        assert_eq!(v.get("severity").and_then(|c| c.as_str()), Some("error"));
+        let span = v.get("span").unwrap();
+        assert_eq!(span.get("line").and_then(|x| x.as_i64()), Some(1));
+        assert_eq!(span.get("col").and_then(|x| x.as_i64()), Some(4));
+        assert_eq!(span.get("start").and_then(|x| x.as_i64()), Some(3));
+        assert!(v.get("hint").is_none());
+    }
+}

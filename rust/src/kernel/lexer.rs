@@ -1,259 +1,482 @@
-//! Tokenizer for the restricted kernel language.
+//! Tokenizer for the restricted kernel language (DESIGN.md §3, stage 1).
+//!
+//! Produces a flat token stream where every token carries a byte
+//! [`Span`] into the original source. Handles `//` and `/* */`
+//! comments, preprocessor lines (only `#define NAME <literal>` has an
+//! effect: later uses of `NAME` are substituted by the literal, span
+//! kept at the use site; other `#` lines are skipped like the real
+//! preprocessor output would be), and the full operator set of the
+//! surface grammar — including comparisons and logical operators so
+//! conditionals inside loop bodies lex cleanly.
 
+use super::diag::{Diagnostic, Span};
 use super::KernelError;
+use std::collections::HashMap;
 
-/// A lexical token with its source position (1-based line/column).
-#[derive(Debug, Clone, PartialEq)]
-pub struct Token {
-    pub kind: TokenKind,
-    pub line: usize,
-    pub col: usize,
+/// Keywords recognized by the frontend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kw {
+    For,
+    If,
+    Else,
+    Typedef,
+    Int,
+    Long,
+    Short,
+    Char,
+    Signed,
+    Unsigned,
+    Double,
+    Float,
+    Void,
+    Const,
+    Static,
+    Restrict,
 }
 
-/// Token kinds. Keywords are folded into [`TokenKind::Kw`].
+impl Kw {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kw::For => "for",
+            Kw::If => "if",
+            Kw::Else => "else",
+            Kw::Typedef => "typedef",
+            Kw::Int => "int",
+            Kw::Long => "long",
+            Kw::Short => "short",
+            Kw::Char => "char",
+            Kw::Signed => "signed",
+            Kw::Unsigned => "unsigned",
+            Kw::Double => "double",
+            Kw::Float => "float",
+            Kw::Void => "void",
+            Kw::Const => "const",
+            Kw::Static => "static",
+            Kw::Restrict => "restrict",
+        }
+    }
+
+    fn of(word: &str) -> Option<Kw> {
+        Some(match word {
+            "for" => Kw::For,
+            "if" => Kw::If,
+            "else" => Kw::Else,
+            "typedef" => Kw::Typedef,
+            "int" => Kw::Int,
+            "long" => Kw::Long,
+            "short" => Kw::Short,
+            "char" => Kw::Char,
+            "signed" => Kw::Signed,
+            "unsigned" => Kw::Unsigned,
+            "double" => Kw::Double,
+            "float" => Kw::Float,
+            "void" => Kw::Void,
+            "const" => Kw::Const,
+            "static" => Kw::Static,
+            "restrict" | "__restrict" | "__restrict__" => Kw::Restrict,
+            _ => return None,
+        })
+    }
+}
+
+/// Token kinds. `CompoundAssign('+')` is `+=` and so on.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TokenKind {
-    /// Identifier (variable / array name).
     Ident(String),
-    /// Integer literal.
     Int(i64),
-    /// Floating-point literal (including forms like `0.25`, `2.f`, `1e-3`).
     Float(f64),
-    /// Keyword: `for`, `int`, `long`, `double`, `float`, `const`,
-    /// `unsigned`, `restrict`.
     Kw(Kw),
     LParen,
     RParen,
-    LBracket,
-    RBracket,
     LBrace,
     RBrace,
-    Semicolon,
+    LBracket,
+    RBracket,
+    Semi,
     Comma,
-    /// `=`
     Assign,
-    /// `+=`, `-=`, `*=`, `/=`
-    CompoundAssign(char),
     Plus,
     Minus,
     Star,
     Slash,
-    /// `<`
+    CompoundAssign(char),
     Lt,
-    /// `<=`
     Le,
-    /// `>`
     Gt,
-    /// `>=`
     Ge,
-    /// `++`
+    EqEq,
+    Ne,
+    AndAnd,
+    OrOr,
+    Bang,
     Incr,
-    /// `--`
     Decr,
 }
 
-/// Recognized keywords.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Kw {
-    For,
-    Int,
-    Long,
-    Double,
-    Float,
-    Const,
-    Unsigned,
-    Restrict,
+impl TokenKind {
+    /// The C source spelling of the token, quoted, for diagnostics —
+    /// `'for'`, `'}'`, `'+='` — never Rust debug formatting.
+    pub fn spelling(&self) -> String {
+        match self {
+            TokenKind::Ident(s) => format!("'{s}'"),
+            TokenKind::Int(v) => format!("'{v}'"),
+            TokenKind::Float(v) => format!("'{v}'"),
+            TokenKind::Kw(k) => format!("'{}'", k.as_str()),
+            TokenKind::LParen => "'('".into(),
+            TokenKind::RParen => "')'".into(),
+            TokenKind::LBrace => "'{'".into(),
+            TokenKind::RBrace => "'}'".into(),
+            TokenKind::LBracket => "'['".into(),
+            TokenKind::RBracket => "']'".into(),
+            TokenKind::Semi => "';'".into(),
+            TokenKind::Comma => "','".into(),
+            TokenKind::Assign => "'='".into(),
+            TokenKind::Plus => "'+'".into(),
+            TokenKind::Minus => "'-'".into(),
+            TokenKind::Star => "'*'".into(),
+            TokenKind::Slash => "'/'".into(),
+            TokenKind::CompoundAssign(op) => format!("'{op}='"),
+            TokenKind::Lt => "'<'".into(),
+            TokenKind::Le => "'<='".into(),
+            TokenKind::Gt => "'>'".into(),
+            TokenKind::Ge => "'>='".into(),
+            TokenKind::EqEq => "'=='".into(),
+            TokenKind::Ne => "'!='".into(),
+            TokenKind::AndAnd => "'&&'".into(),
+            TokenKind::OrOr => "'||'".into(),
+            TokenKind::Bang => "'!'".into(),
+            TokenKind::Incr => "'++'".into(),
+            TokenKind::Decr => "'--'".into(),
+        }
+    }
 }
 
-fn keyword(s: &str) -> Option<Kw> {
-    Some(match s {
-        "for" => Kw::For,
-        "int" => Kw::Int,
-        "long" => Kw::Long,
-        "double" => Kw::Double,
-        "float" => Kw::Float,
-        "const" => Kw::Const,
-        "unsigned" => Kw::Unsigned,
-        "restrict" | "__restrict__" | "__restrict" => Kw::Restrict,
-        _ => return None,
-    })
+/// A token plus its byte span in the original source.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub span: Span,
 }
 
-/// Tokenize `src`. `//` and `/* */` comments and `#`-lines (preprocessor
-/// remnants) are skipped.
-pub fn lex(src: &str) -> Result<Vec<Token>, KernelError> {
-    let mut out = Vec::new();
-    let bytes: Vec<char> = src.chars().collect();
-    let n = bytes.len();
-    let mut i = 0;
-    let mut line = 1usize;
-    let mut col = 1usize;
+struct Lexer<'a> {
+    src: &'a str,
+    chars: Vec<(usize, char)>,
+    pos: usize,
+    line: usize,
+    col: usize,
+    /// `#define NAME <literal>` substitutions seen so far.
+    defines: HashMap<String, TokenKind>,
+}
 
-    macro_rules! push {
-        ($kind:expr, $len:expr) => {{
-            out.push(Token { kind: $kind, line, col });
-            i += $len;
-            col += $len;
-        }};
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Lexer<'a> {
+        Lexer {
+            src,
+            chars: src.char_indices().collect(),
+            pos: 0,
+            line: 1,
+            col: 1,
+            defines: HashMap::new(),
+        }
     }
 
-    while i < n {
-        let c = bytes[i];
-        let c2 = if i + 1 < n { bytes[i + 1] } else { '\0' };
-        match c {
-            '\n' => {
-                i += 1;
-                line += 1;
-                col = 1;
-            }
-            ' ' | '\t' | '\r' => {
-                i += 1;
-                col += 1;
-            }
-            '#' => {
-                // preprocessor line: skip to end of line
-                while i < n && bytes[i] != '\n' {
-                    i += 1;
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).map(|&(_, c)| c)
+    }
+
+    fn peek2(&self) -> Option<char> {
+        self.chars.get(self.pos + 1).map(|&(_, c)| c)
+    }
+
+    /// Byte offset of the current position (source length at EOF).
+    fn offset(&self) -> usize {
+        self.chars.get(self.pos).map(|&(o, _)| o).unwrap_or(self.src.len())
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let &(_, c) = self.chars.get(self.pos)?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn err(&self, code: &'static str, msg: String, span: Span) -> KernelError {
+        Diagnostic::error(code, msg).with_span(span).with_snippet(self.src).into()
+    }
+
+    fn mark(&self) -> (usize, usize, usize) {
+        (self.offset(), self.line, self.col)
+    }
+
+    fn span_from(&self, start: (usize, usize, usize)) -> Span {
+        Span { start: start.0, end: self.offset(), line: start.1, col: start.2 }
+    }
+
+    /// Skip whitespace, comments and preprocessor lines; errors on an
+    /// unterminated block comment.
+    fn skip_trivia(&mut self) -> Result<(), KernelError> {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_whitespace() => {
+                    self.bump();
                 }
-            }
-            '/' if c2 == '/' => {
-                while i < n && bytes[i] != '\n' {
-                    i += 1;
-                }
-            }
-            '/' if c2 == '*' => {
-                i += 2;
-                col += 2;
-                loop {
-                    if i + 1 >= n {
-                        return Err(KernelError::Lex {
-                            line,
-                            col,
-                            msg: "unterminated block comment".into(),
-                        });
-                    }
-                    if bytes[i] == '*' && bytes[i + 1] == '/' {
-                        i += 2;
-                        col += 2;
-                        break;
-                    }
-                    if bytes[i] == '\n' {
-                        line += 1;
-                        col = 1;
-                        i += 1;
-                    } else {
-                        i += 1;
-                        col += 1;
-                    }
-                }
-            }
-            '(' => push!(TokenKind::LParen, 1),
-            ')' => push!(TokenKind::RParen, 1),
-            '[' => push!(TokenKind::LBracket, 1),
-            ']' => push!(TokenKind::RBracket, 1),
-            '{' => push!(TokenKind::LBrace, 1),
-            '}' => push!(TokenKind::RBrace, 1),
-            ';' => push!(TokenKind::Semicolon, 1),
-            ',' => push!(TokenKind::Comma, 1),
-            '+' if c2 == '+' => push!(TokenKind::Incr, 2),
-            '-' if c2 == '-' => push!(TokenKind::Decr, 2),
-            '+' if c2 == '=' => push!(TokenKind::CompoundAssign('+'), 2),
-            '-' if c2 == '=' => push!(TokenKind::CompoundAssign('-'), 2),
-            '*' if c2 == '=' => push!(TokenKind::CompoundAssign('*'), 2),
-            '/' if c2 == '=' => push!(TokenKind::CompoundAssign('/'), 2),
-            '+' => push!(TokenKind::Plus, 1),
-            '-' => push!(TokenKind::Minus, 1),
-            '*' => push!(TokenKind::Star, 1),
-            '/' => push!(TokenKind::Slash, 1),
-            '<' if c2 == '=' => push!(TokenKind::Le, 2),
-            '<' => push!(TokenKind::Lt, 1),
-            '>' if c2 == '=' => push!(TokenKind::Ge, 2),
-            '>' => push!(TokenKind::Gt, 1),
-            '=' => push!(TokenKind::Assign, 1),
-            c if c.is_ascii_digit() || (c == '.' && c2.is_ascii_digit()) => {
-                let start = i;
-                let start_col = col;
-                let mut is_float = false;
-                while i < n && (bytes[i].is_ascii_digit()) {
-                    i += 1;
-                }
-                if i < n && bytes[i] == '.' {
-                    is_float = true;
-                    i += 1;
-                    while i < n && bytes[i].is_ascii_digit() {
-                        i += 1;
-                    }
-                }
-                if i < n && (bytes[i] == 'e' || bytes[i] == 'E') {
-                    let save = i;
-                    i += 1;
-                    if i < n && (bytes[i] == '+' || bytes[i] == '-') {
-                        i += 1;
-                    }
-                    if i < n && bytes[i].is_ascii_digit() {
-                        is_float = true;
-                        while i < n && bytes[i].is_ascii_digit() {
-                            i += 1;
+                Some('/') if self.peek2() == Some('/') => {
+                    while let Some(c) = self.peek() {
+                        if c == '\n' {
+                            break;
                         }
-                    } else {
-                        i = save; // not an exponent ('e' belongs to an ident? reject later)
+                        self.bump();
                     }
                 }
-                let text: String = bytes[start..i].iter().collect();
-                // float suffixes f/F/l/L (e.g. `2.f` in the long-range kernel)
-                let mut suffixed = false;
-                if i < n && matches!(bytes[i], 'f' | 'F' | 'l' | 'L') {
-                    suffixed = true;
-                    i += 1;
+                Some('/') if self.peek2() == Some('*') => {
+                    let start = self.mark();
+                    self.bump();
+                    self.bump();
+                    loop {
+                        match self.peek() {
+                            Some('*') if self.peek2() == Some('/') => {
+                                self.bump();
+                                self.bump();
+                                break;
+                            }
+                            Some(_) => {
+                                self.bump();
+                            }
+                            None => {
+                                let span = Span {
+                                    start: start.0,
+                                    end: start.0 + 2,
+                                    line: start.1,
+                                    col: start.2,
+                                };
+                                return Err(self.err(
+                                    "E003",
+                                    "unterminated block comment".into(),
+                                    span,
+                                ));
+                            }
+                        }
+                    }
                 }
-                col = start_col + (i - start);
-                if is_float || suffixed && text.contains('.') {
-                    let v: f64 = text.parse().map_err(|_| KernelError::Lex {
-                        line,
-                        col: start_col,
-                        msg: format!("bad float literal '{text}'"),
-                    })?;
-                    out.push(Token { kind: TokenKind::Float(v), line, col: start_col });
-                } else if suffixed {
-                    // e.g. `2f` — treat as float
-                    let v: f64 = text.parse().map_err(|_| KernelError::Lex {
-                        line,
-                        col: start_col,
-                        msg: format!("bad literal '{text}'"),
-                    })?;
-                    out.push(Token { kind: TokenKind::Float(v), line, col: start_col });
-                } else {
-                    let v: i64 = text.parse().map_err(|_| KernelError::Lex {
-                        line,
-                        col: start_col,
-                        msg: format!("bad int literal '{text}'"),
-                    })?;
-                    out.push(Token { kind: TokenKind::Int(v), line, col: start_col });
+                Some('#') => {
+                    self.preprocessor_line();
                 }
-            }
-            c if c.is_ascii_alphabetic() || c == '_' => {
-                let start = i;
-                let start_col = col;
-                while i < n && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_') {
-                    i += 1;
-                }
-                let text: String = bytes[start..i].iter().collect();
-                col = start_col + (i - start);
-                match keyword(&text) {
-                    Some(kw) => out.push(Token { kind: TokenKind::Kw(kw), line, col: start_col }),
-                    None => out.push(Token { kind: TokenKind::Ident(text), line, col: start_col }),
-                }
-            }
-            other => {
-                return Err(KernelError::Lex {
-                    line,
-                    col,
-                    msg: format!("unexpected character '{other}'"),
-                });
+                _ => return Ok(()),
             }
         }
     }
-    Ok(out)
+
+    /// Consume a `#` line. `#define NAME <int|float literal>` records a
+    /// substitution; every other directive is skipped, matching what
+    /// preprocessed kernel source would look like.
+    fn preprocessor_line(&mut self) {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c == '\n' {
+                break;
+            }
+            self.bump();
+        }
+        let text: String = self.chars[start..self.pos].iter().map(|&(_, c)| c).collect();
+        let mut words = text.trim_start_matches('#').split_whitespace();
+        if words.next() != Some("define") {
+            return;
+        }
+        let (Some(name), Some(value)) = (words.next(), words.next()) else { return };
+        if words.next().is_some() {
+            return; // expression-valued macros are not substituted
+        }
+        let kind = if let Ok(v) = value.parse::<i64>() {
+            TokenKind::Int(v)
+        } else if let Ok(v) = value.parse::<f64>() {
+            TokenKind::Float(v)
+        } else {
+            return;
+        };
+        self.defines.insert(name.to_string(), kind);
+    }
+
+    fn number(&mut self) -> Result<TokenKind, KernelError> {
+        let start = self.mark();
+        let mut text = String::new();
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                text.push(c);
+                self.bump();
+            } else if c == '.' && !is_float {
+                is_float = true;
+                text.push(c);
+                self.bump();
+            } else if (c == 'e' || c == 'E')
+                && self
+                    .peek2()
+                    .map(|n| n.is_ascii_digit() || n == '+' || n == '-')
+                    .unwrap_or(false)
+            {
+                is_float = true;
+                text.push(c);
+                self.bump();
+                if let Some(sign @ ('+' | '-')) = self.peek() {
+                    text.push(sign);
+                    self.bump();
+                }
+            } else {
+                break;
+            }
+        }
+        // C float/integer suffixes are accepted and dropped
+        while let Some(c @ ('f' | 'F' | 'l' | 'L' | 'u' | 'U')) = self.peek() {
+            if c == 'f' || c == 'F' {
+                is_float = true;
+            }
+            self.bump();
+        }
+        let parsed = if is_float {
+            text.parse::<f64>().map(TokenKind::Float).ok()
+        } else {
+            text.parse::<i64>().map(TokenKind::Int).ok()
+        };
+        parsed.ok_or_else(|| {
+            self.err("E002", format!("malformed numeric literal '{text}'"), self.span_from(start))
+        })
+    }
+
+    fn next_token(&mut self) -> Result<Option<Token>, KernelError> {
+        self.skip_trivia()?;
+        let start = self.mark();
+        let Some(c) = self.peek() else { return Ok(None) };
+        let kind = if c.is_ascii_alphabetic() || c == '_' {
+            let mut word = String::new();
+            while let Some(c) = self.peek() {
+                if c.is_ascii_alphanumeric() || c == '_' {
+                    word.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            if let Some(kw) = Kw::of(&word) {
+                TokenKind::Kw(kw)
+            } else if let Some(sub) = self.defines.get(&word) {
+                sub.clone()
+            } else {
+                TokenKind::Ident(word)
+            }
+        } else if c.is_ascii_digit()
+            || (c == '.' && self.peek2().map(|n| n.is_ascii_digit()).unwrap_or(false))
+        {
+            self.number()?
+        } else {
+            self.bump();
+            match c {
+                '(' => TokenKind::LParen,
+                ')' => TokenKind::RParen,
+                '{' => TokenKind::LBrace,
+                '}' => TokenKind::RBrace,
+                '[' => TokenKind::LBracket,
+                ']' => TokenKind::RBracket,
+                ';' => TokenKind::Semi,
+                ',' => TokenKind::Comma,
+                '+' => match self.peek() {
+                    Some('+') => {
+                        self.bump();
+                        TokenKind::Incr
+                    }
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::CompoundAssign('+')
+                    }
+                    _ => TokenKind::Plus,
+                },
+                '-' => match self.peek() {
+                    Some('-') => {
+                        self.bump();
+                        TokenKind::Decr
+                    }
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::CompoundAssign('-')
+                    }
+                    _ => TokenKind::Minus,
+                },
+                '*' => match self.peek() {
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::CompoundAssign('*')
+                    }
+                    _ => TokenKind::Star,
+                },
+                '/' => match self.peek() {
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::CompoundAssign('/')
+                    }
+                    _ => TokenKind::Slash,
+                },
+                '<' => match self.peek() {
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::Le
+                    }
+                    _ => TokenKind::Lt,
+                },
+                '>' => match self.peek() {
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::Ge
+                    }
+                    _ => TokenKind::Gt,
+                },
+                '=' => match self.peek() {
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::EqEq
+                    }
+                    _ => TokenKind::Assign,
+                },
+                '!' => match self.peek() {
+                    Some('=') => {
+                        self.bump();
+                        TokenKind::Ne
+                    }
+                    _ => TokenKind::Bang,
+                },
+                '&' if self.peek() == Some('&') => {
+                    self.bump();
+                    TokenKind::AndAnd
+                }
+                '|' if self.peek() == Some('|') => {
+                    self.bump();
+                    TokenKind::OrOr
+                }
+                other => {
+                    return Err(self.err(
+                        "E001",
+                        format!("unexpected character '{other}'"),
+                        self.span_from(start),
+                    ))
+                }
+            }
+        };
+        Ok(Some(Token { kind, span: self.span_from(start) }))
+    }
+}
+
+/// Tokenize kernel source. Every token carries its byte span;
+/// `#define NAME <literal>` lines substitute later uses of `NAME`.
+pub fn lex(src: &str) -> Result<Vec<Token>, KernelError> {
+    let mut lx = Lexer::new(src);
+    let mut toks = Vec::new();
+    while let Some(tok) = lx.next_token()? {
+        toks.push(tok);
+    }
+    Ok(toks)
 }
 
 #[cfg(test)]
@@ -265,69 +488,112 @@ mod tests {
     }
 
     #[test]
-    fn lexes_simple_loop() {
-        let ks = kinds("for(i=0; i<N; ++i) s += a[i]*b[i];");
-        assert_eq!(ks[0], TokenKind::Kw(Kw::For));
-        assert!(ks.contains(&TokenKind::Incr));
-        assert!(ks.contains(&TokenKind::CompoundAssign('+')));
-        assert!(ks.contains(&TokenKind::Ident("a".into())));
-    }
-
-    #[test]
-    fn lexes_floats_and_suffixes() {
-        assert_eq!(kinds("0.25"), vec![TokenKind::Float(0.25)]);
-        assert_eq!(kinds("2.f"), vec![TokenKind::Float(2.0)]);
-        assert_eq!(kinds("1e-3"), vec![TokenKind::Float(1e-3)]);
-        assert_eq!(kinds("1.5E2"), vec![TokenKind::Float(150.0)]);
-        assert_eq!(kinds("0."), vec![TokenKind::Float(0.0)]);
-    }
-
-    #[test]
-    fn lexes_ints() {
-        assert_eq!(kinds("42"), vec![TokenKind::Int(42)]);
+    fn lexes_loop_header() {
         assert_eq!(
-            kinds("a[5000]"),
+            kinds("for (int i = 0; i < N; ++i)"),
             vec![
-                TokenKind::Ident("a".into()),
-                TokenKind::LBracket,
-                TokenKind::Int(5000),
-                TokenKind::RBracket
+                TokenKind::Kw(Kw::For),
+                TokenKind::LParen,
+                TokenKind::Kw(Kw::Int),
+                TokenKind::Ident("i".into()),
+                TokenKind::Assign,
+                TokenKind::Int(0),
+                TokenKind::Semi,
+                TokenKind::Ident("i".into()),
+                TokenKind::Lt,
+                TokenKind::Ident("N".into()),
+                TokenKind::Semi,
+                TokenKind::Incr,
+                TokenKind::Ident("i".into()),
+                TokenKind::RParen,
             ]
         );
     }
 
     #[test]
-    fn skips_comments_and_preprocessor() {
-        let ks = kinds("// comment\n#define X 1\n/* block\n comment */ x");
-        assert_eq!(ks, vec![TokenKind::Ident("x".into())]);
+    fn tracks_spans_in_bytes_and_lines() {
+        let toks = lex("a =\n  b;").unwrap();
+        assert_eq!(toks[0].span, Span { start: 0, end: 1, line: 1, col: 1 });
+        assert_eq!(toks[1].span, Span { start: 2, end: 3, line: 1, col: 3 });
+        // 'b' sits on line 2, col 3, byte offset 6
+        assert_eq!(toks[2].span, Span { start: 6, end: 7, line: 2, col: 3 });
     }
 
     #[test]
-    fn compound_operators() {
-        assert_eq!(kinds("<="), vec![TokenKind::Le]);
-        assert_eq!(kinds("<"), vec![TokenKind::Lt]);
-        assert_eq!(kinds("-="), vec![TokenKind::CompoundAssign('-')]);
-        assert_eq!(kinds("--"), vec![TokenKind::Decr]);
+    fn lexes_floats_and_suffixes() {
+        assert_eq!(
+            kinds("0.25 1e-3 2.0f 3L"),
+            vec![
+                TokenKind::Float(0.25),
+                TokenKind::Float(1e-3),
+                TokenKind::Float(2.0),
+                TokenKind::Int(3),
+            ]
+        );
     }
 
     #[test]
-    fn restrict_variants_fold_to_keyword() {
-        assert_eq!(kinds("restrict"), vec![TokenKind::Kw(Kw::Restrict)]);
-        assert_eq!(kinds("__restrict__"), vec![TokenKind::Kw(Kw::Restrict)]);
+    fn lexes_comparison_and_logical_operators() {
+        assert_eq!(
+            kinds("a == b != c && d || !e"),
+            vec![
+                TokenKind::Ident("a".into()),
+                TokenKind::EqEq,
+                TokenKind::Ident("b".into()),
+                TokenKind::Ne,
+                TokenKind::Ident("c".into()),
+                TokenKind::AndAnd,
+                TokenKind::Ident("d".into()),
+                TokenKind::OrOr,
+                TokenKind::Bang,
+                TokenKind::Ident("e".into()),
+            ]
+        );
     }
 
     #[test]
-    fn rejects_garbage() {
-        assert!(lex("a @ b").is_err());
-        assert!(lex("/* unterminated").is_err());
+    fn skips_comments_and_unknown_directives() {
+        assert_eq!(
+            kinds("// line\n#include <stdio.h>\n/* block\n */ x"),
+            vec![TokenKind::Ident("x".into())]
+        );
     }
 
     #[test]
-    fn tracks_line_numbers() {
-        let toks = lex("a\nb\n  c").unwrap();
-        assert_eq!(toks[0].line, 1);
-        assert_eq!(toks[1].line, 2);
-        assert_eq!(toks[2].line, 3);
-        assert_eq!(toks[2].col, 3);
+    fn define_substitutes_integer_literal() {
+        let toks = lex("#define N 1024\na[N];").unwrap();
+        assert_eq!(toks[2].kind, TokenKind::Int(1024));
+        // the substituted token keeps the span of the use site
+        assert_eq!(toks[2].span.line, 2);
+        assert_eq!(toks[2].span.col, 3);
+    }
+
+    #[test]
+    fn define_with_expression_value_is_ignored() {
+        let toks = lex("#define N (M+1)\nN").unwrap();
+        assert_eq!(toks[0].kind, TokenKind::Ident("N".into()));
+    }
+
+    #[test]
+    fn rejects_unknown_character_with_span() {
+        let err = lex("a @ b").unwrap_err();
+        assert_eq!(err.code(), "E001");
+        let span = err.diag.span.unwrap();
+        assert_eq!((span.line, span.col, span.start, span.end), (1, 3, 2, 3));
+    }
+
+    #[test]
+    fn rejects_unterminated_block_comment() {
+        let err = lex("x /* open").unwrap_err();
+        assert_eq!(err.code(), "E003");
+        assert_eq!(err.diag.span.unwrap().col, 3);
+    }
+
+    #[test]
+    fn spelling_is_c_source_not_debug() {
+        assert_eq!(TokenKind::Kw(Kw::For).spelling(), "'for'");
+        assert_eq!(TokenKind::RBracket.spelling(), "']'");
+        assert_eq!(TokenKind::CompoundAssign('+').spelling(), "'+='");
+        assert_eq!(TokenKind::Ident("acc".into()).spelling(), "'acc'");
     }
 }

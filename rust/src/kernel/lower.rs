@@ -1,0 +1,303 @@
+//! Lowering: surface [`syntax`] tree → the restricted analysis IR in
+//! [`ast`] (DESIGN.md §3, stage 3).
+//!
+//! This pass normalizes everything the analysis does not want to know
+//! about:
+//!
+//! * `i <= e` bounds become the exclusive `e + 1` (and flipped bounds
+//!   were already re-oriented by the parser);
+//! * casts are erased — the analysis models data movement by declared
+//!   type (paper §4.3);
+//! * compound blocks are flattened into the enclosing body;
+//! * `if`/`else` conditionals are lowered to straight-line code under
+//!   an *all-paths* execution model: the condition's data-dependent
+//!   operands become guard assignments (`__cond0 = b[i];` — preserving
+//!   their reads and arithmetic for traffic and flop counting), then
+//!   the statements of both branches follow unconditionally. This
+//!   matches how the paper treats a kernel body as one steady-state
+//!   iteration mix;
+//! * imperfect nests (a loop mixed with statements, or several loops
+//!   in one body) are rejected with a spanned E120 — the models only
+//!   exist for perfect nests.
+//!
+//! [`syntax`]: super::syntax
+//! [`ast`]: super::ast
+
+use super::ast::{AssignOp, BinOp, Decl, Expr, Loop, LoopBody, Program, Stmt};
+use super::diag::Diagnostic;
+use super::syntax::*;
+use super::KernelError;
+
+/// Lower a parsed surface unit into the analysis IR. `src` is the
+/// original source, used to attach snippets to diagnostics.
+pub fn lower(unit: &Unit, src: &str) -> Result<Program, KernelError> {
+    let mut lw = Lowerer { src, guards: 0 };
+    let decls = unit
+        .decls
+        .iter()
+        .map(|d| {
+            Ok(Decl {
+                name: d.name.clone(),
+                ty: d.ty,
+                dims: d.dims.iter().map(|e| lw.value_expr(e)).collect::<Result<_, _>>()?,
+                init: d.init,
+            })
+        })
+        .collect::<Result<Vec<_>, KernelError>>()?;
+    let nest = lw.lower_loop(&unit.nest)?;
+    Ok(Program { decls, nest })
+}
+
+struct Lowerer<'a> {
+    src: &'a str,
+    /// Counter for synthesized `__cond<k>` guard destinations.
+    guards: usize,
+}
+
+impl<'a> Lowerer<'a> {
+    fn err(&self, code: &'static str, msg: impl Into<String>, span: super::diag::Span) -> KernelError {
+        Diagnostic::error(code, msg).with_span(span).with_snippet(self.src).into()
+    }
+
+    fn lower_loop(&mut self, sl: &SLoop) -> Result<Loop, KernelError> {
+        let start = self.value_expr(&sl.start)?;
+        let mut end = self.value_expr(&sl.bound)?;
+        if sl.cmp == CmpDir::Le {
+            // normalize `i <= e` to the exclusive bound `e + 1`
+            end = Expr::Binary { op: BinOp::Add, lhs: Box::new(end), rhs: Box::new(Expr::Int(1)) };
+        }
+        let step = self.value_expr(&sl.step)?;
+        let mut loops: Vec<&SLoop> = Vec::new();
+        let mut stmts: Vec<Stmt> = Vec::new();
+        self.collect_body(&sl.body, &mut loops, &mut stmts)?;
+        let body = match (loops.as_slice(), stmts.is_empty()) {
+            ([inner], true) => LoopBody::Nest(Box::new(self.lower_loop(inner)?)),
+            ([], false) => LoopBody::Stmts(stmts),
+            ([], true) => return Err(self.err("E120", "loop body is empty", sl.span)),
+            (more, _) => {
+                let offender = if more.len() > 1 { more[1] } else { more[0] };
+                return Err(self
+                    .err(
+                        "E120",
+                        "imperfect loop nest: a loop body must be either one nested loop or a flat list of statements",
+                        offender.span,
+                    )
+                    .diag
+                    .with_hint("hoist the extra statements out of the nest or split the kernel")
+                    .into());
+            }
+        };
+        Ok(Loop { index: sl.index.clone(), start, end, step, body })
+    }
+
+    /// Flatten blocks and lower conditionals/assignments, gathering
+    /// nested loops separately so nest shape can be validated.
+    fn collect_body<'u>(
+        &mut self,
+        items: &'u [SItem],
+        loops: &mut Vec<&'u SLoop>,
+        stmts: &mut Vec<Stmt>,
+    ) -> Result<(), KernelError> {
+        for item in items {
+            match item {
+                SItem::Loop(l) => loops.push(l),
+                SItem::Block(inner) => self.collect_body(inner, loops, stmts)?,
+                SItem::Assign(a) => stmts.push(self.lower_assign(a)?),
+                SItem::If(i) => self.lower_if(i, stmts)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower `if (cond) then else els` into guard assignments followed
+    /// by the statements of both branches (all-paths model, see module
+    /// docs). Loops inside conditionals have no steady-state iteration
+    /// mix and are rejected.
+    fn lower_if(&mut self, sif: &SIf, stmts: &mut Vec<Stmt>) -> Result<(), KernelError> {
+        self.lower_condition(&sif.cond, stmts)?;
+        for items in [&sif.then_items, &sif.else_items] {
+            let mut inner_loops = Vec::new();
+            self.collect_body(items, &mut inner_loops, stmts)?;
+            if let Some(l) = inner_loops.first() {
+                return Err(self
+                    .err("E120", "a loop inside a conditional is not supported", l.span)
+                    .diag
+                    .with_hint("kerncraft models one steady-state iteration mix per nest")
+                    .into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Emit one `__cond<k> = <operand>;` guard per data-dependent
+    /// operand of the condition, preserving its reads and arithmetic.
+    fn lower_condition(&mut self, cond: &SExpr, stmts: &mut Vec<Stmt>) -> Result<(), KernelError> {
+        match &cond.kind {
+            SExprKind::Cmp { lhs, rhs, .. } => {
+                self.guard_operand(lhs, stmts)?;
+                self.guard_operand(rhs, stmts)?;
+            }
+            SExprKind::Logical { lhs, rhs, .. } => {
+                self.lower_condition(lhs, stmts)?;
+                self.lower_condition(rhs, stmts)?;
+            }
+            SExprKind::Not(inner) => self.lower_condition(inner, stmts)?,
+            // a bare arithmetic truth value, e.g. `if (mask[i])`
+            _ => self.guard_operand(cond, stmts)?,
+        }
+        Ok(())
+    }
+
+    fn guard_operand(&mut self, e: &SExpr, stmts: &mut Vec<Stmt>) -> Result<(), KernelError> {
+        if !reads_data(e) {
+            return Ok(()); // pure literal side: no traffic, no guard
+        }
+        let rhs = self.value_expr(e)?;
+        let name = format!("__cond{}", self.guards);
+        self.guards += 1;
+        stmts.push(Stmt { lhs: Expr::Var(name), op: AssignOp::Set, rhs });
+        Ok(())
+    }
+
+    fn lower_assign(&mut self, a: &SAssign) -> Result<Stmt, KernelError> {
+        Ok(Stmt {
+            lhs: self.value_expr(&a.lhs)?,
+            op: a.op,
+            rhs: self.value_expr(&a.rhs)?,
+        })
+    }
+
+    /// Lower a value-position expression. Comparisons and logical
+    /// operators only make sense in `if` conditions; using their
+    /// result as a number is rejected here with the exact span.
+    fn value_expr(&mut self, e: &SExpr) -> Result<Expr, KernelError> {
+        Ok(match &e.kind {
+            SExprKind::Int(v) => Expr::Int(*v),
+            SExprKind::Float(v) => Expr::Float(*v),
+            SExprKind::Var(n) => Expr::Var(n.clone()),
+            SExprKind::Index { array, indices } => Expr::Index {
+                array: array.clone(),
+                indices: indices.iter().map(|i| self.value_expr(i)).collect::<Result<_, _>>()?,
+            },
+            SExprKind::Binary { op, lhs, rhs } => Expr::Binary {
+                op: *op,
+                lhs: Box::new(self.value_expr(lhs)?),
+                rhs: Box::new(self.value_expr(rhs)?),
+            },
+            SExprKind::Neg(inner) => Expr::Neg(Box::new(self.value_expr(inner)?)),
+            SExprKind::Cast { expr, .. } => self.value_expr(expr)?, // casts are erased
+            SExprKind::Cmp { .. } | SExprKind::Logical { .. } | SExprKind::Not(_) => {
+                return Err(self
+                    .err("E121", "a comparison result cannot be used as a value", e.span)
+                    .diag
+                    .with_hint("comparisons are only supported inside `if (...)` conditions")
+                    .into())
+            }
+        })
+    }
+}
+
+/// True when the expression reads any variable or array element.
+fn reads_data(e: &SExpr) -> bool {
+    match &e.kind {
+        SExprKind::Int(_) | SExprKind::Float(_) => false,
+        SExprKind::Var(_) | SExprKind::Index { .. } => true,
+        SExprKind::Binary { lhs, rhs, .. }
+        | SExprKind::Cmp { lhs, rhs, .. }
+        | SExprKind::Logical { lhs, rhs, .. } => reads_data(lhs) || reads_data(rhs),
+        SExprKind::Neg(inner) | SExprKind::Not(inner) | SExprKind::Cast { expr: inner, .. } => {
+            reads_data(inner)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse;
+    use super::*;
+
+    #[test]
+    fn conditional_lowered_to_guard_plus_both_branches() {
+        let src = r#"
+            double a[N], b[N], t;
+            for (int i = 0; i < N; ++i)
+                if (b[i] > 0.0) a[i] = b[i]; else a[i] = t;
+        "#;
+        let p = parse(src).unwrap();
+        let stmts = p.inner_stmts();
+        assert_eq!(stmts.len(), 3);
+        assert_eq!(stmts[0].lhs, Expr::Var("__cond0".into()));
+        assert_eq!(stmts[0].op, AssignOp::Set);
+        // the guard keeps the b[i] read; literal 0.0 emits nothing
+        assert!(matches!(&stmts[0].rhs, Expr::Index { array, .. } if array == "b"));
+    }
+
+    #[test]
+    fn logical_condition_guards_each_data_operand() {
+        let src = r#"
+            double a[N], b[N], c[N];
+            for (int i = 0; i < N; ++i)
+                if (b[i] > 0.0 && c[i] < 1.0) a[i] = 2.0;
+        "#;
+        let p = parse(src).unwrap();
+        let stmts = p.inner_stmts();
+        assert_eq!(stmts.len(), 3);
+        assert_eq!(stmts[1].lhs, Expr::Var("__cond1".into()));
+    }
+
+    #[test]
+    fn blocks_flatten_into_the_body() {
+        let src = r#"
+            double a[N], b[N];
+            for (int i = 0; i < N; ++i) {
+                { a[i] = 1.0; }
+                { { b[i] = 2.0; } }
+            }
+        "#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.inner_stmts().len(), 2);
+    }
+
+    #[test]
+    fn rejects_imperfect_nest_with_span() {
+        let src = r#"
+            double a[N], b[N][N];
+            for (int j = 0; j < N; ++j) {
+                a[j] = 0.0;
+                for (int i = 0; i < N; ++i)
+                    b[j][i] = a[j];
+            }
+        "#;
+        let err = parse(src).unwrap_err();
+        assert_eq!(err.code(), "E120");
+        assert_eq!(err.diag.span.unwrap().line, 5);
+    }
+
+    #[test]
+    fn rejects_loop_inside_conditional() {
+        let src = r#"
+            double a[N][N], s;
+            for (int j = 0; j < N; ++j)
+                if (s > 0.0)
+                    for (int i = 0; i < N; ++i)
+                        a[j][i] = s;
+        "#;
+        let err = parse(src).unwrap_err();
+        assert_eq!(err.code(), "E120");
+    }
+
+    #[test]
+    fn rejects_comparison_as_value_with_span() {
+        let src = "double a[N], b[N];\nfor (int i = 0; i < N; ++i) a[i] = b[i] > 0.0;";
+        let err = parse(src).unwrap_err();
+        assert_eq!(err.code(), "E121");
+        assert_eq!(err.diag.span.unwrap().line, 2);
+    }
+
+    #[test]
+    fn casts_are_erased() {
+        let src = "double a[N], b[N];\nfor (int i = 0; i < N; ++i) a[i] = (float)b[i];";
+        let p = parse(src).unwrap();
+        assert!(matches!(&p.inner_stmts()[0].rhs, Expr::Index { array, .. } if array == "b"));
+    }
+}

@@ -1,51 +1,93 @@
-//! Restricted-C99 kernel language frontend (paper §4.3).
+//! Restricted-C99 kernel language frontend (paper §4.3, DESIGN.md §3).
 //!
 //! Kerncraft analyzes loop kernels written in a small C dialect:
 //! declarations of scalars and fixed-size arrays followed by a single
 //! `for`-loop nest whose innermost body is a sequence of assignment
-//! statements. Array sizes may use symbolic constants (bound on the
-//! command line via `-D NAME VALUE`) with an optional `±integer`, and
-//! array indices must be `loop_var ± integer`, a constant, or a fixed
-//! integer — exactly the restrictions the paper states.
+//! statements, optionally wrapped in conditionals and compound blocks.
+//! Array sizes may use symbolic constants (bound on the command line
+//! via `-D NAME VALUE` or with `#define NAME VALUE` in the source)
+//! with an optional `±integer`, and array indices must be
+//! `loop_var ± integer`, a constant, or a fixed integer — exactly the
+//! restrictions the paper states.
 //!
-//! The module is split conventionally:
-//! * [`lexer`] — tokenizer,
-//! * [`ast`] — syntax tree,
-//! * [`parser`] — recursive-descent parser,
+//! The frontend is a staged pipeline (DESIGN.md §3); every token and
+//! surface-AST node carries a byte-[`Span`] so each stage can point at
+//! the exact source it rejected:
+//!
+//! * [`lexer`] — bytes → spanned tokens (plus `#define` substitution),
+//! * [`syntax`] — the span-carrying surface AST,
+//! * [`parser`] — tokens → surface AST (recursive descent),
+//! * [`lower`] — surface AST → the analysis IR in [`ast`] (condition
+//!   guards, cast erasure, `<=`/flipped-bound normalization),
+//! * [`ast`] — the lowered loop-nest IR the models consume,
 //! * [`analysis`] — static analysis: loop stack (Table 2), data sources
 //!   and destinations (Tables 3/4), flop counts, and the linearized
-//!   (1D) access representation that feeds the cache predictor (§4.5).
+//!   (1D) access representation that feeds the cache predictor (§4.5),
+//! * [`diag`] — the structured [`Diagnostic`] every stage reports
+//!   failures through.
 
 pub mod analysis;
 pub mod ast;
+pub mod diag;
 pub mod lexer;
+pub mod lower;
 pub mod parser;
+pub mod syntax;
 
 pub use analysis::{
     AccessPattern, ArrayInfo, DimAccess, FlopCount, KernelAnalysis, LinearAccess, LoopInfo,
     ScalarUse,
 };
 pub use ast::{AssignOp, BinOp, Expr, Program, Stmt, Type};
+pub use diag::{Diagnostic, Severity, Span};
 pub use parser::parse;
 
-use thiserror::Error;
-
-/// Errors produced anywhere in the kernel frontend.
-#[derive(Debug, Error)]
-pub enum KernelError {
-    /// Tokenizer rejected a character or malformed literal.
-    #[error("lex error at line {line}, col {col}: {msg}")]
-    Lex { line: usize, col: usize, msg: String },
-    /// Parser rejected the token stream.
-    #[error("parse error at line {line}, col {col}: {msg}")]
-    Parse { line: usize, col: usize, msg: String },
-    /// Source violates one of the paper's §4.3 restrictions.
-    #[error("unsupported kernel construct: {0}")]
-    Restriction(String),
-    /// A symbolic constant was not bound via `-D`.
-    #[error("unbound constant '{0}' (pass -D {0} <value>)")]
-    UnboundConstant(String),
-    /// Semantic inconsistency (e.g. use of an undeclared array).
-    #[error("semantic error: {0}")]
-    Semantic(String),
+/// The error type of the whole kernel frontend: a [`Diagnostic`] with
+/// a stable code, severity, message, optional span/snippet/hint.
+///
+/// `Display` is the diagnostic's single-line form (so it embeds
+/// cleanly in the JSON-lines serve error strings); front ends that
+/// want the caret-rendered block downcast through `anyhow` and call
+/// [`Diagnostic::render`] on [`KernelError::diag`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelError {
+    pub diag: Diagnostic,
 }
+
+impl KernelError {
+    /// Stable error code of the underlying diagnostic.
+    pub fn code(&self) -> &'static str {
+        self.diag.code
+    }
+
+    /// E200: the source violates one of the paper's §4.3 restrictions.
+    pub fn restriction(msg: impl Into<String>) -> KernelError {
+        Diagnostic::error("E200", msg).into()
+    }
+
+    /// E201: a symbolic constant was not bound via `-D`/`#define`.
+    pub fn unbound_constant(name: &str) -> KernelError {
+        Diagnostic::error("E201", format!("unbound constant '{name}'"))
+            .with_hint(format!("pass -D {name} <value> or add '#define {name} <value>'"))
+            .into()
+    }
+
+    /// E202: semantic inconsistency (e.g. use of an undeclared array).
+    pub fn semantic(msg: impl Into<String>) -> KernelError {
+        Diagnostic::error("E202", msg).into()
+    }
+}
+
+impl From<Diagnostic> for KernelError {
+    fn from(diag: Diagnostic) -> KernelError {
+        KernelError { diag }
+    }
+}
+
+impl std::fmt::Display for KernelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.diag.fmt(f)
+    }
+}
+
+impl std::error::Error for KernelError {}

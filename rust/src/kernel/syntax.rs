@@ -1,0 +1,135 @@
+//! Span-carrying surface AST (DESIGN.md §3, stage 2).
+//!
+//! This tree mirrors what the user actually wrote — casts, compound
+//! blocks, conditionals, comparison/logical expressions, non-canonical
+//! loop bounds — before [`super::lower`] normalizes it into the
+//! restricted IR in [`super::ast`] that the analysis consumes. Every
+//! node keeps the byte [`Span`] of the source it came from so lowering
+//! and analysis can attach exact locations to their diagnostics.
+
+use super::ast::{AssignOp, BinOp, Type};
+use super::diag::Span;
+
+/// A whole kernel: declarations followed by one loop nest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Unit {
+    pub decls: Vec<SDecl>,
+    pub nest: SLoop,
+}
+
+/// A floating-point scalar or array declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SDecl {
+    pub name: String,
+    pub ty: Type,
+    /// One expression per array dimension (empty for scalars). An
+    /// unsized dimension `a[]` is recorded as the `__unbounded__`
+    /// variable, matching the lowered IR convention.
+    pub dims: Vec<SExpr>,
+    /// Literal initializer, when present (`double s = 0.25;`).
+    pub init: Option<f64>,
+    pub span: Span,
+}
+
+/// Comparison direction of a loop bound, already normalized so the
+/// loop index is on the left (`N > i` parses as `i < N`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpDir {
+    /// `i < bound`
+    Lt,
+    /// `i <= bound`
+    Le,
+}
+
+/// A `for` loop with its header clauses still in surface form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SLoop {
+    pub index: String,
+    pub start: SExpr,
+    pub cmp: CmpDir,
+    pub bound: SExpr,
+    /// Increment per iteration (`++i` and `i++` record `1`; `i += s`
+    /// and `i = i + s` record `s`). Positivity is checked at analysis
+    /// time once constants are bound.
+    pub step: SExpr,
+    pub body: Vec<SItem>,
+    pub span: Span,
+}
+
+/// One item of a loop (or block/branch) body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SItem {
+    Loop(SLoop),
+    If(SIf),
+    Assign(SAssign),
+    /// A braced compound statement; flattened during lowering.
+    Block(Vec<SItem>),
+}
+
+/// An `if`/`else` conditional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SIf {
+    pub cond: SExpr,
+    pub then_items: Vec<SItem>,
+    pub else_items: Vec<SItem>,
+    pub span: Span,
+}
+
+/// An assignment statement `lhs op= rhs;`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SAssign {
+    pub lhs: SExpr,
+    pub op: AssignOp,
+    pub rhs: SExpr,
+    pub span: Span,
+}
+
+/// Comparison operators (only valid in condition positions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Short-circuit logical operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogicalOp {
+    And,
+    Or,
+}
+
+/// A surface expression with its source span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SExpr {
+    pub kind: SExprKind,
+    pub span: Span,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum SExprKind {
+    Int(i64),
+    Float(f64),
+    Var(String),
+    Index { array: String, indices: Vec<SExpr> },
+    Binary { op: BinOp, lhs: Box<SExpr>, rhs: Box<SExpr> },
+    Neg(Box<SExpr>),
+    /// A C cast `(double)x` / `(real)x`; erased during lowering (the
+    /// analysis models data movement by declared type, paper §4.3).
+    Cast { ty: String, expr: Box<SExpr> },
+    /// Comparison — only meaningful inside `if` conditions.
+    Cmp { op: CmpOp, lhs: Box<SExpr>, rhs: Box<SExpr> },
+    /// `&&` / `||` — only meaningful inside `if` conditions.
+    Logical { op: LogicalOp, lhs: Box<SExpr>, rhs: Box<SExpr> },
+    /// `!cond` — only meaningful inside `if` conditions.
+    Not(Box<SExpr>),
+}
+
+impl SExpr {
+    pub fn new(kind: SExprKind, span: Span) -> SExpr {
+        SExpr { kind, span }
+    }
+}

@@ -6,6 +6,20 @@ fn main() {
         eprintln!("{}", kerncraft::cli::usage());
         std::process::exit(2);
     }
+    // `check` maps its failure count to the exit code (clamped to the
+    // 8-bit range), so CI can gate on `kerncraft check kernels/*.c`
+    if argv[0] == "check" {
+        match kerncraft::cli::run_check(&argv[1..]) {
+            Ok((report, failed)) => {
+                print!("{report}");
+                std::process::exit(failed.min(255) as i32);
+            }
+            Err(e) => {
+                eprintln!("kerncraft: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
     match kerncraft::cli::run(&argv) {
         Ok(report) => print!("{report}"),
         Err(e) => {

@@ -106,10 +106,17 @@ impl Metrics {
     }
 
     /// Render the text exposition: per-endpoint request/error totals,
-    /// connection counters, the session's per-stage memo counters, and —
-    /// when a persistent cache is attached — its hit/miss/store/invalid
-    /// counters.
-    pub fn render(&self, memo: &MemoStats, cache: Option<CacheStats>) -> String {
+    /// connection counters, the session's per-stage memo counters, the
+    /// per-diagnostic-code rejected-input tallies, and — when a
+    /// persistent cache is attached — its hit/miss/store/invalid
+    /// counters. `rejected` is `(code, count)` pairs, already sorted
+    /// ([`crate::session::Session::rejected_by_code`]).
+    pub fn render(
+        &self,
+        memo: &MemoStats,
+        rejected: &[(String, u64)],
+        cache: Option<CacheStats>,
+    ) -> String {
         let mut s = String::new();
         s.push_str("# kerncraft serve metrics (counters monotonic since process start)\n");
         for ep in Endpoint::ALL {
@@ -147,6 +154,11 @@ impl Metrics {
                 "kerncraft_memo_misses_total{{stage=\"{stage}\"}} {misses}\n"
             ));
         }
+        for (code, count) in rejected {
+            s.push_str(&format!(
+                "kerncraft_rejected_inputs_total{{code=\"{code}\"}} {count}\n"
+            ));
+        }
         if let Some(c) = cache {
             s.push_str(&format!("kerncraft_report_cache_hits_total {}\n", c.hits));
             s.push_str(&format!("kerncraft_report_cache_misses_total {}\n", c.misses));
@@ -171,18 +183,23 @@ mod tests {
         m.connections.fetch_add(1, Ordering::Relaxed);
         let memo = MemoStats { program_hits: 7, ..MemoStats::default() };
         let cache = CacheStats { hits: 1, misses: 2, stores: 2, invalid: 0 };
-        let text = m.render(&memo, Some(cache));
+        let rejected = vec![("E100".to_string(), 4), ("E201".to_string(), 1)];
+        let text = m.render(&memo, &rejected, Some(cache));
         assert!(text.contains("kerncraft_requests_total{endpoint=\"analyze\"} 2"), "{text}");
         assert!(text.contains("kerncraft_requests_total{endpoint=\"batch\"} 1"), "{text}");
         assert!(text.contains("kerncraft_errors_total{endpoint=\"batch\"} 3"), "{text}");
         assert!(text.contains("kerncraft_connections_total 1"), "{text}");
         assert!(text.contains("kerncraft_queue_depth 0"), "{text}");
         assert!(text.contains("kerncraft_memo_hits_total{stage=\"program\"} 7"), "{text}");
+        assert!(text.contains("kerncraft_rejected_inputs_total{code=\"E100\"} 4"), "{text}");
+        assert!(text.contains("kerncraft_rejected_inputs_total{code=\"E201\"} 1"), "{text}");
         assert!(text.contains("kerncraft_report_cache_hits_total 1"), "{text}");
         assert!(text.contains("kerncraft_report_cache_invalid_total 0"), "{text}");
-        // without a cache, the persistent-cache family is absent
-        let text = m.render(&memo, None);
+        // without a cache, the persistent-cache family is absent; with no
+        // rejections, the rejected family is too
+        let text = m.render(&memo, &[], None);
         assert!(!text.contains("report_cache"), "{text}");
+        assert!(!text.contains("rejected_inputs"), "{text}");
     }
 
     #[test]

@@ -14,8 +14,13 @@
 //!   exact stdin/stdout wire protocol of `kerncraft serve`, over HTTP.
 //! * `GET /healthz` — liveness.
 //! * `GET /metrics` — text exposition of per-endpoint request/error
-//!   totals, connection/queue gauges, the session's [`MemoStats`], and
-//!   the persistent-cache counters (see [`metrics`]).
+//!   totals, connection/queue gauges, the session's [`MemoStats`], the
+//!   per-diagnostic-code rejected-input counters, and the
+//!   persistent-cache counters (see [`metrics`]).
+//!
+//! A kernel the frontend rejects answers with 422 and the structured
+//! diagnostic (stable code, span, snippet, hint) as a `"diagnostic"`
+//! object next to the `"error"` string — see docs/SERVE.md.
 //!
 //! With `--cache-dir` the session consults a persistent, cross-process
 //! [`cache::DiskCache`]: a restarted or sibling server answers repeated
@@ -292,6 +297,7 @@ fn dispatch(state: &ServerState, req: &http::HttpRequest) -> (u16, &'static str,
             TEXT,
             state.metrics.render(
                 &state.session.stats(),
+                &state.session.rejected_by_code(),
                 state.cache.as_ref().map(|c| c.stats()),
             ),
         ),
@@ -333,7 +339,7 @@ fn handle_analyze(state: &ServerState, body: &[u8]) -> (u16, &'static str, Strin
     };
     match state.session.evaluate(&req) {
         Ok(report) => (200, JSON, report.to_json()),
-        Err(e) => (422, JSON, error_body(req.id.as_deref(), None, &format!("{e:#}"))),
+        Err(e) => (422, JSON, eval_error_body(req.id.as_deref(), None, &e)),
     }
 }
 
@@ -420,7 +426,7 @@ fn evaluate_batch_item(
     }));
     match outcome {
         Ok(Ok(report)) => (report.to_json(), false),
-        Ok(Err(e)) => (error_body(id.as_deref(), Some(ix), &format!("{e:#}")), true),
+        Ok(Err(e)) => (eval_error_body(id.as_deref(), Some(ix), &e), true),
         Err(_) => (
             error_body(id.as_deref(), Some(ix), "internal panic evaluating request"),
             true,
@@ -478,6 +484,22 @@ fn error_body(id: Option<&str>, index: Option<usize>, msg: &str) -> String {
     s.push_str("\"error\": ");
     s.push_str(&json_str(msg));
     s.push('}');
+    s
+}
+
+/// [`error_body`] for *evaluation* failures: when the failure is a
+/// kernel-frontend rejection, the structured [`crate::kernel::Diagnostic`]
+/// rides along as a `"diagnostic"` object (code, severity, message,
+/// span, snippet, hint — docs/SERVE.md). Other failures keep the plain
+/// shape, so the addition is strictly additive on the wire.
+fn eval_error_body(id: Option<&str>, index: Option<usize>, e: &anyhow::Error) -> String {
+    let mut s = error_body(id, index, &format!("{e:#}"));
+    if let Some(ke) = e.downcast_ref::<crate::kernel::KernelError>() {
+        s.truncate(s.len() - 1); // re-open the object
+        s.push_str(", \"diagnostic\": ");
+        s.push_str(&ke.diag.to_json());
+        s.push('}');
+    }
     s
 }
 
@@ -604,6 +626,31 @@ mod tests {
         assert!(body.contains("line cap"), "{body}");
         // no evaluation ran for either
         assert_eq!(state.session.stats().misses(), 0);
+    }
+
+    #[test]
+    fn frontend_rejection_answers_422_with_diagnostic_and_counts() {
+        let state = test_state();
+        let body = r#"{"id": "bad-src", "kernel": {"source": "double a[N];\nfor (int i = 0; i < N; ++i) a[i] = ;", "label": "broken"}, "machine": "SNB", "constants": {"N": 64}}"#;
+        let (status, _, text) = dispatch(&state, &req("POST", "/analyze", body));
+        assert_eq!(status, 422, "{text}");
+        let v = jsonio::parse(&text).unwrap();
+        assert_eq!(v.get("id").and_then(|x| x.as_str()), Some("bad-src"));
+        let diag = v.get("diagnostic").expect("structured diagnostic rides along");
+        assert_eq!(diag.get("code").and_then(|x| x.as_str()), Some("E100"));
+        let span = diag.get("span").expect("parse errors carry a span");
+        assert_eq!(span.get("line").and_then(|x| x.as_u64()), Some(2));
+        // ...and /metrics now exposes the per-code rejection counter
+        let (_, _, metrics) = dispatch(&state, &req("GET", "/metrics", ""));
+        assert!(
+            metrics.contains("kerncraft_rejected_inputs_total{code=\"E100\"} 1"),
+            "{metrics}"
+        );
+        // non-frontend failures keep the plain error shape
+        let bad_ref = r#"{"kernel": {"name": "nope"}, "machine": "SNB"}"#;
+        let (status, _, text) = dispatch(&state, &req("POST", "/analyze", bad_ref));
+        assert_eq!(status, 422);
+        assert!(!text.contains("diagnostic"), "{text}");
     }
 
     #[test]

@@ -848,6 +848,10 @@ pub struct Session {
     /// persistent `--cache-dir` seam); None means every request
     /// evaluates.
     report_cache: Option<Arc<dyn ReportCache>>,
+    /// Rejected-input tallies per diagnostic code (`E100`, `E200`, ...):
+    /// every kernel the frontend refuses bumps its code here, feeding
+    /// the `kerncraft_rejected_inputs_total` metric family.
+    rejected: Mutex<BTreeMap<String, u64>>,
 }
 
 /// Memo lookup helper: double-checked get-or-insert through a sharded
@@ -1135,7 +1139,8 @@ impl Session {
         let source_id = self.intern_source(source);
         let (program, program_hit) = memoize(&self.programs, &source_id.to_string(), || {
             crate::kernel::parse(source).map_err(anyhow::Error::from)
-        })?;
+        })
+        .map_err(|e| self.note_rejected(e))?;
         note_global(
             program_hit,
             &self.counters.program_hits,
@@ -1146,13 +1151,31 @@ impl Session {
             let consts: HashMap<String, i64> =
                 constants.iter().map(|(k, v)| (k.clone(), *v)).collect();
             KernelAnalysis::from_program(&program, &consts).map_err(anyhow::Error::from)
-        })?;
+        })
+        .map_err(|e| self.note_rejected(e))?;
         note_global(
             analysis_hit,
             &self.counters.analysis_hits,
             &self.counters.analysis_misses,
         );
         Ok((analysis, akey, program_hit, analysis_hit))
+    }
+
+    /// Record a frontend rejection under its diagnostic code (pass-through
+    /// on non-[`KernelError`] failures such as I/O problems).
+    fn note_rejected(&self, e: anyhow::Error) -> anyhow::Error {
+        if let Some(ke) = e.downcast_ref::<crate::kernel::KernelError>() {
+            let mut map = self.rejected.lock().unwrap();
+            *map.entry(ke.code().to_string()).or_insert(0) += 1;
+        }
+        e
+    }
+
+    /// Snapshot of the per-diagnostic-code rejected-input tallies,
+    /// sorted by code (stable metric ordering).
+    pub fn rejected_by_code(&self) -> Vec<(String, u64)> {
+        let map = self.rejected.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
     fn intern_source(&self, source: &str) -> usize {

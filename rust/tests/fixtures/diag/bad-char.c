@@ -1,0 +1,1 @@
+double a@[8];

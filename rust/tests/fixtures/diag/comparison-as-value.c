@@ -1,0 +1,3 @@
+double a[8], b[8];
+for (int i = 0; i < 8; ++i)
+    a[i] = b[i] > 0.0;

@@ -1,0 +1,3 @@
+double a[8];
+for (int i = 8; i > 0; --i)
+    a[i] = 0.0;

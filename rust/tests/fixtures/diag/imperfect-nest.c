@@ -1,0 +1,6 @@
+double a[8], b[8][8];
+for (int j = 0; j < 8; ++j) {
+    a[j] = 0.0;
+    for (int i = 0; i < 8; ++i)
+        b[j][i] = a[j];
+}

@@ -1,0 +1,4 @@
+double a[8];
+for (int i = 0; i < 8; ++i)
+    a[i] = 1.0;
+double z;

@@ -1,0 +1,2 @@
+double a[8]; /* streaming buffer
+for (int i = 0; i < 8; ++i) a[i] = 0.0;

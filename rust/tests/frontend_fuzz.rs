@@ -1,0 +1,249 @@
+//! Frontend robustness tests: a grammar-driven fuzz generator for the
+//! widened kernel language, the extended kernel corpus, and golden
+//! diagnostic fixtures.
+//!
+//! * Valid generated nests must parse AND analyze without panicking —
+//!   and in fact succeed, pinning the grammar the generator encodes.
+//! * Mutated sources must produce a structured [`Diagnostic`] (or still
+//!   parse), but NEVER panic the frontend.
+//! * Every kernel in `kernels/extended/` (constructs the v1 frontend
+//!   rejected) parses and analyzes end to end.
+//! * The fixtures under `rust/tests/fixtures/diag/` pin the exact
+//!   caret-rendered output of `kerncraft check` per diagnostic code.
+//!
+//! Tests run with the package root as working directory (see
+//! Cargo.toml), so `kernels/` and `rust/tests/fixtures/` are reachable
+//! by relative path.
+//!
+//! [`Diagnostic`]: kerncraft::kernel::Diagnostic
+
+use kerncraft::kernel::{parse, KernelAnalysis};
+use std::collections::HashMap;
+
+/// Deterministic 64-bit LCG (fixed seed, no external crates) so every
+/// run fuzzes the same corpus.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+
+    fn chance(&mut self, one_in: usize) -> bool {
+        self.below(one_in) == 0
+    }
+}
+
+/// Generate one valid kernel from the surface grammar: 1-3 loops over
+/// `i`/`j`/`k` in one of the accepted header shapes (canonical, `<=`,
+/// flipped bound, compound/written-out increment), arrays subscripted
+/// by the loop indices (optionally with `±1` offsets under shrunken
+/// bounds), straight-line statements plus optional conditionals,
+/// compound blocks, casts, and a typedef'd element type.
+fn gen_kernel(rng: &mut Rng) -> String {
+    let depth = 1 + rng.below(3);
+    let idx = ["i", "j", "k"];
+    let offsets = rng.chance(3); // ±1 subscripts need shrunken bounds
+    let typedefed = rng.chance(4);
+    let mut src = String::new();
+    if typedefed {
+        src.push_str("typedef double real;\n");
+    }
+    let ty = if typedefed { "real" } else { "double" };
+    let dims: String = "[N]".repeat(depth);
+    src.push_str(&format!("{ty} a{dims}, b{dims}, s;\n"));
+    for v in idx.iter().take(depth) {
+        let header = if offsets {
+            format!("for (int {v} = 1; {v} < N - 1; ++{v})")
+        } else {
+            match rng.below(5) {
+                0 => format!("for (int {v} = 0; {v} < N; ++{v})"),
+                1 => format!("for (int {v} = 0; {v} <= N - 1; {v}++)"),
+                2 => format!("for (int {v} = 0; N > {v}; {v} += 1)"),
+                3 => format!("for (int {v} = 0; {v} < N; {v} = {v} + 1)"),
+                _ => format!("for (int {v} = 0; {v} < N; {v} += 2)"),
+            }
+        };
+        src.push_str(&header);
+        src.push_str(" {\n");
+    }
+    let subs: String = idx.iter().take(depth).map(|v| format!("[{v}]")).collect();
+    let inner = idx[depth - 1];
+    let shifted = {
+        let mut s = String::new();
+        for v in idx.iter().take(depth - 1) {
+            s.push_str(&format!("[{v}]"));
+        }
+        s + &format!("[{inner}-1]")
+    };
+    for _ in 0..(1 + rng.below(3)) {
+        match rng.below(5) {
+            0 => src.push_str(&format!("a{subs} = b{subs} * s;\n")),
+            1 => src.push_str(&format!("a{subs} = a{subs} + b{subs};\n")),
+            2 => src.push_str(&format!("s = s + b{subs};\n")),
+            3 => src.push_str(&format!("a{subs} = (double)b{subs} + 0.5;\n")),
+            _ if offsets => src.push_str(&format!("a{subs} = b{shifted} + b{subs};\n")),
+            _ => src.push_str(&format!("{{ a{subs} = 2.0 * b{subs}; }}\n")),
+        }
+    }
+    if rng.chance(4) {
+        src.push_str(&format!(
+            "if (b{subs} > 0.0 && s < 1.0) a{subs} = s; else a{subs} = 0.0;\n"
+        ));
+    }
+    for _ in 0..depth {
+        src.push_str("}\n");
+    }
+    src
+}
+
+/// Apply one random mutation: delete, duplicate, or replace a
+/// character, or truncate the source.
+fn mutate(src: &str, rng: &mut Rng) -> String {
+    let mut out: Vec<char> = src.chars().collect();
+    if out.is_empty() {
+        return String::new();
+    }
+    match rng.below(4) {
+        0 => {
+            let p = rng.below(out.len());
+            out.remove(p);
+        }
+        1 => {
+            let p = rng.below(out.len());
+            let c = out[p];
+            out.insert(p, c);
+        }
+        2 => {
+            const JUNK: [char; 16] = [
+                '(', ')', ';', '[', ']', '{', '}', '=', '<', '>', '+', '-', '@', '&', '#', '.',
+            ];
+            let p = rng.below(out.len());
+            out[p] = JUNK[rng.below(JUNK.len())];
+        }
+        _ => {
+            let p = rng.below(out.len());
+            out.truncate(p);
+        }
+    }
+    out.into_iter().collect()
+}
+
+#[test]
+fn fuzz_valid_nests_parse_and_analyze() {
+    let mut rng = Rng(0x6b65726e63726166); // fixed seed: deterministic corpus
+    let constants: HashMap<String, i64> = [("N".to_string(), 32)].into_iter().collect();
+    for case in 0..500 {
+        let src = gen_kernel(&mut rng);
+        let program = parse(&src)
+            .unwrap_or_else(|e| panic!("valid case {case} rejected: {e}\n--- source ---\n{src}"));
+        KernelAnalysis::from_program(&program, &constants)
+            .unwrap_or_else(|e| panic!("valid case {case} failed analysis: {e}\n{src}"));
+    }
+}
+
+#[test]
+fn fuzz_mutated_sources_never_panic() {
+    let mut rng = Rng(0x64696167);
+    let mut rejected = 0usize;
+    let mut total = 0usize;
+    for _ in 0..500 {
+        let base = gen_kernel(&mut rng);
+        for _ in 0..2 {
+            let m = mutate(&base, &mut rng);
+            total += 1;
+            // a mutant may still parse; what it must never do is panic,
+            // and every rejection must be a coded diagnostic
+            if let Err(e) = parse(&m) {
+                rejected += 1;
+                assert!(
+                    e.code().starts_with('E'),
+                    "rejection without a stable code: {e}\n{m}"
+                );
+            }
+        }
+    }
+    // sanity: single-character damage trips the frontend often enough
+    // that a silent accept-everything parser would fail here
+    assert!(rejected > total / 10, "only {rejected}/{total} mutants rejected");
+}
+
+#[test]
+fn extended_corpus_parses_and_analyzes() {
+    let constants: HashMap<String, i64> =
+        [("N".to_string(), 64), ("M".to_string(), 32)].into_iter().collect();
+    let mut seen = 0;
+    let mut entries: Vec<_> = std::fs::read_dir("kernels/extended")
+        .expect("kernels/extended exists")
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.extension().and_then(|e| e.to_str()) != Some("c") {
+            continue;
+        }
+        seen += 1;
+        let src = std::fs::read_to_string(&path).unwrap();
+        let program = parse(&src)
+            .unwrap_or_else(|e| panic!("{} rejected: {e}", path.display()));
+        KernelAnalysis::from_program(&program, &constants)
+            .unwrap_or_else(|e| panic!("{} failed analysis: {e}", path.display()));
+    }
+    assert!(seen >= 10, "extended corpus has only {seen} kernels");
+}
+
+#[test]
+fn extended_corpus_evaluates_through_the_session() {
+    use kerncraft::session::{AnalysisRequest, KernelSpec, Session};
+    let session = Session::new();
+    for kernel in ["kernels/extended/typedef-axpy.c", "kernels/extended/conditional-threshold.c"] {
+        let req = AnalysisRequest::new(KernelSpec::path(kernel), "SNB").with_constant("N", 65536);
+        let report = session
+            .evaluate(&req)
+            .unwrap_or_else(|e| panic!("{kernel} failed end to end: {e:#}"));
+        assert!(report.to_json().contains("\"ecm\""), "{kernel}");
+    }
+}
+
+#[test]
+fn golden_diagnostic_fixtures() {
+    let mut entries: Vec<_> = std::fs::read_dir("rust/tests/fixtures/diag")
+        .expect("diag fixtures exist")
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    let mut seen = 0;
+    for path in entries {
+        if path.extension().and_then(|e| e.to_str()) != Some("c") {
+            continue;
+        }
+        seen += 1;
+        let rel = path.to_str().unwrap().to_string();
+        let (out, failed) = kerncraft::cli::run_check(&[rel.clone()]).unwrap();
+        assert_eq!(failed, 1, "{rel} should fail the check:\n{out}");
+        let expected = std::fs::read_to_string(path.with_extension("expected")).unwrap();
+        assert_eq!(out, expected, "diagnostic drifted for {rel}");
+    }
+    assert!(seen >= 6, "only {seen} diagnostic fixtures");
+}
+
+#[test]
+fn check_reports_ok_for_the_paper_kernels() {
+    let files: Vec<String> = ["2d-5pt", "kahan-ddot", "long-range", "triad", "uxx"]
+        .iter()
+        .map(|n| format!("kernels/{n}.c"))
+        .collect();
+    let (out, failed) = kerncraft::cli::run_check(&files).unwrap();
+    assert_eq!(failed, 0, "{out}");
+    for f in &files {
+        assert!(out.contains(&format!("{f}: ok")), "{out}");
+    }
+}
