@@ -1,0 +1,414 @@
+//! Instruction dependency DAG (DESIGN.md §4) — the OSACA-style
+//! critical-path / loop-carried-dependency layer of the in-core engine.
+//!
+//! The kernel's innermost statements are lowered to instruction nodes
+//! (loads, arithmetic ops, stores) connected by register/memory def-use
+//! edges. Loop-carried scalars get a φ source node standing for "the
+//! value arriving from the previous iteration"; after the statement walk,
+//! each carried scalar's final definition is wired back to its φ node as
+//! a *back-edge*. The graph is then
+//!
+//! * acyclic over forward edges (node ids are a topological order by
+//!   construction), giving the latency-weighted longest path — the
+//!   **critical path** (CP) of one iteration, and
+//! * cyclic only through back-edges, whose simple cycles are the
+//!   **loop-carried dependency** (LCD) chains; a chain's cost per
+//!   iteration is its cycle mean — total path latency divided by the
+//!   number of back-edges (iterations) it spans.
+//!
+//! This mirrors OSACA's `get_cp`/`get_lcd` surface (arXiv:1809.00912) at
+//! the granularity of this reproduction's µop classes.
+
+use super::isa::IsaSpec;
+use crate::kernel::{AssignOp, BinOp, Expr, KernelAnalysis};
+use crate::machine::UopClass;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// What a DAG node stands for.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// Value of a loop-carried scalar arriving from the previous
+    /// iteration (latency 0; target of exactly one back-edge).
+    Phi(String),
+    /// Array-element load.
+    Load,
+    /// Array-element store (latency 0 — feeds nothing).
+    Store,
+    /// Arithmetic operation (`Add` covers subtraction).
+    Op(UopClass),
+}
+
+/// One instruction node: kind, result latency, and def-use inputs
+/// (forward edges; every input id is smaller than the node's own id).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub latency: f64,
+    pub inputs: Vec<usize>,
+}
+
+/// One loop-carried dependency chain: a simple cycle through back-edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chain {
+    /// Carried scalars on the cycle, rooted at the lexicographically
+    /// smallest (deterministic identity).
+    pub vars: Vec<String>,
+    /// Cycle mean: summed node latency around the cycle divided by the
+    /// number of back-edges (= iterations the cycle spans).
+    pub latency_per_it: f64,
+    /// True when modulo variable expansion breaks this chain (a pure
+    /// single-op reduction under `break_reductions`).
+    pub broken: bool,
+    /// Node ids along the maximum-latency path realizing the cycle.
+    pub path: Vec<usize>,
+}
+
+/// The dependency DAG of one kernel iteration.
+#[derive(Debug, Clone)]
+pub struct DepDag {
+    nodes: Vec<Node>,
+    /// φ-source set of every node: which carried scalars it depends on.
+    phi_deps: Vec<BTreeSet<String>>,
+    /// Carried scalar → its φ node, sorted by name.
+    phi: Vec<(String, usize)>,
+    /// Back-edges: (final definition node, φ node) per carried scalar.
+    back: Vec<(usize, usize)>,
+    /// Carried scalars whose recurrence is a breakable pure reduction.
+    breakable: BTreeSet<String>,
+}
+
+fn op_class(op: BinOp) -> UopClass {
+    match op {
+        BinOp::Add | BinOp::Sub => UopClass::Add,
+        BinOp::Mul => UopClass::Mul,
+        BinOp::Div => UopClass::Div,
+    }
+}
+
+/// `s = s + expr` (or `s = expr + s`) with no other carried deps counts
+/// as a simple reduction (same shape the throughput model breaks).
+fn is_simple_self_update(rhs: &Expr, name: &str) -> bool {
+    match rhs {
+        Expr::Binary { op: BinOp::Add | BinOp::Mul, lhs, rhs } => {
+            matches!(lhs.as_ref(), Expr::Var(v) if v == name)
+                || matches!(rhs.as_ref(), Expr::Var(v) if v == name)
+        }
+        _ => false,
+    }
+}
+
+impl DepDag {
+    /// Lower the innermost statements to the dependency DAG under the
+    /// machine's resolved instruction latencies.
+    pub fn build(analysis: &KernelAnalysis, isa: &IsaSpec) -> DepDag {
+        let carried: Vec<String> =
+            analysis.carried_scalars().into_iter().map(str::to_string).collect();
+        let mut dag = DepDag {
+            nodes: Vec::new(),
+            phi_deps: Vec::new(),
+            phi: Vec::new(),
+            back: Vec::new(),
+            breakable: BTreeSet::new(),
+        };
+        // scalar name → defining node (φ initially for carried scalars;
+        // loop-invariant sources stay absent — they live in registers)
+        let mut env: HashMap<String, usize> = HashMap::new();
+        for c in &carried {
+            let id = dag.add(NodeKind::Phi(c.clone()), 0.0, Vec::new());
+            dag.phi.push((c.clone(), id));
+            env.insert(c.clone(), id);
+        }
+        let mut final_def: BTreeMap<String, usize> = BTreeMap::new();
+
+        for st in &analysis.stmts {
+            let rhs_node = dag.lower_expr(&st.rhs, &env, isa);
+            // compound assignment folds the destination's prior value in
+            let value_node = match st.op.bin_op() {
+                None => rhs_node,
+                Some(op) => {
+                    let class = op_class(op);
+                    let mut inputs = Vec::new();
+                    match &st.lhs {
+                        Expr::Var(v) => {
+                            if let Some(&n) = env.get(v) {
+                                inputs.push(n);
+                            }
+                        }
+                        Expr::Index { .. } => {
+                            inputs.push(dag.add(
+                                NodeKind::Load,
+                                isa.latency(UopClass::Load),
+                                Vec::new(),
+                            ));
+                        }
+                        _ => {}
+                    }
+                    if let Some(r) = rhs_node {
+                        inputs.push(r);
+                    }
+                    Some(dag.add(NodeKind::Op(class), isa.latency(class), inputs))
+                }
+            };
+            match &st.lhs {
+                Expr::Var(name) => {
+                    match value_node {
+                        Some(n) => {
+                            env.insert(name.clone(), n);
+                        }
+                        // constant assignment kills the carried value
+                        None => {
+                            env.remove(name);
+                        }
+                    }
+                    if carried.contains(name) {
+                        if let Some(n) = value_node {
+                            final_def.insert(name.clone(), n);
+                            let self_only = dag.phi_deps[n].len() == 1
+                                && dag.phi_deps[n].contains(name);
+                            let simple = matches!(st.op, AssignOp::Add | AssignOp::Mul)
+                                || is_simple_self_update(&st.rhs, name);
+                            if self_only && simple {
+                                dag.breakable.insert(name.clone());
+                            } else {
+                                dag.breakable.remove(name);
+                            }
+                        } else {
+                            final_def.remove(name);
+                            dag.breakable.remove(name);
+                        }
+                    }
+                }
+                Expr::Index { .. } => {
+                    let inputs = value_node.into_iter().collect();
+                    dag.add(NodeKind::Store, isa.latency(UopClass::Store), inputs);
+                }
+                _ => {}
+            }
+        }
+
+        // back-edges: final definition of each carried scalar feeds its
+        // own φ in the next iteration
+        for (c, phi_id) in &dag.phi {
+            if let Some(&def) = final_def.get(c) {
+                if def != *phi_id {
+                    dag.back.push((def, *phi_id));
+                }
+            }
+        }
+        dag
+    }
+
+    fn add(&mut self, kind: NodeKind, latency: f64, inputs: Vec<usize>) -> usize {
+        let id = self.nodes.len();
+        let mut deps = BTreeSet::new();
+        for &i in &inputs {
+            deps.extend(self.phi_deps[i].iter().cloned());
+        }
+        if let NodeKind::Phi(name) = &kind {
+            deps.insert(name.clone());
+        }
+        self.phi_deps.push(deps);
+        self.nodes.push(Node { kind, latency, inputs });
+        id
+    }
+
+    fn lower_expr(
+        &mut self,
+        e: &Expr,
+        env: &HashMap<String, usize>,
+        isa: &IsaSpec,
+    ) -> Option<usize> {
+        match e {
+            Expr::Int(_) | Expr::Float(_) => None,
+            Expr::Var(v) => env.get(v).copied(),
+            // negation folds into the consuming op (sign flip is free on
+            // every modeled ISA)
+            Expr::Neg(inner) => self.lower_expr(inner, env, isa),
+            Expr::Index { .. } => {
+                Some(self.add(NodeKind::Load, isa.latency(UopClass::Load), Vec::new()))
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                let l = self.lower_expr(lhs, env, isa);
+                let r = self.lower_expr(rhs, env, isa);
+                let class = op_class(*op);
+                let inputs: Vec<usize> = l.into_iter().chain(r).collect();
+                Some(self.add(NodeKind::Op(class), isa.latency(class), inputs))
+            }
+        }
+    }
+
+    /// All nodes (read-only view for consumers rendering chains).
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Back-edges (from final definition to φ node).
+    pub fn back_edges(&self) -> &[(usize, usize)] {
+        &self.back
+    }
+
+    /// Forward edges are acyclic by construction: every input id is
+    /// strictly smaller than its node's id (ids ARE a topological
+    /// order). The property tests pin this invariant.
+    pub fn is_topologically_ordered(&self) -> bool {
+        self.nodes
+            .iter()
+            .enumerate()
+            .all(|(id, n)| n.inputs.iter().all(|&i| i < id))
+    }
+
+    /// Largest single-node latency in the graph.
+    pub fn max_node_latency(&self) -> f64 {
+        self.nodes.iter().map(|n| n.latency).fold(0.0, f64::max)
+    }
+
+    /// Latency-weighted longest forward path of one iteration: the
+    /// critical path. Returns (total latency, node ids along the path in
+    /// execution order).
+    pub fn critical_path(&self) -> (f64, Vec<usize>) {
+        let n = self.nodes.len();
+        let mut dist = vec![0.0f64; n];
+        let mut pred: Vec<Option<usize>> = vec![None; n];
+        for id in 0..n {
+            let mut best = 0.0f64;
+            let mut from = None;
+            for &i in &self.nodes[id].inputs {
+                if dist[i] > best {
+                    best = dist[i];
+                    from = Some(i);
+                }
+            }
+            dist[id] = best + self.nodes[id].latency;
+            pred[id] = from;
+        }
+        let Some(end) = (0..n).max_by(|&a, &b| dist[a].total_cmp(&dist[b])) else {
+            return (0.0, Vec::new());
+        };
+        let mut path = Vec::new();
+        let mut cur = Some(end);
+        while let Some(id) = cur {
+            path.push(id);
+            cur = pred[id];
+        }
+        path.reverse();
+        (dist[end], path)
+    }
+
+    /// Maximum forward-path latency from `src`'s φ node to every carried
+    /// scalar's final definition, with the realizing path. Node
+    /// latencies accumulate over the path (the φ itself contributes 0).
+    fn paths_from_phi(&self, src_phi: usize) -> (Vec<Option<f64>>, Vec<Option<usize>>) {
+        let n = self.nodes.len();
+        let mut dist: Vec<Option<f64>> = vec![None; n];
+        let mut pred: Vec<Option<usize>> = vec![None; n];
+        dist[src_phi] = Some(0.0);
+        for id in (src_phi + 1)..n {
+            let mut best: Option<(f64, usize)> = None;
+            for &i in &self.nodes[id].inputs {
+                if let Some(d) = dist[i] {
+                    if best.map(|(b, _)| d > b).unwrap_or(true) {
+                        best = Some((d, i));
+                    }
+                }
+            }
+            if let Some((d, from)) = best {
+                dist[id] = Some(d + self.nodes[id].latency);
+                pred[id] = Some(from);
+            }
+        }
+        (dist, pred)
+    }
+
+    /// Enumerate the loop-carried dependency chains: every simple cycle
+    /// through back-edges, each reported once (rooted at its smallest
+    /// carried scalar), with its cycle-mean latency per iteration and
+    /// the node path realizing it. Chains are ordered unbroken-first,
+    /// then by descending latency, then by name — deterministically.
+    pub fn chains(&self, break_reductions: bool) -> Vec<Chain> {
+        // reduced graph over carried scalars: weight(src → dst) = max
+        // forward-path latency φ_src → final_def(dst)
+        let vars: Vec<&String> = self.phi.iter().map(|(c, _)| c).collect();
+        let def_of: BTreeMap<&String, usize> = self
+            .back
+            .iter()
+            .map(|&(def, phi_id)| {
+                let (c, _) = self.phi.iter().find(|(_, p)| *p == phi_id).unwrap();
+                (c, def)
+            })
+            .collect();
+        // edge (src index, dst index) → (latency, path node ids)
+        let mut edges: HashMap<(usize, usize), (f64, Vec<usize>)> = HashMap::new();
+        for (si, (_, src_phi)) in self.phi.iter().enumerate() {
+            let (dist, pred) = self.paths_from_phi(*src_phi);
+            for (di, dst) in vars.iter().enumerate() {
+                let Some(&def) = def_of.get(dst) else { continue };
+                let Some(w) = dist[def] else { continue };
+                let mut path = Vec::new();
+                let mut cur = Some(def);
+                while let Some(id) = cur {
+                    if id == *src_phi {
+                        break;
+                    }
+                    path.push(id);
+                    cur = pred[id];
+                }
+                path.reverse();
+                edges.insert((si, di), (w, path));
+            }
+        }
+
+        // simple cycles, each rooted at its minimal var index: DFS that
+        // only visits indices above the root
+        let mut chains = Vec::new();
+        let k = vars.len();
+        for root in 0..k {
+            let mut stack: Vec<(usize, f64, Vec<usize>, Vec<usize>)> =
+                vec![(root, 0.0, vec![root], Vec::new())];
+            while let Some((cur, lat, trail, nodes_so_far)) = stack.pop() {
+                for next in root..k {
+                    let Some((w, epath)) = edges.get(&(cur, next)) else { continue };
+                    if next == root {
+                        let cycle_len = trail.len() as f64;
+                        let mut path = nodes_so_far.clone();
+                        path.extend(epath.iter().copied());
+                        let var_names: Vec<String> =
+                            trail.iter().map(|&i| vars[i].clone()).collect();
+                        let broken = break_reductions
+                            && trail.len() == 1
+                            && self.breakable.contains(vars[root].as_str());
+                        chains.push(Chain {
+                            vars: var_names,
+                            latency_per_it: (lat + w) / cycle_len,
+                            broken,
+                            path,
+                        });
+                    } else if !trail.contains(&next) {
+                        let mut t = trail.clone();
+                        t.push(next);
+                        let mut p = nodes_so_far.clone();
+                        p.extend(epath.iter().copied());
+                        stack.push((next, lat + w, t, p));
+                    }
+                }
+            }
+        }
+        chains.sort_by(|a, b| {
+            a.broken
+                .cmp(&b.broken)
+                .then(b.latency_per_it.total_cmp(&a.latency_per_it))
+                .then(a.vars.cmp(&b.vars))
+        });
+        chains
+    }
+
+    /// Maximum cycle-mean latency per iteration over chains that modulo
+    /// variable expansion cannot break — the LCD bound that gates
+    /// vectorization and floors T_OL.
+    pub fn unbreakable_cycle_mean(&self, break_reductions: bool) -> f64 {
+        self.chains(break_reductions)
+            .iter()
+            .filter(|c| !c.broken)
+            .map(|c| c.latency_per_it)
+            .fold(0.0, f64::max)
+    }
+}

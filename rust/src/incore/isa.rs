@@ -1,0 +1,229 @@
+//! ISA abstraction for the in-core engine (DESIGN.md §4).
+//!
+//! The port/throughput model and the dependency DAG both consume
+//! instructions as abstract µop classes ([`UopClass`]); this module
+//! resolves those classes to a concrete instruction selection — mnemonic,
+//! latency, and (optionally) an explicit port map — from the machine
+//! YAML instead of hard-coded x86 assumptions:
+//!
+//! * the `isa:` block names the [`IsaFamily`] (`family: aarch64`), which
+//!   picks the default mnemonic table (AVX spellings for x86, SVE
+//!   spellings for AArch64),
+//! * the `latency:` block and the `DIV` throughput table provide the
+//!   default per-class latencies,
+//! * an optional top-level `instructions:` table overrides mnemonic,
+//!   latency, and port assignment per class (the OSACA-style
+//!   per-instruction database, reduced to the classes this model uses).
+
+use crate::machine::{MachineModel, UopClass};
+use std::collections::HashMap;
+
+/// Instruction-set family of a machine description. Selection of
+/// default mnemonics (and nothing else) hangs off this: latencies and
+/// port maps always come from the machine file itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IsaFamily {
+    /// x86-64 with AVX/AVX2 SIMD (the paper's SNB/HSW testbed).
+    X86,
+    /// AArch64 with SVE SIMD (e.g. Fujitsu A64FX).
+    AArch64,
+}
+
+impl IsaFamily {
+    /// Parse the `isa: family:` spelling of a machine file.
+    pub fn parse(s: &str) -> Option<IsaFamily> {
+        match s.to_ascii_lowercase().as_str() {
+            "x86" | "x86_64" | "x86-64" | "amd64" => Some(IsaFamily::X86),
+            "aarch64" | "arm64" | "armv8" | "sve" => Some(IsaFamily::AArch64),
+            _ => None,
+        }
+    }
+
+    /// Stable label used in reports and the `/metrics` isa label.
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaFamily::X86 => "x86",
+            IsaFamily::AArch64 => "aarch64",
+        }
+    }
+}
+
+/// Per-class override parsed from a machine file's `instructions:` table.
+/// Absent members fall back to the family/latency-block defaults.
+#[derive(Debug, Clone, Default)]
+pub struct InstrOverride {
+    pub mnemonic: Option<String>,
+    pub latency: Option<f64>,
+    /// Explicit port assignment; empty means "derive from the port
+    /// table's accept lists" like every class without an override.
+    pub ports: Vec<String>,
+}
+
+/// One resolved instruction: what the machine executes for a µop class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstrDef {
+    pub mnemonic: String,
+    /// Result latency in cycles (0 for stores, which feed nothing).
+    pub latency: f64,
+    /// Explicit port names, empty when the port table's accept lists
+    /// govern placement.
+    pub ports: Vec<String>,
+}
+
+/// The resolved instruction selection of one machine at one SIMD width:
+/// every [`UopClass`] maps to an [`InstrDef`].
+#[derive(Debug, Clone)]
+pub struct IsaSpec {
+    pub family: IsaFamily,
+    defs: HashMap<UopClass, InstrDef>,
+}
+
+const ALL_CLASSES: [UopClass; 9] = [
+    UopClass::Add,
+    UopClass::Mul,
+    UopClass::Div,
+    UopClass::Fma,
+    UopClass::Load,
+    UopClass::Store,
+    UopClass::Agu,
+    UopClass::StAgu,
+    UopClass::Misc,
+];
+
+fn default_mnemonic(family: IsaFamily, class: UopClass, vectorized: bool) -> &'static str {
+    match (family, vectorized) {
+        (IsaFamily::X86, true) => match class {
+            UopClass::Add => "vaddpd",
+            UopClass::Mul => "vmulpd",
+            UopClass::Div => "vdivpd",
+            UopClass::Fma => "vfmadd213pd",
+            UopClass::Load => "vmovupd",
+            UopClass::Store => "vmovupd",
+            UopClass::Agu | UopClass::StAgu => "lea",
+            UopClass::Misc => "misc",
+        },
+        (IsaFamily::X86, false) => match class {
+            UopClass::Add => "addsd",
+            UopClass::Mul => "mulsd",
+            UopClass::Div => "divsd",
+            UopClass::Fma => "vfmadd213sd",
+            UopClass::Load => "movsd",
+            UopClass::Store => "movsd",
+            UopClass::Agu | UopClass::StAgu => "lea",
+            UopClass::Misc => "misc",
+        },
+        (IsaFamily::AArch64, true) => match class {
+            UopClass::Add => "fadd",
+            UopClass::Mul => "fmul",
+            UopClass::Div => "fdiv",
+            UopClass::Fma => "fmla",
+            UopClass::Load => "ld1d",
+            UopClass::Store => "st1d",
+            UopClass::Agu | UopClass::StAgu => "agu",
+            UopClass::Misc => "misc",
+        },
+        (IsaFamily::AArch64, false) => match class {
+            UopClass::Add => "fadd",
+            UopClass::Mul => "fmul",
+            UopClass::Div => "fdiv",
+            UopClass::Fma => "fmadd",
+            UopClass::Load => "ldr",
+            UopClass::Store => "str",
+            UopClass::Agu | UopClass::StAgu => "agu",
+            UopClass::Misc => "misc",
+        },
+    }
+}
+
+impl IsaSpec {
+    /// Resolve the instruction selection of a machine at the given SIMD
+    /// width: family defaults for mnemonics, the `latency:` block (plus
+    /// the scalar `DIV` throughput) for latencies, then the machine's
+    /// `instructions:` overrides on top.
+    pub fn resolve(machine: &MachineModel, vectorized: bool) -> IsaSpec {
+        let family = machine.isa.family;
+        let default_latency = |class: UopClass| -> f64 {
+            match class {
+                UopClass::Add => machine.latency.add,
+                UopClass::Mul => machine.latency.mul,
+                UopClass::Fma => machine.latency.fma,
+                UopClass::Load => machine.latency.load,
+                UopClass::Div => machine.div_cycles(1),
+                // stores feed nothing; address/overhead µops are not on
+                // value dependency chains
+                UopClass::Store | UopClass::Agu | UopClass::StAgu | UopClass::Misc => 0.0,
+            }
+        };
+        let mut defs = HashMap::new();
+        for class in ALL_CLASSES {
+            let mut def = InstrDef {
+                mnemonic: default_mnemonic(family, class, vectorized).to_string(),
+                latency: default_latency(class),
+                ports: Vec::new(),
+            };
+            if let Some(ov) = machine.instructions.iter().find(|(c, _)| *c == class) {
+                if let Some(m) = &ov.1.mnemonic {
+                    def.mnemonic = m.clone();
+                }
+                if let Some(l) = ov.1.latency {
+                    def.latency = l;
+                }
+                if !ov.1.ports.is_empty() {
+                    def.ports = ov.1.ports.clone();
+                }
+            }
+            defs.insert(class, def);
+        }
+        IsaSpec { family, defs }
+    }
+
+    /// The resolved instruction for a class.
+    pub fn def(&self, class: UopClass) -> &InstrDef {
+        &self.defs[&class]
+    }
+
+    /// Result latency of a class in cycles.
+    pub fn latency(&self, class: UopClass) -> f64 {
+        self.defs[&class].latency
+    }
+
+    /// Mnemonic of a class (for chain/report rendering).
+    pub fn mnemonic(&self, class: UopClass) -> &str {
+        &self.defs[&class].mnemonic
+    }
+
+    /// Explicit port assignment of a class; empty when the machine's
+    /// port-table accept lists govern placement.
+    pub fn port_override(&self, class: UopClass) -> &[String] {
+        &self.defs[&class].ports
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_spellings_parse() {
+        assert_eq!(IsaFamily::parse("x86_64"), Some(IsaFamily::X86));
+        assert_eq!(IsaFamily::parse("AArch64"), Some(IsaFamily::AArch64));
+        assert_eq!(IsaFamily::parse("sve"), Some(IsaFamily::AArch64));
+        assert_eq!(IsaFamily::parse("riscv"), None);
+    }
+
+    #[test]
+    fn x86_defaults_from_latency_block() {
+        let m = MachineModel::snb();
+        let spec = IsaSpec::resolve(&m, true);
+        assert_eq!(spec.family, IsaFamily::X86);
+        assert_eq!(spec.mnemonic(UopClass::Add), "vaddpd");
+        assert_eq!(spec.latency(UopClass::Add), 3.0);
+        assert_eq!(spec.latency(UopClass::Mul), 5.0);
+        assert_eq!(spec.latency(UopClass::Load), 4.0);
+        // scalar DIV latency comes from the throughput table
+        assert_eq!(spec.latency(UopClass::Div), 22.0);
+        assert!(spec.port_override(UopClass::Add).is_empty());
+        let scalar = IsaSpec::resolve(&m, false);
+        assert_eq!(scalar.mnemonic(UopClass::Add), "addsd");
+    }
+}

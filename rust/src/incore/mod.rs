@@ -13,18 +13,28 @@
 //! 2. **Port scheduling**: µops are distributed over the machine file's
 //!    port table; the throughput bound is the exact fractional-scheduling
 //!    lower bound max_S (Σ µops with port-set ⊆ S)/|S| over port subsets.
-//! 3. **Critical path**: loop-carried scalar recurrences are detected in
-//!    the dependency graph and their maximum cycle mean (latency per
-//!    iteration) bounds the overlapping time, reproducing the 96 cy/CL of
-//!    the Kahan dot product.
+//! 3. **Dependency DAG** ([`dag::DepDag`], DESIGN.md §4): the statements
+//!    are lowered to instruction nodes with def-use edges; the
+//!    latency-weighted longest path is the critical path (CP) of one
+//!    iteration, and cycles through the back-edge to the next iteration
+//!    are the loop-carried dependency (LCD) chains, whose maximum
+//!    unbreakable cycle mean bounds the overlapping time — reproducing
+//!    the 96 cy/CL of the Kahan dot product.
+//! 4. **ISA abstraction** ([`isa::IsaSpec`]): instruction selection,
+//!    latencies, and port maps resolve from the machine YAML's `isa:` /
+//!    `instructions:` blocks, so x86 (SNB/HSW) and AArch64 (A64FX)
+//!    machines run through the same model.
 //!
 //! Outputs are the ECM inputs T_OL and T_nOL in cycles per cache line of
-//! work, plus TP/CP diagnostics mirroring IACA's report.
+//! work, plus TP/CP/LCD diagnostics mirroring OSACA's report surface.
 
-use crate::kernel::{BinOp, Expr, KernelAnalysis, ScalarUse};
+pub mod dag;
+pub mod isa;
+
+use crate::kernel::KernelAnalysis;
 use crate::machine::{MachineModel, UopClass};
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use isa::{IsaFamily, IsaSpec};
 
 /// Compiler-behaviour model used when lowering the kernel to µops.
 #[derive(Debug, Clone)]
@@ -89,25 +99,52 @@ pub struct UopCounts {
     pub misc: f64,
 }
 
+/// One loop-carried dependency chain, resolved to machine instructions
+/// (the per-chain breakdown of OSACA's LCD report).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainData {
+    /// Carried scalars on the cycle, joined with `->` (e.g. `c->sum`).
+    pub name: String,
+    /// Cycle-mean latency per scalar iteration.
+    pub latency_per_it: f64,
+    /// Chain cost per cache line of work (cycle mean × iterations/CL).
+    pub cy_per_unit: f64,
+    /// True when modulo variable expansion breaks this chain.
+    pub broken: bool,
+    /// Resolved mnemonics along the maximum-latency cycle path.
+    pub instructions: Vec<String>,
+}
+
 /// The in-core prediction (all numbers in cycles per cache line of work).
 #[derive(Debug, Clone)]
 pub struct PortModel {
+    /// ISA family the instruction selection was resolved for.
+    pub isa: IsaFamily,
     /// Overlapping time: max pressure on overlapping ports, or the
-    /// recurrence critical path if that is larger.
+    /// loop-carried dependency bound if that is larger.
     pub t_ol: f64,
     /// Non-overlapping time: pressure on the data ports ("2D"/"3D").
     pub t_nol: f64,
     /// Pure throughput bound (max over all ports) — IACA "TP".
     pub tp: f64,
-    /// Recurrence critical path per cache line (0 when none) — IACA "CP"
-    /// flavour for loop-carried chains.
-    pub cp: f64,
+    /// Critical path of the dependency DAG per cache line of work —
+    /// OSACA "CP": the longest latency-weighted def-use path of one
+    /// iteration, scaled to cy/CL.
+    pub cp_cy: f64,
+    /// Loop-carried dependency bound per cache line (0 when none) —
+    /// OSACA "LCD": the maximum unbreakable cycle mean × iterations/CL.
+    pub lcd_cy: f64,
     /// Whether the code was vectorized.
     pub vectorized: bool,
     /// Elements per SIMD operation used.
     pub vector_elems: u32,
     /// Port pressure table.
     pub pressure: Vec<PortPressure>,
+    /// Loop-carried dependency chains, unbroken-first then by
+    /// descending latency (deterministic).
+    pub chains: Vec<ChainData>,
+    /// Name of the dominant (unbroken, highest-latency) chain, if any.
+    pub dominant_chain: Option<String>,
     /// µop counts per cache line.
     pub uops: UopCounts,
     /// Source-level flops per cache line of work.
@@ -129,12 +166,43 @@ impl PortModel {
         let elem = analysis.element.size();
         let iterations_per_cl = analysis.unit_of_work(machine.cacheline_bytes);
 
-        // --- recurrence analysis (critical path) ---
-        let rec = RecurrenceGraph::build(analysis, machine);
-        let unbreakable = rec.unbreakable_cycle_mean(policy.break_reductions);
+        // --- dependency DAG: CP + LCD chains (DESIGN.md §4) ---
+        // Latencies are width-independent in the resolved spec, so the
+        // DAG built with the probe spec stays valid after the
+        // vectorization decision; only mnemonics are re-resolved below.
+        let probe = IsaSpec::resolve(machine, true);
+        let dep = dag::DepDag::build(analysis, &probe);
+        let raw_chains = dep.chains(policy.break_reductions);
+        let unbreakable = raw_chains
+            .iter()
+            .filter(|c| !c.broken)
+            .map(|c| c.latency_per_it)
+            .fold(0.0f64, f64::max);
         let vector_elems = if unbreakable > 0.0 { 1 } else { policy.vector_elems.max(1) };
         let vectorized = vector_elems > 1;
-        let cp = unbreakable * iterations_per_cl as f64;
+        let isa_spec = IsaSpec::resolve(machine, vectorized);
+        let lcd_cy = unbreakable * iterations_per_cl as f64;
+        let (cp_per_it, _) = dep.critical_path();
+        let cp_cy = cp_per_it * iterations_per_cl as f64 / vector_elems as f64;
+        let chains: Vec<ChainData> = raw_chains
+            .iter()
+            .map(|c| ChainData {
+                name: c.vars.join("->"),
+                latency_per_it: c.latency_per_it,
+                cy_per_unit: c.latency_per_it * iterations_per_cl as f64 / vector_elems as f64,
+                broken: c.broken,
+                instructions: c
+                    .path
+                    .iter()
+                    .filter_map(|&id| match &dep.nodes()[id].kind {
+                        dag::NodeKind::Load => Some(isa_spec.mnemonic(UopClass::Load).to_string()),
+                        dag::NodeKind::Op(class) => Some(isa_spec.mnemonic(*class).to_string()),
+                        dag::NodeKind::Phi(_) | dag::NodeKind::Store => None,
+                    })
+                    .collect(),
+            })
+            .collect();
+        let dominant_chain = chains.iter().find(|c| !c.broken).map(|c| c.name.clone());
 
         // --- load/store µop accounting ---
         // Arrays with any 32 B-misaligned read access get half-wide loads
@@ -224,32 +292,29 @@ impl PortModel {
             (UopClass::Div, div_uops * div_cost),
             (UopClass::Misc, misc_uops),
         ];
-        let sched = schedule_ports(machine, &class_load)?;
+        let sched = schedule_ports(machine, &isa_spec, &class_load)?;
         let t_nol = sched.max_over(machine, &machine.non_overlapping_ports);
         let t_ol_ports = sched.max_over(machine, &machine.overlapping_ports);
-        let t_ol = t_ol_ports.max(cp);
+        let t_ol = t_ol_ports.max(lcd_cy);
         let tp = sched.global_max;
         let pressure = sched.pressure;
 
         Ok(PortModel {
+            isa: isa_spec.family,
             t_ol,
             t_nol,
             tp,
-            cp,
+            cp_cy,
+            lcd_cy,
             vectorized,
             vector_elems,
             pressure,
+            chains,
+            dominant_chain,
             uops,
             flops_per_cl: f.total() as f64 * iterations_per_cl as f64,
             iterations_per_cl,
         })
-    }
-
-    /// IACA-style text report (delegates to the shared
-    /// [`crate::report::incore_report`] renderer so the model and the
-    /// serialized report always print identically).
-    pub fn report(&self) -> String {
-        crate::report::incore_report(&crate::session::IncoreReport::from_model(self))
     }
 }
 
@@ -281,7 +346,14 @@ impl Schedule {
 /// Distribute µop classes over ports with an optimal min-max fractional
 /// schedule. The achievable makespan equals the lower bound
 /// max_S (sum of loads of classes with port-set in S) / |S| over subsets.
-fn schedule_ports(machine: &MachineModel, class_load: &[(UopClass, f64)]) -> Result<Schedule> {
+/// A class with an explicit `instructions:` port override in the machine
+/// file is pinned to exactly those ports; every other class goes by the
+/// port table's accept lists.
+fn schedule_ports(
+    machine: &MachineModel,
+    isa: &IsaSpec,
+    class_load: &[(UopClass, f64)],
+) -> Result<Schedule> {
     let n = machine.ports.len();
     if n == 0 {
         bail!("machine has no ports");
@@ -296,9 +368,24 @@ fn schedule_ports(machine: &MachineModel, class_load: &[(UopClass, f64)]) -> Res
             continue;
         }
         let mut mask = 0u32;
-        for (i, p) in machine.ports.iter().enumerate() {
-            if p.accepts.contains(&class) {
-                mask |= 1 << i;
+        let overridden = isa.port_override(class);
+        if overridden.is_empty() {
+            for (i, p) in machine.ports.iter().enumerate() {
+                if p.accepts.contains(&class) {
+                    mask |= 1 << i;
+                }
+            }
+        } else {
+            for name in overridden {
+                match machine.ports.iter().position(|p| &p.name == name) {
+                    Some(i) => mask |= 1 << i,
+                    None => bail!(
+                        "instructions override for {:?} names unknown port {} on {}",
+                        class,
+                        name,
+                        machine.arch
+                    ),
+                }
             }
         }
         if mask == 0 {
@@ -371,174 +458,6 @@ fn subset_bound_masked(masks: &[(u32, f64)], allowed: u32) -> f64 {
     best
 }
 
-/// Loop-carried scalar dependency graph with operation latencies.
-struct RecurrenceGraph {
-    /// edge (from, to) → latency across one iteration
-    edges: HashMap<(String, String), f64>,
-    carried: Vec<String>,
-    /// carried vars that are breakable single-op reductions
-    breakable: Vec<String>,
-}
-
-impl RecurrenceGraph {
-    fn build(analysis: &KernelAnalysis, machine: &MachineModel) -> Self {
-        let carried: Vec<String> = analysis
-            .carried_scalars()
-            .into_iter()
-            .map(str::to_string)
-            .collect();
-        let lat_add = machine.latency.add;
-        let lat_mul = machine.latency.mul;
-        let lat_div = machine.div_cycles(1);
-
-        // symbolic evaluation: var → {carried source → max latency}
-        let mut env: HashMap<String, HashMap<String, f64>> = HashMap::new();
-        for c in &carried {
-            env.insert(c.clone(), HashMap::from([(c.clone(), 0.0)]));
-        }
-        let mut edges: HashMap<(String, String), f64> = HashMap::new();
-        let mut breakable: Vec<String> = Vec::new();
-
-        for st in &analysis.stmts {
-            let lhs_name = match &st.lhs {
-                Expr::Var(v) => Some(v.clone()),
-                _ => None,
-            };
-            // effective rhs includes the compound-assign op
-            let mut deps = expr_deps(&st.rhs, &env, lat_add, lat_mul, lat_div);
-            if let Some(op) = st.op.bin_op() {
-                let op_lat = match op {
-                    BinOp::Add | BinOp::Sub => lat_add,
-                    BinOp::Mul => lat_mul,
-                    BinOp::Div => lat_div,
-                };
-                // lhs is also an input
-                if let Some(name) = &lhs_name {
-                    if let Some(m) = env.get(name) {
-                        for (src, l) in m {
-                            let e = deps.entry(src.clone()).or_insert(0.0);
-                            *e = e.max(l + op_lat);
-                        }
-                    }
-                }
-                for l in deps.values_mut() {
-                    *l += 0.0; // op latency already applied to lhs path;
-                               // rhs paths get it too:
-                }
-                // apply op latency to pure-rhs paths as well
-                let rhs_deps = expr_deps(&st.rhs, &env, lat_add, lat_mul, lat_div);
-                for (src, l) in rhs_deps {
-                    let e = deps.entry(src.clone()).or_insert(0.0);
-                    *e = e.max(l + op_lat);
-                }
-            }
-            if let Some(name) = lhs_name {
-                if carried.contains(&name) {
-                    // record edges source → name
-                    for (src, l) in &deps {
-                        let key = (src.clone(), name.clone());
-                        let e = edges.entry(key).or_insert(0.0);
-                        *e = (*e).max(*l);
-                    }
-                    // breakability: a single compound add/mul of a
-                    // carried var by itself (s += expr-without-carried)
-                    let self_only = deps.len() == 1 && deps.contains_key(&name);
-                    let simple_reduction = matches!(
-                        st.op,
-                        crate::kernel::AssignOp::Add | crate::kernel::AssignOp::Mul
-                    ) || is_simple_self_update(&st.rhs, &name);
-                    if self_only && simple_reduction && !breakable.contains(&name) {
-                        breakable.push(name.clone());
-                    }
-                }
-                env.insert(name, deps);
-            }
-        }
-        RecurrenceGraph { edges, carried, breakable }
-    }
-
-    /// Maximum cycle mean (latency per iteration) over recurrence cycles
-    /// that cannot be broken by modulo variable expansion.
-    fn unbreakable_cycle_mean(&self, break_reductions: bool) -> f64 {
-        // enumerate simple cycles by DFS (graphs here are tiny)
-        let nodes: Vec<&String> = self.carried.iter().collect();
-        let mut best = 0f64;
-        for start in &nodes {
-            let mut stack = vec![((*start).clone(), 0.0f64, vec![(*start).clone()])];
-            while let Some((cur, lat, path)) = stack.pop() {
-                for ((from, to), w) in &self.edges {
-                    if from != &cur {
-                        continue;
-                    }
-                    if to == *start {
-                        let cycle_len = path.len() as f64;
-                        let mean = (lat + w) / cycle_len;
-                        // a pure self-cycle of a breakable reduction is
-                        // eliminated by the compiler
-                        let breakable_cycle = break_reductions
-                            && path.len() == 1
-                            && self.breakable.contains(*start);
-                        if !breakable_cycle {
-                            best = best.max(mean);
-                        }
-                    } else if !path.contains(to) && self.carried.contains(to) {
-                        let mut p = path.clone();
-                        p.push(to.clone());
-                        stack.push((to.clone(), lat + w, p));
-                    }
-                }
-            }
-        }
-        best
-    }
-}
-
-/// `s = s + expr` (or `s = expr + s`) with no other carried deps counts
-/// as a simple reduction.
-fn is_simple_self_update(rhs: &Expr, name: &str) -> bool {
-    match rhs {
-        Expr::Binary { op: BinOp::Add | BinOp::Mul, lhs, rhs } => {
-            matches!(lhs.as_ref(), Expr::Var(v) if v == name)
-                || matches!(rhs.as_ref(), Expr::Var(v) if v == name)
-        }
-        _ => false,
-    }
-}
-
-/// Latency map of an expression: carried source var → max path latency.
-fn expr_deps(
-    e: &Expr,
-    env: &HashMap<String, HashMap<String, f64>>,
-    lat_add: f64,
-    lat_mul: f64,
-    lat_div: f64,
-) -> HashMap<String, f64> {
-    match e {
-        Expr::Var(v) => env.get(v).cloned().unwrap_or_default(),
-        Expr::Int(_) | Expr::Float(_) | Expr::Index { .. } => HashMap::new(),
-        Expr::Neg(inner) => expr_deps(inner, env, lat_add, lat_mul, lat_div),
-        Expr::Binary { op, lhs, rhs } => {
-            let op_lat = match op {
-                BinOp::Add | BinOp::Sub => lat_add,
-                BinOp::Mul => lat_mul,
-                BinOp::Div => lat_div,
-            };
-            let l = expr_deps(lhs, env, lat_add, lat_mul, lat_div);
-            let r = expr_deps(rhs, env, lat_add, lat_mul, lat_div);
-            let mut out = HashMap::new();
-            for (src, lat) in l.into_iter().chain(r) {
-                let e = out.entry(src).or_insert(0.0f64);
-                *e = (*e).max(lat + op_lat);
-            }
-            out
-        }
-    }
-}
-
-// silence: ScalarUse is re-exported for callers of this module's results
-#[allow(unused_imports)]
-use ScalarUse as _ScalarUse;
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -574,7 +493,8 @@ mod tests {
         }
     "#;
 
-    const TRIAD: &str = "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
+    const TRIAD: &str =
+        "double a[N], b[N], c[N], d[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] + c[i] * d[i];";
 
     #[test]
     fn jacobi_snb_tol_tnol_match_paper() {
@@ -603,10 +523,35 @@ mod tests {
         for m in [MachineModel::snb(), MachineModel::hsw()] {
             let pm = analyze(KAHAN, &[("N", 1000000)], &m);
             assert!(!pm.vectorized, "loop-carried dependency forbids SIMD");
-            assert_eq!(pm.cp, 96.0, "{}", m.arch);
+            assert_eq!(pm.lcd_cy, 96.0, "{}", m.arch);
             assert_eq!(pm.t_ol, 96.0, "{}", m.arch);
             assert_eq!(pm.t_nol, 8.0, "{} {:?}", m.arch, pm.pressure);
+            // the dominant chain is the 4-add c → c recurrence; the full
+            // DAG critical path also crosses the load and multiply:
+            // 4 + 5 + 4×3 = 21 cy/it → 168 cy/CL
+            assert_eq!(pm.dominant_chain.as_deref(), Some("c"), "{}", m.arch);
+            assert_eq!(pm.cp_cy, 168.0, "{}", m.arch);
+            assert!(pm.cp_cy >= pm.lcd_cy);
+            assert!(pm.lcd_cy > pm.tp, "LCD must dominate throughput");
         }
+    }
+
+    #[test]
+    fn kahan_chain_breakdown_is_deterministic() {
+        let m = MachineModel::snb();
+        let pm = analyze(KAHAN, &[("N", 1000000)], &m);
+        let names: Vec<&str> = pm.chains.iter().map(|c| c.name.as_str()).collect();
+        // unbroken chains by descending cycle mean: c (12), c->sum
+        // ((6+9)/2 = 7.5), sum (3)
+        assert_eq!(names, ["c", "c->sum", "sum"]);
+        assert_eq!(pm.chains[0].latency_per_it, 12.0);
+        assert_eq!(pm.chains[1].latency_per_it, 7.5);
+        assert_eq!(pm.chains[2].latency_per_it, 3.0);
+        assert!(pm.chains.iter().all(|c| !c.broken));
+        // scalar x86 selection: the c chain is four dependent adds
+        assert_eq!(pm.chains[0].instructions, ["addsd"; 4]);
+        let pm2 = analyze(KAHAN, &[("N", 1000000)], &m);
+        assert_eq!(pm.chains, pm2.chains, "chain ordering must be stable");
     }
 
     #[test]
@@ -638,7 +583,11 @@ mod tests {
             &m,
         );
         assert!(pm.vectorized);
-        assert_eq!(pm.cp, 0.0);
+        assert_eq!(pm.lcd_cy, 0.0);
+        // the broken reduction still shows up in the chain breakdown
+        assert_eq!(pm.chains.len(), 1);
+        assert!(pm.chains[0].broken);
+        assert_eq!(pm.dominant_chain, None);
     }
 
     #[test]
@@ -688,7 +637,8 @@ mod tests {
                 "double a[N], b[N], c[N];\nfor (int i = 0; i < N; i++) a[i] = b[i] * {k}.0 + c[i+{k}];"
             );
             let pm = analyze(&src, &[("N", 100000)], &m);
-            assert!(pm.cp >= 0.0);
+            assert!(pm.lcd_cy >= 0.0);
+            assert!(pm.cp_cy >= pm.lcd_cy);
             assert!(pm.tp > 0.0);
             assert!(pm.t_nol > 0.0);
         }
@@ -703,10 +653,29 @@ mod tests {
 
     #[test]
     fn report_contains_ports() {
+        // exactly one in-core text renderer: the pure report function
+        // over the serialized section
         let m = MachineModel::snb();
         let pm = analyze(TRIAD, &[("N", 100000)], &m);
-        let r = pm.report();
+        let r = crate::report::incore_report(&crate::session::IncoreReport::from_model(&pm));
         assert!(r.contains("T_OL"));
         assert!(r.contains("port pressure"));
+        assert!(r.contains("CP"));
+        assert!(r.contains("LCD"));
+    }
+
+    #[test]
+    fn a64fx_analyzes_with_sve_selection() {
+        // the AArch64 machine runs through the same model with SVE
+        // instruction selection and its own latencies (ADD 9 cy)
+        let m = MachineModel::builtin("a64fx").expect("a64fx is a builtin");
+        let pm = analyze(KAHAN, &[("N", 1000000)], &m);
+        assert_eq!(pm.isa, IsaFamily::AArch64);
+        assert!(!pm.vectorized);
+        // 256 B cache line → 32 iterations; 4 dependent 9 cy adds
+        assert_eq!(pm.lcd_cy, 9.0 * 4.0 * 32.0);
+        assert_eq!(pm.chains[0].instructions, ["fadd"; 4]);
+        let t = analyze(TRIAD, &[("N", 8000000)], &m);
+        assert!(t.vectorized, "no recurrence: SVE vectorizes the triad");
     }
 }

@@ -13,6 +13,7 @@
 pub mod topology;
 pub mod yaml;
 
+use crate::incore::isa::{InstrOverride, IsaFamily};
 use anyhow::{anyhow, bail, Context, Result};
 use yaml::Value;
 
@@ -76,6 +77,9 @@ pub struct FlopsPerCycle {
 /// ISA/codegen parameters of the architecture.
 #[derive(Debug, Clone)]
 pub struct IsaParams {
+    /// Instruction-set family (`isa: family:`, default x86); selects the
+    /// in-core engine's default instruction mnemonics (DESIGN.md §4).
+    pub family: IsaFamily,
     /// SIMD register width in bytes (32 for AVX).
     pub vector_bytes: u64,
     /// Whether FMA contraction is available.
@@ -225,6 +229,10 @@ pub struct MachineModel {
     pub non_overlapping_ports: Vec<String>,
     pub isa: IsaParams,
     pub latency: Latencies,
+    /// Per-instruction overrides from the optional `instructions:` table
+    /// (mnemonic, latency, explicit port assignment per µop class) —
+    /// the OSACA-style instruction database, see DESIGN.md §4.
+    pub instructions: Vec<(UopClass, InstrOverride)>,
     /// DIV reciprocal throughput (divider occupancy in cycles) by vector
     /// element count: `div_throughput[&1]` scalar, `[&4]` 4-wide AVX.
     pub div_throughput: Vec<(u32, f64)>,
@@ -276,6 +284,7 @@ impl MachineModel {
         match tag.to_ascii_uppercase().as_str() {
             "SNB" | "SANDYBRIDGE" => Some(SNB_YML),
             "HSW" | "HASWELL" => Some(HSW_YML),
+            "A64FX" => Some(A64FX_YML),
             _ => None,
         }
     }
@@ -402,7 +411,13 @@ impl MachineModel {
         let non_overlapping_ports = str_list("non-overlapping ports");
 
         let isa_node = req("isa")?;
+        let family = match isa_node.get("family").and_then(|x| x.as_str()) {
+            None => IsaFamily::X86,
+            Some(s) => IsaFamily::parse(s)
+                .ok_or_else(|| anyhow!("unknown isa family '{s}' (expected x86 or aarch64)"))?,
+        };
         let isa = IsaParams {
+            family,
             vector_bytes: isa_node.get("vector bytes").and_then(|x| x.as_i64()).unwrap_or(32)
                 as u64,
             fma: isa_node.get("fma").and_then(|x| x.as_bool()).unwrap_or(false),
@@ -431,6 +446,31 @@ impl MachineModel {
             fma: lat_node.get("FMA").and_then(|x| x.as_f64()).unwrap_or(5.0),
             load: lat_node.get("LOAD").and_then(|x| x.as_f64()).unwrap_or(4.0),
         };
+
+        let mut instructions = Vec::new();
+        if let Some(table) = v.get("instructions") {
+            for (cname, spec) in table.entries() {
+                let class = UopClass::parse(cname)
+                    .ok_or_else(|| anyhow!("unknown uop class '{cname}' in instructions table"))?;
+                let ov = InstrOverride {
+                    mnemonic: spec
+                        .get("mnemonic")
+                        .and_then(|x| x.as_str())
+                        .map(str::to_string),
+                    latency: spec.get("latency").and_then(|x| x.as_f64()),
+                    ports: spec
+                        .get("ports")
+                        .map(|l| {
+                            l.items()
+                                .iter()
+                                .filter_map(|x| x.as_str().map(str::to_string))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                };
+                instructions.push((class, ov));
+            }
+        }
 
         let mut div_throughput = Vec::new();
         if let Some(div) = v.get("throughput").and_then(|t| t.get("DIV")) {
@@ -536,6 +576,7 @@ impl MachineModel {
             non_overlapping_ports,
             isa,
             latency,
+            instructions,
             div_throughput,
             memory_hierarchy,
             benchmarks,
@@ -564,6 +605,8 @@ fn find_todo(v: &Value, path: &str) -> Option<String> {
 pub const SNB_YML: &str = include_str!("../../../machines/snb.yml");
 /// Haswell-EP description.
 pub const HSW_YML: &str = include_str!("../../../machines/hsw.yml");
+/// Fujitsu A64FX (AArch64/SVE) description.
+pub const A64FX_YML: &str = include_str!("../../../machines/a64fx.yml");
 
 #[cfg(test)]
 mod tests {

@@ -134,17 +134,20 @@ fn format_value(cy: f64, r: &AnalysisReport) -> String {
     }
 }
 
-/// Render the in-core (ECMCPU) report from the `incore` section.
+/// Render the in-core report from the `incore` section: the port model's
+/// throughput numbers plus the dependency-DAG CP/LCD analysis
+/// (DESIGN.md §4).
 pub fn incore_report(i: &IncoreReport) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "in-core (port model): T_OL = {:.1} cy/CL, T_nOL = {:.1} cy/CL\n",
-        i.t_ol, i.t_nol
+        "in-core (port model, {}): T_OL = {:.1} cy/CL, T_nOL = {:.1} cy/CL\n",
+        i.isa, i.t_ol, i.t_nol
     ));
     s.push_str(&format!(
-        "  TP = {:.1} cy/CL, CP(recurrence) = {:.1} cy/CL, {} (x{})\n",
+        "  TP = {:.1} cy/CL, CP = {:.1} cy/CL, LCD = {:.1} cy/CL, {} (x{})\n",
         i.tp,
-        i.cp,
+        i.cp_cy,
+        i.lcd_cy,
         if i.vectorized { "vectorized" } else { "scalar" },
         i.vector_elems
     ));
@@ -153,6 +156,22 @@ pub fn incore_report(i: &IncoreReport) -> String {
         s.push_str(&format!(" {port}={cycles:.1}"));
     }
     s.push('\n');
+    if !i.chains.is_empty() {
+        s.push_str("  LCD chains (cy/it):");
+        for c in &i.chains {
+            s.push_str(&format!(
+                " {}={:.1}[{}]{}",
+                c.name,
+                c.latency_per_it,
+                c.instructions.join(","),
+                if c.broken { "(broken)" } else { "" }
+            ));
+        }
+        s.push('\n');
+    }
+    if let Some(d) = &i.dominant_chain {
+        s.push_str(&format!("  dominant chain: {d} ({:.1} cy/CL)\n", i.lcd_cy));
+    }
     s
 }
 
@@ -195,19 +214,13 @@ pub fn validation_report(r: &AnalysisReport) -> String {
 /// `report.model` would (the text twin of [`AnalysisReport::to_json`]).
 pub fn render_report(r: &AnalysisReport, verbose: bool) -> String {
     let mut s = String::new();
-    if verbose {
-        if let Some(i) = &r.incore {
-            if r.ecm.is_some() {
-                s.push_str(&incore_report(i));
-            }
-        }
+    // the in-core section always renders when present: CP/LCD are
+    // first-class outputs, not verbose-only diagnostics
+    if let Some(i) = &r.incore {
+        s.push_str(&incore_report(i));
     }
     if r.ecm.is_some() {
         s.push_str(&ecm_report(r, verbose));
-    } else if let Some(i) = &r.incore {
-        if r.roofline.is_none() {
-            s.push_str(&incore_report(i));
-        }
     }
     s.push_str(&roofline_report(r));
     s.push_str(&validation_report(r));
@@ -333,7 +346,7 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
         s.push(',');
         s.push_str(&csv_field(c));
     }
-    s.push_str(",unit_it,T_OL,T_nOL");
+    s.push_str(",unit_it,T_OL,T_nOL,CP,LCD");
     for l in &link_names {
         s.push_str(",T_");
         s.push_str(l);
@@ -356,7 +369,14 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
                 s.push_str(&v.to_string());
             }
         }
-        s.push_str(&format!(",{},{},{}", r.unit_iterations, fmt_cy(r.t_ol), fmt_cy(r.t_nol)));
+        s.push_str(&format!(
+            ",{},{},{},{},{}",
+            r.unit_iterations,
+            fmt_cy(r.t_ol),
+            fmt_cy(r.t_nol),
+            fmt_cy(r.cp_cy),
+            fmt_cy(r.lcd_cy)
+        ));
         for l in &link_names {
             s.push(',');
             if let Some((_, _, cy)) = r.links.iter().find(|(n, _, _)| n == l) {
@@ -406,10 +426,12 @@ pub fn sweep_json(rows: &[SweepRow], stats: &MemoStats) -> String {
             s.push_str(&format!("{}: {}", json_str(k), v));
         }
         s.push_str(&format!(
-            "}}, \"unit_iterations\": {}, \"t_ol\": {}, \"t_nol\": {}",
+            "}}, \"unit_iterations\": {}, \"t_ol\": {}, \"t_nol\": {}, \"cp_cy\": {}, \"lcd_cy\": {}",
             r.unit_iterations,
             json_num(r.t_ol),
-            json_num(r.t_nol)
+            json_num(r.t_nol),
+            json_num(r.cp_cy),
+            json_num(r.lcd_cy)
         ));
         s.push_str(", \"links\": [");
         for (lx, (name, lines, cycles)) in r.links.iter().enumerate() {
@@ -613,12 +635,15 @@ mod tests {
         let header = lines.next().unwrap();
         assert!(header.starts_with("kernel,machine,cores,predictor,N,"), "{header}");
         assert!(header.contains("T_ECM_Mem"), "{header}");
+        assert!(header.contains(",CP,LCD,"), "{header}");
         assert_eq!(lines.count(), 2, "{csv}");
         assert!(csv.contains("triad,SNB,1,auto,4096"), "{csv}");
 
         let json = sweep_json(&out.rows, &out.stats);
         assert!(json.contains("\"rows\": ["), "{json}");
         assert!(json.contains("\"t_ecm_mem\""), "{json}");
+        assert!(json.contains("\"cp_cy\""), "{json}");
+        assert!(json.contains("\"lcd_cy\""), "{json}");
         assert!(json.contains("\"N\": 4096"), "{json}");
         // crude balance check for the hand-rolled writer
         let opens = json.matches('{').count();

@@ -107,14 +107,18 @@ impl Metrics {
 
     /// Render the text exposition: per-endpoint request/error totals,
     /// connection counters, the session's per-stage memo counters, the
-    /// per-diagnostic-code rejected-input tallies, and — when a
-    /// persistent cache is attached — its hit/miss/store/invalid
-    /// counters. `rejected` is `(code, count)` pairs, already sorted
-    /// ([`crate::session::Session::rejected_by_code`]).
+    /// per-diagnostic-code rejected-input tallies, the per-ISA-family
+    /// request tallies, and — when a persistent cache is attached — its
+    /// hit/miss/store/invalid counters. `rejected` is `(code, count)`
+    /// pairs, already sorted
+    /// ([`crate::session::Session::rejected_by_code`]); `isa` is
+    /// `(family, count)` pairs, already sorted
+    /// ([`crate::session::Session::requests_by_isa`]).
     pub fn render(
         &self,
         memo: &MemoStats,
         rejected: &[(String, u64)],
+        isa: &[(String, u64)],
         cache: Option<CacheStats>,
     ) -> String {
         let mut s = String::new();
@@ -124,6 +128,11 @@ impl Metrics {
                 "kerncraft_requests_total{{endpoint=\"{}\"}} {}\n",
                 ep.name(),
                 self.requests_for(ep)
+            ));
+        }
+        for (family, count) in isa {
+            s.push_str(&format!(
+                "kerncraft_requests_total{{isa=\"{family}\"}} {count}\n"
             ));
         }
         for ep in Endpoint::ALL {
@@ -184,8 +193,11 @@ mod tests {
         let memo = MemoStats { program_hits: 7, ..MemoStats::default() };
         let cache = CacheStats { hits: 1, misses: 2, stores: 2, invalid: 0 };
         let rejected = vec![("E100".to_string(), 4), ("E201".to_string(), 1)];
-        let text = m.render(&memo, &rejected, Some(cache));
+        let isa = vec![("aarch64".to_string(), 1), ("x86".to_string(), 2)];
+        let text = m.render(&memo, &rejected, &isa, Some(cache));
         assert!(text.contains("kerncraft_requests_total{endpoint=\"analyze\"} 2"), "{text}");
+        assert!(text.contains("kerncraft_requests_total{isa=\"x86\"} 2"), "{text}");
+        assert!(text.contains("kerncraft_requests_total{isa=\"aarch64\"} 1"), "{text}");
         assert!(text.contains("kerncraft_requests_total{endpoint=\"batch\"} 1"), "{text}");
         assert!(text.contains("kerncraft_errors_total{endpoint=\"batch\"} 3"), "{text}");
         assert!(text.contains("kerncraft_connections_total 1"), "{text}");
@@ -196,10 +208,11 @@ mod tests {
         assert!(text.contains("kerncraft_report_cache_hits_total 1"), "{text}");
         assert!(text.contains("kerncraft_report_cache_invalid_total 0"), "{text}");
         // without a cache, the persistent-cache family is absent; with no
-        // rejections, the rejected family is too
-        let text = m.render(&memo, &[], None);
+        // rejections or evaluated requests, those families are too
+        let text = m.render(&memo, &[], &[], None);
         assert!(!text.contains("report_cache"), "{text}");
         assert!(!text.contains("rejected_inputs"), "{text}");
+        assert!(!text.contains("isa="), "{text}");
     }
 
     #[test]

@@ -298,6 +298,7 @@ fn dispatch(state: &ServerState, req: &http::HttpRequest) -> (u16, &'static str,
             state.metrics.render(
                 &state.session.stats(),
                 &state.session.rejected_by_code(),
+                &state.session.requests_by_isa(),
                 state.cache.as_ref().map(|c| c.stats()),
             ),
         ),

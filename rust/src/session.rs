@@ -425,31 +425,71 @@ impl MemoStats {
     }
 }
 
-/// In-core section (port model) of a report.
+/// One loop-carried dependency chain in the in-core section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainReport {
+    /// Carried scalars on the cycle, joined with `->` (e.g. `c->sum`).
+    pub name: String,
+    /// Cycle-mean latency per scalar iteration.
+    pub latency_per_it: f64,
+    /// Chain cost per unit of work.
+    pub cy_per_unit: f64,
+    /// True when modulo variable expansion breaks this chain.
+    pub broken: bool,
+    /// Resolved mnemonics along the chain.
+    pub instructions: Vec<String>,
+}
+
+/// In-core section (port model + dependency DAG) of a report.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IncoreReport {
+    /// ISA family the instruction selection was resolved for
+    /// ("x86"/"aarch64").
+    pub isa: String,
     pub t_ol: f64,
     pub t_nol: f64,
     /// Pure throughput bound (IACA "TP").
     pub tp: f64,
-    /// Recurrence critical path per unit of work (0 when none).
-    pub cp: f64,
+    /// Dependency-DAG critical path per unit of work (OSACA "CP").
+    pub cp_cy: f64,
+    /// Loop-carried dependency bound per unit of work (OSACA "LCD",
+    /// 0 when none).
+    pub lcd_cy: f64,
     pub vectorized: bool,
     pub vector_elems: u32,
     /// (port name, cycles per unit) pressure table.
     pub port_pressure: Vec<(String, f64)>,
+    /// Loop-carried dependency chains, unbroken-first then by
+    /// descending latency.
+    pub chains: Vec<ChainReport>,
+    /// Name of the dominant (unbroken, highest-latency) chain, if any.
+    pub dominant_chain: Option<String>,
 }
 
 impl IncoreReport {
     pub(crate) fn from_model(pm: &PortModel) -> IncoreReport {
         IncoreReport {
+            isa: pm.isa.name().to_string(),
             t_ol: pm.t_ol,
             t_nol: pm.t_nol,
             tp: pm.tp,
-            cp: pm.cp,
+            cp_cy: pm.cp_cy,
+            lcd_cy: pm.lcd_cy,
             vectorized: pm.vectorized,
             vector_elems: pm.vector_elems,
             port_pressure: pm.pressure.iter().map(|p| (p.port.clone(), p.cycles)).collect(),
+            chains: pm
+                .chains
+                .iter()
+                .map(|c| ChainReport {
+                    name: c.name.clone(),
+                    latency_per_it: c.latency_per_it,
+                    cy_per_unit: c.cy_per_unit,
+                    broken: c.broken,
+                    instructions: c.instructions.clone(),
+                })
+                .collect(),
+            dominant_chain: pm.dominant_chain.clone(),
         }
     }
 }
@@ -852,6 +892,10 @@ pub struct Session {
     /// every kernel the frontend refuses bumps its code here, feeding
     /// the `kerncraft_rejected_inputs_total` metric family.
     rejected: Mutex<BTreeMap<String, u64>>,
+    /// Request tallies per machine ISA family ("x86", "aarch64"),
+    /// feeding the `kerncraft_requests_total{isa=...}` metric family so
+    /// operators can see the ISA mix across a fleet.
+    isa_requests: Mutex<BTreeMap<String, u64>>,
 }
 
 /// Memo lookup helper: double-checked get-or-insert through a sharded
@@ -939,11 +983,14 @@ impl Session {
         let Ok((label, source)) = req.kernel.resolve() else {
             return Ok(self.evaluate_full(req)?.report);
         };
-        let Ok((_, machine_digest, _)) = self.memoized_machine(&req.machine) else {
+        let Ok((machine, machine_digest, _)) = self.memoized_machine(&req.machine) else {
             return Ok(self.evaluate_resolved(req, label, source)?.report);
         };
         let key = req.cache_key_resolved(&machine_digest, &label, &source);
         if let Some(mut report) = cache.get(&key) {
+            // cache hits skip evaluate_resolved, so the ISA tally (a
+            // request counter, not a stage counter) happens here
+            self.note_isa(&machine);
             report.id = req.id.clone();
             return Ok(report);
         }
@@ -978,6 +1025,7 @@ impl Session {
         let (machine, _digest, hit) = self.memoized_machine(&req.machine)?;
         note(hit, &mut local.machine_hits, &mut local.machine_misses);
         note_global(hit, &self.counters.machine_hits, &self.counters.machine_misses);
+        self.note_isa(&machine);
 
         let (analysis, akey, program_hit, analysis_hit) =
             self.memoized_analysis(&source, &req.constants)?;
@@ -1175,6 +1223,20 @@ impl Session {
     /// sorted by code (stable metric ordering).
     pub fn rejected_by_code(&self) -> Vec<(String, u64)> {
         let map = self.rejected.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Record one evaluated request against its machine's ISA family.
+    fn note_isa(&self, machine: &MachineModel) {
+        let mut map = self.isa_requests.lock().unwrap();
+        *map.entry(machine.isa.family.name().to_string()).or_insert(0) += 1;
+    }
+
+    /// Snapshot of the per-ISA-family request tallies, sorted by family
+    /// name (stable metric ordering) — the
+    /// `kerncraft_requests_total{isa=...}` series.
+    pub fn requests_by_isa(&self) -> Vec<(String, u64)> {
+        let map = self.isa_requests.lock().unwrap();
         map.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
@@ -1437,11 +1499,13 @@ impl AnalysisRequest {
 impl IncoreReport {
     fn json(&self) -> String {
         let mut s = format!(
-            "{{\"t_ol\": {}, \"t_nol\": {}, \"tp\": {}, \"cp\": {}, \"vectorized\": {}, \"vector_elems\": {}, \"port_pressure\": [",
+            "{{\"isa\": {}, \"t_ol\": {}, \"t_nol\": {}, \"tp\": {}, \"cp_cy\": {}, \"lcd_cy\": {}, \"vectorized\": {}, \"vector_elems\": {}, \"port_pressure\": [",
+            json_str(&self.isa),
             json_num(self.t_ol),
             json_num(self.t_nol),
             json_num(self.tp),
-            json_num(self.cp),
+            json_num(self.cp_cy),
+            json_num(self.lcd_cy),
             self.vectorized,
             self.vector_elems
         );
@@ -1455,7 +1519,26 @@ impl IncoreReport {
                 json_num(*cycles)
             ));
         }
-        s.push_str("]}");
+        s.push_str("], \"chains\": [");
+        for (ix, c) in self.chains.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            let instrs: Vec<String> = c.instructions.iter().map(|i| json_str(i)).collect();
+            s.push_str(&format!(
+                "{{\"name\": {}, \"latency_per_it\": {}, \"cy_per_unit\": {}, \"broken\": {}, \"instructions\": [{}]}}",
+                json_str(&c.name),
+                json_num(c.latency_per_it),
+                json_num(c.cy_per_unit),
+                c.broken,
+                instrs.join(", ")
+            ));
+        }
+        s.push(']');
+        if let Some(d) = &self.dominant_chain {
+            s.push_str(&format!(", \"dominant_chain\": {}", json_str(d)));
+        }
+        s.push('}');
         s
     }
 
@@ -1468,14 +1551,46 @@ impl IncoreReport {
         {
             port_pressure.push((get_str(p, "port")?, get_f64(p, "cycles")?));
         }
+        let mut chains = Vec::new();
+        for c in v.get("chains").ok_or_else(|| anyhow!("incore missing 'chains'"))?.items() {
+            let mut instructions = Vec::new();
+            for i in c
+                .get("instructions")
+                .ok_or_else(|| anyhow!("chain missing 'instructions'"))?
+                .items()
+            {
+                instructions.push(
+                    i.as_str()
+                        .ok_or_else(|| anyhow!("chain instruction must be a string"))?
+                        .to_string(),
+                );
+            }
+            chains.push(ChainReport {
+                name: get_str(c, "name")?,
+                latency_per_it: get_f64(c, "latency_per_it")?,
+                cy_per_unit: get_f64(c, "cy_per_unit")?,
+                broken: get_bool(c, "broken")?,
+                instructions,
+            });
+        }
+        let dominant_chain = match v.get("dominant_chain") {
+            None => None,
+            Some(d) => {
+                Some(d.as_str().ok_or_else(|| anyhow!("bad 'dominant_chain'"))?.to_string())
+            }
+        };
         Ok(IncoreReport {
+            isa: get_str(v, "isa")?,
             t_ol: get_f64(v, "t_ol")?,
             t_nol: get_f64(v, "t_nol")?,
             tp: get_f64(v, "tp")?,
-            cp: get_f64(v, "cp")?,
+            cp_cy: get_f64(v, "cp_cy")?,
+            lcd_cy: get_f64(v, "lcd_cy")?,
             vectorized: get_bool(v, "vectorized")?,
             vector_elems: get_u32(v, "vector_elems")?,
             port_pressure,
+            chains,
+            dominant_chain,
         })
     }
 }

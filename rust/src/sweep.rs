@@ -82,6 +82,10 @@ pub struct SweepRow {
     pub unit_iterations: u64,
     pub t_ol: f64,
     pub t_nol: f64,
+    /// Dependency-DAG critical path per unit of work (OSACA "CP").
+    pub cp_cy: f64,
+    /// Loop-carried dependency bound per unit of work (OSACA "LCD").
+    pub lcd_cy: f64,
     /// Per-link (name, cache lines, cycles) contributions, inner first.
     pub links: Vec<(String, f64, f64)>,
     /// In-memory ECM prediction (cy/CL).
@@ -207,6 +211,8 @@ fn row_from_report(job: &SweepJob, r: &AnalysisReport) -> SweepRow {
         unit_iterations: r.unit_iterations,
         t_ol: ecm.t_ol,
         t_nol: ecm.t_nol,
+        cp_cy: r.incore.as_ref().map(|i| i.cp_cy).unwrap_or(0.0),
+        lcd_cy: r.incore.as_ref().map(|i| i.lcd_cy).unwrap_or(0.0),
         links: ecm
             .contributions
             .iter()

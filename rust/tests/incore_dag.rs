@@ -1,0 +1,237 @@
+//! In-core dependency-DAG suite: golden incore-section fixtures for the
+//! CP/LCD report lines, structural DAG properties, and a lint pass that
+//! loads every shipped machine file.
+//!
+//! The golden fixtures use the same digit normalization as the CLI
+//! Validate fixture (runs of digits/sign/point collapse to `#`, space
+//! runs to one space): the section *shape* — chain names, resolved
+//! mnemonics with their counts, and port labels — is pinned
+//! byte-for-byte, while the hand-derivable figures are pinned by
+//! exact-substring asserts.
+
+use kerncraft::incore::dag::DepDag;
+use kerncraft::incore::isa::IsaSpec;
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::{MachineModel, UopClass};
+use kerncraft::report::incore_report;
+use kerncraft::session::{AnalysisRequest, KernelSpec, ModelKind, Session};
+use std::collections::HashMap;
+
+/// Render the in-core section of a kernel file on a machine file the
+/// way the CLI/serve pipeline does (ECMCPU: in-core only, no traffic
+/// stage, so no benchmark data is needed).
+fn incore_section(kernel_file: &str, machine: &str, consts: &[(&str, i64)]) -> String {
+    let src =
+        std::fs::read_to_string(kernel_file).unwrap_or_else(|e| panic!("{kernel_file}: {e}"));
+    let mut req = AnalysisRequest::new(KernelSpec::source(kernel_file, src.as_str()), machine)
+        .with_model(ModelKind::EcmCpu);
+    for (k, v) in consts {
+        req = req.with_constant(*k, *v);
+    }
+    let r = Session::new().evaluate(&req).unwrap_or_else(|e| panic!("{kernel_file}: {e:#}"));
+    incore_report(r.incore.as_ref().expect("ECMCPU report carries an incore section"))
+}
+
+/// Same normalization as the Validate golden test: numeric text
+/// (digits, sign, decimal point) collapses to a single `#`, space runs
+/// to one space, everything else passes through verbatim.
+fn normalize_numbers(s: &str) -> String {
+    let mut out = String::new();
+    let mut last_hash = false;
+    let mut last_space = false;
+    for c in s.chars() {
+        if c.is_ascii_digit() || c == '+' || c == '-' || c == '.' {
+            if !last_hash {
+                out.push('#');
+            }
+            last_hash = true;
+            last_space = false;
+        } else if c == ' ' {
+            if !last_space {
+                out.push(' ');
+            }
+            last_space = true;
+            last_hash = false;
+        } else {
+            out.push(c);
+            last_hash = false;
+            last_space = false;
+        }
+    }
+    out
+}
+
+fn assert_matches_fixture(section: &str, fixture: &str) {
+    let expected =
+        std::fs::read_to_string(fixture).unwrap_or_else(|e| panic!("{fixture}: {e}"));
+    assert_eq!(normalize_numbers(section), expected, "raw section:\n{section}");
+}
+
+#[test]
+fn golden_kahan_snb() {
+    let s = incore_section("kernels/kahan-ddot.c", "machines/snb.yml", &[("N", 1000000)]);
+    assert_matches_fixture(&s, "rust/tests/fixtures/incore/kahan_snb.expected");
+    // the 12 cy/it c→c chain over 8 scalar iterations/CL floors T_OL
+    assert!(s.contains("T_OL = 96.0 cy/CL"), "{s}");
+    assert!(s.contains("LCD = 96.0 cy/CL"), "{s}");
+    // the full critical path adds the load and multiply: (4+5+12) × 8
+    assert!(s.contains("CP = 168.0 cy/CL"), "{s}");
+    assert!(s.contains("dominant chain: c (96.0 cy/CL)"), "{s}");
+    assert!(s.contains("c=12.0[addsd,addsd,addsd,addsd]"), "{s}");
+    assert!(s.contains("sum=3.0[addsd]"), "{s}");
+}
+
+#[test]
+fn golden_kahan_a64fx() {
+    let s = incore_section("kernels/kahan-ddot.c", "machines/a64fx.yml", &[("N", 1000000)]);
+    assert_matches_fixture(&s, "rust/tests/fixtures/incore/kahan_a64fx.expected");
+    // 9 cy FP adds and a 256 B cache line: 4×9 cy/it × 32 it/CL
+    assert!(s.contains("LCD = 1152.0 cy/CL"), "{s}");
+    assert!(s.contains("CP = 1792.0 cy/CL"), "{s}");
+    assert!(s.contains("c=36.0[fadd,fadd,fadd,fadd]"), "{s}");
+    assert!(s.contains("scalar (x1)"), "{s}");
+}
+
+#[test]
+fn golden_2d5pt_snb() {
+    let s = incore_section(
+        "kernels/2d-5pt.c",
+        "machines/snb.yml",
+        &[("N", 6000), ("M", 6000)],
+    );
+    assert_matches_fixture(&s, "rust/tests/fixtures/incore/2d5pt_snb.expected");
+    // no loop-carried scalar: LCD is zero and the stencil vectorizes
+    assert!(s.contains("LCD = 0.0 cy/CL"), "{s}");
+    assert!(s.contains("vectorized (x4)"), "{s}");
+    assert!(!s.contains("LCD chains"), "{s}");
+    assert!(!s.contains("dominant chain"), "{s}");
+}
+
+#[test]
+fn golden_2d5pt_a64fx() {
+    let s = incore_section(
+        "kernels/2d-5pt.c",
+        "machines/a64fx.yml",
+        &[("N", 6000), ("M", 6000)],
+    );
+    assert_matches_fixture(&s, "rust/tests/fixtures/incore/2d5pt_a64fx.expected");
+    assert!(s.contains("LCD = 0.0 cy/CL"), "{s}");
+    assert!(s.contains("vectorized (x8)"), "{s}");
+}
+
+// -------------------------------------------------------------------------
+// DAG structural properties
+// -------------------------------------------------------------------------
+
+fn build_dag(src: &str, consts: &[(&str, i64)], machine: &MachineModel) -> DepDag {
+    let p = parse(src).unwrap();
+    let c: HashMap<String, i64> = consts.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+    let a = KernelAnalysis::from_program(&p, &c).unwrap();
+    DepDag::build(&a, &IsaSpec::resolve(machine, true))
+}
+
+fn kahan_src() -> String {
+    std::fs::read_to_string("kernels/kahan-ddot.c").unwrap()
+}
+
+fn jacobi_src() -> String {
+    std::fs::read_to_string("kernels/2d-5pt.c").unwrap()
+}
+
+const DOT: &str = "double a[N], b[N], s;\nfor (int i = 0; i < N; i++) s += a[i] * b[i];";
+
+#[test]
+fn forward_edges_are_acyclic_modulo_back_edges() {
+    let m = MachineModel::snb();
+    for (src, consts) in [
+        (kahan_src(), vec![("N", 100000)]),
+        (jacobi_src(), vec![("N", 500), ("M", 500)]),
+        (DOT.to_string(), vec![("N", 100000)]),
+    ] {
+        let dag = build_dag(&src, &consts, &m);
+        // node ids are a topological order of the forward edges: all
+        // cyclicity lives in the explicit back-edge list
+        assert!(dag.is_topologically_ordered());
+        for &(def, phi) in dag.back_edges() {
+            assert!(def > phi, "back-edge must point backwards: {def} -> {phi}");
+        }
+    }
+}
+
+#[test]
+fn critical_path_dominates_chains_and_single_instructions() {
+    let m = MachineModel::snb();
+    for (src, consts) in [
+        (kahan_src(), vec![("N", 100000)]),
+        (jacobi_src(), vec![("N", 500), ("M", 500)]),
+        (DOT.to_string(), vec![("N", 100000)]),
+    ] {
+        let dag = build_dag(&src, &consts, &m);
+        let (cp, path) = dag.critical_path();
+        // CP ≥ LCD ≥ 0, and CP ≥ the largest single-node latency
+        assert!(cp >= dag.unbreakable_cycle_mean(true));
+        assert!(cp >= dag.max_node_latency(), "cp {cp}");
+        // the reported path realizes exactly the reported latency
+        let path_latency: f64 = path.iter().map(|&id| dag.nodes()[id].latency).sum();
+        assert!((path_latency - cp).abs() < 1e-9, "{path_latency} vs {cp}");
+        // each chain's total cycle latency covers its slowest node
+        for c in dag.chains(true) {
+            let max_on_path =
+                c.path.iter().map(|&id| dag.nodes()[id].latency).fold(0.0f64, f64::max);
+            assert!(
+                c.latency_per_it * c.vars.len() as f64 + 1e-9 >= max_on_path,
+                "{:?}: {} < {max_on_path}",
+                c.vars,
+                c.latency_per_it
+            );
+        }
+    }
+}
+
+#[test]
+fn chain_enumeration_is_deterministic() {
+    let m = MachineModel::snb();
+    let kahan = kahan_src();
+    let d1 = build_dag(&kahan, &[("N", 100000)], &m);
+    let d2 = build_dag(&kahan, &[("N", 100000)], &m);
+    assert_eq!(d1.chains(true), d2.chains(true));
+    let names: Vec<String> = d1.chains(true).iter().map(|c| c.vars.join("->")).collect();
+    assert_eq!(names, ["c", "c->sum", "sum"]);
+    // the pure jacobi stencil carries nothing across iterations
+    let dj = build_dag(&jacobi_src(), &[("N", 500), ("M", 500)], &m);
+    assert!(dj.chains(true).is_empty());
+    assert!(dj.back_edges().is_empty());
+    // the dot-product reduction is a single breakable self-cycle
+    let dd = build_dag(DOT, &[("N", 100000)], &m);
+    let chains = dd.chains(true);
+    assert_eq!(chains.len(), 1);
+    assert!(chains[0].broken);
+    assert_eq!(dd.unbreakable_cycle_mean(true), 0.0);
+    assert!(dd.unbreakable_cycle_mean(false) > 0.0);
+}
+
+// -------------------------------------------------------------------------
+// machine-file lint: every shipped description must load and resolve
+// -------------------------------------------------------------------------
+
+#[test]
+fn every_shipped_machine_file_loads() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir("machines").expect("machines/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("yml") {
+            continue;
+        }
+        let name = path.display().to_string();
+        let m = MachineModel::from_file(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(!m.ports.is_empty(), "{name}: no ports");
+        assert!(!m.memory_hierarchy.is_empty(), "{name}: no memory hierarchy");
+        // the in-core engine must resolve an instruction selection for
+        // every machine (exercises family + instructions-table parsing)
+        let spec = IsaSpec::resolve(&m, true);
+        assert!(spec.latency(UopClass::Add) > 0.0, "{name}: zero ADD latency");
+        assert!(!spec.mnemonic(UopClass::Load).is_empty(), "{name}");
+        seen += 1;
+    }
+    assert!(seen >= 3, "expected snb/hsw/a64fx under machines/, saw {seen}");
+}
