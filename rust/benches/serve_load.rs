@@ -1,0 +1,359 @@
+//! Load generator for the event-driven serve tier: replays a fixed
+//! `/analyze` / `/healthz` / `/batch` mix over N concurrent keep-alive
+//! connections against an in-process server and records throughput and
+//! latency percentiles into BENCH_serve.json.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo bench --bench serve_load                         # pinned trajectory: 16 and 500 connections
+//! cargo bench --bench serve_load -- --smoke --out /tmp/x.json   # CI: small, fast, schema-identical
+//! cargo bench --bench serve_load -- --connections 64,256 --duration-secs 10 --threads 8
+//! ```
+//!
+//! Every run validates the client-side request tallies against the
+//! server's `/metrics` per-endpoint counters and exits nonzero on any
+//! mismatch, so the recorded numbers are backed by the server's own
+//! accounting. The output schema (checked by CI against both the smoke
+//! output and the committed BENCH_serve.json) is:
+//!
+//! ```text
+//! {"bench": "serve_load", "schema": 1, "threads": T, "duration_s": D,
+//!  "mix": "...", "runs": [{"connections": C, "requests": R, "errors": E,
+//!                          "rps": X, "p50_ms": Y, "p99_ms": Z,
+//!                          "metrics_validated": true}, ...]}
+//! ```
+
+use kerncraft::server::{Server, ServerOptions};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+const MIX: &str = "70% analyze / 20% healthz / 10% batch(3)";
+const CLIENT_THREADS: usize = 8;
+
+struct Args {
+    connections: Vec<usize>,
+    duration: Duration,
+    threads: usize,
+    out: String,
+    smoke: bool,
+}
+
+/// Unwrap a flag's value or exit with a usage error.
+fn need(v: Option<String>, flag: &str) -> String {
+    v.unwrap_or_else(|| die(&format!("{flag} needs a value")))
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        connections: vec![16, 500],
+        duration: Duration::from_secs(5),
+        threads: 4,
+        out: "BENCH_serve.json".to_string(),
+        smoke: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--smoke" => {
+                args.smoke = true;
+                args.connections = vec![8, 64];
+                args.duration = Duration::from_millis(1500);
+            }
+            "--connections" => {
+                let v = need(it.next(), "--connections");
+                args.connections.clear();
+                for part in v.split(',') {
+                    let n = part.trim().parse();
+                    args.connections.push(n.unwrap_or_else(|_| die("bad connection count")));
+                }
+            }
+            "--duration-secs" => {
+                let v = need(it.next(), "--duration-secs");
+                let secs: f64 = v.parse().unwrap_or_else(|_| die("bad --duration-secs"));
+                args.duration = Duration::from_secs_f64(secs);
+            }
+            "--threads" => {
+                let v = need(it.next(), "--threads");
+                args.threads = v.parse().unwrap_or_else(|_| die("bad --threads"));
+            }
+            "--out" => args.out = need(it.next(), "--out"),
+            "--bench" => {} // passed through by `cargo bench`
+            other => die(&format!("unknown argument: {other}")),
+        }
+    }
+    if args.connections.is_empty() {
+        die("--connections needs at least one count");
+    }
+    args
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("serve_load: {msg}");
+    std::process::exit(1);
+}
+
+fn analyze_body(n: u64) -> String {
+    format!(r#"{{"kernel": {{"name": "triad"}}, "machine": "SNB", "constants": {{"N": {n}}}}}"#)
+}
+
+fn post(path: &str, body: &str) -> Vec<u8> {
+    let n = body.len();
+    let req = format!("POST {path} HTTP/1.1\r\nhost: bench\r\ncontent-length: {n}\r\n\r\n{body}");
+    req.into_bytes()
+}
+
+/// Read one keep-alive response; returns the status code.
+fn read_response(r: &mut BufReader<TcpStream>) -> std::io::Result<u16> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let parsed = line.split_whitespace().nth(1).and_then(|s| s.parse::<u16>().ok());
+    let Some(status) = parsed else {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, line));
+    };
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h)?;
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(status)
+}
+
+/// Client-side tallies from one worker thread.
+#[derive(Default)]
+struct Tally {
+    analyze: u64,
+    healthz: u64,
+    batch: u64,
+    errors: u64,
+    latencies_us: Vec<u64>,
+}
+
+fn client_thread(addr: SocketAddr, conn_indices: Vec<usize>, deadline: Instant) -> Tally {
+    // open this thread's keep-alive connections, one warmup /healthz
+    // round-trip each (paces the opens past the listener backlog;
+    // warmups are not recorded but ARE counted for /metrics validation
+    // by the caller, one per connection)
+    let mut conns: Vec<(TcpStream, BufReader<TcpStream>)> = Vec::new();
+    for _ in &conn_indices {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut s = &stream;
+        s.write_all(b"GET /healthz HTTP/1.1\r\nhost: bench\r\n\r\n").unwrap();
+        assert_eq!(read_response(&mut reader).unwrap(), 200);
+        conns.push((stream, reader));
+    }
+
+    let one = analyze_body(65536);
+    let batch_body = format!("[{one}, {one}, {one}]");
+    let sizes = [4096u64, 65536, 1 << 20];
+    let mut tally = Tally::default();
+    let mut iter = 0usize;
+    'outer: loop {
+        for (slot, (stream, reader)) in conns.iter_mut().enumerate() {
+            if Instant::now() >= deadline {
+                break 'outer;
+            }
+            let ci = conn_indices[slot];
+            // deterministic mix keyed on (connection, iteration)
+            let pick = (ci + iter) % 10;
+            let raw: Vec<u8> = match pick {
+                0..=6 => {
+                    tally.analyze += 1;
+                    post("/analyze", &analyze_body(sizes[(ci + iter) % sizes.len()]))
+                }
+                7 | 8 => {
+                    tally.healthz += 1;
+                    b"GET /healthz HTTP/1.1\r\nhost: bench\r\n\r\n".to_vec()
+                }
+                _ => {
+                    tally.batch += 1;
+                    post("/batch", &batch_body)
+                }
+            };
+            let t0 = Instant::now();
+            let mut s = &*stream;
+            s.write_all(&raw).unwrap();
+            let status = read_response(reader).unwrap();
+            tally.latencies_us.push(t0.elapsed().as_micros() as u64);
+            if status != 200 {
+                tally.errors += 1;
+            }
+        }
+        iter += 1;
+    }
+    tally
+}
+
+/// Scrape one numeric sample from a `/metrics` exposition.
+fn metric(text: &str, name: &str) -> u64 {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Ok(v) = rest.trim().parse() {
+                return v;
+            }
+        }
+    }
+    die(&format!("metric {name} missing from /metrics"));
+}
+
+fn fetch_metrics(addr: SocketAddr) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = b"GET /metrics HTTP/1.1\r\nhost: bench\r\nconnection: close\r\n\r\n";
+    stream.write_all(req).unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    match text.split_once("\r\n\r\n") {
+        Some((_, body)) => body.to_string(),
+        None => die("malformed /metrics response"),
+    }
+}
+
+struct RunResult {
+    connections: usize,
+    requests: u64,
+    errors: u64,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn percentile(sorted_us: &[u64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let ix = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[ix] as f64 / 1000.0
+}
+
+fn run_one(connections: usize, duration: Duration, threads: usize) -> RunResult {
+    let server = Server::bind(ServerOptions {
+        listen: "127.0.0.1:0".to_string(),
+        threads,
+        cache_dir: None,
+        max_body_bytes: 1 << 20,
+        idle_timeout: Duration::from_secs(120),
+        verbose: false,
+    })
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+
+    let client_threads = CLIENT_THREADS.min(connections);
+    let deadline = Instant::now() + duration;
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..client_threads)
+        .map(|t| {
+            let mine: Vec<usize> = (0..connections).filter(|c| c % client_threads == t).collect();
+            std::thread::spawn(move || client_thread(addr, mine, deadline))
+        })
+        .collect();
+    let mut tally = Tally::default();
+    for w in workers {
+        let t = w.join().unwrap();
+        tally.analyze += t.analyze;
+        tally.healthz += t.healthz;
+        tally.batch += t.batch;
+        tally.errors += t.errors;
+        tally.latencies_us.extend(t.latencies_us);
+    }
+    let elapsed = t0.elapsed();
+
+    // the server's own accounting must agree with what we sent:
+    // one warmup /healthz per connection on top of the recorded mix
+    let metrics = fetch_metrics(addr);
+    let healthz_total = tally.healthz + connections as u64;
+    let checks = [
+        ("kerncraft_requests_total{endpoint=\"analyze\"}", tally.analyze),
+        ("kerncraft_requests_total{endpoint=\"healthz\"}", healthz_total),
+        ("kerncraft_requests_total{endpoint=\"batch\"}", tally.batch),
+        ("kerncraft_connections_total", connections as u64 + 1),
+        ("kerncraft_queue_depth", 0),
+    ];
+    for (name, expected) in checks {
+        let got = metric(&metrics, name);
+        if got != expected {
+            die(&format!("{connections} connections: {name} = {got}, client sent {expected}"));
+        }
+    }
+
+    handle.stop();
+    join.join().unwrap();
+
+    let requests = tally.analyze + tally.healthz + tally.batch;
+    tally.latencies_us.sort_unstable();
+    RunResult {
+        connections,
+        requests,
+        errors: tally.errors,
+        rps: requests as f64 / elapsed.as_secs_f64(),
+        p50_ms: percentile(&tally.latencies_us, 0.50),
+        p99_ms: percentile(&tally.latencies_us, 0.99),
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    let mut runs = Vec::new();
+    for &connections in &args.connections {
+        eprintln!(
+            "serve_load: {connections} connections x {:.1}s, {} workers ...",
+            args.duration.as_secs_f64(),
+            args.threads
+        );
+        let r = run_one(connections, args.duration, args.threads);
+        eprintln!(
+            "serve_load: {connections} conns: {} reqs, {:.0} rps, p50 {:.2} ms, p99 {:.2} ms, {} errors",
+            r.requests,
+            r.rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.errors
+        );
+        runs.push(r);
+    }
+
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"serve_load\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!("  \"threads\": {},\n", args.threads));
+    out.push_str(&format!("  \"duration_s\": {:.2},\n", args.duration.as_secs_f64()));
+    out.push_str(&format!("  \"mix\": \"{MIX}\",\n"));
+    if args.smoke {
+        out.push_str("  \"note\": \"smoke run (CI): short duration, small connection counts\",\n");
+    }
+    out.push_str("  \"runs\": [\n");
+    for (i, r) in runs.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"connections\": {}, \"requests\": {}, \"errors\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"metrics_validated\": true}}{}\n",
+            r.connections,
+            r.requests,
+            r.errors,
+            r.rps,
+            r.p50_ms,
+            r.p99_ms,
+            if i + 1 < runs.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(&args.out, &out) {
+        die(&format!("writing {}: {e}", args.out));
+    }
+    eprintln!("serve_load: wrote {}", args.out);
+}

@@ -211,9 +211,11 @@ pub fn usage() -> String {
      --listen; see docs/SERVE.md for the wire protocol and\n\
      docs/OPERATIONS.md for operations):\n\
      kerncraft serve [--input FILE] [--threads K] [--unordered]\n\
-              [--listen ADDR] [--cache-dir DIR] [-v]\n\
+              [--listen ADDR] [--idle-timeout SECS] [--cache-dir DIR] [-v]\n\
               --listen ADDR     HTTP mode: POST /analyze | /batch | /stream,\n\
                                 GET /healthz | /metrics\n\
+              --idle-timeout S  HTTP mode: reap idle keep-alive\n\
+                                connections after S seconds (default 30)\n\
               --cache-dir DIR   persistent cross-process report cache"
         .to_string()
 }
@@ -582,6 +584,10 @@ pub struct ServeArgs {
     /// HTTP mode: listen address (e.g. `127.0.0.1:8157`); None keeps
     /// the JSON-lines stdin/stdout transport.
     pub listen: Option<String>,
+    /// HTTP mode: reap an idle keep-alive connection after this many
+    /// seconds; None keeps the server default
+    /// ([`crate::server::DEFAULT_IDLE_TIMEOUT`]).
+    pub idle_timeout: Option<f64>,
     /// Persistent cross-process report cache directory (both modes).
     pub cache_dir: Option<String>,
 }
@@ -594,6 +600,7 @@ impl Default for ServeArgs {
             threads: None,
             unordered: false,
             listen: None,
+            idle_timeout: None,
             cache_dir: None,
         }
     }
@@ -638,6 +645,16 @@ pub fn parse_serve_args(argv: &[String]) -> Result<ServeArgs> {
                         .cloned()
                         .ok_or_else(|| anyhow!("missing value after --listen"))?,
                 );
+            }
+            "--idle-timeout" => {
+                let Some(raw) = it.next() else {
+                    bail!("missing value after --idle-timeout");
+                };
+                let v: f64 = raw.parse().context("--idle-timeout")?;
+                if !(v > 0.0 && v.is_finite()) {
+                    bail!("--idle-timeout needs a positive number of seconds");
+                }
+                args.idle_timeout = Some(v);
             }
             "--cache-dir" => {
                 args.cache_dir = Some(
@@ -1095,16 +1112,24 @@ pub fn run_serve(argv: &[String]) -> Result<String> {
         if args.unordered {
             bail!("--unordered applies to the JSON-lines stream, not --listen (HTTP responses are per-request)");
         }
+        let idle_timeout = match args.idle_timeout {
+            Some(secs) => std::time::Duration::from_secs_f64(secs),
+            None => crate::server::DEFAULT_IDLE_TIMEOUT,
+        };
         let server = crate::server::Server::bind(crate::server::ServerOptions {
             listen: addr.clone(),
             threads: args.threads.unwrap_or_else(default_http_threads),
             cache_dir: args.cache_dir.as_ref().map(std::path::PathBuf::from),
             max_body_bytes: crate::server::DEFAULT_MAX_BODY_BYTES,
+            idle_timeout,
             verbose: args.verbose,
         })?;
         eprintln!("# kerncraft serve: listening on http://{}", server.local_addr());
         server.run()?;
         return Ok(String::new());
+    }
+    if args.idle_timeout.is_some() {
+        bail!("--idle-timeout applies to HTTP keep-alive connections; it needs --listen");
     }
     let session = match &args.cache_dir {
         Some(dir) => Session::with_report_cache(Arc::new(
@@ -1392,6 +1417,13 @@ mod tests {
             .unwrap();
         assert_eq!(a.listen.as_deref(), Some("127.0.0.1:9000"));
         assert_eq!(a.cache_dir.as_deref(), Some("/tmp/kc"));
+        assert_eq!(a.idle_timeout, None, "server default when the flag is absent");
+        let a = parse_serve_args(&argv("--listen 127.0.0.1:0 --idle-timeout 2.5")).unwrap();
+        assert_eq!(a.idle_timeout, Some(2.5));
+        assert!(parse_serve_args(&argv("--idle-timeout 0")).is_err());
+        assert!(parse_serve_args(&argv("--idle-timeout -3")).is_err());
+        assert!(parse_serve_args(&argv("--idle-timeout soon")).is_err());
+        assert!(parse_serve_args(&argv("--idle-timeout")).is_err());
         assert!(parse_serve_args(&argv("--listen")).is_err());
         assert!(parse_serve_args(&argv("--cache-dir")).is_err());
         assert!(parse_serve_args(&argv("--threads 0")).is_err());
@@ -1446,6 +1478,8 @@ mod tests {
         assert!(format!("{err}").contains("--listen"), "{err}");
         let err = run_serve(&argv("--listen 127.0.0.1:0 --unordered")).unwrap_err();
         assert!(format!("{err}").contains("--unordered"), "{err}");
+        let err = run_serve(&argv("--input reqs.jsonl --idle-timeout 5")).unwrap_err();
+        assert!(format!("{err}").contains("--listen"), "{err}");
     }
 
     #[test]

@@ -1,15 +1,22 @@
 //! Minimal HTTP/1.1 framing for `kerncraft serve --listen`.
 //!
-//! Hand-rolled on [`std::io`] for the same reason [`crate::jsonio`]
-//! exists: the offline crate set has no hyper/axum, and the server needs
-//! only a strict, bounded subset — request line, headers, and a
+//! Hand-rolled on `std` for the same reason [`crate::jsonio`] exists:
+//! the offline crate set has no hyper/axum, and the server needs only a
+//! strict, bounded subset — request line, headers, and a
 //! `Content-Length` body. Chunked transfer encoding is answered with
-//! `501`, oversized declarations with `413`, and every limit is enforced
-//! *before* the offending bytes are buffered, so one hostile connection
-//! cannot exhaust server memory. The endpoint semantics on top of this
+//! `501`, oversized declarations with `413`, and every limit is
+//! enforced on the bytes *seen so far*, so one hostile or dribbling
+//! connection cannot exhaust server memory.
+//!
+//! The parser is incremental: [`try_parse`] inspects a growing byte
+//! buffer and reports [`Parse::Incomplete`] until one complete request
+//! is present, which is what lets the readiness loop of
+//! [`crate::server::reactor`] own thousands of partially received
+//! connections without dedicating a thread (or an intermediate framing
+//! buffer copy) to any of them. The endpoint semantics on top of this
 //! framing live in [`crate::server`] and docs/SERVE.md.
 
-use std::io::{BufRead, Write};
+use std::io::Write;
 
 /// Longest accepted request/header line.
 pub const MAX_HEADER_LINE_BYTES: usize = 8 << 10;
@@ -34,12 +41,10 @@ pub struct HttpRequest {
     pub keep_alive: bool,
 }
 
-/// Why a request could not be read. Every variant except [`Io`] maps to
-/// a response status via [`HttpError::status`]; `Io` (including read
-/// timeouts on idle keep-alive connections) closes the connection
-/// silently.
-///
-/// [`Io`]: HttpError::Io
+/// Why a request could not be parsed. Every variant maps to a response
+/// status via [`HttpError::status`]; the transport layer answers with
+/// it and closes the connection (a framing error desynchronizes
+/// keep-alive).
 #[derive(Debug)]
 pub enum HttpError {
     /// Malformed request line, header, or framing.
@@ -50,26 +55,21 @@ pub enum HttpError {
     TooLarge { declared: usize, cap: usize },
     /// A protocol feature this server does not speak (chunked bodies).
     NotImplemented(String),
-    /// The socket failed or timed out mid-request.
-    Io(std::io::Error),
 }
 
 impl HttpError {
-    /// Status code and error message for the client, or `None` when the
-    /// connection should just be closed (I/O failure — nobody is
-    /// listening for a status).
-    pub fn status(&self) -> Option<(u16, String)> {
+    /// Status code and error message for the client.
+    pub fn status(&self) -> (u16, String) {
         match self {
-            HttpError::BadRequest(msg) => Some((400, msg.clone())),
+            HttpError::BadRequest(msg) => (400, msg.clone()),
             HttpError::LengthRequired => {
-                Some((411, "POST requires a Content-Length header".to_string()))
+                (411, "POST requires a Content-Length header".to_string())
             }
-            HttpError::TooLarge { declared, cap } => Some((
+            HttpError::TooLarge { declared, cap } => (
                 413,
                 format!("request body of {declared} bytes exceeds the {cap} byte cap"),
-            )),
-            HttpError::NotImplemented(msg) => Some((501, msg.clone())),
-            HttpError::Io(_) => None,
+            ),
+            HttpError::NotImplemented(msg) => (501, msg.clone()),
         }
     }
 }
@@ -83,81 +83,100 @@ impl std::fmt::Display for HttpError {
                 write!(f, "body of {declared} bytes exceeds {cap} byte cap")
             }
             HttpError::NotImplemented(msg) => write!(f, "not implemented: {msg}"),
-            HttpError::Io(e) => write!(f, "i/o: {e}"),
         }
     }
 }
 
-/// Read one line (LF-terminated, trailing CR stripped), erroring instead
-/// of buffering past `cap`. `Ok(None)` is clean EOF before any byte.
-fn read_line_limited(
-    input: &mut dyn BufRead,
-    cap: usize,
-) -> Result<Option<String>, HttpError> {
-    let mut buf = Vec::new();
-    loop {
-        let (consume, done) = {
-            let chunk = input.fill_buf().map_err(HttpError::Io)?;
-            if chunk.is_empty() {
-                if buf.is_empty() {
-                    return Ok(None);
-                }
-                break;
-            }
-            let newline = chunk.iter().position(|&b| b == b'\n');
-            let want = newline.unwrap_or(chunk.len());
-            if buf.len() + want > cap {
-                return Err(HttpError::BadRequest(format!(
-                    "header line exceeds {cap} bytes"
-                )));
-            }
-            buf.extend_from_slice(&chunk[..want]);
-            (newline.map(|ix| ix + 1).unwrap_or(chunk.len()), newline.is_some())
-        };
-        input.consume(consume);
-        if done {
-            break;
-        }
-    }
-    if buf.last() == Some(&b'\r') {
-        buf.pop();
-    }
-    String::from_utf8(buf)
-        .map(Some)
-        .map_err(|_| HttpError::BadRequest("non-UTF-8 header line".to_string()))
+/// Outcome of [`try_parse`] over a partially received buffer.
+#[derive(Debug)]
+pub enum Parse {
+    /// The buffer does not yet hold one complete request.
+    Incomplete {
+        /// The header block is complete and the request is only waiting
+        /// on body bytes; `false` while still inside the request line
+        /// or headers. The transport uses this to tell "FIN inside the
+        /// headers" (answer 400) from "FIN inside the body" (close
+        /// silently — the framing already promised more bytes).
+        headers_done: bool,
+        /// The complete headers carried `Expect: 100-continue` and the
+        /// body has not fully arrived: the transport should emit the
+        /// interim `100 Continue` response once (curl sends the header
+        /// for bodies over 1 KiB and would otherwise stall a full
+        /// second before transmitting the body).
+        expect_continue: bool,
+    },
+    /// One complete request occupying the first `consumed` bytes of the
+    /// buffer; bytes past `consumed` belong to the next (pipelined)
+    /// request.
+    Complete { req: HttpRequest, consumed: usize },
 }
 
-/// Read one request from the connection. `Ok(None)` means the client
-/// closed cleanly between requests (normal keep-alive teardown). The
-/// writer is only touched for `Expect: 100-continue` interim responses
-/// (curl sends the header for bodies over 1 KiB and would otherwise
-/// stall a full second before transmitting the body).
-pub fn read_request(
-    reader: &mut dyn BufRead,
-    writer: &mut dyn Write,
-    max_body: usize,
-) -> Result<Option<HttpRequest>, HttpError> {
+/// One LF-terminated line starting at `pos`: the line (trailing CR
+/// stripped, UTF-8 checked) and the offset just past its newline, or
+/// `None` when the buffer ends before the newline. An over-long line
+/// errors as soon as the excess bytes exist — without waiting for the
+/// newline — so a straddled or endless header line fails at the cap,
+/// not at the buffer.
+fn next_line(buf: &[u8], pos: usize) -> Result<Option<(String, usize)>, HttpError> {
+    let rest = &buf[pos..];
+    let Some(ix) = rest.iter().position(|&b| b == b'\n') else {
+        if rest.len() > MAX_HEADER_LINE_BYTES {
+            return Err(HttpError::BadRequest(format!(
+                "header line exceeds {MAX_HEADER_LINE_BYTES} bytes"
+            )));
+        }
+        return Ok(None);
+    };
+    if ix > MAX_HEADER_LINE_BYTES {
+        return Err(HttpError::BadRequest(format!(
+            "header line exceeds {MAX_HEADER_LINE_BYTES} bytes"
+        )));
+    }
+    let mut line = &rest[..ix];
+    if line.last() == Some(&b'\r') {
+        line = &line[..line.len() - 1];
+    }
+    match std::str::from_utf8(line) {
+        Ok(s) => Ok(Some((s.to_string(), pos + ix + 1))),
+        Err(_) => Err(HttpError::BadRequest("non-UTF-8 header line".to_string())),
+    }
+}
+
+/// Parse one request from the front of `buf`. Call again with the same
+/// (longer) buffer after more bytes arrive; the parse restarts from the
+/// beginning, which is O(header bytes) and therefore bounded by the
+/// header caps however slowly a client dribbles.
+pub fn try_parse(buf: &[u8], max_body: usize) -> Result<Parse, HttpError> {
+    const MORE: Parse = Parse::Incomplete { headers_done: false, expect_continue: false };
+    // leading blank lines before the request line
+    let mut pos = 0usize;
     let mut blanks = 0usize;
-    let line = loop {
-        match read_line_limited(reader, MAX_HEADER_LINE_BYTES)? {
-            None => return Ok(None),
-            Some(l) if l.is_empty() => {
-                blanks += 1;
-                if blanks > MAX_LEADING_BLANKS {
-                    return Err(HttpError::BadRequest(
-                        "blank lines before request line".to_string(),
-                    ));
+    let request_line = loop {
+        match next_line(buf, pos)? {
+            None => return Ok(MORE),
+            Some((line, next)) => {
+                pos = next;
+                if line.is_empty() {
+                    blanks += 1;
+                    if blanks > MAX_LEADING_BLANKS {
+                        return Err(HttpError::BadRequest(
+                            "blank lines before request line".to_string(),
+                        ));
+                    }
+                } else {
+                    break line;
                 }
             }
-            Some(l) => break l,
         }
     };
 
-    let mut parts = line.split_whitespace();
+    let mut parts = request_line.split_whitespace();
     let (Some(method), Some(path), Some(version), None) =
         (parts.next(), parts.next(), parts.next(), parts.next())
     else {
-        return Err(HttpError::BadRequest(format!("malformed request line '{line}'")));
+        return Err(HttpError::BadRequest(format!(
+            "malformed request line '{request_line}'"
+        )));
     };
     if !version.starts_with("HTTP/1.") {
         return Err(HttpError::BadRequest(format!("unsupported version '{version}'")));
@@ -168,9 +187,10 @@ pub fn read_request(
     let mut expect_continue = false;
     let mut chunked = false;
     loop {
-        let Some(h) = read_line_limited(reader, MAX_HEADER_LINE_BYTES)? else {
-            return Err(HttpError::BadRequest("connection closed inside headers".to_string()));
+        let Some((h, next)) = next_line(buf, pos)? else {
+            return Ok(MORE);
         };
+        pos = next;
         if h.is_empty() {
             break;
         }
@@ -224,26 +244,24 @@ pub fn read_request(
         return Err(HttpError::LengthRequired);
     }
     let len = content_length.unwrap_or(0);
+    // rejected on the declared length, before any body byte is buffered
     if len > max_body {
         return Err(HttpError::TooLarge { declared: len, cap: max_body });
     }
-    let mut body = vec![0u8; len];
-    if len > 0 {
-        if expect_continue {
-            writer
-                .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
-                .and_then(|()| writer.flush())
-                .map_err(HttpError::Io)?;
-        }
-        reader.read_exact(&mut body).map_err(HttpError::Io)?;
+    if buf.len() - pos < len {
+        return Ok(Parse::Incomplete { headers_done: true, expect_continue });
     }
-    Ok(Some(HttpRequest {
-        method: method.to_string(),
-        path: path.to_string(),
-        headers,
-        body,
-        keep_alive,
-    }))
+    let body = buf[pos..pos + len].to_vec();
+    Ok(Parse::Complete {
+        req: HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers,
+            body,
+            keep_alive,
+        },
+        consumed: pos + len,
+    })
 }
 
 /// Reason phrase for the status codes this server emits.
@@ -285,18 +303,32 @@ pub fn write_response(
 mod tests {
     use super::*;
 
-    fn read(input: &str, max_body: usize) -> Result<Option<HttpRequest>, HttpError> {
-        let mut sink = Vec::new();
-        read_request(&mut input.as_bytes(), &mut sink, max_body)
+    /// Parse a complete buffer, expecting one whole request.
+    fn parse_one(input: &str, max_body: usize) -> Result<HttpRequest, HttpError> {
+        match try_parse(input.as_bytes(), max_body)? {
+            Parse::Complete { req, consumed } => {
+                assert_eq!(consumed, input.len(), "whole buffer consumed");
+                Ok(req)
+            }
+            other => panic!("expected a complete request, got {other:?}"),
+        }
+    }
+
+    fn incomplete(input: &[u8], max_body: usize) -> (bool, bool) {
+        match try_parse(input, max_body) {
+            Ok(Parse::Incomplete { headers_done, expect_continue }) => {
+                (headers_done, expect_continue)
+            }
+            other => panic!("expected incomplete, got {other:?}"),
+        }
     }
 
     #[test]
     fn parses_post_with_body() {
-        let req = read(
+        let req = parse_one(
             "POST /analyze HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello",
             1024,
         )
-        .unwrap()
         .unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/analyze");
@@ -308,90 +340,127 @@ mod tests {
 
     #[test]
     fn parses_get_without_body_and_connection_close() {
-        let req = read("GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n", 1024)
-            .unwrap()
-            .unwrap();
+        let req = parse_one("GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n", 1024).unwrap();
         assert_eq!(req.method, "GET");
         assert!(req.body.is_empty());
         assert!(!req.keep_alive);
         // HTTP/1.0 defaults to close
-        let req = read("GET / HTTP/1.0\r\n\r\n", 1024).unwrap().unwrap();
+        let req = parse_one("GET / HTTP/1.0\r\n\r\n", 1024).unwrap();
         assert!(!req.keep_alive);
-        let req = read("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", 1024)
-            .unwrap()
-            .unwrap();
+        let req = parse_one("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", 1024).unwrap();
         assert!(req.keep_alive);
     }
 
     #[test]
-    fn clean_eof_is_none_not_an_error() {
-        assert!(read("", 1024).unwrap().is_none());
-        // a stray blank line then EOF is also a clean close
-        assert!(read("\r\n", 1024).unwrap().is_none());
+    fn partial_requests_report_incomplete_with_header_progress() {
+        // empty buffer, a stray blank line, a half request line, and a
+        // header block without its terminating blank line are all
+        // "headers not done yet"
+        for input in [
+            &b""[..],
+            b"\r\n",
+            b"GET /heal",
+            b"GET /healthz HTTP/1.1\r\n",
+            b"GET /healthz HTTP/1.1\r\nhost: x\r\n",
+        ] {
+            let (headers_done, expect) = incomplete(input, 1024);
+            assert!(!headers_done, "{input:?}");
+            assert!(!expect, "{input:?}");
+        }
+        // complete headers waiting on body bytes
+        let (headers_done, expect) =
+            incomplete(b"POST / HTTP/1.1\r\ncontent-length: 4\r\n\r\nhi", 1024);
+        assert!(headers_done);
+        assert!(!expect);
     }
 
     #[test]
-    fn expect_continue_gets_an_interim_response() {
-        let input = "POST /analyze HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nok";
-        let mut sink = Vec::new();
-        let req = read_request(&mut input.as_bytes(), &mut sink, 1024).unwrap().unwrap();
+    fn expect_continue_is_surfaced_until_the_body_arrives() {
+        let head = "POST /analyze HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\n";
+        let (headers_done, expect) = incomplete(head.as_bytes(), 1024);
+        assert!(headers_done);
+        assert!(expect, "interim 100 Continue wanted");
+        // once the body is present the request completes normally
+        let req = parse_one(&format!("{head}ok"), 1024).unwrap();
         assert_eq!(req.body, b"ok");
-        assert_eq!(sink, b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+
+    #[test]
+    fn pipelined_requests_are_consumed_one_at_a_time() {
+        let first = "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n";
+        let second = "POST /analyze HTTP/1.1\r\ncontent-length: 2\r\n\r\nok";
+        let both = format!("{first}{second}");
+        let Parse::Complete { req, consumed } = try_parse(both.as_bytes(), 1024).unwrap()
+        else {
+            panic!("first request is complete");
+        };
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(consumed, first.len(), "stops at the request boundary");
+        let req = parse_one(&both[consumed..], 1024).unwrap();
+        assert_eq!(req.path, "/analyze");
+        assert_eq!(req.body, b"ok");
     }
 
     #[test]
     fn rejects_malformed_requests() {
-        assert!(matches!(read("NOPE\r\n\r\n", 1024), Err(HttpError::BadRequest(_))));
+        let parse = |s: &str| try_parse(s.as_bytes(), 1024);
+        assert!(matches!(parse("NOPE\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(parse("GET / SPDY/3\r\n\r\n"), Err(HttpError::BadRequest(_))));
         assert!(matches!(
-            read("GET / SPDY/3\r\n\r\n", 1024),
+            parse("GET / HTTP/1.1\r\nbad header line\r\n\r\n"),
             Err(HttpError::BadRequest(_))
         ));
+        assert!(matches!(parse("POST / HTTP/1.1\r\n\r\n"), Err(HttpError::LengthRequired)));
         assert!(matches!(
-            read("GET / HTTP/1.1\r\nbad header line\r\n\r\n", 1024),
-            Err(HttpError::BadRequest(_))
-        ));
-        assert!(matches!(
-            read("POST / HTTP/1.1\r\n\r\n", 1024),
-            Err(HttpError::LengthRequired)
-        ));
-        assert!(matches!(
-            read(
-                "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 2\r\n\r\nok",
-                1024
-            ),
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 2\r\n\r\nok"),
             Err(HttpError::NotImplemented(_))
         ));
         // conflicting content-length headers are a smuggling vector
         assert!(matches!(
-            read(
-                "POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 50\r\n\r\nhello",
-                1024
-            ),
+            parse("POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 50\r\n\r\nhello"),
             Err(HttpError::BadRequest(_))
         ));
         // repeated IDENTICAL lengths are harmless and accepted
-        let req = read(
+        let req = parse_one(
             "POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok",
             1024,
         )
-        .unwrap()
         .unwrap();
         assert_eq!(req.body, b"ok");
+        // a flood of leading blank lines is rejected, a few are tolerated
+        let req = parse_one("\r\n\r\nGET / HTTP/1.1\r\n\r\n", 1024).unwrap();
+        assert_eq!(req.method, "GET");
+        let flood = "\r\n".repeat(MAX_LEADING_BLANKS + 1) + "GET / HTTP/1.1\r\n\r\n";
+        assert!(matches!(parse(&flood), Err(HttpError::BadRequest(_))));
     }
 
     #[test]
     fn oversized_declarations_are_rejected_before_buffering() {
-        let err = read("POST / HTTP/1.1\r\nContent-Length: 9999\r\n\r\n", 16).unwrap_err();
+        // the declared length alone triggers 413 — no body byte arrived
+        let err = try_parse(b"POST / HTTP/1.1\r\nContent-Length: 9999\r\n\r\n", 16).unwrap_err();
         match err {
             HttpError::TooLarge { declared, cap } => {
                 assert_eq!((declared, cap), (9999, 16));
-                assert_eq!(err.status().unwrap().0, 413);
+                assert_eq!(err.status().0, 413);
             }
             other => panic!("{other}"),
         }
         // an over-long header line errors instead of buffering
         let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_HEADER_LINE_BYTES));
-        assert!(matches!(read(&long, 1024), Err(HttpError::BadRequest(_))));
+        assert!(matches!(try_parse(long.as_bytes(), 1024), Err(HttpError::BadRequest(_))));
+        // ...even while the line is still unterminated (straddling a
+        // read boundary): the cap fires on the bytes seen so far
+        let straddle = format!("GET /{}", "a".repeat(MAX_HEADER_LINE_BYTES + 8));
+        assert!(matches!(
+            try_parse(straddle.as_bytes(), 1024),
+            Err(HttpError::BadRequest(_))
+        ));
+        // just under the cap with no newline yet: still incomplete
+        let under = format!("GET /{}", "a".repeat(100));
+        assert!(matches!(
+            try_parse(under.as_bytes(), 1024),
+            Ok(Parse::Incomplete { .. })
+        ));
     }
 
     #[test]

@@ -77,8 +77,14 @@ pub struct Metrics {
     errors: [AtomicU64; 6],
     /// Connections accepted over the process lifetime.
     pub connections: AtomicU64,
-    /// Connections accepted but not yet picked up by a worker.
+    /// Connections currently open in the reactor (gauge).
+    pub open_connections: AtomicU64,
+    /// Requests dispatched to an evaluation worker whose response has
+    /// not yet been produced (gauge; persistently ≥ the worker count
+    /// means the pool is saturated).
     pub queue_depth: AtomicU64,
+    /// Idle keep-alive connections reaped by the idle deadline.
+    pub idle_timeouts: AtomicU64,
 }
 
 impl Metrics {
@@ -147,8 +153,16 @@ impl Metrics {
             self.connections.load(Ordering::Relaxed)
         ));
         s.push_str(&format!(
+            "kerncraft_open_connections {}\n",
+            self.open_connections.load(Ordering::Relaxed)
+        ));
+        s.push_str(&format!(
             "kerncraft_queue_depth {}\n",
             self.queue_depth.load(Ordering::Relaxed)
+        ));
+        s.push_str(&format!(
+            "kerncraft_idle_timeouts_total {}\n",
+            self.idle_timeouts.load(Ordering::Relaxed)
         ));
         for (stage, hits, misses) in [
             ("machine", memo.machine_hits, memo.machine_misses),
@@ -190,6 +204,8 @@ mod tests {
         m.request(Endpoint::Batch);
         m.errors_add(Endpoint::Batch, 3);
         m.connections.fetch_add(1, Ordering::Relaxed);
+        m.open_connections.fetch_add(1, Ordering::Relaxed);
+        m.idle_timeouts.fetch_add(2, Ordering::Relaxed);
         let memo = MemoStats { program_hits: 7, ..MemoStats::default() };
         let cache = CacheStats { hits: 1, misses: 2, stores: 2, invalid: 0 };
         let rejected = vec![("E100".to_string(), 4), ("E201".to_string(), 1)];
@@ -201,7 +217,9 @@ mod tests {
         assert!(text.contains("kerncraft_requests_total{endpoint=\"batch\"} 1"), "{text}");
         assert!(text.contains("kerncraft_errors_total{endpoint=\"batch\"} 3"), "{text}");
         assert!(text.contains("kerncraft_connections_total 1"), "{text}");
+        assert!(text.contains("kerncraft_open_connections 1"), "{text}");
         assert!(text.contains("kerncraft_queue_depth 0"), "{text}");
+        assert!(text.contains("kerncraft_idle_timeouts_total 2"), "{text}");
         assert!(text.contains("kerncraft_memo_hits_total{stage=\"program\"} 7"), "{text}");
         assert!(text.contains("kerncraft_rejected_inputs_total{code=\"E100\"} 4"), "{text}");
         assert!(text.contains("kerncraft_rejected_inputs_total{code=\"E201\"} 1"), "{text}");

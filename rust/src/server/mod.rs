@@ -28,29 +28,36 @@
 //! documented in docs/SERVE.md, operational guidance (thread sizing,
 //! cache layout, metrics reference) in docs/OPERATIONS.md.
 //!
-//! Concurrency model: a fixed pool of `--threads` connection workers
-//! pulls accepted sockets from a bounded queue (backpressure: the
-//! acceptor blocks when every worker is busy and the queue is full
-//! rather than buffering unbounded connections). Keep-alive connections
-//! are served until close or a 30 s idle timeout.
+//! Concurrency model ([`reactor`]): one event-loop thread owns every
+//! socket behind a hand-rolled `poll(2)` readiness loop and runs the
+//! per-connection read/write state machines over the incremental
+//! parser in [`http`]; only *complete* parsed requests are dispatched
+//! to the pool of `--threads` evaluation workers. An idle keep-alive
+//! connection therefore costs a pollfd and a buffer, not a worker, and
+//! is reaped after the (configurable) idle timeout. Backpressure is
+//! per connection: at most one request per connection is in flight,
+//! and a connection's read interest is dropped until its response is
+//! written.
 //!
 //! [`MemoStats`]: crate::session::MemoStats
 
 pub mod cache;
 pub mod http;
 pub mod metrics;
+pub mod reactor;
 
 use crate::jsonio::{self, json_str, JsonValue};
 use crate::session::{AnalysisRequest, Session};
 use anyhow::{Context, Result};
 use cache::DiskCache;
 use metrics::{Endpoint, Metrics};
-use std::io::{BufReader, BufWriter};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener};
+use std::os::unix::net::UnixStream;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 const JSON: &str = "application/json";
@@ -68,26 +75,28 @@ pub const DEFAULT_MAX_BODY_BYTES: usize = 16 << 20;
 /// session keeps the cache warmth.
 pub const MAX_REQUESTS_PER_CALL: usize = 10_000;
 
-/// Reads time out after this much socket inactivity, so an *idle*
-/// keep-alive connection releases its worker. A deliberately slow
-/// client can still hold one worker by trickling bytes — which is why
-/// the CLI defaults `--listen` to a multi-worker pool and
-/// docs/OPERATIONS.md says to size `--threads` at the expected
-/// concurrent connections.
-const READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default reap deadline for a keep-alive connection that sits in the
+/// reading state without delivering a byte (`--idle-timeout` overrides
+/// it). Idle connections are cheap under the readiness loop — a pollfd
+/// and a buffer, not a worker — so the timeout protects fd budget and
+/// tracking state, not evaluation throughput (docs/OPERATIONS.md).
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Configuration of [`Server::bind`].
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
     /// Listen address, e.g. `127.0.0.1:8157` (`:0` picks a free port).
     pub listen: String,
-    /// Connection workers (each batch request additionally fans its
+    /// Evaluation workers (each batch request additionally fans its
     /// elements out over up to this many evaluation threads).
     pub threads: usize,
     /// Directory of the persistent report cache; None disables it.
     pub cache_dir: Option<PathBuf>,
     /// Largest accepted request body.
     pub max_body_bytes: usize,
+    /// Reap a keep-alive connection after this long without receiving
+    /// a byte while no request of it is being evaluated or answered.
+    pub idle_timeout: Duration,
     /// Log one `# method path -> status` line per request to stderr
     /// (the HTTP counterpart of the stream mode's `-v` summary).
     pub verbose: bool,
@@ -100,12 +109,14 @@ impl Default for ServerOptions {
             threads: 1,
             cache_dir: None,
             max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
             verbose: false,
         }
     }
 }
 
-/// Everything a connection worker needs, shared behind one `Arc`.
+/// Everything the reactor and its evaluation workers need, shared
+/// behind one `Arc`.
 struct ServerState {
     session: Session,
     /// Held concretely (not as the trait object the session owns) so
@@ -123,23 +134,34 @@ pub struct Server {
     listener: TcpListener,
     state: Arc<ServerState>,
     shutdown: Arc<AtomicBool>,
+    /// Read end of the self-pipe the reactor polls alongside the
+    /// sockets.
+    wake_rx: UnixStream,
+    /// Write end: rung by evaluation workers (completions) and by
+    /// [`ServerHandle::stop`] (shutdown).
+    wake_tx: Arc<UnixStream>,
     threads: usize,
+    idle_timeout: Duration,
 }
 
 /// Clonable stop trigger for a running [`Server`] (tests, signal
 /// handlers).
 #[derive(Clone)]
 pub struct ServerHandle {
-    addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
+    wake: Arc<UnixStream>,
 }
 
 impl ServerHandle {
-    /// Ask the accept loop to exit. In-flight connections finish; the
-    /// blocked `accept` is woken by a throwaway local connection.
+    /// Ask the reactor to shut down: a flag plus one byte down the
+    /// self-pipe it is polling (no throwaway wake connection — the old
+    /// blocked-`accept` trick raced real clients for the accept queue).
+    /// The reactor stops accepting, closes idle connections, finishes
+    /// writing every dispatched response, then [`Server::run`] returns.
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Relaxed);
-        let _ = TcpStream::connect(self.addr);
+        let mut wake: &UnixStream = &self.wake;
+        let _ = wake.write(&[1u8]);
     }
 }
 
@@ -157,6 +179,12 @@ impl Server {
             None => (Session::new(), None),
         };
         let threads = opts.threads.max(1);
+        // a socketpair as the self-pipe: no extra FFI, and both ends
+        // are made nonblocking so a wake write can never block a
+        // worker (a full pipe already guarantees a pending wakeup)
+        let (wake_tx, wake_rx) = UnixStream::pair().context("creating wake pipe")?;
+        wake_tx.set_nonblocking(true).context("setting wake pipe nonblocking")?;
+        wake_rx.set_nonblocking(true).context("setting wake pipe nonblocking")?;
         Ok(Server {
             listener,
             state: Arc::new(ServerState {
@@ -168,7 +196,10 @@ impl Server {
                 verbose: opts.verbose,
             }),
             shutdown: Arc::new(AtomicBool::new(false)),
+            wake_rx,
+            wake_tx: Arc::new(wake_tx),
             threads,
+            idle_timeout: opts.idle_timeout,
         })
     }
 
@@ -179,102 +210,16 @@ impl Server {
 
     /// Stop trigger usable from another thread.
     pub fn handle(&self) -> ServerHandle {
-        ServerHandle { addr: self.local_addr(), shutdown: self.shutdown.clone() }
+        ServerHandle { shutdown: self.shutdown.clone(), wake: self.wake_tx.clone() }
     }
 
-    /// Accept loop: distribute connections over the worker pool. Blocks
-    /// until [`ServerHandle::stop`]; returns after in-flight
-    /// connections drain.
+    /// Run the readiness loop ([`reactor`]) on the calling thread with
+    /// `--threads` evaluation workers beside it. Blocks until
+    /// [`ServerHandle::stop`]; returns after every dispatched response
+    /// has been written.
     pub fn run(self) -> Result<()> {
-        let state = &self.state;
-        let shutdown = &self.shutdown;
-        // bounded hand-off: an acceptor that outruns the workers blocks
-        // here instead of buffering unbounded sockets
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(self.threads * 4);
-        let conn_rx = Mutex::new(conn_rx);
-        std::thread::scope(|scope| {
-            for _ in 0..self.threads {
-                let conn_rx = &conn_rx;
-                scope.spawn(move || loop {
-                    let conn = conn_rx.lock().unwrap().recv();
-                    let Ok(stream) = conn else { break };
-                    state.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                    handle_connection(state, stream);
-                });
-            }
-            for conn in self.listener.incoming() {
-                if shutdown.load(Ordering::Relaxed) {
-                    break;
-                }
-                let Ok(stream) = conn else { continue };
-                state.metrics.connections.fetch_add(1, Ordering::Relaxed);
-                state.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-                if conn_tx.send(stream).is_err() {
-                    break;
-                }
-            }
-            drop(conn_tx);
-        });
-        Ok(())
-    }
-}
-
-/// Serve one connection until close, error, or idle timeout.
-fn handle_connection(state: &ServerState, stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-    let Ok(write_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(stream);
-    let mut writer = BufWriter::new(write_half);
-    loop {
-        match http::read_request(&mut reader, &mut writer, state.max_body) {
-            Ok(None) => break, // clean close between requests
-            Ok(Some(req)) => {
-                let ep = Endpoint::of_path(route(&req.path));
-                state.metrics.request(ep);
-                // a panicking evaluation must cost one 500, not a pool
-                // worker — a shrinking pool would strand queued sockets
-                let (status, ctype, body) =
-                    match catch_unwind(AssertUnwindSafe(|| dispatch(state, &req))) {
-                        Ok(r) => r,
-                        Err(_) => (
-                            500,
-                            JSON,
-                            error_body(None, None, "internal panic handling request"),
-                        ),
-                    };
-                if status >= 400 {
-                    state.metrics.errors_add(ep, 1);
-                }
-                if state.verbose {
-                    eprintln!("# serve: {} {} -> {status}", req.method, req.path);
-                }
-                let keep = req.keep_alive && status != 500;
-                if http::write_response(&mut writer, status, ctype, body.as_bytes(), keep)
-                    .is_err()
-                {
-                    break;
-                }
-                if !keep {
-                    break;
-                }
-            }
-            Err(e) => {
-                // framing errors answer with a status when the protocol
-                // still allows one, then always close
-                if let Some((status, msg)) = e.status() {
-                    state.metrics.request(Endpoint::Other);
-                    state.metrics.errors_add(Endpoint::Other, 1);
-                    let _ = http::write_response(
-                        &mut writer,
-                        status,
-                        JSON,
-                        error_body(None, None, &msg).as_bytes(),
-                        false,
-                    );
-                }
-                break;
-            }
-        }
+        let Server { listener, state, shutdown, wake_rx, wake_tx, threads, idle_timeout } = self;
+        reactor::run(&state, listener, wake_rx, &wake_tx, &shutdown, threads, idle_timeout)
     }
 }
 

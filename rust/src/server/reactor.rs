@@ -1,0 +1,607 @@
+//! The readiness loop behind `kerncraft serve --listen`: a hand-rolled
+//! `poll(2)` reactor over `std::os::fd` (the offline crate set has no
+//! mio/tokio, and the discipline matches the hand-rolled HTTP and
+//! jsonio layers — see docs/OPERATIONS.md for the operator's view).
+//!
+//! One reactor thread owns every socket: the listener, a self-pipe
+//! wake channel, and all client connections, each a nonblocking
+//! [`TcpStream`] with a per-connection read/write state machine over
+//! the incremental parser of [`super::http::try_parse`]. Only
+//! *complete* parsed requests are handed to the worker pool, so an
+//! idle keep-alive connection costs one `pollfd` and a small buffer —
+//! not a pool worker. `GET /healthz` and `GET /metrics` are answered
+//! inline by the reactor itself (they never evaluate anything), so a
+//! saturated worker pool cannot fail a liveness probe.
+//!
+//! Flow of one request: `poll` reports the socket readable → bytes are
+//! pulled into the connection's read buffer → `try_parse` either waits
+//! for more, rejects the framing (the error response is queued and the
+//! connection marked close-after-write), or yields a request →
+//! evaluation requests are dispatched to a worker over a channel →
+//! the worker pushes the serialized response onto the completion list
+//! and writes one byte to the wake pipe → the reactor attaches the
+//! bytes to the connection's write buffer and drains it as `POLLOUT`
+//! allows → the connection returns to the reading state (pipelined
+//! bytes already buffered are parsed immediately).
+//!
+//! Shutdown ([`super::ServerHandle::stop`]) writes the same wake pipe:
+//! the reactor stops accepting, closes connections that are owed
+//! nothing, finishes writing every dispatched response, then drops the
+//! job channel so the workers drain and exit.
+
+use super::http::{self, HttpRequest};
+use super::metrics::Endpoint;
+use super::ServerState;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// `struct pollfd` of poll(2). A negative `fd` makes the kernel skip
+/// the entry (used to keep index alignment for connections that want
+/// no events this round, e.g. while their request is being evaluated).
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    fn poll(
+        fds: *mut PollFd,
+        nfds: std::os::raw::c_ulong,
+        timeout: std::os::raw::c_int,
+    ) -> std::os::raw::c_int;
+}
+
+/// poll(2) with EINTR retry. `timeout_ms < 0` blocks indefinitely.
+fn poll_all(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+    loop {
+        let nfds = fds.len() as std::os::raw::c_ulong;
+        let n = unsafe { poll(fds.as_mut_ptr(), nfds, timeout_ms) };
+        if n >= 0 {
+            return Ok(n as usize);
+        }
+        let e = std::io::Error::last_os_error();
+        if e.kind() != ErrorKind::Interrupted {
+            return Err(e);
+        }
+    }
+}
+
+/// One parsed request on its way to a worker.
+struct Job {
+    token: u64,
+    req: HttpRequest,
+}
+
+/// One serialized response on its way back to the reactor.
+struct Completion {
+    token: u64,
+    bytes: Vec<u8>,
+    keep: bool,
+}
+
+/// Per-connection lifecycle.
+enum ConnState {
+    /// Accumulating bytes of the next request.
+    Reading,
+    /// A complete request is with a worker; no response queued yet.
+    InFlight,
+    /// A response is queued/draining; on empty, back to Reading or
+    /// close (`close_after_write`).
+    Writing,
+}
+
+/// One client connection owned by the reactor.
+struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    /// Bytes of `write_buf` already written to the socket.
+    write_pos: usize,
+    /// Close as soon as `write_buf` drains (error responses,
+    /// `Connection: close`, shutdown).
+    close_after_write: bool,
+    /// An interim `100 Continue` went out for the current request.
+    sent_continue: bool,
+    /// Peer sent FIN — no more request bytes will arrive.
+    read_closed: bool,
+    /// When an idle connection in `Reading` is reaped.
+    idle_deadline: Instant,
+}
+
+/// What to do with a connection after a pump step.
+enum Disposition {
+    Keep,
+    Close,
+}
+
+/// One step of the parse/dispatch side of the state machine.
+enum Step {
+    /// Progress was made (bytes queued or state changed) — pump again.
+    Continue,
+    /// Waiting on the peer or on a worker.
+    Wait,
+    /// The connection is done.
+    Close,
+}
+
+/// Spawn the worker pool and run the reactor until shutdown. Owns the
+/// calling thread; returns after every dispatched response is written.
+pub(crate) fn run(
+    state: &ServerState,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    wake_tx: &UnixStream,
+    shutdown: &AtomicBool,
+    threads: usize,
+    idle_timeout: Duration,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("setting listener nonblocking")?;
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Mutex::new(job_rx);
+    let done: Mutex<Vec<Completion>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            let job_rx = &job_rx;
+            let done = &done;
+            let wake = wake_tx;
+            scope.spawn(move || worker_loop(state, job_rx, done, wake));
+        }
+        // event_loop drops job_tx on return, which drains the workers
+        event_loop(state, &listener, &wake_rx, shutdown, idle_timeout, job_tx, &done)
+    })
+}
+
+/// A pool worker: evaluate dispatched requests, serialize the
+/// response, push it on the completion list, ring the wake pipe.
+fn worker_loop(
+    state: &ServerState,
+    jobs: &Mutex<mpsc::Receiver<Job>>,
+    done: &Mutex<Vec<Completion>>,
+    wake: &UnixStream,
+) {
+    loop {
+        let job = jobs.lock().unwrap().recv();
+        let Ok(Job { token, req }) = job else { break };
+        let ep = Endpoint::of_path(super::route(&req.path));
+        // a panicking evaluation must cost one 500, not a pool worker —
+        // a shrinking pool would strand dispatched requests
+        let (status, ctype, body) =
+            match catch_unwind(AssertUnwindSafe(|| super::dispatch(state, &req))) {
+                Ok(r) => r,
+                Err(_) => (
+                    500,
+                    super::JSON,
+                    super::error_body(None, None, "internal panic handling request"),
+                ),
+            };
+        if status >= 400 {
+            state.metrics.errors_add(ep, 1);
+        }
+        if state.verbose {
+            eprintln!("# serve: {} {} -> {status}", req.method, req.path);
+        }
+        let keep = req.keep_alive && status != 500;
+        let mut bytes = Vec::with_capacity(body.len() + 128);
+        let _ = http::write_response(&mut bytes, status, ctype, body.as_bytes(), keep);
+        done.lock().unwrap().push(Completion { token, bytes, keep });
+        notify(wake);
+    }
+}
+
+/// Ring the wake pipe (nonblocking: a full pipe already guarantees a
+/// pending wakeup, so a failed write is fine).
+fn notify(mut wake: &UnixStream) {
+    let _ = wake.write(&[1u8]);
+}
+
+/// Drain every pending wake byte.
+fn drain_wake(mut wake: &UnixStream) {
+    let mut sink = [0u8; 256];
+    loop {
+        match wake.read(&mut sink) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break, // WouldBlock: drained
+        }
+    }
+}
+
+/// Pull every available byte off a readable connection.
+fn read_some(c: &mut Conn, idle_timeout: Duration) -> std::io::Result<()> {
+    let mut scratch = [0u8; 16 * 1024];
+    loop {
+        match c.stream.read(&mut scratch) {
+            Ok(0) => {
+                c.read_closed = true;
+                return Ok(());
+            }
+            Ok(n) => {
+                c.read_buf.extend_from_slice(&scratch[..n]);
+                c.idle_deadline = Instant::now() + idle_timeout;
+                if n < scratch.len() {
+                    return Ok(()); // socket very likely drained
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Write as much queued response as the socket accepts. `Ok(true)`
+/// when the buffer fully drained (and was reset), `Ok(false)` when the
+/// socket is full.
+fn write_some(c: &mut Conn) -> std::io::Result<bool> {
+    while c.write_pos < c.write_buf.len() {
+        match c.stream.write(&c.write_buf[c.write_pos..]) {
+            Ok(0) => return Err(std::io::Error::from(ErrorKind::WriteZero)),
+            Ok(n) => c.write_pos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(false),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    c.write_buf.clear();
+    c.write_pos = 0;
+    Ok(true)
+}
+
+/// The reactor's mutable world: every open connection plus the
+/// dispatch bookkeeping.
+struct EventLoop<'a> {
+    state: &'a ServerState,
+    job_tx: mpsc::Sender<Job>,
+    idle_timeout: Duration,
+    /// Shutdown observed: no new connections or requests; drain what
+    /// is owed and exit.
+    stopping: bool,
+    /// Requests dispatched to workers whose responses have not yet
+    /// been attached to their connection.
+    inflight: usize,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+fn event_loop(
+    state: &ServerState,
+    listener: &TcpListener,
+    wake_rx: &UnixStream,
+    shutdown: &AtomicBool,
+    idle_timeout: Duration,
+    job_tx: mpsc::Sender<Job>,
+    done: &Mutex<Vec<Completion>>,
+) -> Result<()> {
+    let mut lp = EventLoop {
+        state,
+        job_tx,
+        idle_timeout,
+        stopping: false,
+        inflight: 0,
+        conns: HashMap::new(),
+        next_token: 0,
+    };
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut tokens: Vec<u64> = Vec::new();
+    loop {
+        if !lp.stopping && shutdown.load(Ordering::Relaxed) {
+            lp.begin_shutdown();
+        }
+        if lp.stopping && lp.inflight == 0 && lp.conns.is_empty() {
+            break;
+        }
+
+        // assemble the pollfd set: wake pipe, listener (while
+        // accepting), then one entry per connection
+        fds.clear();
+        tokens.clear();
+        fds.push(PollFd { fd: wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        let accepting = !lp.stopping;
+        if accepting {
+            fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+        }
+        let base = fds.len();
+        let now = Instant::now();
+        let mut next_deadline_ms: i64 = -1;
+        for (&tok, c) in lp.conns.iter() {
+            let mut ev: i16 = 0;
+            if matches!(c.state, ConnState::Reading) && !c.read_closed {
+                ev |= POLLIN;
+            }
+            if c.write_pos < c.write_buf.len() {
+                ev |= POLLOUT;
+            }
+            // no interest (request being evaluated): negative fd, so
+            // the kernel skips the entry but indexes stay aligned
+            let fd = if ev == 0 { -1 } else { c.stream.as_raw_fd() };
+            fds.push(PollFd { fd, events: ev, revents: 0 });
+            tokens.push(tok);
+            if matches!(c.state, ConnState::Reading) && c.write_buf.is_empty() {
+                let left = c.idle_deadline.saturating_duration_since(now);
+                let left_ms = left.as_millis() as i64;
+                if next_deadline_ms < 0 || left_ms < next_deadline_ms {
+                    next_deadline_ms = left_ms;
+                }
+            }
+        }
+        // small slack so deadline wakeups land just past the deadline
+        let timeout = if next_deadline_ms < 0 {
+            -1
+        } else {
+            (next_deadline_ms + 20).min(i32::MAX as i64) as i32
+        };
+        poll_all(&mut fds, timeout).context("poll")?;
+
+        // worker completions: drain the wake byte first so one written
+        // after this point re-triggers the next poll
+        if fds[0].revents != 0 {
+            drain_wake(wake_rx);
+        }
+        let completed: Vec<Completion> = std::mem::take(&mut *done.lock().unwrap());
+        for comp in completed {
+            lp.inflight -= 1;
+            state.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            // the connection may be gone (peer error while evaluating);
+            // the response is then simply dropped
+            let Some(mut c) = lp.conns.remove(&comp.token) else { continue };
+            c.write_buf.extend_from_slice(&comp.bytes);
+            c.state = ConnState::Writing;
+            if !comp.keep || c.read_closed {
+                c.close_after_write = true;
+            }
+            lp.finish(comp.token, c);
+        }
+
+        if accepting && fds[1].revents != 0 {
+            lp.accept_all(listener);
+        }
+
+        // per-connection readiness
+        for (i, &tok) in tokens.iter().enumerate() {
+            let re = fds[base + i].revents;
+            if re == 0 {
+                continue;
+            }
+            let Some(mut c) = lp.conns.remove(&tok) else { continue };
+            if re & POLLNVAL != 0 {
+                lp.drop_conn(c);
+                continue;
+            }
+            // POLLERR/POLLHUP surface through read()/write() below
+            if matches!(c.state, ConnState::Reading)
+                && !c.read_closed
+                && read_some(&mut c, idle_timeout).is_err()
+            {
+                lp.drop_conn(c);
+                continue;
+            }
+            lp.finish(tok, c);
+        }
+
+        lp.reap_idle();
+    }
+    Ok(())
+}
+
+impl EventLoop<'_> {
+    /// Accept every pending connection (edge of the listener's
+    /// readiness; loop until `WouldBlock`).
+    fn accept_all(&mut self, listener: &TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    // request/response pairs are single writes; Nagle
+                    // only adds tail latency here
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    self.state.metrics.connections.fetch_add(1, Ordering::Relaxed);
+                    self.state.metrics.open_connections.fetch_add(1, Ordering::Relaxed);
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            state: ConnState::Reading,
+                            read_buf: Vec::new(),
+                            write_buf: Vec::new(),
+                            write_pos: 0,
+                            close_after_write: false,
+                            sent_continue: false,
+                            read_closed: false,
+                            idle_deadline: Instant::now() + self.idle_timeout,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Run the state machine for one connection until it blocks, then
+    /// either reinsert it or drop it.
+    fn finish(&mut self, token: u64, mut c: Conn) {
+        match self.pump(token, &mut c) {
+            Disposition::Keep => {
+                self.conns.insert(token, c);
+            }
+            Disposition::Close => self.drop_conn(c),
+        }
+    }
+
+    /// Drive writes and parses as far as they go without blocking.
+    fn pump(&mut self, token: u64, c: &mut Conn) -> Disposition {
+        loop {
+            match write_some(c) {
+                Err(_) => return Disposition::Close,
+                Ok(false) => return Disposition::Keep, // socket full: POLLOUT
+                Ok(true) => {}
+            }
+            if matches!(c.state, ConnState::Writing) {
+                // the queued response went out fully
+                if c.close_after_write {
+                    return Disposition::Close;
+                }
+                c.state = ConnState::Reading;
+                c.sent_continue = false;
+                c.idle_deadline = Instant::now() + self.idle_timeout;
+            }
+            if !matches!(c.state, ConnState::Reading) {
+                return Disposition::Keep; // InFlight: a completion wakes us
+            }
+            if self.stopping {
+                // shutdown: no new requests, even pipelined ones
+                return Disposition::Close;
+            }
+            match self.advance_parse(token, c) {
+                Step::Close => return Disposition::Close,
+                Step::Wait => return Disposition::Keep,
+                Step::Continue => {}
+            }
+        }
+    }
+
+    /// Try to turn buffered bytes into the next request (state is
+    /// `Reading`, nothing pending to write).
+    fn advance_parse(&mut self, token: u64, c: &mut Conn) -> Step {
+        match http::try_parse(&c.read_buf, self.state.max_body) {
+            Ok(http::Parse::Complete { req, consumed }) => {
+                c.read_buf.drain(..consumed);
+                c.sent_continue = false;
+                let ep = Endpoint::of_path(super::route(&req.path));
+                self.state.metrics.request(ep);
+                if req.method == "GET"
+                    && matches!(super::route(&req.path), "/healthz" | "/metrics")
+                {
+                    // liveness endpoints answer inline from the reactor:
+                    // they never evaluate anything, so a saturated
+                    // worker pool cannot fail a health probe
+                    let (status, ctype, body) = super::dispatch(self.state, &req);
+                    if self.state.verbose {
+                        eprintln!("# serve: {} {} -> {status}", req.method, req.path);
+                    }
+                    let _ = http::write_response(
+                        &mut c.write_buf,
+                        status,
+                        ctype,
+                        body.as_bytes(),
+                        req.keep_alive,
+                    );
+                    c.state = ConnState::Writing;
+                    c.close_after_write = !req.keep_alive;
+                    return Step::Continue;
+                }
+                c.state = ConnState::InFlight;
+                self.inflight += 1;
+                self.state.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                if self.job_tx.send(Job { token, req }).is_err() {
+                    // workers gone (shutdown): nothing can answer
+                    self.inflight -= 1;
+                    self.state.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    return Step::Close;
+                }
+                Step::Continue
+            }
+            Ok(http::Parse::Incomplete { headers_done, expect_continue }) => {
+                if c.read_closed {
+                    if c.read_buf.is_empty() || headers_done {
+                        // clean close between requests, or FIN inside a
+                        // promised body (nobody is listening for a
+                        // status) — close silently
+                        return Step::Close;
+                    }
+                    // partial header then FIN still gets its 400
+                    self.state.metrics.request(Endpoint::Other);
+                    self.state.metrics.errors_add(Endpoint::Other, 1);
+                    self.framing_error(c, 400, "connection closed inside request");
+                    return Step::Continue;
+                }
+                if expect_continue && !c.sent_continue {
+                    c.sent_continue = true;
+                    c.write_buf.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+                    return Step::Continue;
+                }
+                Step::Wait
+            }
+            Err(e) => {
+                let (status, msg) = e.status();
+                self.state.metrics.request(Endpoint::Other);
+                self.state.metrics.errors_add(Endpoint::Other, 1);
+                self.framing_error(c, status, &msg);
+                Step::Continue
+            }
+        }
+    }
+
+    /// Queue a framing-error response; the connection closes once it
+    /// is written (a framing error desynchronizes keep-alive).
+    fn framing_error(&self, c: &mut Conn, status: u16, msg: &str) {
+        let body = super::error_body(None, None, msg);
+        let w = &mut c.write_buf;
+        let _ = http::write_response(w, status, super::JSON, body.as_bytes(), false);
+        c.state = ConnState::Writing;
+        c.close_after_write = true;
+    }
+
+    /// Shutdown begins: stop accepting, close every connection that is
+    /// owed nothing (no dispatched request, no queued response).
+    fn begin_shutdown(&mut self) {
+        self.stopping = true;
+        let mut idle = Vec::new();
+        for (&t, c) in self.conns.iter() {
+            if matches!(c.state, ConnState::Reading) && c.write_pos >= c.write_buf.len() {
+                idle.push(t);
+            }
+        }
+        for t in idle {
+            if let Some(c) = self.conns.remove(&t) {
+                self.drop_conn(c);
+            }
+        }
+    }
+
+    /// Close connections whose idle deadline passed while waiting for
+    /// a request.
+    fn reap_idle(&mut self) {
+        let now = Instant::now();
+        let mut expired = Vec::new();
+        for (&t, c) in self.conns.iter() {
+            let waiting = matches!(c.state, ConnState::Reading) && c.write_buf.is_empty();
+            if waiting && now >= c.idle_deadline {
+                expired.push(t);
+            }
+        }
+        for t in expired {
+            if let Some(c) = self.conns.remove(&t) {
+                self.state.metrics.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+                self.drop_conn(c);
+            }
+        }
+    }
+
+    fn drop_conn(&mut self, c: Conn) {
+        self.state.metrics.open_connections.fetch_sub(1, Ordering::Relaxed);
+        drop(c);
+    }
+}

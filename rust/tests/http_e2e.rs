@@ -18,6 +18,7 @@ fn start(threads: usize, cache_dir: Option<PathBuf>) -> (SocketAddr, ServerHandl
         threads,
         cache_dir,
         max_body_bytes: 1 << 20,
+        idle_timeout: std::time::Duration::from_secs(30),
         verbose: false,
     })
     .unwrap();

@@ -1,0 +1,407 @@
+//! Load, soak, and framing-torture tests for the event-driven HTTP
+//! front end (`rust/src/server/reactor.rs`):
+//!
+//! * the soak test that is impossible on a thread-per-connection pool —
+//!   500 idle keep-alive connections against a 4-worker server with
+//!   `/healthz` still answering inside a tight deadline;
+//! * byte-level framing torture: dribbled headers, pipelined requests,
+//!   FIN mid-header, an oversized header line straddling read
+//!   boundaries, and the 411/501/100-continue protocol edges;
+//! * the idle-timeout contract: a silent keep-alive connection is
+//!   reaped while a concurrently active one survives;
+//! * prompt shutdown with hundreds of idle connections open and an
+//!   in-flight response that must still be delivered.
+
+use kerncraft::server::{Server, ServerHandle, ServerOptions};
+use kerncraft::session::AnalysisReport;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+fn start(
+    threads: usize,
+    idle_timeout: Duration,
+) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let server = Server::bind(ServerOptions {
+        listen: "127.0.0.1:0".to_string(),
+        threads,
+        cache_dir: None,
+        max_body_bytes: 1 << 20,
+        idle_timeout,
+        verbose: false,
+    })
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle, join)
+}
+
+/// Join the server thread under a watchdog: a shutdown that hangs
+/// fails the test instead of hanging the suite.
+fn join_within(join: std::thread::JoinHandle<()>, secs: u64, what: &str) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(join.join());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(outcome) => outcome.unwrap(),
+        Err(_) => panic!("{what}: server did not shut down within {secs}s"),
+    }
+}
+
+/// One full request on a fresh connection (`Connection: close`).
+fn send(addr: SocketAddr, raw: &[u8]) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(raw).unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    parse_response(&buf)
+}
+
+fn parse_response(buf: &[u8]) -> (u16, String) {
+    let text = String::from_utf8_lossy(buf).to_string();
+    let (head, body) = text.split_once("\r\n\r\n").unwrap_or_else(|| panic!("{text}"));
+    let status_line = head.lines().next().unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    (status, body.to_string())
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let raw = format!("GET {path} HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n");
+    send(addr, raw.as_bytes())
+}
+
+/// Read one response from a persistent (keep-alive) connection.
+fn read_response(r: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+/// Scrape one numeric sample from a `/metrics` exposition.
+fn metric(text: &str, name: &str) -> u64 {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Ok(v) = rest.trim().parse() {
+                return v;
+            }
+        }
+    }
+    panic!("metric {name} missing from:\n{text}");
+}
+
+const KEEPALIVE_HEALTHZ: &[u8] = b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n";
+
+const TRIAD: &str = r#"{"kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}"#;
+
+#[test]
+fn soak_500_idle_keepalive_connections_served_by_4_workers() {
+    let (addr, handle, join) = start(4, Duration::from_secs(60));
+
+    // open 500 keep-alive connections; each proves liveness with one
+    // round-trip, then sits idle. Holding the streams keeps them open.
+    // (The round-trip also paces the opens so the listener backlog
+    // never overflows.)
+    let mut conns: Vec<(TcpStream, BufReader<TcpStream>)> = Vec::with_capacity(500);
+    for i in 0..500 {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut s = &stream;
+        s.write_all(KEEPALIVE_HEALTHZ).unwrap();
+        let (status, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "connection {i}: {body}");
+        conns.push((stream, reader));
+    }
+
+    // with every connection idle, a fresh health probe must answer
+    // promptly — on the old thread-per-connection pool the 4 workers
+    // would all be pinned by idle sockets and this would time out
+    let t0 = Instant::now();
+    let (status, body) = get(addr, "/healthz");
+    let elapsed = t0.elapsed();
+    assert_eq!(status, 200, "{body}");
+    assert!(elapsed < Duration::from_secs(5), "healthz took {elapsed:?} under soak");
+
+    // gauges reconcile: all 500 are still open, nothing is queued on
+    // the evaluation workers, and nobody has idled out
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(metric(&metrics, "kerncraft_open_connections") >= 500, "{metrics}");
+    assert!(metric(&metrics, "kerncraft_connections_total") >= 501, "{metrics}");
+    assert_eq!(metric(&metrics, "kerncraft_queue_depth"), 0, "{metrics}");
+    assert_eq!(metric(&metrics, "kerncraft_idle_timeouts_total"), 0, "{metrics}");
+
+    // shutdown with all 500 still open must be prompt
+    handle.stop();
+    join_within(join, 30, "soak");
+    drop(conns);
+}
+
+#[test]
+fn dribbled_header_bytes_parse_once_complete() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let raw = b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n";
+    for chunk in raw.chunks(1) {
+        stream.write_all(chunk).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let (status, body) = parse_response(&buf);
+    assert_eq!(status, 200, "{body}");
+    handle.stop();
+    join_within(join, 30, "dribble");
+}
+
+#[test]
+fn two_pipelined_requests_in_one_segment_get_two_responses() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    // both requests arrive in one write; the second closes the
+    // connection so read_to_end terminates
+    let raw = b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n\
+                GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n";
+    stream.write_all(raw).unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let responses = text.matches("HTTP/1.1 200 OK").count();
+    assert_eq!(responses, 2, "two responses expected:\n{text}");
+    handle.stop();
+    join_within(join, 30, "pipelined");
+}
+
+#[test]
+fn pipelined_evaluation_requests_answer_in_order() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // two /analyze requests pipelined in one segment: the second must
+    // wait for the first response (one in-flight request per
+    // connection) and both must come back in order
+    let mut raw = Vec::new();
+    for id in ["p1", "p2"] {
+        let body = format!(
+            r#"{{"id": "{id}", "kernel": {{"name": "triad"}}, "machine": "SNB", "constants": {{"N": 65536}}}}"#
+        );
+        raw.extend_from_slice(
+            format!(
+                "POST /analyze HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        );
+    }
+    stream.write_all(&raw).unwrap();
+    for id in ["p1", "p2"] {
+        let (status, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "{body}");
+        let report = AnalysisReport::from_json(&body).unwrap();
+        assert_eq!(report.id.as_deref(), Some(id));
+    }
+    handle.stop();
+    join_within(join, 30, "pipelined-analyze");
+}
+
+#[test]
+fn partial_header_then_fin_answers_400() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(b"GET /healthz HTT").unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let (status, body) = parse_response(&buf);
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("error"), "{body}");
+    handle.stop();
+    join_within(join, 30, "fin-mid-header");
+}
+
+#[test]
+fn oversized_header_line_straddling_reads_is_rejected() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    // a request line over the 8 KiB cap, no newline ever sent, split
+    // across two writes so the limit must fire on a partial buffer
+    let body = vec![b'a'; 9 << 10];
+    stream.write_all(b"GET /").unwrap();
+    stream.write_all(&body[..4096]).unwrap();
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    stream.write_all(&body[4096..]).unwrap();
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let (status, body) = parse_response(&buf);
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("exceeds"), "{body}");
+    handle.stop();
+    join_within(join, 30, "oversized-line");
+}
+
+#[test]
+fn protocol_limit_statuses_are_unchanged() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+    // POST without Content-Length → 411
+    let no_length = b"POST /analyze HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n";
+    let (status, body) = send(addr, no_length);
+    assert_eq!(status, 411, "{body}");
+    // chunked transfer encoding → 501
+    let chunked =
+        b"POST /analyze HTTP/1.1\r\nhost: t\r\ntransfer-encoding: chunked\r\nconnection: close\r\n\r\n";
+    let (status, body) = send(addr, chunked);
+    assert_eq!(status, 501, "{body}");
+    // declared length over the cap → 413 before any body byte
+    let huge =
+        b"POST /analyze HTTP/1.1\r\nhost: t\r\ncontent-length: 99999999\r\nconnection: close\r\n\r\n";
+    let (status, body) = send(addr, huge);
+    assert_eq!(status, 413, "{body}");
+    handle.stop();
+    join_within(join, 30, "limit-statuses");
+}
+
+#[test]
+fn expect_continue_gets_interim_response_before_body() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let head = format!(
+        "POST /analyze HTTP/1.1\r\nhost: t\r\nexpect: 100-continue\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        TRIAD.len()
+    );
+    stream.write_all(head.as_bytes()).unwrap();
+    // the interim response arrives before any body byte is sent
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 100 Continue"), "{line}");
+    let mut blank = String::new();
+    reader.read_line(&mut blank).unwrap();
+    assert_eq!(blank.trim_end(), "", "interim response ends with a blank line");
+    // now the body; the real response follows
+    stream.write_all(TRIAD.as_bytes()).unwrap();
+    let (status, body) = read_response(&mut reader);
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"kernel\": \"triad\""), "{body}");
+    handle.stop();
+    join_within(join, 30, "expect-continue");
+}
+
+#[test]
+fn idle_connections_are_reaped_while_active_ones_survive() {
+    let (addr, handle, join) = start(2, Duration::from_secs(1));
+
+    // the silent connection: never sends a byte
+    let mut silent = TcpStream::connect(addr).unwrap();
+    silent.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let t0 = Instant::now();
+
+    // the active connection: a request every 300 ms, comfortably past
+    // several idle windows in total
+    let active = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut s = &stream;
+        for i in 0..8 {
+            s.write_all(KEEPALIVE_HEALTHZ).unwrap();
+            let (status, body) = read_response(&mut reader);
+            assert_eq!(status, 200, "active request {i}: {body}");
+            std::thread::sleep(Duration::from_millis(300));
+        }
+    });
+
+    // the server reaps the silent connection: EOF, no response bytes
+    let mut buf = Vec::new();
+    silent.read_to_end(&mut buf).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(buf.is_empty(), "reap is silent, got {buf:?}");
+    assert!(elapsed < Duration::from_secs(10), "reap took {elapsed:?}");
+
+    active.join().unwrap();
+
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(metric(&metrics, "kerncraft_idle_timeouts_total") >= 1, "{metrics}");
+
+    handle.stop();
+    join_within(join, 30, "idle-timeout");
+}
+
+#[test]
+fn shutdown_with_open_connections_is_prompt_and_delivers_in_flight_responses() {
+    let (addr, handle, join) = start(2, Duration::from_secs(60));
+
+    // 50 idle keep-alive connections that will still be open at stop
+    let mut idle = Vec::with_capacity(50);
+    for _ in 0..50 {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut s = &stream;
+        s.write_all(KEEPALIVE_HEALTHZ).unwrap();
+        let (status, _) = read_response(&mut reader);
+        assert_eq!(status, 200);
+        idle.push((stream, reader));
+    }
+
+    // one in-flight evaluation: send the request, then stop the server
+    // once /metrics proves it was dispatched
+    let mut busy = TcpStream::connect(addr).unwrap();
+    busy.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut busy_reader = BufReader::new(busy.try_clone().unwrap());
+    let raw = format!(
+        "POST /analyze HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{TRIAD}",
+        TRIAD.len()
+    );
+    busy.write_all(raw.as_bytes()).unwrap();
+    let t0 = Instant::now();
+    loop {
+        let (_, metrics) = get(addr, "/metrics");
+        if metric(&metrics, "kerncraft_requests_total{endpoint=\"analyze\"}") >= 1 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(20), "request never dispatched");
+    }
+    handle.stop();
+
+    // the in-flight response is still delivered in full
+    let (status, body) = read_response(&mut busy_reader);
+    assert_eq!(status, 200, "{body}");
+    let report = AnalysisReport::from_json(&body).unwrap();
+    assert_eq!(report.kernel, "triad");
+
+    // and shutdown completes promptly despite the 50 open connections
+    join_within(join, 30, "shutdown");
+
+    // the idle connections were closed by the server, not left hanging
+    for (_, reader) in idle.iter_mut() {
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "idle connection got bytes at shutdown: {rest:?}");
+    }
+}
