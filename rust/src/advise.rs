@@ -1,0 +1,455 @@
+//! The blocking adviser (`kerncraft advise`, [`ModelKind::Advise`]):
+//! turn the analytic layer-condition machinery into ranked cache-blocking
+//! advice for one kernel/machine pair — the first mode that answers
+//! "how do I make it fast" instead of "how fast is it".
+//!
+//! The engine (DESIGN.md §5) runs three stages:
+//!
+//! 1. **Breakpoint solve** — [`crate::cache::solve_lc_breakpoints`]
+//!    decomposes every layer-condition footprint into
+//!    `const + slope · extent` of the array dimension streamed by the
+//!    innermost loop and inverts the inequality per cache level. No
+//!    problem-size sweep, no offset walk — the breakpoints come out of
+//!    closed-form division.
+//! 2. **Candidate enumeration** — every distinct breakpoint extent below
+//!    the current extent (and at least [`MIN_BLOCK_EXTENT`]) is a
+//!    candidate inner-dimension block size. Each candidate is evaluated
+//!    through the owning [`Session`] as a plain ECM request with the
+//!    `LayerConditions` predictor forced, so the whole advise path stays
+//!    analytic (`walk_levels` across all sub-evaluations is asserted to
+//!    be observable in the report — zero on the fast path).
+//! 3. **Ranking** — candidates are ordered by predicted in-memory ECM
+//!    time (`t_mem` ascending), ties broken toward the larger block
+//!    (less blocking overhead), then by the unlocked conditions. The
+//!    report carries traffic factor and speedup against the unblocked
+//!    baseline.
+//!
+//! Riding on [`Session`] means advise requests are memoized, cacheable
+//! (`--cache-dir`) and serveable (`POST /advise`) like every other model.
+
+use crate::cache::{solve_lc_breakpoints, CachePredictorKind};
+use crate::jsonio::{json_num, json_str, JsonValue};
+use crate::kernel::{Expr, KernelAnalysis};
+use crate::machine::MachineModel;
+use crate::session::{
+    get_f64, get_str, get_u32, get_u64, AnalysisRequest, KernelSpec, ModelKind, Session,
+};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Smallest inner-dimension block worth recommending: below this the
+/// per-block loop overhead (stream startup/drain at every block edge)
+/// eats whatever the cache saves.
+pub const MIN_BLOCK_EXTENT: u64 = 64;
+
+/// One solved breakpoint row of the advise section (the Fig. 3 bands,
+/// solved instead of swept — DESIGN.md §5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdviceBreakpoint {
+    /// Cache level name.
+    pub level: String,
+    /// Loop index variable of the condition.
+    pub dim_name: String,
+    /// Loop depth of the condition (0 = outermost).
+    pub dim_index: u32,
+    /// Capacity of the level (per active core for shared levels).
+    pub cache_bytes: u64,
+    /// Extent-independent part of the required footprint.
+    pub const_bytes: u64,
+    /// Required bytes per element of the varied extent.
+    pub slope_bytes: u64,
+    /// Largest varied extent satisfying the condition (inclusive).
+    pub extent: u64,
+}
+
+/// One ranked blocking candidate of the advise section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdviceCandidate {
+    /// Proposed block extent of the varied dimension.
+    pub extent: u64,
+    /// Conditions this block newly satisfies, e.g. `"j@L1"`.
+    pub unlocks: Vec<String>,
+    /// Predicted in-memory ECM time at this block (cy per unit).
+    pub t_mem: f64,
+    /// Memory traffic at this block (bytes per unit).
+    pub memory_bytes_per_unit: f64,
+    /// Baseline total inter-level traffic (bytes per unit, summed over
+    /// every link) over the candidate's — ≥ 1 when the block helps. A
+    /// block that only relieves an inner link (L1–L2, say) still shows
+    /// here even when the memory link is unchanged.
+    pub traffic_factor: f64,
+    /// Baseline `t_mem` over candidate `t_mem`.
+    pub speedup: f64,
+}
+
+/// The `advise` section of an `AnalysisReport` ([`ModelKind::Advise`]):
+/// the solved breakpoint table plus ranked blocking advice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdviceReport {
+    /// Innermost loop index variable — the dimension being blocked.
+    pub varied_dim: String,
+    /// Kernel constant binding the varied array extent (the one a
+    /// blocking transformation would shrink).
+    pub varied_constant: String,
+    /// Current value of that constant.
+    pub current_extent: u64,
+    /// Unblocked in-memory ECM time (cy per unit).
+    pub baseline_t_mem: f64,
+    /// Unblocked memory traffic (bytes per unit).
+    pub baseline_memory_bytes_per_unit: f64,
+    /// Offset-walk levels summed over every sub-evaluation: 0 means the
+    /// entire advise ran on the analytic layer-condition fast path.
+    pub walk_levels: u32,
+    /// Solved breakpoints, levels inner→outer.
+    pub breakpoints: Vec<AdviceBreakpoint>,
+    /// Ranked advice, best predicted time first.
+    pub candidates: Vec<AdviceCandidate>,
+}
+
+/// Build the advise section for an already-resolved request: solve the
+/// breakpoints analytically (DESIGN.md §5), then evaluate the unblocked
+/// baseline and each candidate block through `session` as plain ECM
+/// requests with the analytic predictor forced.
+pub(crate) fn build_advice(
+    session: &Session,
+    req: &AnalysisRequest,
+    machine: &MachineModel,
+    analysis: &KernelAnalysis,
+    label: &str,
+    source: &Arc<str>,
+) -> Result<AdviceReport> {
+    let solve = solve_lc_breakpoints(analysis, machine, req.cores)?;
+    let varied_constant = varied_constant(analysis, source, &solve)?;
+    let current_extent = solve.current_extent;
+
+    let sub = |extent: u64| -> AnalysisRequest {
+        let mut r = AnalysisRequest::new(
+            KernelSpec::source(label, source.clone()),
+            req.machine.clone(),
+        )
+        .with_cores(req.cores)
+        .with_model(ModelKind::Ecm)
+        .with_predictor(CachePredictorKind::LayerConditions)
+        .with_codegen(req.codegen);
+        r.constants = req.constants.clone();
+        r.constants.insert(varied_constant.clone(), extent as i64);
+        r
+    };
+    let mut walk_levels = 0u32;
+    // (t_mem, memory bytes/unit, total bytes/unit over every link)
+    let mut eval = |extent: u64| -> Result<(f64, f64, f64)> {
+        let rep = session.evaluate(&sub(extent))?;
+        let t = rep.traffic.as_ref().expect("the ECM model carries traffic");
+        walk_levels += t.walk_levels;
+        let total = t.levels.iter().map(|l| l.total_lines).sum::<f64>()
+            * t.cacheline_bytes as f64;
+        let e = rep.ecm.as_ref().expect("the ECM model carries its section");
+        Ok((e.t_mem, t.memory_bytes_per_unit, total))
+    };
+
+    let (baseline_t_mem, baseline_mem, baseline_total) = eval(current_extent)?;
+
+    let mut extents: Vec<u64> = solve
+        .breakpoints
+        .iter()
+        .map(|b| b.extent)
+        .filter(|&e| e >= MIN_BLOCK_EXTENT && e < current_extent)
+        .collect();
+    extents.sort_unstable();
+    extents.dedup();
+
+    let mut candidates = Vec::with_capacity(extents.len());
+    for extent in extents {
+        // a condition is newly satisfied at this block iff its breakpoint
+        // admits the block but not the current extent (inclusive bounds)
+        let unlocks: Vec<String> = solve
+            .breakpoints
+            .iter()
+            .filter(|b| b.extent >= extent && b.extent < current_extent)
+            .map(|b| format!("{}@{}", b.dim_name, b.level))
+            .collect();
+        let (t_mem, mem, total) = eval(extent)?;
+        candidates.push(AdviceCandidate {
+            extent,
+            unlocks,
+            t_mem,
+            memory_bytes_per_unit: mem,
+            traffic_factor: if total > 0.0 { baseline_total / total } else { 1.0 },
+            speedup: if t_mem > 0.0 { baseline_t_mem / t_mem } else { 1.0 },
+        });
+    }
+    candidates.sort_by(|a, b| {
+        a.t_mem
+            .total_cmp(&b.t_mem)
+            .then_with(|| b.extent.cmp(&a.extent))
+            .then_with(|| a.unlocks.cmp(&b.unlocks))
+    });
+
+    Ok(AdviceReport {
+        varied_dim: solve.varied_dim.clone(),
+        varied_constant,
+        current_extent,
+        baseline_t_mem,
+        baseline_memory_bytes_per_unit: baseline_mem,
+        walk_levels,
+        breakpoints: solve
+            .breakpoints
+            .iter()
+            .map(|b| AdviceBreakpoint {
+                level: b.level.clone(),
+                dim_name: b.dim_name.clone(),
+                dim_index: b.dim_index as u32,
+                cache_bytes: b.cache_bytes,
+                const_bytes: b.const_bytes,
+                slope_bytes: b.slope_bytes,
+                extent: b.extent,
+            })
+            .collect(),
+        candidates,
+    })
+}
+
+/// Resolve which kernel constant binds the varied array extent, and
+/// verify the linearity assumption structurally: the constant must appear
+/// as the whole dimension expression at the varied position of every
+/// participating array, and must size no *other* dimension of any
+/// accessed array — an `a[M][N][N]` shape would make the outer footprints
+/// quadratic in the block size, defeating the closed-form solve
+/// (DESIGN.md §5).
+fn varied_constant(
+    analysis: &KernelAnalysis,
+    source: &str,
+    solve: &crate::cache::LcBlockingSolve,
+) -> Result<String> {
+    let program = crate::kernel::parse(source).map_err(anyhow::Error::from)?;
+    let mut name: Option<String> = None;
+    for (aix, pos) in solve.varied_positions.iter().enumerate() {
+        let Some(pos) = pos else { continue };
+        let arr = &analysis.arrays[aix];
+        let decl = program
+            .decl(&arr.name)
+            .ok_or_else(|| anyhow!("array '{}' has no declaration", arr.name))?;
+        let dim = decl
+            .dims
+            .get(*pos)
+            .ok_or_else(|| anyhow!("array '{}' has no dimension {pos}", arr.name))?;
+        let Expr::Var(v) = dim else {
+            bail!(
+                "array '{}': the varied dimension {} is not bound to a plain constant — \
+                 cannot rebind it for blocking",
+                arr.name,
+                pos
+            );
+        };
+        match &name {
+            None => name = Some(v.clone()),
+            Some(n) if n == v => {}
+            Some(n) => bail!(
+                "arrays bind the varied dimension to different constants ('{n}' vs '{v}') — \
+                 no single blocking factor governs it"
+            ),
+        }
+    }
+    let name =
+        name.ok_or_else(|| anyhow!("no array dimension is bound to the varied loop"))?;
+    for (aix, arr) in analysis.arrays.iter().enumerate() {
+        let Some(decl) = program.decl(&arr.name) else { continue };
+        for (pos, dim) in decl.dims.iter().enumerate() {
+            if solve.varied_positions[aix] == Some(pos) {
+                continue;
+            }
+            let mut reused = false;
+            dim.visit(&mut |e| {
+                if matches!(e, Expr::Var(v) if *v == name) {
+                    reused = true;
+                }
+            });
+            if reused {
+                bail!(
+                    "constant '{}' also sizes dimension {} of array '{}' — the blocked \
+                     footprints are not linear in it",
+                    name,
+                    pos,
+                    arr.name
+                );
+            }
+        }
+    }
+    Ok(name)
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization — the session report house style
+// ---------------------------------------------------------------------------
+
+impl AdviceReport {
+    /// Serialize as a JSON object (one section of the report line).
+    pub(crate) fn json(&self) -> String {
+        let mut s = format!(
+            "{{\"varied_dim\": {}, \"varied_constant\": {}, \"current_extent\": {}, \
+             \"baseline_t_mem\": {}, \"baseline_memory_bytes_per_unit\": {}, \
+             \"walk_levels\": {}, \"breakpoints\": [",
+            json_str(&self.varied_dim),
+            json_str(&self.varied_constant),
+            self.current_extent,
+            json_num(self.baseline_t_mem),
+            json_num(self.baseline_memory_bytes_per_unit),
+            self.walk_levels
+        );
+        for (ix, b) in self.breakpoints.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"level\": {}, \"dim\": {}, \"dim_index\": {}, \"cache_bytes\": {}, \
+                 \"const_bytes\": {}, \"slope_bytes\": {}, \"extent\": {}}}",
+                json_str(&b.level),
+                json_str(&b.dim_name),
+                b.dim_index,
+                b.cache_bytes,
+                b.const_bytes,
+                b.slope_bytes,
+                b.extent
+            ));
+        }
+        s.push_str("], \"candidates\": [");
+        for (ix, c) in self.candidates.iter().enumerate() {
+            if ix > 0 {
+                s.push_str(", ");
+            }
+            let unlocks: Vec<String> = c.unlocks.iter().map(|u| json_str(u)).collect();
+            s.push_str(&format!(
+                "{{\"extent\": {}, \"unlocks\": [{}], \"t_mem\": {}, \
+                 \"memory_bytes_per_unit\": {}, \"traffic_factor\": {}, \"speedup\": {}}}",
+                c.extent,
+                unlocks.join(", "),
+                json_num(c.t_mem),
+                json_num(c.memory_bytes_per_unit),
+                json_num(c.traffic_factor),
+                json_num(c.speedup)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Deserialize from a parsed JSON section.
+    pub(crate) fn from_json_value(v: &JsonValue) -> Result<AdviceReport> {
+        let mut breakpoints = Vec::new();
+        if let Some(JsonValue::Arr(items)) = v.get("breakpoints") {
+            for b in items {
+                breakpoints.push(AdviceBreakpoint {
+                    level: get_str(b, "level")?,
+                    dim_name: get_str(b, "dim")?,
+                    dim_index: get_u32(b, "dim_index")?,
+                    cache_bytes: get_u64(b, "cache_bytes")?,
+                    const_bytes: get_u64(b, "const_bytes")?,
+                    slope_bytes: get_u64(b, "slope_bytes")?,
+                    extent: get_u64(b, "extent")?,
+                });
+            }
+        }
+        let mut candidates = Vec::new();
+        if let Some(JsonValue::Arr(items)) = v.get("candidates") {
+            for c in items {
+                let unlocks = match c.get("unlocks") {
+                    Some(JsonValue::Arr(us)) => us
+                        .iter()
+                        .map(|u| {
+                            u.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow!("'unlocks' entries must be strings"))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                    _ => Vec::new(),
+                };
+                candidates.push(AdviceCandidate {
+                    extent: get_u64(c, "extent")?,
+                    unlocks,
+                    t_mem: get_f64(c, "t_mem")?,
+                    memory_bytes_per_unit: get_f64(c, "memory_bytes_per_unit")?,
+                    traffic_factor: get_f64(c, "traffic_factor")?,
+                    speedup: get_f64(c, "speedup")?,
+                });
+            }
+        }
+        Ok(AdviceReport {
+            varied_dim: get_str(v, "varied_dim")?,
+            varied_constant: get_str(v, "varied_constant")?,
+            current_extent: get_u64(v, "current_extent")?,
+            baseline_t_mem: get_f64(v, "baseline_t_mem")?,
+            baseline_memory_bytes_per_unit: get_f64(v, "baseline_memory_bytes_per_unit")?,
+            walk_levels: get_u32(v, "walk_levels")?,
+            breakpoints,
+            candidates,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const JACOBI: &str = "double a[M][N], b[M][N], s;\n\
+        for (int j = 1; j < M - 1; j++)\n  for (int i = 1; i < N - 1; i++)\n    \
+        b[j][i] = (a[j][i-1] + a[j][i+1] + a[j-1][i] + a[j+1][i]) * s;";
+
+    fn advise_request(n: i64, m: i64) -> AnalysisRequest {
+        AnalysisRequest::new(KernelSpec::source("2d-5pt", JACOBI), "SNB")
+            .with_constant("N", n)
+            .with_constant("M", m)
+            .with_model(ModelKind::Advise)
+    }
+
+    #[test]
+    fn jacobi_advice_is_analytic_and_improves_traffic() {
+        let session = Session::new();
+        let report = session.evaluate(&advise_request(6000, 6000)).unwrap();
+        let a = report.advise.as_ref().unwrap();
+        assert_eq!(a.varied_dim, "i");
+        assert_eq!(a.varied_constant, "N");
+        assert_eq!(a.current_extent, 6000);
+        assert_eq!(a.walk_levels, 0, "advise must stay on the analytic path");
+        // the only breakpoint below N=6000 is the L1 one at 1024
+        assert_eq!(a.candidates.len(), 1);
+        let c = &a.candidates[0];
+        assert_eq!(c.extent, 1024);
+        assert_eq!(c.unlocks, vec!["j@L1".to_string()]);
+        assert!(c.memory_bytes_per_unit <= a.baseline_memory_bytes_per_unit);
+        assert!(c.t_mem <= a.baseline_t_mem);
+        assert!(c.traffic_factor >= 1.0);
+    }
+
+    #[test]
+    fn advice_report_round_trips_through_json() {
+        let session = Session::new();
+        let report = session.evaluate(&advise_request(6000, 6000)).unwrap();
+        let parsed =
+            crate::session::AnalysisReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(report, parsed);
+    }
+
+    #[test]
+    fn one_dimensional_kernel_is_a_clean_error() {
+        let session = Session::new();
+        let req = AnalysisRequest::new(KernelSpec::named("triad"), "SNB")
+            .with_constant("N", 1_000_000)
+            .with_model(ModelKind::Advise);
+        let err = session.evaluate(&req).unwrap_err();
+        assert!(format!("{err:#}").contains("depth >= 2"), "{err:#}");
+    }
+
+    #[test]
+    fn shared_dimension_constants_are_rejected() {
+        // uxx-style a[M][N][N]: rebinding N would change two dimensions —
+        // the footprints are quadratic in it and the solve must refuse
+        let session = Session::new();
+        let req = AnalysisRequest::new(KernelSpec::named("UXX"), "SNB")
+            .with_constant("N", 500)
+            .with_constant("M", 500)
+            .with_model(ModelKind::Advise);
+        let err = session.evaluate(&req).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("also sizes") || msg.contains("not linear"), "{msg}");
+    }
+}

@@ -1039,6 +1039,210 @@ fn layer_conditions(
     out
 }
 
+/// One analytically solved layer-condition breakpoint (DESIGN.md §5): the
+/// largest extent of the varied array dimension at which the condition
+/// `(level, dim)` still holds, from the exact linear decomposition
+/// `required = const + slope · extent`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LcBreakpoint {
+    /// Cache level name.
+    pub level: String,
+    /// Loop depth of the condition (0 = outermost).
+    pub dim_index: usize,
+    /// Loop index variable name.
+    pub dim_name: String,
+    /// Capacity of the level (per active core for shared levels).
+    pub cache_bytes: u64,
+    /// Extent-independent part of the required footprint.
+    pub const_bytes: u64,
+    /// Required bytes added per element of the varied extent (> 0).
+    pub slope_bytes: u64,
+    /// Largest varied extent satisfying the condition — inclusive, i.e.
+    /// `const + slope · extent <= cache_bytes`, matching the
+    /// `required <= size` test of the layer-condition evaluator.
+    pub extent: u64,
+}
+
+/// Result of [`solve_lc_breakpoints`]: the layer-condition inequalities
+/// of one kernel/machine pair solved in the extent of the array
+/// dimension streamed by the innermost loop.
+#[derive(Debug, Clone)]
+pub struct LcBlockingSolve {
+    /// Index variable of the innermost loop — the dimension being varied.
+    pub varied_dim: String,
+    /// Per `analysis.arrays` entry: the array-dimension position indexed
+    /// by the varied loop variable (`None` when the array does not use it).
+    pub varied_positions: Vec<Option<usize>>,
+    /// Current extent of the varied array dimension (uniform across the
+    /// participating arrays — checked).
+    pub current_extent: u64,
+    /// Solved breakpoints, levels inner→outer; only conditions whose
+    /// footprint actually grows with the varied extent appear (positive
+    /// slope) — constant conditions have no breakpoint.
+    pub breakpoints: Vec<LcBreakpoint>,
+}
+
+/// Solve the layer-condition inequalities analytically in the extent of
+/// the innermost-indexed array dimension (DESIGN.md §5).
+///
+/// Each condition's footprint decomposes per array into
+/// `n_layers · coeff_d · elem_size`, where `coeff_d` is the array stride
+/// at the dimension position indexed by loop `d`. In a row-major layout
+/// that stride contains the varied extent as a factor exactly when the
+/// varied dimension lies strictly *inside* position `d` — those terms are
+/// linear in the extent; all others are constants. Inverting
+/// `const + slope · E <= cache_bytes` per level gives the breakpoint
+/// `E* = (cache_bytes − const) / slope` (inclusive floor) with no sweep
+/// and no offset walk.
+///
+/// Errors when the kernel shape defeats the decomposition: fewer than two
+/// loops, a loop variable indexing two dimensions of one array, arrays
+/// disagreeing on the varied extent, or a footprint term the current
+/// extent does not divide (non-linear dependence).
+pub fn solve_lc_breakpoints(
+    analysis: &KernelAnalysis,
+    machine: &MachineModel,
+    cores: u32,
+) -> Result<LcBlockingSolve> {
+    let n_loops = analysis.loops.len();
+    if n_loops < 2 {
+        bail!("blocking analysis needs a loop nest of depth >= 2");
+    }
+    let varied = analysis.loops[n_loops - 1].index.clone();
+    // per (array, loop var): the array-dimension position the variable
+    // indexes — must be unique per array or the footprint does not
+    // factor into per-dimension strides
+    let mut positions: Vec<Vec<Option<usize>>> = vec![vec![None; n_loops]; analysis.arrays.len()];
+    for acc in analysis.reads.iter().chain(analysis.writes.iter()) {
+        for (pos, dim) in acc.dims.iter().enumerate() {
+            let DimAccess::Relative { var, .. } = dim else { continue };
+            let Some(d) = analysis.loops.iter().position(|l| l.index == *var) else {
+                continue;
+            };
+            match positions[acc.array][d] {
+                None => positions[acc.array][d] = Some(pos),
+                Some(p) if p == pos => {}
+                Some(p) => bail!(
+                    "array '{}': loop index '{}' appears at dimensions {} and {} — \
+                     the layer conditions are not separable",
+                    analysis.arrays[acc.array].name,
+                    var,
+                    p,
+                    pos
+                ),
+            }
+        }
+    }
+    let mut current_extent: Option<u64> = None;
+    for (aix, pos) in positions.iter().enumerate() {
+        let Some(p) = pos[n_loops - 1] else { continue };
+        let e = analysis.arrays[aix].dims[p];
+        match current_extent {
+            None => current_extent = Some(e),
+            Some(c) if c == e => {}
+            Some(c) => bail!(
+                "arrays disagree on the extent of the varied dimension '{}' ({} vs {}) — \
+                 no single blocking factor governs it",
+                varied,
+                c,
+                e
+            ),
+        }
+    }
+    let Some(current_extent) = current_extent else {
+        bail!("no array dimension is indexed by the inner loop '{varied}' — nothing to block");
+    };
+    if current_extent == 0 {
+        bail!("the varied dimension '{varied}' has extent 0");
+    }
+
+    let mut breakpoints = Vec::new();
+    for lvl in machine.cache_levels() {
+        let size = {
+            let s = lvl.size_bytes.unwrap_or(0);
+            if lvl.cores_per_group > 1 {
+                s / cores.min(lvl.cores_per_group).max(1) as u64
+            } else {
+                s
+            }
+        };
+        for d in 0..n_loops {
+            let dim_name = analysis.loops[d].index.clone();
+            let mut const_bytes: u64 = 0;
+            let mut slope_bytes: u64 = 0;
+            for (aix, arr) in analysis.arrays.iter().enumerate() {
+                // identical span/coeff scan to layer_conditions()
+                let mut lo = i64::MAX;
+                let mut hi = i64::MIN;
+                let mut coeff: i64 = 0;
+                for acc in analysis.reads.iter().chain(analysis.writes.iter()) {
+                    if acc.array != aix || acc.coeffs[d] == 0 {
+                        continue;
+                    }
+                    coeff = acc.coeffs[d].abs();
+                    let layer_off: i64 = acc
+                        .dims
+                        .iter()
+                        .filter_map(|dim| match dim {
+                            DimAccess::Relative { var, offset } if *var == dim_name => {
+                                Some(*offset)
+                            }
+                            _ => None,
+                        })
+                        .sum();
+                    lo = lo.min(layer_off);
+                    hi = hi.max(layer_off);
+                }
+                if coeff == 0 {
+                    continue;
+                }
+                let n_layers = (hi - lo) as u64 + 1;
+                let term = n_layers.saturating_mul(coeff as u64) * arr.ty.size();
+                // linear in the varied extent iff that extent is a factor
+                // of the dim-d stride: the varied array dimension lies
+                // strictly inside position d (row-major layout)
+                let p_d = positions[aix][d];
+                let p_v = positions[aix][n_loops - 1];
+                if matches!((p_d, p_v), (Some(pd), Some(pv)) if pv > pd) {
+                    if term % current_extent != 0 {
+                        bail!(
+                            "array '{}': footprint term {} is not divisible by the varied \
+                             extent {} — the condition on '{}' is not linear in it",
+                            arr.name,
+                            term,
+                            current_extent,
+                            dim_name
+                        );
+                    }
+                    slope_bytes = slope_bytes.saturating_add(term / current_extent);
+                } else {
+                    const_bytes = const_bytes.saturating_add(term);
+                }
+            }
+            if slope_bytes == 0 {
+                continue; // condition does not depend on the varied extent
+            }
+            let extent = if size > const_bytes { (size - const_bytes) / slope_bytes } else { 0 };
+            breakpoints.push(LcBreakpoint {
+                level: lvl.name.clone(),
+                dim_index: d,
+                dim_name,
+                cache_bytes: size,
+                const_bytes,
+                slope_bytes,
+                extent,
+            });
+        }
+    }
+
+    Ok(LcBlockingSolve {
+        varied_dim: varied,
+        varied_positions: positions.iter().map(|p| p[n_loops - 1]).collect(),
+        current_extent,
+        breakpoints,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1341,6 +1545,87 @@ mod tests {
         assert_eq!(CachePredictorKind::parse("bogus"), None);
         // 'sim' used to alias Offsets; the simulator is -p Validate now
         assert_eq!(CachePredictorKind::parse("sim"), None);
+    }
+
+    // --- analytic breakpoint solver (DESIGN.md §5) ---
+
+    #[test]
+    fn solver_matches_hand_derived_jacobi_breakpoints() {
+        // required(j) = (3 rows of a + 1 of b) · N · 8 B = 32·N, so the
+        // inclusive breakpoint is N* = cache_bytes / 32: SNB L1 32 kB →
+        // 1024, L2 256 kB → 8192, L3 20 MB (1 core) → 655360. The inner
+        // (i) condition is constant in N and must yield no breakpoint.
+        let m = MachineModel::snb();
+        let s = solve_lc_breakpoints(&jacobi(4000, 4000), &m, 1).unwrap();
+        assert_eq!(s.varied_dim, "i");
+        assert_eq!(s.current_extent, 4000);
+        let rows: Vec<(&str, &str, u64, u64, u64)> = s
+            .breakpoints
+            .iter()
+            .map(|b| (b.level.as_str(), b.dim_name.as_str(), b.const_bytes, b.slope_bytes, b.extent))
+            .collect();
+        assert_eq!(
+            rows,
+            vec![
+                ("L1", "j", 0, 32, 1024),
+                ("L2", "j", 0, 32, 8192),
+                ("L3", "j", 0, 32, 655360),
+            ],
+        );
+    }
+
+    #[test]
+    fn lc_satisfied_flips_exactly_at_each_solved_breakpoint() {
+        // the solved extent is the last satisfied size (inclusive bound):
+        // the condition must hold at E* and fail at E*+1
+        let m = MachineModel::snb();
+        let solve = solve_lc_breakpoints(&jacobi(4000, 4000), &m, 1).unwrap();
+        assert_eq!(solve.breakpoints.len(), 3);
+        for b in &solve.breakpoints {
+            for (extent, expect) in [(b.extent, true), (b.extent + 1, false)] {
+                let a = jacobi(extent as i64, 4000);
+                let e = layer_conditions(&a, &m, 1)
+                    .into_iter()
+                    .find(|e| e.level == b.level && e.dim_index == b.dim_index)
+                    .unwrap();
+                assert_eq!(
+                    e.satisfied, expect,
+                    "{}@{} at extent {extent}: required {} vs cache {}",
+                    b.dim_name, b.level, e.required_bytes, e.cache_bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_walks_at_exact_breakpoint_sizes_and_agrees_with_offsets() {
+        // N = 1024 puts the L1 j-condition exactly at required == size.
+        // The analytic answer is ambiguous there (the steady-state window
+        // straddles the capacity), so Auto must treat it as gray zone,
+        // fall back to the walk for that level, and match the offset
+        // predictor bit for bit.
+        let m = MachineModel::snb();
+        let solve = solve_lc_breakpoints(&jacobi(4000, 4000), &m, 1).unwrap();
+        for b in &solve.breakpoints {
+            let a = jacobi(b.extent as i64, 4000);
+            let walk = CachePredictor::new(&m).predict(&a).unwrap();
+            let auto =
+                CachePredictor::with_kind(&m, 1, CachePredictorKind::Auto).predict(&a).unwrap();
+            assert_traffic_eq(&walk, &auto, &format!("jacobi at exact {} breakpoint", b.level));
+            assert!(
+                auto.stats.walk_levels >= 1,
+                "{} boundary must not be answered analytically: {:?}",
+                b.level,
+                auto.stats
+            );
+        }
+    }
+
+    #[test]
+    fn solver_rejects_one_dimensional_kernels() {
+        let m = MachineModel::snb();
+        let err = solve_lc_breakpoints(&triad(100_000), &m, 1).unwrap_err();
+        assert!(format!("{err}").contains("depth >= 2"), "{err}");
     }
 
     // --- degenerate inputs ---

@@ -188,7 +188,7 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
 /// CLI usage text.
 pub fn usage() -> String {
     "usage: kerncraft -p MODE [-m MACHINE] kernel.c -D NAME VALUE ...\n\
-     modes: ECM ECMData ECMCPU Roofline RooflinePort Validate Benchmark\n\
+     modes: ECM ECMData ECMCPU Roofline RooflinePort Validate Advise Benchmark\n\
             (Validate = full ECM plus a virtual-testbed run with the\n\
              simulated-vs-analytic comparison; the cache simulator is\n\
              reached through this mode, not via --cache-predictor)\n\
@@ -201,11 +201,16 @@ pub fn usage() -> String {
      parse-only lint (exit code = number of failing files):\n\
      kerncraft check FILE...\n\
      \n\
+     analytic cache-blocking advice (layer-condition breakpoint solve,\n\
+     no problem-size sweep; text output is the advice section alone):\n\
+     kerncraft advise kernel.c|TAG [-m MACHINE] -D NAME VALUE ...\n\
+              [--cores N] [--format {text,json}]\n\
+     \n\
      batched sweeps over problem-size grids:\n\
      kerncraft sweep [-m M1,M2] kernel.c -D NAME GRID [-D NAME2 GRID2 ...]\n\
               GRID: VALUE | START:END[:log2|*K|+K]   (suffixes k/M/G, 1024-based)\n\
               --cores LIST  --predictor {offsets,lc,auto}  --threads K\n\
-              --format {csv,json}  --serial  --validate  -v\n\
+              --format {csv,json}  --serial  --validate  --advise  -v\n\
      \n\
      batch service (JSON lines over stdin/stdout, or HTTP with\n\
      --listen; see docs/SERVE.md for the wire protocol and\n\
@@ -256,6 +261,7 @@ pub fn run(argv: &[String]) -> Result<String> {
     match argv.first().map(String::as_str) {
         Some("sweep") => return run_sweep(&argv[1..]),
         Some("serve") => return run_serve(&argv[1..]),
+        Some("advise") => return run_advise(&argv[1..]),
         // main.rs dispatches `check` itself to map the failure count to
         // the exit code; this arm serves library callers of `run`
         Some("check") => return run_check(&argv[1..]).map(|(report, _)| report),
@@ -322,6 +328,50 @@ fn render_frontend_error(e: anyhow::Error) -> anyhow::Error {
     match e.downcast_ref::<crate::kernel::KernelError>() {
         Some(ke) => anyhow!("{}", ke.diag.render()),
         None => e,
+    }
+}
+
+/// `kerncraft advise kernel.c|TAG ...` — the analytic blocking adviser
+/// (DESIGN.md §5): one [`ModelKind::Advise`] evaluation, rendered as the
+/// advice section alone (`--format text`, the default) or the full JSON
+/// report (`--format json`). The kernel argument is a file path or a
+/// Table 5 tag, as in `sweep`. Accepts the single-run flags (`-m`,
+/// `-D`, `--cores`, `--format`); any `-p` mode given is overridden.
+pub fn run_advise(argv: &[String]) -> Result<String> {
+    let args = parse_args(argv)?;
+    let Some(path) = &args.kernel_path else {
+        bail!("no kernel file given for advise\n{}", usage());
+    };
+    // file path, or a Table 5 tag as a convenience (mirrors `sweep`);
+    // a path that neither exists nor names a tag stays a path so the
+    // evaluation reports the read error with the filename
+    let kernel = if !std::path::Path::new(path).exists()
+        && crate::models::reference::kernel_source(path).is_some()
+    {
+        KernelSpec::named(path)
+    } else {
+        KernelSpec::path(path)
+    };
+    let request = AnalysisRequest {
+        id: None,
+        kernel,
+        constants: args.constants.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+        machine: args.machine.clone(),
+        cores: args.cores,
+        model: ModelKind::Advise,
+        predictor: args.cache_predictor,
+        codegen: if args.scalar_codegen {
+            CodegenSelection::Scalar
+        } else {
+            CodegenSelection::MachineDefault
+        },
+        unit: args.unit,
+    };
+    let session = Session::new();
+    let report = session.evaluate(&request).map_err(render_frontend_error)?;
+    match args.format {
+        OutputFormat::Json => Ok(format!("{}\n", report.to_json())),
+        OutputFormat::Text => Ok(report::advise_report(&report)),
     }
 }
 
@@ -418,6 +468,9 @@ pub struct SweepArgs {
     /// Evaluate every point as [`ModelKind::Validate`]: rows gain the
     /// simulated cy/CL and model-error columns.
     pub validate: bool,
+    /// Evaluate every point as [`ModelKind::Advise`]: rows gain the
+    /// best advised block extent and its predicted T_Mem columns.
+    pub advise: bool,
 }
 
 /// Sweep output format.
@@ -439,6 +492,7 @@ pub fn parse_sweep_args(argv: &[String]) -> Result<SweepArgs> {
         format: SweepFormat::Csv,
         verbose: false,
         validate: false,
+        advise: false,
     };
     let mut it = argv.iter().peekable();
     let mut next_val = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
@@ -489,6 +543,7 @@ pub fn parse_sweep_args(argv: &[String]) -> Result<SweepArgs> {
             }
             "--serial" => args.threads = Some(1),
             "--validate" => args.validate = true,
+            "--advise" => args.advise = true,
             "--format" => {
                 args.format = match next_val(&mut it, "--format")?.as_str() {
                     "csv" => SweepFormat::Csv,
@@ -546,9 +601,17 @@ pub fn run_sweep(argv: &[String]) -> Result<String> {
         &args.axes,
         args.predictor,
     );
+    if args.validate && args.advise {
+        bail!("--validate and --advise are mutually exclusive (one model per sweep point)");
+    }
     if args.validate {
         for job in &mut jobs {
             job.model = ModelKind::Validate;
+        }
+    }
+    if args.advise {
+        for job in &mut jobs {
+            job.model = ModelKind::Advise;
         }
     }
     if jobs.is_empty() {
@@ -1387,8 +1450,42 @@ mod tests {
         assert_eq!(a.format, SweepFormat::Json);
         assert_eq!(a.threads, Some(3));
         assert!(!a.validate);
+        assert!(!a.advise);
         let a = parse_sweep_args(&argv("k.c -D N 1 --validate")).unwrap();
         assert!(a.validate);
+        let a = parse_sweep_args(&argv("k.c -D N 1 --advise")).unwrap();
+        assert!(a.advise);
+        let err = run_sweep(&argv("kernels/2d-5pt.c -D N 1000 -D M 1000 --validate --advise"))
+            .unwrap_err();
+        assert!(format!("{err}").contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn advise_subcommand_prints_breakpoints_and_advice() {
+        let out = run(&argv(
+            "advise kernels/2d-5pt.c -m SNB -D N 6000 -D M 6000",
+        ))
+        .unwrap();
+        assert!(out.contains("blocking advice"), "{out}");
+        assert!(out.contains("1. block i at 1024: unlocks j@L1"), "{out}");
+        // tags work like in sweep, and JSON mode emits the full report
+        let out = run(&argv("advise 2D-5pt -m SNB -D N 6000 -D M 6000 --format json")).unwrap();
+        let report = crate::session::AnalysisReport::from_json(out.trim()).unwrap();
+        assert_eq!(report.model, ModelKind::Advise);
+        let a = report.advise.expect("advise section");
+        assert_eq!(a.walk_levels, 0, "the advise path must stay analytic");
+        assert_eq!(a.candidates[0].extent, 1024);
+    }
+
+    #[test]
+    fn sweep_advise_rows_carry_block_columns() {
+        let out = run_sweep(&argv(
+            "kernels/2d-5pt.c -m SNB -D N 6000 -D M 6000 --advise --serial",
+        ))
+        .unwrap();
+        let header = out.lines().next().unwrap();
+        assert!(header.ends_with(",lc_bands,advise_block,advise_t_mem"), "{header}");
+        assert!(out.lines().nth(1).unwrap().contains(",1024,"), "{out}");
     }
 
     #[test]

@@ -63,6 +63,7 @@
 //! the serve wire protocol in docs/SERVE.md and the operator guide in
 //! docs/OPERATIONS.md.
 
+pub mod advise;
 pub mod bench_mode;
 pub mod cache;
 pub mod cli;

@@ -210,6 +210,60 @@ pub fn validation_report(r: &AnalysisReport) -> String {
     s
 }
 
+/// Render the `advise` section ([`crate::session::ModelKind::Advise`]):
+/// the solved layer-condition breakpoint table and the ranked blocking
+/// advice of the analytic adviser (DESIGN.md §5). Empty when the report
+/// has no advise section.
+///
+/// The numeric fields use fixed formatting (not [`fmt_cy`]) so the
+/// golden test normalization stays shape-stable.
+pub fn advise_report(r: &AnalysisReport) -> String {
+    let Some(a) = &r.advise else {
+        return String::new();
+    };
+    let mut s = String::new();
+    s.push_str("blocking advice (analytic layer-condition breakpoints):\n");
+    s.push_str(&format!(
+        "  varied dim: {} (constant {}, current extent {})\n",
+        a.varied_dim, a.varied_constant, a.current_extent
+    ));
+    s.push_str(&format!(
+        "  baseline: T_Mem {:.1} cy/CL, {:.0} B/unit memory traffic\n",
+        a.baseline_t_mem, a.baseline_memory_bytes_per_unit
+    ));
+    s.push_str(&format!(
+        "  offset-walk levels across sub-evaluations: {}\n",
+        a.walk_levels
+    ));
+    s.push_str("  level | dim | slope B | const B | breakpoint\n");
+    for b in &a.breakpoints {
+        s.push_str(&format!(
+            "  {:<5} | {:<3} | {:>7} | {:>7} | {:>10}\n",
+            b.level, b.dim_name, b.slope_bytes, b.const_bytes, b.extent
+        ));
+    }
+    if a.candidates.is_empty() {
+        s.push_str(
+            "  advice: none (no breakpoint below the current extent yields a viable block)\n",
+        );
+    } else {
+        for (ix, c) in a.candidates.iter().enumerate() {
+            s.push_str(&format!(
+                "  {}. block {} at {}: unlocks {}, traffic x{:.2}, T_Mem {:.1} -> {:.1} cy/CL (x{:.2})\n",
+                ix + 1,
+                a.varied_dim,
+                c.extent,
+                if c.unlocks.is_empty() { "-".to_string() } else { c.unlocks.join(", ") },
+                c.traffic_factor,
+                a.baseline_t_mem,
+                c.t_mem,
+                c.speedup
+            ));
+        }
+    }
+    s
+}
+
 /// Render the model sections of a report the way the CLI mode for
 /// `report.model` would (the text twin of [`AnalysisReport::to_json`]).
 pub fn render_report(r: &AnalysisReport, verbose: bool) -> String {
@@ -224,6 +278,7 @@ pub fn render_report(r: &AnalysisReport, verbose: bool) -> String {
     }
     s.push_str(&roofline_report(r));
     s.push_str(&validation_report(r));
+    s.push_str(&advise_report(r));
     s
 }
 
@@ -352,7 +407,7 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
         s.push_str(l);
     }
     s.push_str(
-        ",T_ECM_Mem,sat_cores,mem_B_per_unit,lc_fast_levels,walk_levels,sim_cy_per_cl,model_error_pct,lc_bands\n",
+        ",T_ECM_Mem,sat_cores,mem_B_per_unit,lc_fast_levels,walk_levels,sim_cy_per_cl,model_error_pct,lc_bands,advise_block,advise_t_mem\n",
     );
 
     for r in rows {
@@ -389,7 +444,7 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
             r.saturation_cores.to_string()
         };
         s.push_str(&format!(
-            ",{},{},{},{},{},{},{},{}\n",
+            ",{},{},{},{},{},{},{},{},{},{}\n",
             fmt_cy(r.t_ecm_mem),
             sat,
             r.memory_bytes_per_unit,
@@ -397,7 +452,9 @@ pub fn sweep_csv(rows: &[SweepRow]) -> String {
             r.walk_levels,
             r.sim_cy_per_cl.map(|v| format!("{v:.3}")).unwrap_or_default(),
             r.model_error_pct.map(|v| format!("{v:.2}")).unwrap_or_default(),
-            r.lc_breakpoints.join(" ")
+            r.lc_breakpoints.join(" "),
+            r.advise_block.map(|v| v.to_string()).unwrap_or_default(),
+            r.advise_t_mem.map(|v| format!("{v:.3}")).unwrap_or_default()
         ));
     }
     s
@@ -462,7 +519,11 @@ pub fn sweep_json(rows: &[SweepRow], stats: &MemoStats) -> String {
             }
             s.push_str(&json_str(b));
         }
-        s.push_str("]}");
+        s.push_str(&format!(
+            "], \"advise_block\": {}, \"advise_t_mem\": {}}}",
+            r.advise_block.map(|v| v.to_string()).unwrap_or_else(|| "null".to_string()),
+            r.advise_t_mem.map(json_num).unwrap_or_else(|| "null".to_string())
+        ));
         s.push_str(if ix + 1 < rows.len() { ",\n" } else { "\n" });
     }
     s.push_str("  ]\n}\n");
@@ -559,12 +620,28 @@ mod tests {
     fn renderers_are_pure_functions_of_serialized_reports() {
         // the defining property of the redesign: serialize, deserialize,
         // render — the text must be identical to rendering the original
-        for model in [ModelKind::Ecm, ModelKind::RooflinePort, ModelKind::EcmCpu] {
+        for model in
+            [ModelKind::Ecm, ModelKind::RooflinePort, ModelKind::EcmCpu, ModelKind::Advise]
+        {
             let r = jacobi_report(model, Unit::CyPerCl);
             let wire = AnalysisReport::from_json(&r.to_json()).unwrap();
             assert_eq!(render_report(&r, true), render_report(&wire, true), "{model:?}");
             assert!(!render_report(&r, false).is_empty(), "{model:?}");
         }
+    }
+
+    #[test]
+    fn advise_report_renders_breakpoints_and_ranked_advice() {
+        let r = jacobi_report(ModelKind::Advise, Unit::CyPerCl);
+        let rep = advise_report(&r);
+        assert!(rep.contains("blocking advice"), "{rep}");
+        assert!(rep.contains("varied dim: i (constant N, current extent 6000)"), "{rep}");
+        assert!(rep.contains("offset-walk levels across sub-evaluations: 0"), "{rep}");
+        // the hand-derived SNB breakpoints (DESIGN.md §5)
+        assert!(rep.contains("1024"), "{rep}");
+        assert!(rep.contains("8192"), "{rep}");
+        assert!(rep.contains("655360"), "{rep}");
+        assert!(rep.contains("1. block i at 1024: unlocks j@L1"), "{rep}");
     }
 
     #[test]

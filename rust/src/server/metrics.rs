@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Endpoint {
     Analyze,
+    Advise,
     Batch,
     Stream,
     Healthz,
@@ -25,8 +26,9 @@ pub enum Endpoint {
 
 impl Endpoint {
     /// Every endpoint, in exposition order.
-    pub const ALL: [Endpoint; 6] = [
+    pub const ALL: [Endpoint; 7] = [
         Endpoint::Analyze,
+        Endpoint::Advise,
         Endpoint::Batch,
         Endpoint::Stream,
         Endpoint::Healthz,
@@ -38,6 +40,7 @@ impl Endpoint {
     pub fn name(self) -> &'static str {
         match self {
             Endpoint::Analyze => "analyze",
+            Endpoint::Advise => "advise",
             Endpoint::Batch => "batch",
             Endpoint::Stream => "stream",
             Endpoint::Healthz => "healthz",
@@ -50,6 +53,7 @@ impl Endpoint {
     pub fn of_path(path: &str) -> Endpoint {
         match path {
             "/analyze" => Endpoint::Analyze,
+            "/advise" => Endpoint::Advise,
             "/batch" => Endpoint::Batch,
             "/stream" => Endpoint::Stream,
             "/healthz" => Endpoint::Healthz,
@@ -61,11 +65,12 @@ impl Endpoint {
     fn ix(self) -> usize {
         match self {
             Endpoint::Analyze => 0,
-            Endpoint::Batch => 1,
-            Endpoint::Stream => 2,
-            Endpoint::Healthz => 3,
-            Endpoint::Metrics => 4,
-            Endpoint::Other => 5,
+            Endpoint::Advise => 1,
+            Endpoint::Batch => 2,
+            Endpoint::Stream => 3,
+            Endpoint::Healthz => 4,
+            Endpoint::Metrics => 5,
+            Endpoint::Other => 6,
         }
     }
 }
@@ -73,8 +78,8 @@ impl Endpoint {
 /// Per-endpoint request/error counters plus connection gauges.
 #[derive(Default)]
 pub struct Metrics {
-    requests: [AtomicU64; 6],
-    errors: [AtomicU64; 6],
+    requests: [AtomicU64; 7],
+    errors: [AtomicU64; 7],
     /// Connections accepted over the process lifetime.
     pub connections: AtomicU64,
     /// Connections currently open in the reactor (gauge).
@@ -236,6 +241,7 @@ mod tests {
     #[test]
     fn paths_route_to_endpoints() {
         assert_eq!(Endpoint::of_path("/analyze"), Endpoint::Analyze);
+        assert_eq!(Endpoint::of_path("/advise"), Endpoint::Advise);
         assert_eq!(Endpoint::of_path("/metrics"), Endpoint::Metrics);
         assert_eq!(Endpoint::of_path("/nope"), Endpoint::Other);
     }

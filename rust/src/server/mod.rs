@@ -7,6 +7,9 @@
 //!
 //! * `POST /analyze` — one JSON [`AnalysisRequest`] body, one JSON
 //!   report (or error object) back.
+//! * `POST /advise` — an `/analyze` body with the model forced to
+//!   `"Advise"`: the response report carries the analytic blocking
+//!   advice of [`crate::advise`] in its `advise` section.
 //! * `POST /batch` — a JSON array of requests, evaluated in parallel
 //!   through the shared session; one response array back, failed
 //!   elements carrying their `index`.
@@ -247,10 +250,13 @@ fn dispatch(state: &ServerState, req: &http::HttpRequest) -> (u16, &'static str,
                 state.cache.as_ref().map(|c| c.stats()),
             ),
         ),
-        ("POST", "/analyze") => handle_analyze(state, &req.body),
+        ("POST", "/analyze") => handle_analyze(state, &req.body, None),
+        ("POST", "/advise") => {
+            handle_analyze(state, &req.body, Some(crate::session::ModelKind::Advise))
+        }
         ("POST", "/batch") => handle_batch(state, &req.body),
         ("POST", "/stream") => handle_stream(state, &req.body),
-        (_, "/healthz" | "/metrics" | "/analyze" | "/batch" | "/stream") => (
+        (_, "/healthz" | "/metrics" | "/analyze" | "/advise" | "/batch" | "/stream") => (
             405,
             JSON,
             error_body(
@@ -264,7 +270,13 @@ fn dispatch(state: &ServerState, req: &http::HttpRequest) -> (u16, &'static str,
 }
 
 /// `POST /analyze`: one request in, one report (or error object) out.
-fn handle_analyze(state: &ServerState, body: &[u8]) -> (u16, &'static str, String) {
+/// `/advise` shares this handler with `force_model` set — the body's
+/// own `"model"` field (if any) is overridden.
+fn handle_analyze(
+    state: &ServerState,
+    body: &[u8],
+    force_model: Option<crate::session::ModelKind>,
+) -> (u16, &'static str, String) {
     let Ok(text) = std::str::from_utf8(body) else {
         return (400, JSON, error_body(None, None, "request body is not UTF-8"));
     };
@@ -279,10 +291,13 @@ fn handle_analyze(state: &ServerState, body: &[u8]) -> (u16, &'static str, Strin
         }
     };
     let id = v.get("id").and_then(|x| x.as_str().map(str::to_string));
-    let req = match AnalysisRequest::from_json_value(&v) {
+    let mut req = match AnalysisRequest::from_json_value(&v) {
         Ok(r) => r,
         Err(e) => return (400, JSON, error_body(id.as_deref(), None, &format!("{e:#}"))),
     };
+    if let Some(model) = force_model {
+        req.model = model;
+    }
     match state.session.evaluate(&req) {
         Ok(report) => (200, JSON, report.to_json()),
         Err(e) => (422, JSON, eval_error_body(req.id.as_deref(), None, &e)),
@@ -485,6 +500,8 @@ mod tests {
         assert!(body.contains("\"error\""), "{body}");
         let (status, _, _) = dispatch(&state, &req("GET", "/analyze", ""));
         assert_eq!(status, 405);
+        let (status, _, _) = dispatch(&state, &req("GET", "/advise", ""));
+        assert_eq!(status, 405, "/advise is POST-only");
         let (status, _, _) = dispatch(&state, &req("POST", "/healthz", "x"));
         assert_eq!(status, 405);
         let (status, ctype, body) = dispatch(&state, &req("GET", "/metrics", ""));
@@ -509,6 +526,24 @@ mod tests {
         assert_eq!(status, 422);
         assert!(body.contains("\"id\": \"r9\""), "{body}");
         assert!(body.contains("unknown reference kernel"), "{body}");
+    }
+
+    #[test]
+    fn advise_endpoint_forces_the_model_and_carries_the_section() {
+        let state = test_state();
+        // no "model" field: /advise must force Advise itself
+        let body = r#"{"id": "adv", "kernel": {"name": "2D-5pt"}, "machine": "SNB", "constants": {"N": 6000, "M": 6000}}"#;
+        let (status, _, resp) = dispatch(&state, &req("POST", "/advise", body));
+        assert_eq!(status, 200, "{resp}");
+        assert!(resp.contains("\"model\": \"Advise\""), "{resp}");
+        assert!(resp.contains("\"advise\": {"), "{resp}");
+        assert!(resp.contains("\"candidates\""), "{resp}");
+        // a kernel the adviser cannot block answers 422, like any
+        // evaluation failure
+        let bad = r#"{"kernel": {"name": "triad"}, "machine": "SNB", "constants": {"N": 65536}}"#;
+        let (status, _, resp) = dispatch(&state, &req("POST", "/advise", bad));
+        assert_eq!(status, 422, "{resp}");
+        assert!(resp.contains("depth >= 2"), "{resp}");
     }
 
     #[test]

@@ -127,6 +127,11 @@ pub enum ModelKind {
     /// "measurement" against the analytic prediction — the paper's
     /// model-vs-benchmark loop (Table 5, Fig. 4) as one request.
     Validate,
+    /// Full ECM plus the blocking adviser (see [`crate::advise`]): solve
+    /// the layer-condition breakpoints analytically, evaluate candidate
+    /// inner-dimension blockings through the session, and report ranked
+    /// advice in an `advise` section (DESIGN.md §5).
+    Advise,
 }
 
 impl ModelKind {
@@ -139,6 +144,7 @@ impl ModelKind {
             "Roofline" => ModelKind::Roofline,
             "RooflinePort" | "RooflineIACA" => ModelKind::RooflinePort,
             "Validate" => ModelKind::Validate,
+            "Advise" => ModelKind::Advise,
             _ => return None,
         })
     }
@@ -152,13 +158,18 @@ impl ModelKind {
             ModelKind::Roofline => "Roofline",
             ModelKind::RooflinePort => "RooflinePort",
             ModelKind::Validate => "Validate",
+            ModelKind::Advise => "Advise",
         }
     }
 
     fn needs_incore(&self) -> bool {
         matches!(
             self,
-            ModelKind::Ecm | ModelKind::EcmCpu | ModelKind::RooflinePort | ModelKind::Validate
+            ModelKind::Ecm
+                | ModelKind::EcmCpu
+                | ModelKind::RooflinePort
+                | ModelKind::Validate
+                | ModelKind::Advise
         )
     }
 
@@ -766,6 +777,8 @@ pub struct AnalysisReport {
     pub scaling: Option<ScalingReport>,
     pub roofline: Option<RooflineReport>,
     pub validation: Option<ValidationReport>,
+    /// Blocking advice ([`ModelKind::Advise`] only; see [`crate::advise`]).
+    pub advise: Option<crate::advise::AdviceReport>,
     /// Memo hits/misses this request saw in the session caches.
     pub session: MemoStats,
 }
@@ -1056,7 +1069,7 @@ impl Session {
         };
 
         let (ecm, scaling) = match req.model {
-            ModelKind::Ecm | ModelKind::Validate => {
+            ModelKind::Ecm | ModelKind::Validate | ModelKind::Advise => {
                 let t = traffic.as_ref().unwrap();
                 let e = EcmModel::build(incore.as_ref().unwrap(), t, &machine)?;
                 let s = ScalingModel::build(&e, &machine);
@@ -1092,6 +1105,16 @@ impl Session {
             None
         };
 
+        // Advise: solve the layer-condition breakpoints analytically and
+        // evaluate candidate blockings through this same session — each
+        // sub-request is a plain ECM evaluation with the analytic
+        // predictor forced (DESIGN.md §5, crate::advise).
+        let advise = if req.model == ModelKind::Advise {
+            Some(crate::advise::build_advice(self, req, &machine, &analysis, &label, &source)?)
+        } else {
+            None
+        };
+
         // --- assemble the report ---
         let unit_iterations = match (&traffic, &incore) {
             (Some(t), _) => t.unit_iterations,
@@ -1099,7 +1122,7 @@ impl Session {
             (None, None) => unreachable!("every model needs traffic or incore"),
         };
         let flops_per_unit = match req.model {
-            ModelKind::Ecm | ModelKind::EcmData | ModelKind::Validate => {
+            ModelKind::Ecm | ModelKind::EcmData | ModelKind::Validate | ModelKind::Advise => {
                 ecm.as_ref().unwrap().flops_per_cl
             }
             ModelKind::EcmCpu => incore.as_ref().unwrap().flops_per_cl,
@@ -1129,6 +1152,7 @@ impl Session {
             scaling: scaling.as_ref().map(ScalingReport::from_model),
             roofline: roofline.as_ref().map(RooflineReport::from_model),
             validation,
+            advise,
             session: local,
         };
 
@@ -1273,26 +1297,26 @@ fn note_global(hit: bool, hits: &AtomicU64, misses: &AtomicU64) {
 // JSON wire format
 // ---------------------------------------------------------------------------
 
-fn get_str(v: &JsonValue, k: &str) -> Result<String> {
+pub(crate) fn get_str(v: &JsonValue, k: &str) -> Result<String> {
     v.get(k)
         .and_then(|x| x.as_str())
         .map(str::to_string)
         .ok_or_else(|| anyhow!("missing or non-string field '{k}'"))
 }
 
-fn get_f64(v: &JsonValue, k: &str) -> Result<f64> {
+pub(crate) fn get_f64(v: &JsonValue, k: &str) -> Result<f64> {
     v.get(k)
         .and_then(|x| x.as_f64())
         .ok_or_else(|| anyhow!("missing or non-numeric field '{k}'"))
 }
 
-fn get_u64(v: &JsonValue, k: &str) -> Result<u64> {
+pub(crate) fn get_u64(v: &JsonValue, k: &str) -> Result<u64> {
     v.get(k)
         .and_then(|x| x.as_u64())
         .ok_or_else(|| anyhow!("missing or non-integer field '{k}'"))
 }
 
-fn get_u32(v: &JsonValue, k: &str) -> Result<u32> {
+pub(crate) fn get_u32(v: &JsonValue, k: &str) -> Result<u32> {
     u32::try_from(get_u64(v, k)?).map_err(|_| anyhow!("field '{k}' exceeds u32"))
 }
 
@@ -1468,7 +1492,7 @@ impl AnalysisRequest {
             let name = m.as_str().ok_or_else(|| anyhow!("'model' must be a string"))?;
             req.model = ModelKind::parse(name).ok_or_else(|| {
                 anyhow!(
-                    "unknown model '{name}' (ECM, ECMData, ECMCPU, Roofline, RooflinePort, Validate)"
+                    "unknown model '{name}' (ECM, ECMData, ECMCPU, Roofline, RooflinePort, Validate, Advise)"
                 )
             })?;
         }
@@ -1917,6 +1941,10 @@ impl AnalysisReport {
             s.push_str(", \"validation\": ");
             s.push_str(&v.json());
         }
+        if let Some(a) = &self.advise {
+            s.push_str(", \"advise\": ");
+            s.push_str(&a.json());
+        }
         s.push_str(", \"session\": ");
         s.push_str(&self.session.json_object());
         s.push('}');
@@ -1965,6 +1993,9 @@ impl AnalysisReport {
                 .transpose()?,
             validation: section("validation")
                 .map(ValidationReport::from_json_value)
+                .transpose()?,
+            advise: section("advise")
+                .map(crate::advise::AdviceReport::from_json_value)
                 .transpose()?,
             session: v
                 .get("session")

@@ -106,6 +106,11 @@ pub struct SweepRow {
     pub sim_cy_per_cl: Option<f64>,
     /// Relative model error % vs the simulation (Validate points only).
     pub model_error_pct: Option<f64>,
+    /// Best advised block extent of the inner dimension (Advise points
+    /// with at least one viable candidate only).
+    pub advise_block: Option<u64>,
+    /// Predicted in-memory ECM time at that block (Advise points only).
+    pub advise_t_mem: Option<f64>,
 }
 
 /// Result of an engine run.
@@ -226,6 +231,8 @@ fn row_from_report(job: &SweepJob, r: &AnalysisReport) -> SweepRow {
         lc_breakpoints: traffic.lc_breakpoints.clone(),
         sim_cy_per_cl: r.validation.as_ref().map(|v| v.sim_cy_per_cl),
         model_error_pct: r.validation.as_ref().map(|v| v.model_error_pct),
+        advise_block: r.advise.as_ref().and_then(|a| a.candidates.first()).map(|c| c.extent),
+        advise_t_mem: r.advise.as_ref().and_then(|a| a.candidates.first()).map(|c| c.t_mem),
     }
 }
 

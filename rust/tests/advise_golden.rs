@@ -1,0 +1,117 @@
+//! Golden fixtures for `kerncraft advise` (DESIGN.md §5): the CLI text
+//! report for the paper's 2-D and 3-D stencils on the SNB machine file.
+//!
+//! Same digit normalization as the in-core and Validate golden suites
+//! (runs of digits/sign/point collapse to `#`, space runs to one
+//! space): the fixture pins the report *shape* byte-for-byte, while the
+//! hand-derived breakpoints are pinned by exact-substring asserts —
+//! e.g. 2d-5pt on SNB keeps three `a` rows (j−1..j+1) plus one `b` row
+//! live per j iteration, 4 × 8 B = 32 B per inner element, so the
+//! L1/L2/L3 breakpoints land at 32768/32 = 1024, 262144/32 = 8192 and
+//! 20971520/32 = 655360.
+
+use kerncraft::cli::run;
+use kerncraft::session::AnalysisReport;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(str::to_string).collect()
+}
+
+fn advise(cmd: &str) -> String {
+    run(&argv(cmd)).unwrap_or_else(|e| panic!("{cmd}: {e:#}"))
+}
+
+/// Same normalization as the other golden suites: numeric text (digits,
+/// sign, decimal point) collapses to a single `#`, space runs to one
+/// space, everything else passes through verbatim.
+fn normalize_numbers(s: &str) -> String {
+    let mut out = String::new();
+    let mut last_hash = false;
+    let mut last_space = false;
+    for c in s.chars() {
+        if c.is_ascii_digit() || c == '+' || c == '-' || c == '.' {
+            if !last_hash {
+                out.push('#');
+            }
+            last_hash = true;
+            last_space = false;
+        } else if c == ' ' {
+            if !last_space {
+                out.push(' ');
+            }
+            last_space = true;
+            last_hash = false;
+        } else {
+            out.push(c);
+            last_hash = false;
+            last_space = false;
+        }
+    }
+    out
+}
+
+fn assert_matches_fixture(section: &str, fixture: &str) {
+    let expected =
+        std::fs::read_to_string(fixture).unwrap_or_else(|e| panic!("{fixture}: {e}"));
+    assert_eq!(normalize_numbers(section), expected, "raw section:\n{section}");
+}
+
+#[test]
+fn golden_2d5pt_snb() {
+    let s = advise("advise kernels/2d-5pt.c -m machines/snb.yml -D N 6000 -D M 6000");
+    assert_matches_fixture(&s, "rust/tests/fixtures/advise/2d-5pt_snb.expected");
+    // hand-derived breakpoints: 4 rows (3 of `a`, 1 of `b`) × 8 B per
+    // inner element ⇒ slope 32 B, no constant part, so the condition on
+    // j flips at cache_bytes / 32 per level
+    assert!(s.contains("L1    | j   |      32 |       0 |       1024"), "{s}");
+    assert!(s.contains("L2    | j   |      32 |       0 |       8192"), "{s}");
+    assert!(s.contains("L3    | j   |      32 |       0 |     655360"), "{s}");
+    // only the L1 breakpoint lies below the current extent, so the
+    // advice is a single candidate, and the whole run stays analytic
+    assert!(s.contains("offset-walk levels across sub-evaluations: 0"), "{s}");
+    assert!(s.contains("1. block i at 1024: unlocks j@L1"), "{s}");
+    assert!(!s.contains("2. block"), "{s}");
+}
+
+#[test]
+fn golden_2d5pt_snb_json_round_trips() {
+    let out = advise(
+        "advise kernels/2d-5pt.c -m machines/snb.yml -D N 6000 -D M 6000 --format json",
+    );
+    let report = AnalysisReport::from_json(&out).unwrap();
+    let a = report.advise.expect("advise run must carry the advise section");
+    assert_eq!(a.varied_dim, "i");
+    assert_eq!(a.varied_constant, "N");
+    assert_eq!(a.current_extent, 6000);
+    assert_eq!(a.walk_levels, 0);
+    assert_eq!(a.breakpoints.len(), 3);
+    assert_eq!(
+        a.breakpoints.iter().map(|b| b.extent).collect::<Vec<_>>(),
+        [1024, 8192, 655360]
+    );
+    assert_eq!(a.candidates.len(), 1);
+    assert_eq!(a.candidates[0].extent, 1024);
+    assert_eq!(a.candidates[0].unlocks, ["j@L1"]);
+}
+
+#[test]
+fn golden_3d7pt_snb() {
+    let s = advise("advise kernels/3d-7pt.c -m machines/snb.yml -D M 400 -D N 400 -D P 6000");
+    assert_matches_fixture(&s, "rust/tests/fixtures/advise/3d-7pt_snb.expected");
+    // two conditions depend on the inner extent P: the j-rows (4 rows ×
+    // 8 B = 32 B/element) and the k-planes (4 planes × N × 8 B =
+    // 12800 B/element at N=400)
+    assert!(s.contains("L1    | k   |   12800 |       0 |          2"), "{s}");
+    assert!(s.contains("L1    | j   |      32 |       0 |       1024"), "{s}");
+    assert!(s.contains("L2    | k   |   12800 |       0 |         20"), "{s}");
+    assert!(s.contains("L2    | j   |      32 |       0 |       8192"), "{s}");
+    assert!(s.contains("L3    | k   |   12800 |       0 |       1638"), "{s}");
+    assert!(s.contains("L3    | j   |      32 |       0 |     655360"), "{s}");
+    // of the six breakpoints only 1024 and 1638 are viable blocks
+    // (>= 64, below the current extent 6000); the 1024 block satisfies
+    // the j condition in L1 *and* the k condition in L3, so it ranks
+    // first
+    assert!(s.contains("1. block i at 1024: unlocks j@L1, k@L3"), "{s}");
+    assert!(s.contains("2. block i at 1638: unlocks k@L3"), "{s}");
+    assert!(s.contains("offset-walk levels across sub-evaluations: 0"), "{s}");
+}
