@@ -1,0 +1,217 @@
+//! Virtual-testbed throughput benchmark: runs the fast and reference
+//! simulation engines over the same kernels and records wall time,
+//! logical touches/second, and end-to-end Validate wall time into
+//! BENCH_sim.json.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo bench --bench sim_perf                           # pinned trajectory: 2d-5pt and 3d-7pt, small and large
+//! cargo bench --bench sim_perf -- --smoke --out /tmp/x.json   # CI: tiny sizes, schema-identical
+//! ```
+//!
+//! Each configuration is simulated by both engines from an identical
+//! pre-built analysis (so only the trace replay is timed), then once
+//! more through a fresh `Session` in Validate mode (so the recorded
+//! `validate_wall_s` is what a CLI/serve user observes, parse and
+//! in-core analysis included). The output schema (checked by CI against
+//! both the smoke output and the committed BENCH_sim.json) is:
+//!
+//! ```text
+//! {"bench": "sim_perf", "schema": 1, "runs": [
+//!   {"kernel": "...", "size": "...", "constants": "...", "iterations": I,
+//!    "truncated": B,
+//!    "fast": {"wall_s": X, "touches": T, "touches_per_s": Y,
+//!             "cy_per_cl": Z, "validate_wall_s": V, "extrapolated": B},
+//!    "reference": {...}, "speedup": S, "validate_speedup": S2}, ...]}
+//! ```
+//!
+//! `speedup` is reference wall over fast wall for the bare trace replay;
+//! `validate_speedup` is the same ratio for the end-to-end Validate
+//! evaluations.
+
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::MachineModel;
+use kerncraft::models::reference;
+use kerncraft::session::{AnalysisRequest, KernelSpec, ModelKind, Session};
+use kerncraft::sim::{SimEngine, SimResult, VirtualTestbed};
+use std::collections::HashMap;
+use std::time::Instant;
+
+struct Args {
+    out: String,
+    smoke: bool,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args { out: "BENCH_sim.json".to_string(), smoke: false };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--smoke" => args.smoke = true,
+            "--out" => {
+                args.out = it.next().unwrap_or_else(|| die("--out needs a value"));
+            }
+            "--bench" => {} // passed through by `cargo bench`
+            other => die(&format!("unknown argument: {other}")),
+        }
+    }
+    args
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("sim_perf: {msg}");
+    std::process::exit(1);
+}
+
+struct Config {
+    kernel: &'static str,
+    size: &'static str,
+    consts: Vec<(&'static str, i64)>,
+}
+
+/// The pinned trajectory: the Table 5 Jacobi plus the 3D 7-point
+/// stencil, each at an L1-resident and a memory-bound size. The large
+/// 3D-7pt working set (~34 MB for two arrays) exceeds the SNB L3
+/// (20 MB), which is where trace compression pays the most.
+fn configs(smoke: bool) -> Vec<Config> {
+    if smoke {
+        return vec![
+            Config { kernel: "2D-5pt", size: "smoke", consts: vec![("N", 300), ("M", 120)] },
+            Config {
+                kernel: "3D-7pt",
+                size: "smoke",
+                consts: vec![("M", 20), ("N", 40), ("P", 40)],
+            },
+        ];
+    }
+    vec![
+        Config { kernel: "2D-5pt", size: "small", consts: vec![("N", 600), ("M", 400)] },
+        Config { kernel: "2D-5pt", size: "large", consts: vec![("N", 6000), ("M", 6000)] },
+        Config {
+            kernel: "3D-7pt",
+            size: "small",
+            consts: vec![("M", 60), ("N", 60), ("P", 60)],
+        },
+        Config {
+            kernel: "3D-7pt",
+            size: "large",
+            consts: vec![("M", 50), ("N", 1200), ("P", 1200)],
+        },
+    ]
+}
+
+fn consts_map(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+struct EngineRun {
+    wall_s: f64,
+    validate_wall_s: f64,
+    sim: SimResult,
+}
+
+/// Time the bare trace replay and an end-to-end Validate evaluation.
+fn run_engine(
+    machine: &MachineModel,
+    analysis: &KernelAnalysis,
+    cfg: &Config,
+    engine: SimEngine,
+) -> EngineRun {
+    let tb = VirtualTestbed::new(machine).with_engine(engine);
+    let t0 = Instant::now();
+    let sim = tb.run(analysis).unwrap_or_else(|e| die(&format!("{}: {e}", cfg.kernel)));
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let src = reference::kernel_source(cfg.kernel)
+        .unwrap_or_else(|| die(&format!("unknown kernel {}", cfg.kernel)));
+    let mut req = AnalysisRequest::new(
+        KernelSpec::source(format!("{}-{}", cfg.kernel, cfg.size), src.to_string()),
+        "SNB",
+    )
+    .with_model(ModelKind::Validate)
+    .with_sim_engine(engine);
+    for (k, v) in &cfg.consts {
+        req = req.with_constant(*k, *v);
+    }
+    let session = Session::new(); // fresh: no memo carry-over between engines
+    let t1 = Instant::now();
+    session.evaluate(&req).unwrap_or_else(|e| die(&format!("{} validate: {e}", cfg.kernel)));
+    let validate_wall_s = t1.elapsed().as_secs_f64();
+    EngineRun { wall_s, validate_wall_s, sim }
+}
+
+fn engine_json(r: &EngineRun) -> String {
+    format!(
+        "{{\"wall_s\": {:.4}, \"touches\": {}, \"touches_per_s\": {:.0}, \"cy_per_cl\": {:.3}, \"validate_wall_s\": {:.4}, \"extrapolated\": {}}}",
+        r.wall_s,
+        r.sim.touches,
+        r.sim.touches as f64 / r.wall_s.max(1e-9),
+        r.sim.cy_per_cl,
+        r.validate_wall_s,
+        r.sim.extrapolated
+    )
+}
+
+fn main() {
+    let args = parse_args();
+    let machine = MachineModel::snb();
+    let mut rows = Vec::new();
+    for cfg in configs(args.smoke) {
+        let src = reference::kernel_source(cfg.kernel)
+            .unwrap_or_else(|| die(&format!("unknown kernel {}", cfg.kernel)));
+        let program = parse(src).unwrap_or_else(|e| die(&format!("{}: {e}", cfg.kernel)));
+        let analysis = KernelAnalysis::from_program(&program, &consts_map(&cfg.consts))
+            .unwrap_or_else(|e| die(&format!("{}: {e}", cfg.kernel)));
+        let consts_desc: Vec<String> =
+            cfg.consts.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        eprintln!("sim_perf: {} {} ({}) ...", cfg.kernel, cfg.size, consts_desc.join(","));
+
+        let fast = run_engine(&machine, &analysis, &cfg, SimEngine::Fast);
+        let refr = run_engine(&machine, &analysis, &cfg, SimEngine::Reference);
+        // per-level stats must agree or the comparison is meaningless
+        // (cy/CL can differ by the documented skip-ahead bound)
+        if fast.sim.iterations != refr.sim.iterations {
+            die(&format!("{}: engines disagree on iteration count", cfg.kernel));
+        }
+        let speedup = refr.wall_s / fast.wall_s.max(1e-9);
+        let validate_speedup = refr.validate_wall_s / fast.validate_wall_s.max(1e-9);
+        eprintln!(
+            "sim_perf: {} {}: fast {:.3}s ({:.1}M touches/s), reference {:.3}s, speedup {:.1}x",
+            cfg.kernel,
+            cfg.size,
+            fast.wall_s,
+            fast.sim.touches as f64 / fast.wall_s.max(1e-9) / 1e6,
+            refr.wall_s,
+            speedup
+        );
+        rows.push(format!(
+            "    {{\"kernel\": \"{}\", \"size\": \"{}\", \"constants\": \"{}\", \"iterations\": {}, \"truncated\": {}, \"fast\": {}, \"reference\": {}, \"speedup\": {:.2}, \"validate_speedup\": {:.2}}}",
+            cfg.kernel,
+            cfg.size,
+            consts_desc.join(","),
+            fast.sim.iterations,
+            fast.sim.truncated,
+            engine_json(&fast),
+            engine_json(&refr),
+            speedup,
+            validate_speedup
+        ));
+    }
+
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"sim_perf\",\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"machine\": \"SNB\",\n");
+    if args.smoke {
+        out.push_str("  \"note\": \"smoke run (CI): tiny sizes, schema-identical\",\n");
+    }
+    out.push_str("  \"runs\": [\n");
+    out.push_str(&rows.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    if let Err(e) = std::fs::write(&args.out, &out) {
+        die(&format!("writing {}: {e}", args.out));
+    }
+    eprintln!("sim_perf: wrote {}", args.out);
+}

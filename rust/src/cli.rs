@@ -67,6 +67,7 @@ pub struct Args {
     pub artifacts_dir: String,
     pub scalar_codegen: bool,
     pub cache_predictor: CachePredictorKind,
+    pub sim_engine: crate::sim::SimEngine,
     pub format: OutputFormat,
 }
 
@@ -118,6 +119,7 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
         artifacts_dir: "artifacts".to_string(),
         scalar_codegen: false,
         cache_predictor: CachePredictorKind::Offsets,
+        sim_engine: crate::sim::SimEngine::Fast,
         format: OutputFormat::Text,
     };
     let mut it = argv.iter().peekable();
@@ -157,6 +159,11 @@ pub fn parse_args(argv: &[String]) -> Result<Args> {
                 args.cache_predictor = CachePredictorKind::parse(&v)
                     .ok_or_else(|| anyhow!("unknown cache predictor '{v}' (offsets|lc|auto)"))?;
             }
+            "--sim-engine" => {
+                let v = next_val(&mut it, "--sim-engine")?;
+                args.sim_engine = crate::sim::SimEngine::parse(&v)
+                    .ok_or_else(|| anyhow!("unknown sim engine '{v}' (fast|reference)"))?;
+            }
             "--format" => {
                 args.format = match next_val(&mut it, "--format")?.as_str() {
                     "text" => OutputFormat::Text,
@@ -195,6 +202,8 @@ pub fn usage() -> String {
      MACHINE: SNB | HSW | path/to/machine.yml\n\
      options: --cores N  --unit {cy/CL,It/s,FLOP/s}  --format {text,json}  -v\n\
               --cache-predictor {offsets,lc,auto}\n\
+              --sim-engine {fast,reference}   (Validate mode: compressed-\n\
+               trace testbed vs the per-access baseline; default fast)\n\
               --cache-viz  --machine-report  --scalar\n\
               --bench-path {virtual,native,pjrt}  --artifacts DIR\n\
      \n\
@@ -252,6 +261,7 @@ pub fn request_from_args(args: &Args) -> Result<Option<AnalysisRequest>> {
         } else {
             CodegenSelection::MachineDefault
         },
+        sim_engine: args.sim_engine,
         unit: args.unit,
     }))
 }
@@ -365,6 +375,7 @@ pub fn run_advise(argv: &[String]) -> Result<String> {
         } else {
             CodegenSelection::MachineDefault
         },
+        sim_engine: args.sim_engine,
         unit: args.unit,
     };
     let session = Session::new();
@@ -1327,6 +1338,17 @@ mod tests {
         let a = parse_args(&argv("-p ECM --format json k.c")).unwrap();
         assert_eq!(a.format, OutputFormat::Json);
         assert!(parse_args(&argv("-p ECM --format xml k.c")).is_err());
+    }
+
+    #[test]
+    fn sim_engine_flag() {
+        let a = parse_args(&argv("-p Validate k.c")).unwrap();
+        assert_eq!(a.sim_engine, crate::sim::SimEngine::Fast, "fast is the default");
+        let a = parse_args(&argv("-p Validate --sim-engine reference k.c")).unwrap();
+        assert_eq!(a.sim_engine, crate::sim::SimEngine::Reference);
+        let req = request_from_args(&a).unwrap().unwrap();
+        assert_eq!(req.sim_engine, crate::sim::SimEngine::Reference);
+        assert!(parse_args(&argv("-p Validate --sim-engine warp k.c")).is_err());
     }
 
     #[test]

@@ -119,17 +119,26 @@ impl Metrics {
     /// Render the text exposition: per-endpoint request/error totals,
     /// connection counters, the session's per-stage memo counters, the
     /// per-diagnostic-code rejected-input tallies, the per-ISA-family
-    /// request tallies, and — when a persistent cache is attached — its
-    /// hit/miss/store/invalid counters. `rejected` is `(code, count)`
-    /// pairs, already sorted
+    /// request tallies, the per-model evaluation-latency family, the
+    /// per-engine virtual-testbed touch totals, and — when a persistent
+    /// cache is attached — its hit/miss/store/invalid counters.
+    /// `rejected` is `(code, count)` pairs, already sorted
     /// ([`crate::session::Session::rejected_by_code`]); `isa` is
     /// `(family, count)` pairs, already sorted
-    /// ([`crate::session::Session::requests_by_isa`]).
+    /// ([`crate::session::Session::requests_by_isa`]); `eval` is
+    /// `(model, seconds, count)` triples
+    /// ([`crate::session::Session::eval_seconds_by_model`]); `sim` is
+    /// `(engine, touches)` pairs
+    /// ([`crate::session::Session::sim_touches_by_engine`]). Zero-count
+    /// eval models and zero-touch engines are omitted, like the other
+    /// sparse families.
     pub fn render(
         &self,
         memo: &MemoStats,
         rejected: &[(String, u64)],
         isa: &[(String, u64)],
+        eval: &[(&'static str, f64, u64)],
+        sim: &[(&'static str, u64)],
         cache: Option<CacheStats>,
     ) -> String {
         let mut s = String::new();
@@ -187,6 +196,25 @@ impl Metrics {
                 "kerncraft_rejected_inputs_total{{code=\"{code}\"}} {count}\n"
             ));
         }
+        for (model, seconds, count) in eval {
+            if *count == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "kerncraft_eval_seconds_total{{model=\"{model}\"}} {seconds}\n"
+            ));
+            s.push_str(&format!(
+                "kerncraft_eval_seconds_count{{model=\"{model}\"}} {count}\n"
+            ));
+        }
+        for (engine, touches) in sim {
+            if *touches == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "kerncraft_sim_touches_total{{engine=\"{engine}\"}} {touches}\n"
+            ));
+        }
         if let Some(c) = cache {
             s.push_str(&format!("kerncraft_report_cache_hits_total {}\n", c.hits));
             s.push_str(&format!("kerncraft_report_cache_misses_total {}\n", c.misses));
@@ -215,7 +243,9 @@ mod tests {
         let cache = CacheStats { hits: 1, misses: 2, stores: 2, invalid: 0 };
         let rejected = vec![("E100".to_string(), 4), ("E201".to_string(), 1)];
         let isa = vec![("aarch64".to_string(), 1), ("x86".to_string(), 2)];
-        let text = m.render(&memo, &rejected, &isa, Some(cache));
+        let eval = vec![("ECM", 0.125f64, 3u64), ("Validate", 0.0, 0)];
+        let sim = vec![("fast", 288_000_000u64), ("reference", 0)];
+        let text = m.render(&memo, &rejected, &isa, &eval, &sim, Some(cache));
         assert!(text.contains("kerncraft_requests_total{endpoint=\"analyze\"} 2"), "{text}");
         assert!(text.contains("kerncraft_requests_total{isa=\"x86\"} 2"), "{text}");
         assert!(text.contains("kerncraft_requests_total{isa=\"aarch64\"} 1"), "{text}");
@@ -230,12 +260,23 @@ mod tests {
         assert!(text.contains("kerncraft_rejected_inputs_total{code=\"E201\"} 1"), "{text}");
         assert!(text.contains("kerncraft_report_cache_hits_total 1"), "{text}");
         assert!(text.contains("kerncraft_report_cache_invalid_total 0"), "{text}");
+        assert!(text.contains("kerncraft_eval_seconds_total{model=\"ECM\"} 0.125"), "{text}");
+        assert!(text.contains("kerncraft_eval_seconds_count{model=\"ECM\"} 3"), "{text}");
+        assert!(
+            text.contains("kerncraft_sim_touches_total{engine=\"fast\"} 288000000"),
+            "{text}"
+        );
+        // zero-count models / zero-touch engines are omitted
+        assert!(!text.contains("model=\"Validate\""), "{text}");
+        assert!(!text.contains("engine=\"reference\""), "{text}");
         // without a cache, the persistent-cache family is absent; with no
         // rejections or evaluated requests, those families are too
-        let text = m.render(&memo, &[], &[], None);
+        let text = m.render(&memo, &[], &[], &[], &[], None);
         assert!(!text.contains("report_cache"), "{text}");
         assert!(!text.contains("rejected_inputs"), "{text}");
         assert!(!text.contains("isa="), "{text}");
+        assert!(!text.contains("eval_seconds"), "{text}");
+        assert!(!text.contains("sim_touches"), "{text}");
     }
 
     #[test]

@@ -247,6 +247,8 @@ fn dispatch(state: &ServerState, req: &http::HttpRequest) -> (u16, &'static str,
                 &state.session.stats(),
                 &state.session.rejected_by_code(),
                 &state.session.requests_by_isa(),
+                &state.session.eval_seconds_by_model(),
+                &state.session.sim_touches_by_engine(),
                 state.cache.as_ref().map(|c| c.stats()),
             ),
         ),

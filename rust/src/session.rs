@@ -176,6 +176,31 @@ impl ModelKind {
     fn needs_traffic(&self) -> bool {
         !matches!(self, ModelKind::EcmCpu)
     }
+
+    /// Stable index for per-model counters (the
+    /// `kerncraft_eval_seconds_total{model=...}` metric family).
+    pub fn ix(&self) -> usize {
+        match self {
+            ModelKind::Ecm => 0,
+            ModelKind::EcmData => 1,
+            ModelKind::EcmCpu => 2,
+            ModelKind::Roofline => 3,
+            ModelKind::RooflinePort => 4,
+            ModelKind::Validate => 5,
+            ModelKind::Advise => 6,
+        }
+    }
+
+    /// Every model, in counter-index order.
+    pub const ALL: [ModelKind; 7] = [
+        ModelKind::Ecm,
+        ModelKind::EcmData,
+        ModelKind::EcmCpu,
+        ModelKind::Roofline,
+        ModelKind::RooflinePort,
+        ModelKind::Validate,
+        ModelKind::Advise,
+    ];
 }
 
 /// Which codegen policy the in-core model assumes.
@@ -230,6 +255,9 @@ pub struct AnalysisRequest {
     pub model: ModelKind,
     pub predictor: CachePredictorKind,
     pub codegen: CodegenSelection,
+    /// Simulation engine for the virtual testbed ([`ModelKind::Validate`]
+    /// only; ignored by the analytic models).
+    pub sim_engine: crate::sim::SimEngine,
     /// Output unit the consumer intends to render in (carried through to
     /// the report; the report always stores cycles natively).
     pub unit: Unit,
@@ -248,6 +276,7 @@ impl AnalysisRequest {
             model: ModelKind::Ecm,
             predictor: CachePredictorKind::Offsets,
             codegen: CodegenSelection::MachineDefault,
+            sim_engine: crate::sim::SimEngine::Fast,
             unit: Unit::CyPerCl,
         }
     }
@@ -279,6 +308,12 @@ impl AnalysisRequest {
     /// Select the codegen policy.
     pub fn with_codegen(mut self, codegen: CodegenSelection) -> Self {
         self.codegen = codegen;
+        self
+    }
+
+    /// Select the virtual-testbed engine (Validate mode).
+    pub fn with_sim_engine(mut self, engine: crate::sim::SimEngine) -> Self {
+        self.sim_engine = engine;
         self
     }
 
@@ -909,6 +944,19 @@ pub struct Session {
     /// feeding the `kerncraft_requests_total{isa=...}` metric family so
     /// operators can see the ISA mix across a fleet.
     isa_requests: Mutex<BTreeMap<String, u64>>,
+    /// Wall-clock nanoseconds spent in successful pipeline evaluations,
+    /// indexed by [`ModelKind::ix`] — feeds the
+    /// `kerncraft_eval_seconds_total{model=...}` metric family. Memo
+    /// hits still count (the stages ran, just fast); report-cache hits
+    /// and failed evaluations don't run the pipeline and are excluded.
+    eval_nanos: [AtomicU64; 7],
+    /// Successful evaluation count per model (the `_count` row of the
+    /// latency family).
+    eval_count: [AtomicU64; 7],
+    /// Virtual-testbed memory touches accounted per engine, indexed by
+    /// [`crate::sim::SimEngine::ix`] — the
+    /// `kerncraft_sim_touches_total{engine=...}` metric family.
+    sim_touches: [AtomicU64; 2],
 }
 
 /// Memo lookup helper: double-checked get-or-insert through a sharded
@@ -954,6 +1002,32 @@ impl Session {
     /// own responses exactly.
     pub fn with_report_cache(cache: Arc<dyn ReportCache>) -> Session {
         Session { report_cache: Some(cache), ..Session::default() }
+    }
+
+    /// Per-model evaluation latency: `(model name, seconds, count)` for
+    /// every [`ModelKind`], in [`ModelKind::ix`] order — the
+    /// `kerncraft_eval_seconds_total` metric family (sum + count).
+    pub fn eval_seconds_by_model(&self) -> Vec<(&'static str, f64, u64)> {
+        ModelKind::ALL
+            .iter()
+            .map(|m| {
+                (
+                    m.name(),
+                    self.eval_nanos[m.ix()].load(Ordering::Relaxed) as f64 / 1e9,
+                    self.eval_count[m.ix()].load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    /// Virtual-testbed touches per engine: `(engine name, touches)` for
+    /// every [`crate::sim::SimEngine`] — the
+    /// `kerncraft_sim_touches_total` metric family.
+    pub fn sim_touches_by_engine(&self) -> Vec<(&'static str, u64)> {
+        crate::sim::SimEngine::ALL
+            .iter()
+            .map(|e| (e.name(), self.sim_touches[e.ix()].load(Ordering::Relaxed)))
+            .collect()
     }
 
     /// Snapshot of the session-wide memoization counters.
@@ -1032,6 +1106,7 @@ impl Session {
         if req.cores == 0 {
             bail!("request needs at least one core");
         }
+        let eval_start = std::time::Instant::now();
         let mut local = MemoStats::default();
 
         // --- memoized stages (same key scheme the sweep engine used) ---
@@ -1099,7 +1174,10 @@ impl Session {
         // model and compare against the analytic in-memory prediction.
         let validation = if req.model == ModelKind::Validate {
             let pm = incore.as_deref().expect("Validate needs the in-core model");
-            let sim = crate::sim::VirtualTestbed::new(&machine).run_with_incore(&analysis, pm)?;
+            let sim = crate::sim::VirtualTestbed::new(&machine)
+                .with_engine(req.sim_engine)
+                .run_with_incore(&analysis, pm)?;
+            self.sim_touches[sim.engine.ix()].fetch_add(sim.touches, Ordering::Relaxed);
             Some(ValidationReport::build(&sim, ecm.as_ref().unwrap().t_mem()))
         } else {
             None
@@ -1155,6 +1233,10 @@ impl Session {
             advise,
             session: local,
         };
+
+        let nanos = eval_start.elapsed().as_nanos() as u64;
+        self.eval_nanos[req.model.ix()].fetch_add(nanos, Ordering::Relaxed);
+        self.eval_count[req.model.ix()].fetch_add(1, Ordering::Relaxed);
 
         Ok(Evaluation { report, machine, analysis, incore, traffic })
     }
@@ -1432,6 +1514,8 @@ impl AnalysisRequest {
         s.push_str(&json_str(self.predictor.name()));
         s.push_str(", \"codegen\": ");
         s.push_str(&json_str(self.codegen.name()));
+        s.push_str(", \"sim_engine\": ");
+        s.push_str(&json_str(self.sim_engine.name()));
         s.push_str(", \"unit\": ");
         s.push_str(&json_str(self.unit.suffix()));
         s.push('}');
@@ -1509,6 +1593,13 @@ impl AnalysisRequest {
                 .ok_or_else(|| anyhow!("'codegen' must be a string"))?;
             req.codegen = CodegenSelection::parse(name)
                 .ok_or_else(|| anyhow!("unknown codegen '{name}' (machine|scalar)"))?;
+        }
+        if let Some(e) = v.get("sim_engine") {
+            let name = e
+                .as_str()
+                .ok_or_else(|| anyhow!("'sim_engine' must be a string"))?;
+            req.sim_engine = crate::sim::SimEngine::parse(name)
+                .ok_or_else(|| anyhow!("unknown sim engine '{name}' (fast|reference)"))?;
         }
         if let Some(u) = v.get("unit") {
             let name = u.as_str().ok_or_else(|| anyhow!("'unit' must be a string"))?;
@@ -2030,7 +2121,9 @@ mod tests {
                 .with_id("req-1"),
             AnalysisRequest::new(KernelSpec::named("2D-5pt"), "HSW")
                 .with_constant("N", 6000)
-                .with_constant("M", 6000),
+                .with_constant("M", 6000)
+                .with_model(ModelKind::Validate)
+                .with_sim_engine(crate::sim::SimEngine::Reference),
             AnalysisRequest::new(KernelSpec::path("kernels/triad.c"), "machines/snb.yml"),
         ];
         for req in reqs {
@@ -2049,6 +2142,7 @@ mod tests {
         assert_eq!(req.model, ModelKind::Ecm);
         assert_eq!(req.predictor, CachePredictorKind::Offsets);
         assert_eq!(req.codegen, CodegenSelection::MachineDefault);
+        assert_eq!(req.sim_engine, crate::sim::SimEngine::Fast);
         assert_eq!(req.unit, Unit::CyPerCl);
         assert!(req.constants.is_empty());
         assert!(req.id.is_none());
@@ -2204,6 +2298,35 @@ mod tests {
         let back = AnalysisReport::from_json(&json).unwrap();
         assert_eq!(r, back, "{json}");
         assert!(!json.contains('\n'), "{json}");
+    }
+
+    #[test]
+    fn eval_and_sim_counters_accumulate() {
+        let session = Session::new();
+        assert!(session.eval_seconds_by_model().iter().all(|(_, _, c)| *c == 0));
+        assert!(session.sim_touches_by_engine().iter().all(|(_, t)| *t == 0));
+        session.evaluate(&triad_request()).unwrap();
+        let eval = session.eval_seconds_by_model();
+        let ecm = eval.iter().find(|(m, _, _)| *m == "ECM").unwrap();
+        assert_eq!(ecm.2, 1, "{eval:?}");
+        assert!(ecm.1 >= 0.0, "{eval:?}");
+        // Validate runs the testbed and advances its engine's touch count
+        let req = AnalysisRequest::new(KernelSpec::source("triad", TRIAD), "SNB")
+            .with_constant("N", 400_000)
+            .with_model(ModelKind::Validate)
+            .with_sim_engine(crate::sim::SimEngine::Reference);
+        session.evaluate(&req).unwrap();
+        let eval = session.eval_seconds_by_model();
+        assert_eq!(eval.iter().find(|(m, _, _)| *m == "Validate").unwrap().2, 1);
+        let sim = session.sim_touches_by_engine();
+        let by = |name: &str| sim.iter().find(|(e, _)| *e == name).unwrap().1;
+        assert!(by("reference") > 0, "{sim:?}");
+        assert_eq!(by("fast"), 0, "the fast engine never ran: {sim:?}");
+        // a failed evaluation advances nothing
+        let count_sum: u64 = eval.iter().map(|(_, _, c)| c).sum();
+        session.evaluate(&triad_request().with_cores(0)).unwrap_err();
+        let after: u64 = session.eval_seconds_by_model().iter().map(|(_, _, c)| c).sum();
+        assert_eq!(count_sum, after);
     }
 
     #[test]

@@ -1,0 +1,631 @@
+//! The fast engine (DESIGN.md §1): compressed line-interval traces,
+//! set-sharded simulation, and convergence skip-ahead.
+//!
+//! Three layers, each preserving the reference engine's integer
+//! statistics exactly unless noted:
+//!
+//! 1. **Trace compression** ([`super::trace`]): one [`Event`] per
+//!    maximal run of consecutive iterations touching one line. The
+//!    elided repeats are L1 hits *by construction* while the line stays
+//!    resident, so they are credited optimistically at event time; if
+//!    the line is evicted mid-run the credit is revoked from the
+//!    eviction point and the first post-eviction touch is replayed as a
+//!    real access (a *materialization*, scheduled on a min-heap in
+//!    global access order). L1 LRU ages are the global access index —
+//!    identical to the reference engine's L1 clock — and elided
+//!    recency is folded in lazily: victim selection raises each
+//!    candidate's recorded age to the last touch implied by any live
+//!    run on its line.
+//! 2. **Set sharding**: lines that map to the same cache set always
+//!    share `line mod K` (K a power of two dividing every level's set
+//!    count), so the event stream partitions into K fully independent
+//!    sub-simulations, merged by summing counters. Per-unit penalty
+//!    and traffic *counts* are merged before the serial cycle
+//!    composition, so the composed cycles are bit-identical for every
+//!    K.
+//! 3. **Convergence skip-ahead**: per row (one innermost-loop run, or
+//!    one aligned chunk of a 1-D loop) the engine fingerprints the
+//!    per-level stat deltas and composed cycles. Once the last
+//!    3·P_align rows form three identical periods (P_align rows
+//!    realign the unit-of-work phase), the steady state is declared
+//!    and the remaining rows of the current plane — minus a P_align
+//!    tail — are extrapolated by exact integer multiplication of the
+//!    period's stats and one f64 multiply of its cycles.
+//!
+//! **Error bound** (documented in DESIGN.md §1): with skip-ahead off
+//! the engine is exact (integer stats identical, cycles equal up to
+//! f64 summation-order ulps). With skip-ahead on, extrapolated rows
+//! reproduce the detected steady state exactly; only the ≤ P_align
+//! tail rows after each jump resume from a slightly stale cache image,
+//! bounding the cy/CL deviation by (tail rows / total rows) of the
+//! per-row cost — ≤ 0.5 % on the paper kernels (pinned by
+//! `sim_equiv`).
+
+use super::trace::{Event, Term, Trace};
+use super::{CacheLevel, LevelStats, SimEngine, SimResult, SimSetup, VirtualTestbed};
+use crate::kernel::KernelAnalysis;
+use anyhow::Result;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Iteration cap per event-generation block (bounds event memory; runs
+/// never span blocks, so each block's replay heap drains at its end).
+const BLOCK_ITERS: u64 = 1 << 17;
+
+/// One term's live line-run: the event was issued, the tail of the run
+/// is credited as L1 hits, and the line's true recency is implied by
+/// the run until it ends or the line is evicted.
+#[derive(Clone, Copy, Default)]
+struct Flight {
+    line: u64,
+    i_start: u64,
+    i_end: u64,
+    active: bool,
+    /// Line still resident in this shard's L1 (maintained on eviction).
+    resident: bool,
+    write: bool,
+}
+
+/// Immutable per-block context shared by all shard workers.
+struct Ctx<'a> {
+    terms: &'a [Term],
+    /// Terms per iteration.
+    p: u64,
+    /// Iterations per unit of work.
+    u: u64,
+}
+
+struct ShardState {
+    k: u64,
+    levels: Vec<CacheLevel>,
+    flights: Vec<Flight>,
+    /// Scheduled materializations: (global access index, term).
+    pending: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Per-row traffic window, flattened `[level][unit - u_lo]`: lines
+    /// crossing each link, per unit of work.
+    win_lines: Vec<u64>,
+    /// Non-sequential misses served at depth `level+1`, per unit.
+    win_nonseq: Vec<u64>,
+    win_len: usize,
+    u_lo: u64,
+    /// Scratch: effective LRU ages during victim selection.
+    eff: Vec<u64>,
+}
+
+impl ShardState {
+    fn new(setup: &SimSetup, k: usize, n_terms: usize) -> ShardState {
+        ShardState {
+            k: k as u64,
+            levels: setup
+                .geometry
+                .iter()
+                .map(|&(sets, ways)| CacheLevel::with_sets(sets / k, ways))
+                .collect(),
+            flights: vec![Flight::default(); n_terms],
+            pending: BinaryHeap::new(),
+            win_lines: Vec::new(),
+            win_nonseq: Vec::new(),
+            win_len: 0,
+            u_lo: 0,
+            eff: Vec::new(),
+        }
+    }
+
+    fn begin_row(&mut self, u_lo: u64, win_len: usize) {
+        self.u_lo = u_lo;
+        self.win_len = win_len;
+        let n = self.levels.len() * win_len;
+        self.win_lines.clear();
+        self.win_lines.resize(n, 0);
+        self.win_nonseq.clear();
+        self.win_nonseq.resize(n, 0);
+    }
+
+    /// Shard-local set of a line: the full-geometry set index
+    /// `line mod sets` factors as (shard, local set) when K divides
+    /// the set count, so two lines collide in a shard's L1 iff they
+    /// collide in the reference engine's.
+    #[inline]
+    fn local_set(&self, level: usize, line: u64) -> usize {
+        ((line / self.k) % self.levels[level].sets as u64) as usize
+    }
+
+    /// Process one block's events (sorted by `g`), interleaving any
+    /// scheduled materializations in global access order. Runs never
+    /// span blocks, so the heap fully drains before returning.
+    fn process(&mut self, events: &[Event], ctx: &Ctx) {
+        for e in events {
+            while let Some(&Reverse((g, t))) = self.pending.peek() {
+                if g >= e.g {
+                    break;
+                }
+                self.pending.pop();
+                self.materialize(g, t as usize, ctx);
+            }
+            self.handle_event(e, ctx);
+        }
+        while let Some(Reverse((g, t))) = self.pending.pop() {
+            self.materialize(g, t as usize, ctx);
+        }
+    }
+
+    fn handle_event(&mut self, e: &Event, ctx: &Ctx) {
+        let t = e.term as usize;
+        // Settle the term's previous flight in this shard: its lazy
+        // recency must survive the slot reuse, so raise the recorded
+        // L1 age of its line (if still resident) to the run's last
+        // implied touch.
+        let old = self.flights[t];
+        if old.active {
+            if old.resident {
+                let set = self.local_set(0, old.line);
+                let base = set * self.levels[0].ways;
+                let key = old.line + 1;
+                let ia = (old.i_end - 1) * ctx.p + t as u64 + 1;
+                for w in 0..self.levels[0].ways {
+                    let ix = base + w;
+                    if self.levels[0].tags[ix] == key {
+                        if ia > self.levels[0].ages[ix] {
+                            self.levels[0].ages[ix] = ia;
+                        }
+                        break;
+                    }
+                }
+            }
+            self.flights[t].active = false;
+        }
+        let write = ctx.terms[t].write;
+        self.touch(e.line, write, e.g + 1, e.i_start, t as u64, e.seq, ctx);
+        self.flights[t] = Flight {
+            line: e.line,
+            i_start: e.i_start,
+            i_end: e.i_end,
+            active: true,
+            resident: true,
+            write,
+        };
+        // optimistic credit: the run's remaining touches are L1 hits
+        // while the line stays resident (revoked on eviction)
+        self.levels[0].hits += e.i_end - e.i_start - 1;
+    }
+
+    /// Replay the first post-eviction touch of a run at its true
+    /// position in the access order, then re-credit the tail.
+    fn materialize(&mut self, g: u64, t: usize, ctx: &Ctx) {
+        let fl = self.flights[t];
+        debug_assert!(fl.active && !fl.resident);
+        let i_m = (g - t as u64) / ctx.p;
+        // Replays are always sequential: the same line was touched at
+        // i_m − 1 (≥ i_start), so it sits in the current or previous
+        // unit's line list — no prefetch penalty, ever.
+        self.touch(fl.line, fl.write, g + 1, i_m, t as u64, true, ctx);
+        self.flights[t].resident = true;
+        self.levels[0].hits += fl.i_end - (i_m + 1);
+    }
+
+    /// One real access walk through the hierarchy — the reference
+    /// engine's `touch`, with L1 handled manually (explicit global-
+    /// index age, effective-age victim selection) and deeper levels on
+    /// the shard-local clock.
+    fn touch(
+        &mut self,
+        line: u64,
+        write: bool,
+        age: u64,
+        i_now: u64,
+        p_now: u64,
+        seq: bool,
+        ctx: &Ctx,
+    ) {
+        let n = self.levels.len();
+        let wl = self.win_len;
+        let uu = (i_now / ctx.u - self.u_lo) as usize;
+        let set = self.local_set(0, line);
+        let ways = self.levels[0].ways;
+        let base = set * ways;
+        let key = line + 1;
+        for w in 0..ways {
+            let ix = base + w;
+            if self.levels[0].tags[ix] == key {
+                self.levels[0].hits += 1;
+                self.levels[0].ages[ix] = age;
+                if write {
+                    self.levels[0].dirty[ix] = true;
+                }
+                return;
+            }
+        }
+        // L1 miss — victim by *effective* age: the recorded age raised
+        // by the last touch implied by any live run on the way's line.
+        self.eff.clear();
+        for w in 0..ways {
+            self.eff.push(self.levels[0].ages[base + w]);
+        }
+        for tt in 0..self.flights.len() {
+            let fl = self.flights[tt];
+            if !fl.active || !fl.resident || self.local_set(0, fl.line) != set {
+                continue;
+            }
+            debug_assert!(i_now > 0 || (tt as u64) < p_now);
+            let last_i =
+                (if (tt as u64) < p_now { i_now } else { i_now - 1 }).min(fl.i_end - 1);
+            let ia = last_i * ctx.p + tt as u64 + 1;
+            let fkey = fl.line + 1;
+            for w in 0..ways {
+                if self.levels[0].tags[base + w] == fkey {
+                    if ia > self.eff[w] {
+                        self.eff[w] = ia;
+                    }
+                    break;
+                }
+            }
+        }
+        // same selection rule as the reference: last empty way, else
+        // first strictly-minimal age
+        let mut lru_way = 0usize;
+        let mut lru_age = u64::MAX;
+        for w in 0..ways {
+            if self.levels[0].tags[base + w] == 0 {
+                lru_way = w;
+                lru_age = 0;
+            } else if self.eff[w] < lru_age {
+                lru_age = self.eff[w];
+                lru_way = w;
+            }
+        }
+        self.levels[0].misses += 1;
+        let ix = base + lru_way;
+        let victim_key = self.levels[0].tags[ix];
+        let victim_dirty = self.levels[0].dirty[ix];
+        self.levels[0].tags[ix] = key;
+        self.levels[0].ages[ix] = age;
+        self.levels[0].dirty[ix] = write;
+        if victim_key != 0 {
+            let victim = victim_key - 1;
+            if victim_dirty {
+                self.levels[0].writebacks += 1;
+                self.win_lines[uu] += 1;
+                self.writeback_chain(1, victim, uu);
+            }
+            self.evict_runs(victim, i_now, p_now, ctx);
+        }
+        // the fill crosses the L1 link; walk outward until a hit
+        self.win_lines[uu] += 1;
+        let mut depth = 1usize;
+        for kk in 1..n {
+            let lset = self.local_set(kk, line);
+            let lvl = &mut self.levels[kk];
+            lvl.clock += 1;
+            let a = lvl.clock;
+            let (hit, ev) = lvl.access_in_set(lset, line, false, a);
+            if let Some(d) = ev {
+                self.win_lines[kk * wl + uu] += 1;
+                self.writeback_chain(kk + 1, d, uu);
+            }
+            if hit {
+                break;
+            }
+            self.win_lines[kk * wl + uu] += 1;
+            depth = kk + 1;
+        }
+        if !seq {
+            self.win_nonseq[(depth - 1) * wl + uu] += 1;
+        }
+    }
+
+    /// Dirty-eviction propagation from level `start` outward (the
+    /// reference engine's write-back chain, verbatim).
+    fn writeback_chain(&mut self, start: usize, mut wb: u64, uu: usize) {
+        let n = self.levels.len();
+        let wl = self.win_len;
+        for kk in start..n {
+            let set = self.local_set(kk, wb);
+            let lvl = &mut self.levels[kk];
+            lvl.clock += 1;
+            let a = lvl.clock;
+            let (hit_wb, ev2) = lvl.access_in_set(set, wb, true, a);
+            if let Some(_d2) = ev2 {
+                self.win_lines[kk * wl + uu] += 1;
+                if hit_wb {
+                    break;
+                }
+                wb = _d2;
+                continue;
+            }
+            break;
+        }
+    }
+
+    /// An L1 eviction invalidates the optimistic hit credit of every
+    /// live run on the victim line from the next touch onward; that
+    /// touch is rescheduled as a real access.
+    fn evict_runs(&mut self, victim: u64, i_now: u64, p_now: u64, ctx: &Ctx) {
+        for t in 0..self.flights.len() {
+            let fl = self.flights[t];
+            if !fl.active || !fl.resident || fl.line != victim {
+                continue;
+            }
+            self.flights[t].resident = false;
+            let from = if (t as u64) > p_now { i_now } else { i_now + 1 };
+            let i_next = from.max(fl.i_start + 1);
+            if i_next < fl.i_end {
+                self.levels[0].hits -= fl.i_end - i_next;
+                self.pending.push(Reverse((i_next * ctx.p + t as u64, t as u32)));
+            }
+        }
+    }
+}
+
+/// Per-row fingerprint: per-level (hits, misses, writebacks) deltas,
+/// the row's composed cycles (bitwise), and its iteration count.
+#[derive(PartialEq)]
+struct RowDelta {
+    stats: Vec<(u64, u64, u64)>,
+    cycles_bits: u64,
+    iters: u64,
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Largest power of two ≤ the requested worker count that divides
+/// every level's set count (so the shard factorization is exact).
+fn choose_shards(tb: &VirtualTestbed, setup: &SimSetup) -> usize {
+    let req = if tb.shards == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        tb.shards
+    };
+    let mut k = 1usize;
+    while k * 2 <= req && setup.geometry.iter().all(|&(sets, _)| sets % (k * 2) == 0) {
+        k *= 2;
+    }
+    k
+}
+
+pub(crate) fn run(
+    tb: &VirtualTestbed,
+    analysis: &KernelAnalysis,
+    setup: &SimSetup,
+) -> Result<SimResult> {
+    if analysis.reads.is_empty() && analysis.writes.is_empty() {
+        // no memory terms — nothing to compress, nothing to shard
+        return super::reference::run(tb, analysis, setup);
+    }
+    let mut trace = Trace::new(analysis, setup);
+    let n_levels = setup.geometry.len();
+    let u = setup.unit_iters;
+    let p_cnt = trace.p;
+    let k = choose_shards(tb, setup);
+    let mut shards: Vec<ShardState> =
+        (0..k).map(|_| ShardState::new(setup, k, trace.terms.len())).collect();
+
+    let ol_pi = setup.t_ol / u as f64;
+    let nol_pi = setup.t_nol / u as f64;
+    let lsp = tb.loop_start_penalty;
+    let pf = tb.prefetch_miss_factor;
+    let n_loops = analysis.loops.len();
+    let t_in = *setup.trips.last().unwrap();
+    let total = setup.total;
+
+    // Inner-loop entries inside unit `uidx`, in closed form — the
+    // reference engine charges the pipeline-restart penalty to the
+    // unit containing the first iteration after each inner wrap.
+    let loop_entries = |uidx: u64| -> u64 {
+        if n_loops < 2 {
+            return 0;
+        }
+        let lo = (uidx * u).max(1);
+        let hi = ((uidx + 1) * u).min(total);
+        if hi <= lo {
+            0
+        } else {
+            (hi - 1) / t_in - (lo - 1) / t_in
+        }
+    };
+    let close_unit = |uidx: u64, cnt: u64, lines: &[u64], nonseq: &[u64]| -> f64 {
+        let mut pen = loop_entries(uidx) as f64 * lsp;
+        for kk in 0..n_levels {
+            pen += nonseq[kk] as f64 * (setup.link_lat[kk] * pf);
+        }
+        let mut data = 0.0;
+        for kk in 0..n_levels {
+            data += lines[kk] as f64 * setup.link_cpc[kk];
+        }
+        let c = cnt as f64;
+        (ol_pi * c).max(nol_pi * c + data + pen)
+    };
+
+    let mut cycles = 0f64;
+    let mut next_unit: u64 = 0;
+    let mut carry_lines = vec![0u64; n_levels];
+    let mut carry_nonseq = vec![0u64; n_levels];
+
+    // skip-ahead state
+    let p_align = u / gcd(u, trace.row_len);
+    let window = (3 * p_align) as usize;
+    let tail_keep = p_align;
+    let full_rows = if total % trace.row_len == 0 { trace.rows } else { trace.rows - 1 };
+    let mut hist: VecDeque<RowDelta> = VecDeque::new();
+    let mut prev_tot: Vec<(u64, u64, u64)> = vec![(0, 0, 0); n_levels];
+    let mut extra: Vec<(u64, u64, u64)> = vec![(0, 0, 0); n_levels];
+    let mut extrapolated = false;
+
+    let mut ev_buf: Vec<Event> = Vec::new();
+    let mut parts: Vec<Vec<Event>> = vec![Vec::new(); k];
+    let mut lines_buf: Vec<u64> = Vec::new();
+    let mut nonseq_buf: Vec<u64> = Vec::new();
+    let mut gl = vec![0u64; n_levels];
+    let mut gn = vec![0u64; n_levels];
+
+    let mut r: u64 = 0;
+    while r < trace.rows {
+        let (r0, r1) = trace.row_range(r);
+        let u_lo = r0 / u;
+        let win_len = ((r1 - 1) / u - u_lo + 1) as usize;
+        for s in shards.iter_mut() {
+            s.begin_row(u_lo, win_len);
+        }
+        let mut i = r0;
+        while i < r1 {
+            let i1 = (i + BLOCK_ITERS).min(r1);
+            trace.gen_events(i, i1, &mut ev_buf);
+            let ctx = Ctx { terms: &trace.terms, p: p_cnt, u };
+            if k == 1 {
+                shards[0].process(&ev_buf, &ctx);
+            } else {
+                for pvec in parts.iter_mut() {
+                    pvec.clear();
+                }
+                for e in &ev_buf {
+                    parts[(e.line % k as u64) as usize].push(*e);
+                }
+                std::thread::scope(|sc| {
+                    for (s, evs) in shards.iter_mut().zip(parts.iter()) {
+                        let c = &ctx;
+                        sc.spawn(move || s.process(evs, c));
+                    }
+                });
+            }
+            i = i1;
+        }
+        // merge the shards' per-unit windows, then compose serially
+        lines_buf.clear();
+        lines_buf.resize(n_levels * win_len, 0);
+        nonseq_buf.clear();
+        nonseq_buf.resize(n_levels * win_len, 0);
+        for s in shards.iter() {
+            for x in 0..n_levels * win_len {
+                lines_buf[x] += s.win_lines[x];
+                nonseq_buf[x] += s.win_nonseq[x];
+            }
+        }
+        let mut row_cycles = 0f64;
+        while (next_unit + 1) * u <= r1 {
+            let uu = (next_unit - u_lo) as usize;
+            for kk in 0..n_levels {
+                gl[kk] = lines_buf[kk * win_len + uu] + carry_lines[kk];
+                gn[kk] = nonseq_buf[kk * win_len + uu] + carry_nonseq[kk];
+                carry_lines[kk] = 0;
+                carry_nonseq[kk] = 0;
+            }
+            row_cycles += close_unit(next_unit, u, &gl, &gn);
+            next_unit += 1;
+        }
+        if next_unit * u < r1 {
+            // the row ends mid-unit: stash the open unit's counts
+            let uu = (next_unit - u_lo) as usize;
+            for kk in 0..n_levels {
+                carry_lines[kk] += lines_buf[kk * win_len + uu];
+                carry_nonseq[kk] += nonseq_buf[kk * win_len + uu];
+            }
+        }
+        cycles += row_cycles;
+
+        // per-row stat deltas for the convergence fingerprint
+        let mut tot = vec![(0u64, 0u64, 0u64); n_levels];
+        for (kk, slot) in tot.iter_mut().enumerate() {
+            let (mut h, mut m, mut wb) = extra[kk];
+            for s in shards.iter() {
+                h += s.levels[kk].hits;
+                m += s.levels[kk].misses;
+                wb += s.levels[kk].writebacks;
+            }
+            *slot = (h, m, wb);
+        }
+        let stats_delta: Vec<(u64, u64, u64)> = (0..n_levels)
+            .map(|kk| {
+                (
+                    tot[kk].0 - prev_tot[kk].0,
+                    tot[kk].1 - prev_tot[kk].1,
+                    tot[kk].2 - prev_tot[kk].2,
+                )
+            })
+            .collect();
+        prev_tot = tot;
+        hist.push_back(RowDelta {
+            stats: stats_delta,
+            cycles_bits: row_cycles.to_bits(),
+            iters: r1 - r0,
+        });
+        if hist.len() > window {
+            hist.pop_front();
+        }
+
+        // convergence: the last `window` rows form three identical
+        // unit-phase-aligned periods, wholly inside the current plane
+        if tb.skip_ahead && hist.len() == window && r1 - r0 == trace.row_len {
+            let plane = r / trace.rows_per_plane;
+            let plane_start = plane * trace.rows_per_plane;
+            let plane_end = ((plane + 1) * trace.rows_per_plane).min(full_rows);
+            let pa = p_align as usize;
+            let converged = r + 1 >= plane_start + window as u64
+                && (0..2 * pa).all(|j| hist[window - 1 - j] == hist[window - 1 - j - pa]);
+            if converged {
+                let avail = plane_end.saturating_sub(r + 1).saturating_sub(tail_keep);
+                let s_rows = avail / p_align * p_align;
+                if s_rows >= p_align {
+                    let reps = s_rows / p_align;
+                    let mut period_cycles = 0f64;
+                    for j in 0..pa {
+                        let d = &hist[window - 1 - j];
+                        period_cycles += f64::from_bits(d.cycles_bits);
+                        for kk in 0..n_levels {
+                            extra[kk].0 += reps * d.stats[kk].0;
+                            extra[kk].1 += reps * d.stats[kk].1;
+                            extra[kk].2 += reps * d.stats[kk].2;
+                            prev_tot[kk].0 += reps * d.stats[kk].0;
+                            prev_tot[kk].1 += reps * d.stats[kk].1;
+                            prev_tot[kk].2 += reps * d.stats[kk].2;
+                        }
+                    }
+                    cycles += reps as f64 * period_cycles;
+                    next_unit += s_rows * trace.row_len / u;
+                    r += s_rows;
+                    trace.reseed((r + 1) * trace.row_len);
+                    hist.clear();
+                    extrapolated = true;
+                }
+            }
+        }
+        r += 1;
+    }
+    // trailing partial unit
+    if next_unit * u < total {
+        let cnt = total - next_unit * u;
+        cycles += close_unit(next_unit, cnt, &carry_lines, &carry_nonseq);
+    }
+
+    let levels: Vec<LevelStats> = setup
+        .level_names
+        .iter()
+        .enumerate()
+        .map(|(kk, name)| {
+            let (mut h, mut m, mut wb) = extra[kk];
+            for s in shards.iter() {
+                h += s.levels[kk].hits;
+                m += s.levels[kk].misses;
+                wb += s.levels[kk].writebacks;
+            }
+            LevelStats { level: name.clone(), hits: h, misses: m, writebacks: wb }
+        })
+        .collect();
+    let units = total as f64 / u as f64;
+    Ok(SimResult {
+        cycles,
+        cy_per_cl: cycles / units,
+        iterations: total,
+        truncated: setup.truncated,
+        levels,
+        t_ol: setup.t_ol,
+        t_nol: setup.t_nol,
+        touches: total * p_cnt,
+        engine: SimEngine::Fast,
+        extrapolated,
+    })
+}

@@ -1,7 +1,9 @@
 //! Trace-driven virtual testbed — the stand-in for running the kernel on
 //! the paper's Sandy Bridge / Haswell machines (DESIGN.md §1 documents
-//! the measurement-substitution strategy and how the knobs below were
-//! calibrated against the paper's Tables 1 and 5).
+//! the measurement-substitution strategy, how the knobs below were
+//! calibrated against the paper's Tables 1 and 5, and the fast-engine
+//! design: compressed line-interval traces, set-sharded simulation, and
+//! convergence skip-ahead).
 //!
 //! Front doors: `-p Benchmark --bench-path virtual` measures alone;
 //! `-p Validate` ([`crate::session::ModelKind::Validate`]) runs the
@@ -21,6 +23,19 @@
 //! modeled, so short loops deviate from the analytic model exactly the
 //! way the paper's Fig. 4 measurements do.
 //!
+//! Two engines execute that trace behind one API ([`SimEngine`]):
+//!
+//! * [`reference`] replays every memory reference of every iteration
+//!   through the hierarchy — simple, slow, the ground truth.
+//! * [`fast`] compresses each access term's trace into cache-line
+//!   intervals (one real access per line, elided repeats accounted as
+//!   guaranteed L1 hits), optionally shards the stream by set index
+//!   across workers, and extrapolates once per-row hit/miss
+//!   fingerprints repeat. Per-level hit/miss/writeback counts are
+//!   *identical* to the reference engine (the `sim_equiv` suite pins
+//!   this); cy/CL agrees to float-summation-order noise, or to the
+//!   documented skip-ahead bound when extrapolation is on.
+//!
 //! For large problems the outer iteration space is truncated after the
 //! working set has cycled several times — the reported cy/CL is the
 //! steady-state mean over the simulated window.
@@ -30,27 +45,86 @@ use crate::kernel::KernelAnalysis;
 use crate::machine::MachineModel;
 use anyhow::{bail, Result};
 
+pub mod fast;
+pub mod reference;
+mod trace;
+
+/// Which simulation engine a [`VirtualTestbed`] run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimEngine {
+    /// Compressed-trace engine (DESIGN.md §1): line-interval streams,
+    /// optional set sharding, convergence skip-ahead. The default.
+    #[default]
+    Fast,
+    /// Per-access replay of every memory reference — the original
+    /// implementation, kept as the equivalence baseline.
+    Reference,
+}
+
+impl SimEngine {
+    /// Canonical spelling (CLI flag value, metrics label, wire field).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimEngine::Fast => "fast",
+            SimEngine::Reference => "reference",
+        }
+    }
+
+    /// Parse a canonical spelling.
+    pub fn parse(s: &str) -> Option<SimEngine> {
+        match s {
+            "fast" => Some(SimEngine::Fast),
+            "reference" => Some(SimEngine::Reference),
+            _ => None,
+        }
+    }
+
+    /// Stable index for per-engine counters.
+    pub fn ix(self) -> usize {
+        match self {
+            SimEngine::Fast => 0,
+            SimEngine::Reference => 1,
+        }
+    }
+
+    /// Every engine, in counter-index order.
+    pub const ALL: [SimEngine; 2] = [SimEngine::Fast, SimEngine::Reference];
+}
+
 /// One set-associative LRU cache level.
-struct CacheLevel {
-    sets: usize,
-    ways: usize,
+///
+/// Ages are a 64-bit logical clock (higher = more recent). They were
+/// `u32` with `wrapping_add` once: after 2³² accesses the clock wrapped
+/// and freshly-touched lines compared *older* than stale ones, silently
+/// inverting the recency order — long Validate runs evicted their hot
+/// set. 64 bits cannot wrap in any feasible run (5 GHz × 100 years
+/// < 2⁶⁴); the regression test below pins the old failure point.
+pub(crate) struct CacheLevel {
+    pub(crate) sets: usize,
+    pub(crate) ways: usize,
     /// tags\[set\]\[way\] — line address + 1 (0 = empty way).
-    tags: Vec<u64>,
+    pub(crate) tags: Vec<u64>,
     /// LRU age per way (higher = more recent).
-    ages: Vec<u32>,
-    dirty: Vec<bool>,
-    clock: u32,
+    pub(crate) ages: Vec<u64>,
+    pub(crate) dirty: Vec<bool>,
+    pub(crate) clock: u64,
     // statistics
-    hits: u64,
-    misses: u64,
-    writebacks: u64,
+    pub(crate) hits: u64,
+    pub(crate) misses: u64,
+    pub(crate) writebacks: u64,
 }
 
 impl CacheLevel {
-    fn new(size_bytes: u64, ways: u32, line_size: u64) -> CacheLevel {
+    pub(crate) fn new(size_bytes: u64, ways: u32, line_size: u64) -> CacheLevel {
         let lines = (size_bytes / line_size).max(1);
         let ways = (ways as u64).min(lines).max(1) as usize;
         let sets = (lines as usize / ways).max(1);
+        CacheLevel::with_sets(sets, ways)
+    }
+
+    /// Level with an explicit geometry (the sharded fast engine carves
+    /// a level into `sets/K` subsets per worker).
+    pub(crate) fn with_sets(sets: usize, ways: usize) -> CacheLevel {
         CacheLevel {
             sets,
             ways,
@@ -65,19 +139,34 @@ impl CacheLevel {
     }
 
     /// Access a line address; returns (hit, evicted_dirty_line).
-    fn access(&mut self, line: u64, write: bool) -> (bool, Option<u64>) {
+    pub(crate) fn access(&mut self, line: u64, write: bool) -> (bool, Option<u64>) {
+        let set = (line as usize) % self.sets;
+        self.clock += 1;
+        let age = self.clock;
+        self.access_in_set(set, line, write, age)
+    }
+
+    /// [`CacheLevel::access`] with the set index and LRU age supplied by
+    /// the caller (the fast engine maps lines to shard-local sets and
+    /// stamps L1 ages with the *global* access index, so elided touches
+    /// can be aged lazily).
+    pub(crate) fn access_in_set(
+        &mut self,
+        set: usize,
+        line: u64,
+        write: bool,
+        age: u64,
+    ) -> (bool, Option<u64>) {
         // store line+1 so 0 marks an empty way
         let key = line + 1;
-        let set = (line as usize) % self.sets;
         let base = set * self.ways;
-        self.clock = self.clock.wrapping_add(1);
         let mut lru_way = 0;
-        let mut lru_age = u32::MAX;
+        let mut lru_age = u64::MAX;
         for w in 0..self.ways {
             let ix = base + w;
             if self.tags[ix] == key {
                 self.hits += 1;
-                self.ages[ix] = self.clock;
+                self.ages[ix] = age;
                 if write {
                     self.dirty[ix] = true;
                 }
@@ -100,7 +189,7 @@ impl CacheLevel {
             None
         };
         self.tags[ix] = key;
-        self.ages[ix] = self.clock;
+        self.ages[ix] = age;
         self.dirty[ix] = write;
         (false, evicted)
     }
@@ -130,6 +219,15 @@ pub struct SimResult {
     /// In-core times used (cy per CL of work).
     pub t_ol: f64,
     pub t_nol: f64,
+    /// Logical memory touches accounted (iterations × references per
+    /// iteration, extrapolated touches included) — the unit the
+    /// `kerncraft_sim_touches_total` metric and `sim_perf` bench count.
+    pub touches: u64,
+    /// Engine that produced this result.
+    pub engine: SimEngine,
+    /// Whether convergence skip-ahead extrapolated part of the window
+    /// (fast engine only; implies the documented cy/CL error bound).
+    pub extrapolated: bool,
 }
 
 impl SimResult {
@@ -149,6 +247,14 @@ pub struct VirtualTestbed<'m> {
     /// Extra latency charged for a miss that the streaming prefetcher
     /// did not anticipate (fraction of the serving level's latency).
     pub prefetch_miss_factor: f64,
+    /// Engine selection (default [`SimEngine::Fast`]).
+    pub engine: SimEngine,
+    /// Convergence skip-ahead (fast engine only): extrapolate once the
+    /// per-row fingerprint repeats. Turn off for bit-exact statistics.
+    pub skip_ahead: bool,
+    /// Set-shard worker count for the fast engine: 0 = auto (available
+    /// parallelism, clamped to what divides every level's set count).
+    pub shards: usize,
 }
 
 impl<'m> VirtualTestbed<'m> {
@@ -159,7 +265,16 @@ impl<'m> VirtualTestbed<'m> {
             max_iterations: 4_000_000,
             loop_start_penalty: 25.0,
             prefetch_miss_factor: 0.6,
+            engine: SimEngine::Fast,
+            skip_ahead: true,
+            shards: 0,
         }
+    }
+
+    /// Select the engine (builder style).
+    pub fn with_engine(mut self, engine: SimEngine) -> Self {
+        self.engine = engine;
+        self
     }
 
     /// Run the kernel on the virtual testbed.
@@ -175,38 +290,82 @@ impl<'m> VirtualTestbed<'m> {
         analysis: &KernelAnalysis,
         pm: &PortModel,
     ) -> Result<SimResult> {
-        let cl = self.machine.cacheline_bytes;
+        let setup = SimSetup::build(self, analysis, pm)?;
+        match self.engine {
+            SimEngine::Reference => reference::run(self, analysis, &setup),
+            SimEngine::Fast => fast::run(self, analysis, &setup),
+        }
+    }
+}
+
+/// Everything both engines derive from (machine, kernel, in-core model)
+/// before executing the trace: hierarchy geometry, link costs, array
+/// layout, iteration bounds (with the outermost dimension truncated for
+/// tractability), and the per-unit in-core times.
+pub(crate) struct SimSetup {
+    /// (size-derived sets, ways) per level, innermost first.
+    pub(crate) geometry: Vec<(usize, usize)>,
+    /// Human level names (for [`LevelStats`]).
+    pub(crate) level_names: Vec<String>,
+    /// Cycles per cache line crossing each link, innermost first.
+    pub(crate) link_cpc: Vec<f64>,
+    /// Latency of the level that serves a miss at each level.
+    pub(crate) link_lat: Vec<f64>,
+    /// Byte base offset per array (analytic predictor's placement rule).
+    pub(crate) bases: Vec<i64>,
+    pub(crate) elem_sizes: Vec<i64>,
+    pub(crate) cl: u64,
+    /// Loop trip counts with the outermost already truncated.
+    pub(crate) trips: Vec<u64>,
+    /// Truncated outermost end bound (reference engine walks to here).
+    pub(crate) outer_end: i64,
+    pub(crate) truncated: bool,
+    /// Total simulated inner iterations (product of `trips`).
+    pub(crate) total: u64,
+    pub(crate) unit_iters: u64,
+    pub(crate) t_ol: f64,
+    pub(crate) t_nol: f64,
+}
+
+impl SimSetup {
+    pub(crate) fn build(
+        tb: &VirtualTestbed,
+        analysis: &KernelAnalysis,
+        pm: &PortModel,
+    ) -> Result<SimSetup> {
+        let machine = tb.machine;
+        let cl = machine.cacheline_bytes;
         if analysis.loops.is_empty() {
             bail!("kernel has no loops");
         }
-        // build hierarchy
-        let mut levels: Vec<CacheLevel> = Vec::new();
-        let mut link_cpc: Vec<f64> = Vec::new(); // cycles per CL per link
-        let mut link_lat: Vec<f64> = Vec::new();
-        let cache_levels = self.machine.cache_levels();
+        let mut geometry = Vec::new();
+        let mut level_names = Vec::new();
+        let mut link_cpc = Vec::new();
+        let mut link_lat = Vec::new();
+        let cache_levels = machine.cache_levels();
         for lvl in &cache_levels {
             let Some(size) = lvl.size_bytes else {
                 bail!("cache level {} lacks a size", lvl.name)
             };
-            levels.push(CacheLevel::new(size, lvl.ways, cl));
+            let probe = CacheLevel::new(size, lvl.ways, cl);
+            geometry.push((probe.sets, probe.ways));
+            level_names.push(lvl.name.clone());
             let cpc = match lvl.cycles_per_cacheline {
                 Some(c) => c,
                 None => {
                     // memory link: saturated bandwidth of the copy kernel
-                    let bw = self
-                        .machine
+                    let bw = machine
                         .benchmarks
                         .saturated_bandwidth("MEM", "copy")
                         .unwrap_or(20e9);
-                    cl as f64 / bw * self.machine.clock_hz
+                    cl as f64 / bw * machine.clock_hz
                 }
             };
             link_cpc.push(cpc);
         }
         for (ix, lvl) in cache_levels.iter().enumerate() {
             // latency of the level that serves a miss at this level
-            let next = self
-                .machine
+            let next = machine
                 .memory_hierarchy
                 .get(ix + 1)
                 .map(|l| l.latency)
@@ -216,9 +375,14 @@ impl<'m> VirtualTestbed<'m> {
 
         // array layout (same placement rule as the analytic predictor)
         let layout = crate::cache::ArrayLayout::new(analysis, cl);
+        let bases: Vec<i64> =
+            (0..analysis.arrays.len()).map(|a| layout.base_of(a)).collect();
+        let elem_sizes: Vec<i64> =
+            analysis.arrays.iter().map(|a| a.ty.size() as i64).collect();
 
         // iteration bounds, possibly truncated in the OUTERMOST dimension
-        let trips: Vec<i64> = analysis.loops.iter().map(|l| l.trip().max(0)).collect();
+        let trips_full: Vec<i64> =
+            analysis.loops.iter().map(|l| l.trip().max(0)).collect();
         if let Some(l) = analysis.loops.iter().find(|l| l.trip() <= 0) {
             // an empty space would otherwise clamp(1, 0) below (panic) and
             // then issue out-of-bounds accesses for the phantom iteration
@@ -231,226 +395,69 @@ impl<'m> VirtualTestbed<'m> {
             );
         }
         // saturating product: gigantic nests only need to compare > cap
-        let total: u64 = trips
+        let total_full: u64 = trips_full
             .iter()
             .fold(1u64, |acc, t| acc.saturating_mul(*t as u64));
-        let mut outer_trip = trips[0] as u64;
+        let mut outer_trip = trips_full[0] as u64;
         let mut truncated = false;
         if analysis.loops.len() > 1 {
-            if total > self.max_iterations {
-                let inner_total: u64 = trips[1..]
+            if total_full > tb.max_iterations {
+                let inner_total: u64 = trips_full[1..]
                     .iter()
                     .fold(1u64, |acc, t| acc.saturating_mul(*t as u64))
                     .max(1);
-                outer_trip = (self.max_iterations / inner_total).clamp(1, trips[0] as u64);
-                truncated = outer_trip < trips[0] as u64;
+                outer_trip =
+                    (tb.max_iterations / inner_total).clamp(1, trips_full[0] as u64);
+                truncated = outer_trip < trips_full[0] as u64;
             }
-        } else if total > self.max_iterations {
-            outer_trip = self.max_iterations;
+        } else if total_full > tb.max_iterations {
+            outer_trip = tb.max_iterations;
             truncated = true;
         }
-
-        // prefetcher model: per-array rolling lists of the lines touched
-        // in the current and previous unit of work — a miss whose
-        // predecessor line appears there is stream-prefetched (bandwidth
-        // only). Small Vecs beat hash sets here: ≤ a few dozen entries,
-        // scanned linearly (§Perf iteration 2).
-        let mut cur_lines: Vec<Vec<i64>> = vec![Vec::new(); analysis.arrays.len()];
-        let mut prev_lines: Vec<Vec<i64>> = vec![Vec::new(); analysis.arrays.len()];
-
-        let elem_sizes: Vec<i64> =
-            analysis.arrays.iter().map(|a| a.ty.size() as i64).collect();
-        let unit_iters = analysis.unit_of_work(cl).max(1);
-        let t_ol = pm.t_ol;
-        let t_nol = pm.t_nol;
-        // in-core time per iteration
-        let ol_per_iter = t_ol / unit_iters as f64;
-        let nol_per_iter = t_nol / unit_iters as f64;
-
-        let mut cycles = 0f64;
-        let mut iterations: u64 = 0;
-        // per-unit accumulators
-        let mut unit_count = 0u64;
-        let mut unit_link_lines = vec![0u64; levels.len()];
-        let mut unit_penalty = 0f64;
-
-        let n_loops = analysis.loops.len();
-        let mut idx: Vec<i64> = analysis.loops.iter().map(|l| l.start).collect();
-        // adjust outermost bound for truncation
+        let mut trips: Vec<u64> = trips_full.iter().map(|&t| t as u64).collect();
+        trips[0] = outer_trip;
+        let total = trips.iter().product::<u64>();
         let outer_end =
             analysis.loops[0].start + outer_trip as i64 * analysis.loops[0].step;
 
-        'outer: loop {
-            // --- one inner iteration: issue all accesses ---
-            for acc in analysis.reads.iter() {
-                let a = acc.array;
-                let off =
-                    acc.offset + acc.coeffs.iter().zip(&idx).map(|(c, p)| c * p).sum::<i64>();
-                let byte = layout.base_of(a) + off * elem_sizes[a];
-                let line = byte.div_euclid(cl as i64) as u64;
-                self.touch(
-                    &mut levels,
-                    line,
-                    false,
-                    a,
-                    &mut cur_lines,
-                    &prev_lines,
-                    &link_lat,
-                    &mut unit_link_lines,
-                    &mut unit_penalty,
-                );
-            }
-            for acc in analysis.writes.iter() {
-                let a = acc.array;
-                let off =
-                    acc.offset + acc.coeffs.iter().zip(&idx).map(|(c, p)| c * p).sum::<i64>();
-                let byte = layout.base_of(a) + off * elem_sizes[a];
-                let line = byte.div_euclid(cl as i64) as u64;
-                self.touch(
-                    &mut levels,
-                    line,
-                    true,
-                    a,
-                    &mut cur_lines,
-                    &prev_lines,
-                    &link_lat,
-                    &mut unit_link_lines,
-                    &mut unit_penalty,
-                );
-            }
-            iterations += 1;
-            unit_count += 1;
+        Ok(SimSetup {
+            geometry,
+            level_names,
+            link_cpc,
+            link_lat,
+            bases,
+            elem_sizes,
+            cl,
+            trips,
+            outer_end,
+            truncated,
+            total,
+            unit_iters: analysis.unit_of_work(cl).max(1),
+            t_ol: pm.t_ol,
+            t_nol: pm.t_nol,
+        })
+    }
 
-            // close a unit of work: ECM composition
-            if unit_count == unit_iters {
-                let mut data: f64 = 0.0;
-                for (k, lines) in unit_link_lines.iter().enumerate() {
-                    data += *lines as f64 * link_cpc[k];
-                }
-                let t_unit = (ol_per_iter * unit_count as f64)
-                    .max(nol_per_iter * unit_count as f64 + data + unit_penalty);
-                cycles += t_unit;
-                unit_count = 0;
-                unit_link_lines.iter_mut().for_each(|x| *x = 0);
-                unit_penalty = 0.0;
-                for (cur, prev) in cur_lines.iter_mut().zip(prev_lines.iter_mut()) {
-                    std::mem::swap(cur, prev);
-                    cur.clear();
-                }
-            }
-
-            // --- advance the loop nest ---
-            let mut k = n_loops - 1;
-            loop {
-                idx[k] += analysis.loops[k].step;
-                let end = if k == 0 { outer_end } else { analysis.loops[k].end };
-                if idx[k] < end {
-                    if k != n_loops - 1 {
-                        // entering a fresh inner loop: pipeline restart
-                        unit_penalty += self.loop_start_penalty;
-                    }
-                    break;
-                }
-                if k == 0 {
-                    break 'outer;
-                }
-                idx[k] = analysis.loops[k].start;
-                k -= 1;
-            }
-        }
-        // flush the trailing partial unit
-        if unit_count > 0 {
-            let mut data: f64 = 0.0;
-            for (k, lines) in unit_link_lines.iter().enumerate() {
-                data += *lines as f64 * link_cpc[k];
-            }
-            cycles += (ol_per_iter * unit_count as f64)
-                .max(nol_per_iter * unit_count as f64 + data + unit_penalty);
-        }
-
-        let stats = cache_levels
+    /// Fresh full-geometry hierarchy (reference engine / single shard).
+    pub(crate) fn hierarchy(&self) -> Vec<CacheLevel> {
+        self.geometry
             .iter()
-            .zip(&levels)
-            .map(|(m, l)| LevelStats {
-                level: m.name.clone(),
+            .map(|&(sets, ways)| CacheLevel::with_sets(sets, ways))
+            .collect()
+    }
+
+    /// Package per-level counters into the public result.
+    pub(crate) fn level_stats(&self, levels: &[CacheLevel]) -> Vec<LevelStats> {
+        self.level_names
+            .iter()
+            .zip(levels)
+            .map(|(name, l)| LevelStats {
+                level: name.clone(),
                 hits: l.hits,
                 misses: l.misses,
                 writebacks: l.writebacks,
             })
-            .collect();
-        let units = iterations as f64 / unit_iters as f64;
-        Ok(SimResult {
-            cycles,
-            cy_per_cl: cycles / units,
-            iterations,
-            truncated,
-            levels: stats,
-            t_ol,
-            t_nol,
-        })
-    }
-
-    /// Issue one line access through the hierarchy, updating traffic and
-    /// penalty accumulators. Dirty evictions propagate inclusively: an
-    /// eviction from level k marks (or installs) the line dirty in level
-    /// k+1 and counts one write-back crossing that link.
-    #[allow(clippy::too_many_arguments)]
-    fn touch(
-        &self,
-        levels: &mut [CacheLevel],
-        line: u64,
-        write: bool,
-        array: usize,
-        cur_lines: &mut [Vec<i64>],
-        prev_lines: &[Vec<i64>],
-        link_lat: &[f64],
-        unit_link_lines: &mut [u64],
-        unit_penalty: &mut f64,
-    ) {
-        // sequential-stream detection: predecessor (or same) line seen in
-        // this or the previous unit of work
-        let sline = line as i64;
-        let hit_list = |v: &[i64]| v.iter().any(|&h| h == sline || h == sline - 1);
-        let sequential = hit_list(&cur_lines[array]) || hit_list(&prev_lines[array]);
-        if !cur_lines[array].contains(&sline) {
-            cur_lines[array].push(sline);
-        }
-
-        let n = levels.len();
-        let mut depth = 0usize;
-        for k in 0..n {
-            let (hit, evicted) = levels[k].access(line, write && k == 0);
-            if let Some(dirty_line) = evicted {
-                // write-back: crosses the link below level k, then marks
-                // the line dirty further out (installing it if the
-                // hierarchy drifted from strict inclusion)
-                unit_link_lines[k] += 1;
-                let mut wb = dirty_line;
-                for kk in k + 1..n {
-                    let (hit_wb, ev2) = levels[kk].access(wb, true);
-                    if let Some(d2) = ev2 {
-                        unit_link_lines[kk] += 1;
-                        if hit_wb {
-                            break;
-                        }
-                        wb = d2;
-                        continue;
-                    }
-                    break;
-                }
-            }
-            if hit {
-                break;
-            }
-            // miss: the fill crosses this link
-            unit_link_lines[k] += 1;
-            depth = k + 1;
-        }
-        // latency penalty for non-sequential (unprefetched) misses
-        if depth > 0 && !sequential {
-            let lat = link_lat[depth - 1];
-            *unit_penalty += lat * self.prefetch_miss_factor;
-        }
+            .collect()
     }
 }
 
@@ -491,6 +498,25 @@ mod tests {
         let (_, ev) = c.access(2, false); // same set, evicts line 0
         assert_eq!(ev, Some(0));
         assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn lru_clock_survives_the_u32_wrap_point() {
+        // Regression: with a u32 clock and `wrapping_add`, the access
+        // after 2³² wrapped the clock to 0 and the freshest line became
+        // the eviction victim. Start the 64-bit clock just below the old
+        // wrap point and cross it: recency order must be preserved.
+        let mut c = CacheLevel::new(256, 2, 64); // 2 sets × 2 ways
+        c.clock = u64::from(u32::MAX) - 1;
+        assert!(!c.access(0, false).0); // age = 2³²−1
+        assert!(!c.access(2, false).0); // age = 2³² (u32 would wrap to 0)
+        assert!(c.clock > u64::from(u32::MAX), "clock crossed 2³²");
+        // set 0 is full; a third line must evict line 0 (the older one),
+        // not line 2 — under the wrapped u32 clock line 2's age read as
+        // 0 and it was evicted instead.
+        assert!(!c.access(4, false).0);
+        assert!(c.access(2, false).0, "freshly-touched line survived the wrap");
+        assert!(!c.access(0, false).0, "the genuinely old line was the victim");
     }
 
     #[test]
@@ -616,5 +642,14 @@ mod tests {
         // paper bench: 101.1 cy/CL (model 96): core-bound, so the sim must
         // land at T_OL (96) ± small memory effects
         assert!((sim.cy_per_cl - 96.0).abs() / 96.0 < 0.12, "sim {}", sim.cy_per_cl);
+    }
+
+    #[test]
+    fn engine_parse_round_trips() {
+        for e in SimEngine::ALL {
+            assert_eq!(SimEngine::parse(e.name()), Some(e));
+        }
+        assert_eq!(SimEngine::parse("warp"), None);
+        assert_eq!(SimEngine::default(), SimEngine::Fast);
     }
 }

@@ -1,0 +1,217 @@
+//! The reference engine: replay every memory reference of every
+//! iteration through the LRU hierarchy, one `access` per reference.
+//!
+//! This is the original (pre-compression) implementation, kept verbatim
+//! as the ground truth the [`super::fast`] engine is proven against:
+//! `rust/tests/sim_equiv.rs` pins per-level hit/miss/writeback counts of
+//! both engines equal on the paper kernels and on randomized stencils.
+//! Select it with `--sim-engine reference` or
+//! [`super::SimEngine::Reference`].
+
+use super::{SimEngine, SimResult, SimSetup, VirtualTestbed};
+use crate::kernel::KernelAnalysis;
+use anyhow::Result;
+
+pub(crate) fn run(
+    tb: &VirtualTestbed,
+    analysis: &KernelAnalysis,
+    setup: &SimSetup,
+) -> Result<SimResult> {
+    let cl = setup.cl;
+    let mut levels = setup.hierarchy();
+
+    // prefetcher model: per-array rolling lists of the lines touched
+    // in the current and previous unit of work — a miss whose
+    // predecessor line appears there is stream-prefetched (bandwidth
+    // only). Small Vecs beat hash sets here: ≤ a few dozen entries,
+    // scanned linearly (§Perf iteration 2).
+    let mut cur_lines: Vec<Vec<i64>> = vec![Vec::new(); analysis.arrays.len()];
+    let mut prev_lines: Vec<Vec<i64>> = vec![Vec::new(); analysis.arrays.len()];
+
+    let unit_iters = setup.unit_iters;
+    let t_ol = setup.t_ol;
+    let t_nol = setup.t_nol;
+    // in-core time per iteration
+    let ol_per_iter = t_ol / unit_iters as f64;
+    let nol_per_iter = t_nol / unit_iters as f64;
+
+    let mut cycles = 0f64;
+    let mut iterations: u64 = 0;
+    // per-unit accumulators
+    let mut unit_count = 0u64;
+    let mut unit_link_lines = vec![0u64; levels.len()];
+    let mut unit_penalty = 0f64;
+
+    let n_loops = analysis.loops.len();
+    let mut idx: Vec<i64> = analysis.loops.iter().map(|l| l.start).collect();
+    // outermost bound already adjusted for truncation
+    let outer_end = setup.outer_end;
+
+    'outer: loop {
+        // --- one inner iteration: issue all accesses ---
+        for acc in analysis.reads.iter() {
+            let a = acc.array;
+            let off =
+                acc.offset + acc.coeffs.iter().zip(&idx).map(|(c, p)| c * p).sum::<i64>();
+            let byte = setup.bases[a] + off * setup.elem_sizes[a];
+            let line = byte.div_euclid(cl as i64) as u64;
+            touch(
+                tb,
+                setup,
+                &mut levels,
+                line,
+                false,
+                a,
+                &mut cur_lines,
+                &prev_lines,
+                &mut unit_link_lines,
+                &mut unit_penalty,
+            );
+        }
+        for acc in analysis.writes.iter() {
+            let a = acc.array;
+            let off =
+                acc.offset + acc.coeffs.iter().zip(&idx).map(|(c, p)| c * p).sum::<i64>();
+            let byte = setup.bases[a] + off * setup.elem_sizes[a];
+            let line = byte.div_euclid(cl as i64) as u64;
+            touch(
+                tb,
+                setup,
+                &mut levels,
+                line,
+                true,
+                a,
+                &mut cur_lines,
+                &prev_lines,
+                &mut unit_link_lines,
+                &mut unit_penalty,
+            );
+        }
+        iterations += 1;
+        unit_count += 1;
+
+        // close a unit of work: ECM composition
+        if unit_count == unit_iters {
+            let mut data: f64 = 0.0;
+            for (k, lines) in unit_link_lines.iter().enumerate() {
+                data += *lines as f64 * setup.link_cpc[k];
+            }
+            let t_unit = (ol_per_iter * unit_count as f64)
+                .max(nol_per_iter * unit_count as f64 + data + unit_penalty);
+            cycles += t_unit;
+            unit_count = 0;
+            unit_link_lines.iter_mut().for_each(|x| *x = 0);
+            unit_penalty = 0.0;
+            for (cur, prev) in cur_lines.iter_mut().zip(prev_lines.iter_mut()) {
+                std::mem::swap(cur, prev);
+                cur.clear();
+            }
+        }
+
+        // --- advance the loop nest ---
+        let mut k = n_loops - 1;
+        loop {
+            idx[k] += analysis.loops[k].step;
+            let end = if k == 0 { outer_end } else { analysis.loops[k].end };
+            if idx[k] < end {
+                if k != n_loops - 1 {
+                    // entering a fresh inner loop: pipeline restart
+                    unit_penalty += tb.loop_start_penalty;
+                }
+                break;
+            }
+            if k == 0 {
+                break 'outer;
+            }
+            idx[k] = analysis.loops[k].start;
+            k -= 1;
+        }
+    }
+    // flush the trailing partial unit
+    if unit_count > 0 {
+        let mut data: f64 = 0.0;
+        for (k, lines) in unit_link_lines.iter().enumerate() {
+            data += *lines as f64 * setup.link_cpc[k];
+        }
+        cycles += (ol_per_iter * unit_count as f64)
+            .max(nol_per_iter * unit_count as f64 + data + unit_penalty);
+    }
+
+    let refs_per_iter = (analysis.reads.len() + analysis.writes.len()) as u64;
+    let units = iterations as f64 / unit_iters as f64;
+    Ok(SimResult {
+        cycles,
+        cy_per_cl: cycles / units,
+        iterations,
+        truncated: setup.truncated,
+        levels: setup.level_stats(&levels),
+        t_ol,
+        t_nol,
+        touches: iterations * refs_per_iter,
+        engine: SimEngine::Reference,
+        extrapolated: false,
+    })
+}
+
+/// Issue one line access through the hierarchy, updating traffic and
+/// penalty accumulators. Dirty evictions propagate inclusively: an
+/// eviction from level k marks (or installs) the line dirty in level
+/// k+1 and counts one write-back crossing that link.
+#[allow(clippy::too_many_arguments)]
+fn touch(
+    tb: &VirtualTestbed,
+    setup: &SimSetup,
+    levels: &mut [super::CacheLevel],
+    line: u64,
+    write: bool,
+    array: usize,
+    cur_lines: &mut [Vec<i64>],
+    prev_lines: &[Vec<i64>],
+    unit_link_lines: &mut [u64],
+    unit_penalty: &mut f64,
+) {
+    // sequential-stream detection: predecessor (or same) line seen in
+    // this or the previous unit of work
+    let sline = line as i64;
+    let hit_list = |v: &[i64]| v.iter().any(|&h| h == sline || h == sline - 1);
+    let sequential = hit_list(&cur_lines[array]) || hit_list(&prev_lines[array]);
+    if !cur_lines[array].contains(&sline) {
+        cur_lines[array].push(sline);
+    }
+
+    let n = levels.len();
+    let mut depth = 0usize;
+    for k in 0..n {
+        let (hit, evicted) = levels[k].access(line, write && k == 0);
+        if let Some(dirty_line) = evicted {
+            // write-back: crosses the link below level k, then marks
+            // the line dirty further out (installing it if the
+            // hierarchy drifted from strict inclusion)
+            unit_link_lines[k] += 1;
+            let mut wb = dirty_line;
+            for kk in k + 1..n {
+                let (hit_wb, ev2) = levels[kk].access(wb, true);
+                if let Some(d2) = ev2 {
+                    unit_link_lines[kk] += 1;
+                    if hit_wb {
+                        break;
+                    }
+                    wb = d2;
+                    continue;
+                }
+                break;
+            }
+        }
+        if hit {
+            break;
+        }
+        // miss: the fill crosses this link
+        unit_link_lines[k] += 1;
+        depth = k + 1;
+    }
+    // latency penalty for non-sequential (unprefetched) misses
+    if depth > 0 && !sequential {
+        let lat = setup.link_lat[depth - 1];
+        *unit_penalty += lat * tb.prefetch_miss_factor;
+    }
+}

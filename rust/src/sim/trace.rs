@@ -1,0 +1,296 @@
+//! Compressed line-interval trace generation for the fast engine
+//! (DESIGN.md §1).
+//!
+//! Every access expression of the kernel body is an affine *term*
+//! `addr(digits) = base + Σ strides[k]·digit[k]`. Along the innermost
+//! loop the byte stride is constant, so the per-iteration access stream
+//! of a term decomposes into maximal runs of consecutive iterations that
+//! touch the *same* cache line. The generator emits one [`Event`] per
+//! run — O(lines touched) instead of O(references) — and the fast engine
+//! accounts the elided repeats as guaranteed L1 hits.
+//!
+//! The generator also owns the *sequential-stream* state (the per-array
+//! current/previous-unit line lists the reference engine keeps): that
+//! detection is inherently serial, so the flags are precomputed here,
+//! on the compressed stream, before events are sharded across workers.
+
+use super::SimSetup;
+use crate::kernel::KernelAnalysis;
+
+/// One affine access term (one entry of `reads` ++ `writes`).
+pub(crate) struct Term {
+    pub array: usize,
+    pub write: bool,
+    /// Byte address at the all-zeros digit vector.
+    pub base: i64,
+    /// Byte stride per unit increment of each loop digit, outer→inner.
+    pub strides: Vec<i64>,
+}
+
+/// A maximal run of consecutive inner iterations `[i_start, i_end)` in
+/// which one term touches one cache line every iteration.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Event {
+    /// Global access index of the first touch: `i_start·P + p` — the
+    /// total order both engines issue references in (iteration-major,
+    /// term-minor), and exactly the reference engine's L1 clock minus 1.
+    pub g: u64,
+    pub line: u64,
+    /// Index into [`Trace::terms`] (== the term's position `p`).
+    pub term: u32,
+    pub i_start: u64,
+    pub i_end: u64,
+    /// Sequential-stream flag of the first touch (elided repeats are L1
+    /// hits and never consult it; materialized replays are provably
+    /// sequential — see `fast.rs`).
+    pub seq: bool,
+}
+
+/// Iterations per 1-D chunk, in units of work (multi-dim kernels row on
+/// the innermost trip instead). Must stay a multiple of the unit so
+/// chunk boundaries never split a unit-phase period.
+const CHUNK_UNITS: u64 = 8192;
+
+pub(crate) struct Trace {
+    pub terms: Vec<Term>,
+    /// Terms per iteration (`terms.len()` as u64).
+    pub p: u64,
+    pub trips: Vec<u64>,
+    pub total: u64,
+    /// Iterations per row: the innermost trip count, or the 1-D chunk.
+    /// A *row* is both the event-generation granule and the fingerprint
+    /// unit of convergence skip-ahead.
+    pub row_len: u64,
+    /// Total rows (`ceil(total / row_len)`; only a trailing 1-D chunk
+    /// can be partial).
+    pub rows: u64,
+    /// Rows per sweep of the second-innermost loop — skip-ahead never
+    /// extrapolates across this boundary (outer-loop wrap rows are not
+    /// part of the detected steady state). For nests of depth ≤ 2 the
+    /// whole space is one plane.
+    pub rows_per_plane: u64,
+    unit_iters: u64,
+    cl: i64,
+    // --- serial sequential-detection state ---
+    cur: Vec<Vec<i64>>,
+    prev: Vec<Vec<i64>>,
+    /// Global iteration index of the next unit-of-work boundary.
+    next_boundary: u64,
+    /// Scratch: (g, array, line) pushes at unit boundaries inside runs.
+    carries: Vec<(u64, u32, i64)>,
+}
+
+impl Trace {
+    pub(crate) fn new(analysis: &KernelAnalysis, setup: &SimSetup) -> Trace {
+        let n = analysis.loops.len();
+        let mut terms = Vec::new();
+        for (write, accs) in [(false, &analysis.reads), (true, &analysis.writes)] {
+            for acc in accs.iter() {
+                let esz = setup.elem_sizes[acc.array];
+                let mut base = setup.bases[acc.array] + acc.offset * esz;
+                let mut strides = Vec::with_capacity(n);
+                for (k, &c) in acc.coeffs.iter().enumerate() {
+                    base += c * analysis.loops[k].start * esz;
+                    strides.push(c * analysis.loops[k].step * esz);
+                }
+                terms.push(Term { array: acc.array, write, base, strides });
+            }
+        }
+        let total = setup.total;
+        let row_len = if n >= 2 {
+            setup.trips[n - 1].max(1)
+        } else {
+            (CHUNK_UNITS * setup.unit_iters).min(total.max(1))
+        };
+        let rows = total.div_ceil(row_len);
+        let rows_per_plane = if n >= 3 { setup.trips[n - 2].max(1) } else { rows };
+        let p = terms.len() as u64;
+        Trace {
+            terms,
+            p,
+            trips: setup.trips.clone(),
+            total,
+            row_len,
+            rows,
+            rows_per_plane,
+            unit_iters: setup.unit_iters,
+            cl: setup.cl as i64,
+            cur: vec![Vec::new(); analysis.arrays.len()],
+            prev: vec![Vec::new(); analysis.arrays.len()],
+            next_boundary: setup.unit_iters,
+            carries: Vec::new(),
+        }
+    }
+
+    /// Global iteration bounds `[start, end)` of one row.
+    pub(crate) fn row_range(&self, row: u64) -> (u64, u64) {
+        let start = row * self.row_len;
+        (start, (start + self.row_len).min(self.total))
+    }
+
+    /// Generate the events of `[i0, i1)` (must lie inside one row) into
+    /// `out`, sorted by `g`, with sequential flags resolved.
+    ///
+    /// Calls must walk the iteration space in order; after a skip-ahead
+    /// jump, re-seed the sequential state with [`Trace::reseed`] first.
+    pub(crate) fn gen_events(&mut self, i0: u64, i1: u64, out: &mut Vec<Event>) {
+        out.clear();
+        if i0 >= i1 || self.terms.is_empty() {
+            return;
+        }
+        let n = self.trips.len();
+        let cl = self.cl;
+        let p_total = self.p;
+        // inner-digit window and per-term line-sweep origin
+        let (row_base, d_lo) = if n >= 2 {
+            let row = i0 / self.row_len;
+            (row * self.row_len, i0 % self.row_len)
+        } else {
+            (0, i0)
+        };
+        let d_hi = d_lo + (i1 - i0);
+        debug_assert!(n == 1 || d_hi <= self.row_len);
+        let mut outer = vec![0u64; n.saturating_sub(1)];
+        if n >= 2 {
+            let mut r = i0 / self.row_len;
+            for k in (0..n - 1).rev() {
+                outer[k] = r % self.trips[k];
+                r /= self.trips[k];
+            }
+        }
+        for (t, term) in self.terms.iter().enumerate() {
+            let mut a0 = term.base;
+            for (k, &d) in outer.iter().enumerate() {
+                a0 += term.strides[k] * d as i64;
+            }
+            let s = term.strides[n - 1];
+            let mut d = d_lo;
+            while d < d_hi {
+                let line = (a0 + s * d as i64).div_euclid(cl);
+                // closed-form end of the run: last digit still on `line`
+                let d_next = if s > 0 {
+                    (((line + 1) * cl - 1 - a0).div_euclid(s) as u64 + 1).min(d_hi)
+                } else if s < 0 {
+                    ((a0 - line * cl).div_euclid(-s) as u64 + 1).min(d_hi)
+                } else {
+                    d_hi
+                };
+                let i_start = row_base + d;
+                out.push(Event {
+                    g: i_start * p_total + t as u64,
+                    line: line as u64,
+                    term: t as u32,
+                    i_start,
+                    i_end: row_base + d_next,
+                    seq: false,
+                });
+                d = d_next;
+            }
+        }
+        out.sort_unstable_by_key(|e| e.g);
+        self.resolve_seq(out);
+    }
+
+    /// Walk the block's compressed stream in issue order, maintaining
+    /// the current/previous-unit line lists exactly as the reference
+    /// engine does (every elided repeat still *pushes* its line — the
+    /// carries replay those pushes at each unit boundary inside a run).
+    fn resolve_seq(&mut self, events: &mut [Event]) {
+        let u = self.unit_iters;
+        let p_total = self.p;
+        self.carries.clear();
+        for e in events.iter() {
+            let mut m = (e.i_start / u + 1) * u;
+            while m < e.i_end {
+                self.carries
+                    .push((m * p_total + e.term as u64, self.terms[e.term as usize].array as u32, e.line as i64));
+                m += u;
+            }
+        }
+        self.carries.sort_unstable_by_key(|c| c.0);
+        let mut ci = 0;
+        for e in events.iter_mut() {
+            // drain carries issued before this event
+            while ci < self.carries.len() && self.carries[ci].0 < e.g {
+                let (g, arr, line) = self.carries[ci];
+                self.cross_boundaries(g / p_total);
+                push_absent(&mut self.cur[arr as usize], line);
+                ci += 1;
+            }
+            self.cross_boundaries(e.i_start);
+            let arr = self.terms[e.term as usize].array;
+            let line = e.line as i64;
+            let hit = |v: &[i64]| v.iter().any(|&h| h == line || h == line - 1);
+            e.seq = hit(&self.cur[arr]) || hit(&self.prev[arr]);
+            push_absent(&mut self.cur[arr], line);
+        }
+        while ci < self.carries.len() {
+            let (g, arr, line) = self.carries[ci];
+            self.cross_boundaries(g / p_total);
+            push_absent(&mut self.cur[arr as usize], line);
+            ci += 1;
+        }
+    }
+
+    fn cross_boundaries(&mut self, i: u64) {
+        while i >= self.next_boundary {
+            for (cur, prev) in self.cur.iter_mut().zip(self.prev.iter_mut()) {
+                std::mem::swap(cur, prev);
+                cur.clear();
+            }
+            self.next_boundary += self.unit_iters;
+        }
+    }
+
+    /// Rebuild the sequential-stream state for resuming at iteration
+    /// `resume_i` (a row start), as if every earlier iteration had been
+    /// walked: the lists only ever hold lines of the current and
+    /// previous unit of work, so replaying those ≤ 2·unit iterations
+    /// reconstructs them exactly.
+    pub(crate) fn reseed(&mut self, resume_i: u64) {
+        for v in self.cur.iter_mut().chain(self.prev.iter_mut()) {
+            v.clear();
+        }
+        let u = self.unit_iters;
+        let m0 = resume_i / u * u;
+        if m0 > 0 {
+            let prev = &mut self.prev;
+            for i in m0 - u..m0 {
+                lines_of(&self.terms, &self.trips, self.cl, i, |arr, line| {
+                    push_absent(&mut prev[arr], line)
+                });
+            }
+        }
+        let cur = &mut self.cur;
+        for i in m0..resume_i {
+            lines_of(&self.terms, &self.trips, self.cl, i, |arr, line| {
+                push_absent(&mut cur[arr], line)
+            });
+        }
+        self.next_boundary = m0 + u;
+    }
+}
+
+/// Enumerate (array, line) touched at global iteration `i`.
+fn lines_of(terms: &[Term], trips: &[u64], cl: i64, i: u64, mut f: impl FnMut(usize, i64)) {
+    let n = trips.len();
+    let mut digits = vec![0u64; n];
+    let mut r = i;
+    for k in (0..n).rev() {
+        digits[k] = r % trips[k];
+        r /= trips[k];
+    }
+    for term in terms {
+        let mut a = term.base;
+        for (k, &d) in digits.iter().enumerate() {
+            a += term.strides[k] * d as i64;
+        }
+        f(term.array, a.div_euclid(cl));
+    }
+}
+
+fn push_absent(v: &mut Vec<i64>, line: i64) {
+    if !v.contains(&line) {
+        v.push(line);
+    }
+}

@@ -65,6 +65,11 @@ impl SweepJob {
             model: self.model,
             predictor: self.predictor,
             codegen: CodegenSelection::MachineDefault,
+            // --validate rows ride the fast engine: sweeps evaluate many
+            // Validate points, exactly the workload the compressed-trace
+            // testbed exists for (`--sim-engine reference` is a single-run
+            // debugging tool, not a sweep contract)
+            sim_engine: crate::sim::SimEngine::Fast,
             unit: Unit::CyPerCl,
         }
     }

@@ -1,0 +1,245 @@
+//! Equivalence suite for the fast virtual-testbed engine (DESIGN.md §1).
+//!
+//! The fast engine's whole claim is that compressed line-interval traces,
+//! set sharding, and convergence skip-ahead are *accounting transforms*,
+//! not approximations — so the pinning tests are adversarial on exactly
+//! that claim:
+//!
+//! * on the five paper kernels plus the 3D 7-point stencil, the fast
+//!   engine with skip-ahead off must report per-level hit/miss/writeback
+//!   counts *identical* to the per-access reference engine, at every
+//!   shard count, with cy/CL agreeing to float-summation-order noise;
+//! * the simulated cycle total must be bit-identical across shard
+//!   counts (per-unit windows are merged as integer counts before the
+//!   serial float composition, so K must not leak into the result);
+//! * over a hundred randomized 2-D stencils (same determinism
+//!   discipline as advise_prop: seeded XorShift64, no ambient entropy)
+//!   the exact-stats property must hold, and the default configuration
+//!   (skip-ahead on) must land within 1% of the reference cy/CL;
+//! * skip-ahead extrapolation must engage on a steady-state kernel and
+//!   stay within its documented 0.5% cy/CL bound of the exact run;
+//! * the truncation path (outer dimension clipped by `max_iterations`)
+//!   must preserve all of the above.
+
+use kerncraft::kernel::{parse, KernelAnalysis};
+use kerncraft::machine::MachineModel;
+use kerncraft::models::reference;
+use kerncraft::sim::{SimEngine, SimResult, VirtualTestbed};
+use kerncraft::util::XorShift64;
+use std::collections::HashMap;
+
+fn consts(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+fn analyze(src: &str, pairs: &[(&str, i64)]) -> KernelAnalysis {
+    let program = parse(src).unwrap();
+    KernelAnalysis::from_program(&program, &consts(pairs)).unwrap()
+}
+
+/// Run one configuration of the testbed.
+fn run_with(
+    m: &MachineModel,
+    a: &KernelAnalysis,
+    engine: SimEngine,
+    skip_ahead: bool,
+    shards: usize,
+) -> SimResult {
+    let mut tb = VirtualTestbed::new(m);
+    tb.engine = engine;
+    tb.skip_ahead = skip_ahead;
+    tb.shards = shards;
+    tb.run(a).unwrap()
+}
+
+/// Exact-equivalence check: integer statistics identical, cy/CL within
+/// float-summation-order noise.
+fn assert_stats_identical(r: &SimResult, f: &SimResult, tag: &str) {
+    assert_eq!(r.iterations, f.iterations, "{tag}: iterations");
+    assert_eq!(r.truncated, f.truncated, "{tag}: truncated");
+    assert_eq!(r.touches, f.touches, "{tag}: touches");
+    assert!(!f.extrapolated, "{tag}: exact mode must not extrapolate");
+    assert_eq!(r.levels.len(), f.levels.len(), "{tag}: level count");
+    for (a, b) in r.levels.iter().zip(&f.levels) {
+        assert_eq!(a.level, b.level, "{tag}");
+        assert_eq!(a.hits, b.hits, "{tag} {}: hits", a.level);
+        assert_eq!(a.misses, b.misses, "{tag} {}: misses", a.level);
+        assert_eq!(a.writebacks, b.writebacks, "{tag} {}: writebacks", a.level);
+    }
+    let rel = (r.cy_per_cl - f.cy_per_cl).abs() / r.cy_per_cl.abs().max(1e-12);
+    assert!(
+        rel < 1e-9,
+        "{tag}: cy/CL {} vs {} (rel {rel:e})",
+        r.cy_per_cl,
+        f.cy_per_cl
+    );
+}
+
+/// The corpus: the five Table 5 kernels plus the 3D 7-point stencil, at
+/// sizes small enough for the per-access reference replay in CI.
+fn corpus() -> Vec<(&'static str, Vec<(&'static str, i64)>)> {
+    vec![
+        ("2D-5pt", vec![("N", 600), ("M", 400)]),
+        ("UXX", vec![("M", 20), ("N", 50)]),
+        ("long-range", vec![("M", 20), ("N", 50)]),
+        ("Kahan-dot", vec![("N", 60_000)]),
+        ("triad", vec![("N", 60_000)]),
+        ("3D-7pt", vec![("M", 20), ("N", 40), ("P", 40)]),
+    ]
+}
+
+#[test]
+fn paper_kernels_fast_matches_reference_exactly() {
+    for machine in [MachineModel::snb(), MachineModel::hsw()] {
+        for (tag, pairs) in corpus() {
+            let src = reference::kernel_source(tag).unwrap();
+            let a = analyze(src, &pairs);
+            let r = run_with(&machine, &a, SimEngine::Reference, false, 0);
+            assert_eq!(r.engine, SimEngine::Reference, "{tag}");
+            for shards in [1, 4] {
+                let f = run_with(&machine, &a, SimEngine::Fast, false, shards);
+                assert_eq!(f.engine, SimEngine::Fast, "{tag}");
+                assert_stats_identical(&r, &f, &format!("{tag} shards={shards}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn cycles_are_bit_identical_across_shard_counts() {
+    // Per-unit penalty/traffic windows are merged as integer counts
+    // before the serial float composition, so the shard count must not
+    // perturb even the last bit of the cycle total.
+    let m = MachineModel::snb();
+    for (tag, pairs) in [
+        ("2D-5pt", vec![("N", 600), ("M", 400)]),
+        ("3D-7pt", vec![("M", 20), ("N", 40), ("P", 40)]),
+    ] {
+        let a = analyze(reference::kernel_source(tag).unwrap(), &pairs);
+        let base = run_with(&m, &a, SimEngine::Fast, false, 1);
+        for shards in [2, 4, 8] {
+            let f = run_with(&m, &a, SimEngine::Fast, false, shards);
+            assert_eq!(
+                base.cycles.to_bits(),
+                f.cycles.to_bits(),
+                "{tag}: shards={shards} perturbed the cycle total ({} vs {})",
+                base.cycles,
+                f.cycles
+            );
+        }
+    }
+}
+
+/// A random 2-D stencil `b[j][i] = (Σ a[j+dj][i+di]) * s` with 2–6
+/// distinct read offsets in `[-2, 2]²` (always including the center);
+/// loop margins of 3 keep every offset in bounds. Same generator shape
+/// as the advise_prop suite.
+fn random_stencil(rng: &mut XorShift64) -> String {
+    let mut offsets = vec![(0i64, 0i64)];
+    for _ in 0..(1 + rng.next_below(5)) {
+        let dj = rng.next_range(-2, 2);
+        let di = rng.next_range(-2, 2);
+        if !offsets.contains(&(dj, di)) {
+            offsets.push((dj, di));
+        }
+    }
+    let idx = |v: &str, d: i64| match d {
+        0 => v.to_string(),
+        d if d > 0 => format!("{v}+{d}"),
+        d => format!("{v}{d}"),
+    };
+    let reads: Vec<String> = offsets
+        .iter()
+        .map(|&(dj, di)| format!("a[{}][{}]", idx("j", dj), idx("i", di)))
+        .collect();
+    format!(
+        "double a[M][N], b[M][N], s;\nfor (int j = 3; j < M - 3; j++)\n  for (int i = 3; i < N - 3; i++)\n    b[j][i] = ({}) * s;",
+        reads.join(" + ")
+    )
+}
+
+#[test]
+fn randomized_stencils_agree_with_reference() {
+    let machine = MachineModel::snb();
+    let mut rng = XorShift64::new(0x51_0E_0F_A57);
+    let mut checked = 0usize;
+    for case in 0..110 {
+        let src = random_stencil(&mut rng);
+        let m = 40 + rng.next_below(80) as i64;
+        let n = 40 + rng.next_below(120) as i64;
+        let a = analyze(&src, &[("M", m), ("N", n)]);
+        let r = run_with(&machine, &a, SimEngine::Reference, false, 0);
+        for shards in [1, 4] {
+            let f = run_with(&machine, &a, SimEngine::Fast, false, shards);
+            assert_stats_identical(
+                &r,
+                &f,
+                &format!("case {case} (M={m} N={n} shards={shards})\n{src}"),
+            );
+        }
+        // the default configuration (skip-ahead on, auto shards) may
+        // extrapolate; its cy/CL must stay within 1% of the reference
+        let d = run_with(&machine, &a, SimEngine::Fast, true, 0);
+        let rel = (d.cy_per_cl - r.cy_per_cl).abs() / r.cy_per_cl.abs().max(1e-12);
+        assert!(
+            rel < 0.01,
+            "case {case}: default fast cy/CL {} vs reference {} (rel {rel:e})\n{src}",
+            d.cy_per_cl,
+            r.cy_per_cl
+        );
+        checked += 1;
+    }
+    assert!(checked >= 100, "suite must check >= 100 randomized cases, got {checked}");
+}
+
+#[test]
+fn skip_ahead_engages_and_respects_its_error_bound() {
+    // A steady-state 2-D stencil long enough that the per-row
+    // fingerprint repeats: extrapolation must engage, and the
+    // extrapolated cy/CL must stay within the documented 0.5% bound of
+    // the exact (skip-ahead off) run. Integer touches/iterations are
+    // extrapolated exactly and must match.
+    let m = MachineModel::snb();
+    let a = analyze(
+        reference::kernel_source("2D-5pt").unwrap(),
+        &[("N", 3000), ("M", 3000)],
+    );
+    let exact = run_with(&m, &a, SimEngine::Fast, false, 0);
+    let skip = run_with(&m, &a, SimEngine::Fast, true, 0);
+    assert!(skip.extrapolated, "skip-ahead never engaged on a steady-state kernel");
+    assert_eq!(exact.iterations, skip.iterations);
+    assert_eq!(exact.touches, skip.touches);
+    assert_eq!(exact.truncated, skip.truncated);
+    let rel = (skip.cy_per_cl - exact.cy_per_cl).abs() / exact.cy_per_cl.abs().max(1e-12);
+    assert!(
+        rel < 0.005,
+        "skip-ahead cy/CL {} vs exact {} (rel {rel:e}) breaks the 0.5% bound",
+        skip.cy_per_cl,
+        exact.cy_per_cl
+    );
+}
+
+#[test]
+fn truncation_path_is_equivalent_too() {
+    // Clip the outer dimension with a reduced iteration cap so the
+    // truncation branch of SimSetup is what both engines replay.
+    let machine = MachineModel::snb();
+    let a = analyze(
+        reference::kernel_source("2D-5pt").unwrap(),
+        &[("N", 400), ("M", 100_000)],
+    );
+    let run_capped = |engine: SimEngine, skip: bool, shards: usize| -> SimResult {
+        let mut tb = VirtualTestbed::new(&machine);
+        tb.engine = engine;
+        tb.skip_ahead = skip;
+        tb.shards = shards;
+        tb.max_iterations = 100_000;
+        tb.run(&a).unwrap()
+    };
+    let r = run_capped(SimEngine::Reference, false, 0);
+    assert!(r.truncated);
+    for shards in [1, 4] {
+        let f = run_capped(SimEngine::Fast, false, shards);
+        assert_stats_identical(&r, &f, &format!("truncated shards={shards}"));
+    }
+}
